@@ -1,0 +1,77 @@
+//! End-to-end training driver (the repository's E2E validation run):
+//! trains the largest ladder model (s4) with MoBA attention on the
+//! synthetic corpus with the full production path — stage schedule,
+//! cosine LR, CSV logging, checkpointing, held-out position-wise eval —
+//! and prints the loss curve summary. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! cargo run --release --example train_lm -- [--steps 150] [--size s4] [--full]
+//! ```
+
+use moba::config::TrainConfig;
+use moba::coordinator::StageSchedule;
+use moba::data::{Corpus, VAL_STREAM_BASE};
+use moba::eval::losses::{positionwise_mean, trailing_mean};
+use moba::metrics::writer::RunDir;
+use moba::runtime::{artifacts_dir, checkpoint, Engine};
+use moba::train::{LrSchedule, Trainer};
+use moba::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["full"])?;
+    let size = args.get_str("size", "s4");
+    let variant = if args.flag("full") { "full" } else { "moba" };
+    let steps = args.get_u64("steps", 150)?;
+
+    let engine = Engine::new(&artifacts_dir())?;
+    let train_name = format!("scaling_{size}_{variant}_train");
+    let eval_name = format!("scaling_{size}_{variant}_eval");
+    let art = engine.manifest.get(&train_name)?;
+    let cfg = TrainConfig { steps, batch: art.batch, seq: art.seq, ..Default::default() };
+
+    println!(
+        "== train_lm: {} ({} params, {} layers, seq {}, {} tokens total) ==",
+        train_name,
+        art.model.param_count,
+        art.model.n_layers,
+        art.seq,
+        cfg.tokens()
+    );
+
+    let dir = RunDir::create(&format!("train_lm/{size}_{variant}"))?;
+    let mut csv = dir.csv("loss.csv", &["step", "loss", "lr", "secs"])?;
+    let corpus = Corpus::for_vocab(art.model.vocab, cfg.seed);
+    let lr = LrSchedule::new(cfg.base_lr, steps, cfg.warmup_frac, cfg.min_lr_frac);
+    let mut trainer = Trainer::new(&engine, StageSchedule::single(&train_name, steps), lr, cfg.seed)?;
+    let (batch, seq, seed) = (cfg.batch, cfg.seq, cfg.seed);
+    let summary = trainer.run(
+        |step| corpus.batch(seed, step, batch, seq),
+        |info| {
+            let _ = csv.row(&[info.step as f64, info.loss as f64, info.lr, info.step_secs]);
+            if info.step % 10 == 0 {
+                println!(
+                    "step {:>5}/{steps}  loss {:.4}  lr {:.2e}  {:.2}s/step",
+                    info.step, info.loss, info.lr, info.step_secs
+                );
+            }
+        },
+    )?;
+    csv.flush()?;
+    checkpoint::save(&trainer.state, &dir.path.join("model.ckpt"))?;
+
+    let eval = positionwise_mean(
+        &engine,
+        &eval_name,
+        &trainer.state.params,
+        |i| corpus.batch(seed, VAL_STREAM_BASE + i, batch, seq),
+        6,
+    )?;
+    println!("\n== summary ==");
+    println!("train loss: {:.4} -> {:.4}", summary.losses[0], summary.final_loss);
+    println!("held-out loss: {:.4} (ppl {:.1})", eval.mean(), eval.mean().exp());
+    println!("trailing (last 1/32): {:.4}", trailing_mean(&eval, 1.0 / 32.0));
+    println!("wall clock: {:.1}s ({:.2}s/step)", summary.total_secs, summary.total_secs / steps as f64);
+    println!("artifacts: {}", dir.path.display());
+    Ok(())
+}

@@ -1,0 +1,346 @@
+"""AOT lowering: every graph the Rust coordinator executes is produced here.
+
+``python -m compile.aot --out ../artifacts [--group core|scaling|...]``
+
+For each artifact spec this module traces the L2 function, lowers it to
+stablehlo, converts to an XlaComputation and writes **HLO text** (NOT
+``.serialize()`` — xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id
+protos; the text parser reassigns ids; see /opt/xla-example/README.md).
+
+A ``manifest.json`` is written next to the HLO files describing, for each
+artifact: the model geometry, the ordered parameter spec (name/shape/init)
+and the full ordered input/output signature. The Rust runtime drives
+executables purely from this manifest. Lowering is incremental: an
+artifact is re-lowered only if its spec hash changed or the file is gone.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.flash import flash_attention_pallas
+from .kernels.moba import moba_attention_pallas
+
+# ---------------------------------------------------------------------------
+# model ladder (DESIGN.md §8 — Table 1 scaled; head_dim 16, vocab 512)
+# ---------------------------------------------------------------------------
+
+VOCAB = 512
+HEAD_DIM = 16
+
+# name -> (d_model, n_layers, n_heads)  [paper Table 1, /16-ish scale]
+LADDER = {
+    "s0": (48, 3, 3),
+    "s1": (64, 4, 4),
+    "s2": (96, 5, 6),
+    "s3": (128, 6, 8),
+    "s4": (160, 7, 10),
+}
+
+
+def ladder_cfg(size: str, *, block_size: int, topk: int,
+               layer_variants=(), pi_scale: float = 1.0,
+               attn_impl: str = "jnp") -> M.ModelCfg:
+    d, l, h = LADDER[size]
+    return M.ModelCfg(vocab=VOCAB, d_model=d, n_layers=l, n_heads=h,
+                      head_dim=HEAD_DIM, block_size=block_size, topk=topk,
+                      layer_variants=tuple(layer_variants), pi_scale=pi_scale,
+                      attn_impl=attn_impl)
+
+
+def variants(kind: str, n_layers: int, full_last: int = 0):
+    """Layer-variant helper: 'moba'/'full' everywhere, or moba with the
+    last ``full_last`` layers full (the paper's layer-wise hybrid)."""
+    if kind == "full":
+        return ("full",) * n_layers
+    v = ["moba"] * n_layers
+    for i in range(full_last):
+        v[n_layers - 1 - i] = "full"
+    return tuple(v)
+
+
+# ---------------------------------------------------------------------------
+# artifact specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Spec:
+    name: str
+    group: str
+    # train | train_k | eval | logits | last_logits | kernel_moba | kernel_flash
+    kind: str
+    cfg: M.ModelCfg | None
+    batch: int = 1
+    seq: int = 256
+    # kernel-artifact geometry
+    heads: int = 4
+    head_dim: int = 32
+    # fused steps for kind == "train_k"
+    k_steps: int = 8
+
+    def hash(self) -> str:
+        payload = json.dumps(dataclasses.asdict(self), sort_keys=True, default=str)
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def build_specs() -> List[Spec]:
+    specs: List[Spec] = []
+
+    def add(name, group, kind, cfg, batch, seq):
+        specs.append(Spec(name=name, group=group, kind=kind, cfg=cfg,
+                          batch=batch, seq=seq))
+
+    # ---- core / quickstart (tiny; pallas impl exercised through eval) ----
+    qcfg = M.ModelCfg(vocab=256, d_model=32, n_layers=2, n_heads=2,
+                      head_dim=16, block_size=32, topk=2)
+    qcfg_pallas = dataclasses.replace(qcfg, attn_impl="pallas")
+    add("quickstart_train", "core", "train", qcfg, 2, 256)
+    add("quickstart_eval", "core", "eval", qcfg, 2, 256)
+    add("quickstart_eval_pallas", "core", "eval", qcfg_pallas, 2, 256)
+    add("quickstart_logits", "core", "logits", qcfg, 1, 256)
+    add("quickstart_last_logits", "core", "last_logits", qcfg, 4, 256)
+    # standalone L1 kernel artifacts (q,k,v -> out), run by rust runtime tests
+    specs.append(Spec(name="kernel_moba_n256", group="core", kind="kernel_moba",
+                      cfg=M.ModelCfg(block_size=32, topk=3), seq=256, heads=2,
+                      head_dim=32))
+    specs.append(Spec(name="kernel_flash_n256", group="core", kind="kernel_flash",
+                      cfg=M.ModelCfg(block_size=32), seq=256, heads=2,
+                      head_dim=32))
+
+    # ---- F3a scaling law: seq 512, block 32, top-3 -> 81.25% sparsity ----
+    for size in LADDER:
+        for var in ("moba", "full"):
+            cfg = ladder_cfg(size, block_size=32, topk=3,
+                             layer_variants=variants(var, LADDER[size][1]))
+            add(f"scaling_{size}_{var}_train", "scaling", "train", cfg, 2, 512)
+            add(f"scaling_{size}_{var}_eval", "scaling", "eval", cfg, 2, 512)
+
+    # ---- F3b trailing loss: seq 2048, block 32, top-3 -> 95.31% ----
+    for size in LADDER:
+        for var in ("moba", "full"):
+            cfg = ladder_cfg(size, block_size=32, topk=3,
+                             layer_variants=variants(var, LADDER[size][1]))
+            add(f"long_{size}_{var}_train", "scaling_long", "train", cfg, 1, 2048)
+            add(f"long_{size}_{var}_eval", "scaling_long", "eval", cfg, 1, 2048)
+
+    # ---- F4 granularity ablation: S2, seq 1024, 75% sparsity ----
+    for nb, topk in ((8, 2), (16, 4), (32, 8), (64, 16), (128, 32)):
+        bs = 1024 // nb
+        cfg = ladder_cfg("s2", block_size=bs, topk=topk)
+        add(f"gran_nb{nb:03d}_train", "granularity", "train", cfg, 1, 1024)
+        add(f"gran_nb{nb:03d}_eval", "granularity", "eval", cfg, 1, 1024)
+
+    # ---- F5a hybrid pretrain: S2, seq 1024, block 64 top-3 (16 blocks) ----
+    for var in ("moba", "full"):
+        cfg = ladder_cfg("s2", block_size=64, topk=3,
+                         layer_variants=variants(var, LADDER["s2"][1]))
+        add(f"hybrid_{var}_train", "hybrid", "train", cfg, 1, 1024)
+        add(f"hybrid_{var}_eval", "hybrid", "eval", cfg, 1, 1024)
+
+    # ---- F5b/c layer-wise hybrid SFT: S2, seq 512, last-k full ----
+    nl = LADDER["s2"][1]  # 5 layers
+    for k in (0, 1, 2, 3, nl):
+        cfg = ladder_cfg("s2", block_size=32, topk=3,
+                         layer_variants=variants("moba", nl, full_last=k))
+        add(f"sft_full{k}_train", "sft", "train", cfg, 2, 512)
+        add(f"sft_full{k}_eval", "sft", "eval", cfg, 2, 512)
+
+    # ---- F6/F7 needle: continual-pretrain stages with PI, eval logits ----
+    # stage 1: native 512; stage 2: 1024 via PI x2; stage 3: 2048 via PI x4
+    nl = LADDER["s2"][1]
+    for stage, (seq, pi) in enumerate(((512, 1.0), (1024, 2.0), (2048, 4.0))):
+        cfg = ladder_cfg("s2", block_size=32, topk=3, pi_scale=pi)
+        add(f"needle_s{stage}_train", "needle", "train", cfg, 1, seq)
+        add(f"needle_s{stage}_logits", "needle", "logits", cfg, 1, seq)
+        # full-attention twin for Table-2-style parity at matched training
+        cfg_f = ladder_cfg("s2", block_size=32, topk=3, pi_scale=pi,
+                           layer_variants=variants("full", nl))
+        add(f"needle_s{stage}_full_train", "needle", "train", cfg_f, 1, seq)
+        add(f"needle_s{stage}_full_logits", "needle", "logits", cfg_f, 1, seq)
+    # serving decode step (full attention recompute, §3.3 deployment mode)
+    cfg = ladder_cfg("s2", block_size=32, topk=3, pi_scale=4.0)
+    add("needle_decode", "needle", "last_logits", cfg, 1, 2048)
+    # layer-wise hybrid deployment cfg (last 1 layer full out of 5 ~ paper's 3/32)
+    cfg_h = ladder_cfg("s2", block_size=32, topk=3, pi_scale=4.0,
+                       layer_variants=variants("moba", nl, full_last=1))
+    add("needle_hybrid_logits", "needle", "logits", cfg_h, 1, 2048)
+
+    # ---- §Perf: scan-fused K-step train graphs (roundtrip amortization) --
+    specs.append(Spec(name="quickstart_train_k8", group="perf", kind="train_k",
+                      cfg=qcfg, batch=2, seq=256, k_steps=8))
+    s2cfg = ladder_cfg("s2", block_size=32, topk=3)
+    specs.append(Spec(name="scaling_s2_moba_train_k8", group="perf",
+                      kind="train_k", cfg=s2cfg, batch=2, seq=512, k_steps=8))
+
+    names = [s.name for s in specs]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _shape_structs(spec: Spec):
+    """Ordered (name, ShapeDtypeStruct) input list for an artifact."""
+    cfg, b, s = spec.cfg, spec.batch, spec.seq
+    f32 = jnp.float32
+    if spec.kind in ("kernel_moba", "kernel_flash"):
+        qkv = jax.ShapeDtypeStruct((spec.seq, spec.heads, spec.head_dim), f32)
+        return [("q", qkv), ("k", qkv), ("v", qkv)]
+    ins = [(name, jax.ShapeDtypeStruct(shape, f32))
+           for name, shape, _, _ in M.params_spec(cfg)]
+    if spec.kind in ("train", "train_k"):
+        ins = ins * 3  # params, m, v share the leaf layout
+        ins = [(f"p.{n}" if i < len(ins) // 3 else (f"m.{n}" if i < 2 * len(ins) // 3 else f"v.{n}"), sd)
+               for i, (n, sd) in enumerate(ins)]
+        if spec.kind == "train":
+            ins += [("step", jax.ShapeDtypeStruct((), f32)),
+                    ("lr", jax.ShapeDtypeStruct((), f32)),
+                    ("tokens", jax.ShapeDtypeStruct((b, s), jnp.int32)),
+                    ("mask", jax.ShapeDtypeStruct((b, s - 1), f32))]
+        else:
+            kk = spec.k_steps
+            ins += [("step", jax.ShapeDtypeStruct((), f32)),
+                    ("lrs", jax.ShapeDtypeStruct((kk,), f32)),
+                    ("tokens", jax.ShapeDtypeStruct((kk, b, s), jnp.int32)),
+                    ("masks", jax.ShapeDtypeStruct((kk, b, s - 1), f32))]
+    elif spec.kind == "eval":
+        ins = [(f"p.{n}", sd) for n, sd in ins]
+        ins += [("tokens", jax.ShapeDtypeStruct((b, s), jnp.int32)),
+                ("mask", jax.ShapeDtypeStruct((b, s - 1), f32))]
+    elif spec.kind in ("logits", "last_logits"):
+        ins = [(f"p.{n}", sd) for n, sd in ins]
+        ins += [("tokens", jax.ShapeDtypeStruct((b, s), jnp.int32))]
+    else:
+        raise ValueError(spec.kind)
+    return ins
+
+
+def _fn_for(spec: Spec):
+    if spec.kind == "train":
+        return M.make_train_fn(spec.cfg)
+    if spec.kind == "train_k":
+        return M.make_train_k_fn(spec.cfg, spec.k_steps)
+    if spec.kind == "eval":
+        return M.make_eval_fn(spec.cfg)
+    if spec.kind == "logits":
+        return M.make_logits_fn(spec.cfg)
+    if spec.kind == "last_logits":
+        return M.make_last_logits_fn(spec.cfg)
+    if spec.kind == "kernel_moba":
+        bs, tk = spec.cfg.block_size, spec.cfg.topk
+        return lambda q, k, v: (moba_attention_pallas(q, k, v, bs, tk),)
+    if spec.kind == "kernel_flash":
+        bs = spec.cfg.block_size
+        return lambda q, k, v: (flash_attention_pallas(q, k, v, kv_block=bs),)
+    raise ValueError(spec.kind)
+
+
+def manifest_entry(spec: Spec, path: str, ins, lowered) -> Dict:
+    out_avals = jax.tree_util.tree_leaves(lowered.out_info)
+    entry = {
+        "name": spec.name,
+        "group": spec.group,
+        "kind": spec.kind,
+        "path": path,
+        "hash": spec.hash(),
+        "batch": spec.batch,
+        "seq": spec.seq,
+        "k_steps": spec.k_steps if spec.kind == "train_k" else 1,
+        "inputs": [{"name": n, "shape": list(sd.shape), "dtype": str(sd.dtype)}
+                   for n, sd in ins],
+        "outputs": [{"shape": list(a.shape), "dtype": str(a.dtype)}
+                    for a in out_avals],
+    }
+    if spec.cfg is not None and spec.kind not in ("kernel_moba", "kernel_flash"):
+        cfg = spec.cfg
+        entry["model"] = {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim, "mlp_mult": cfg.mlp_mult,
+            "block_size": cfg.block_size, "topk": cfg.topk,
+            "pi_scale": cfg.pi_scale, "attn_impl": cfg.attn_impl,
+            "layer_variants": list(cfg.variants()),
+            "param_count": cfg.param_count(),
+        }
+        entry["params"] = [
+            {"name": n, "shape": list(shape), "init": kind, "scale": scale}
+            for n, shape, kind, scale in M.params_spec(cfg)]
+    else:
+        entry["model"] = {"block_size": spec.cfg.block_size,
+                          "topk": spec.cfg.topk,
+                          "heads": spec.heads, "head_dim": spec.head_dim}
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--group", action="append", default=None,
+                    help="restrict to group(s); default: all")
+    ap.add_argument("--force", action="store_true", help="re-lower everything")
+    ap.add_argument("--list", action="store_true", help="list specs and exit")
+    args = ap.parse_args()
+
+    specs = build_specs()
+    if args.list:
+        for s in specs:
+            print(f"{s.group:14s} {s.kind:12s} {s.name}")
+        return
+    if args.group:
+        specs = [s for s in specs if s.group in args.group]
+
+    os.makedirs(args.out, exist_ok=True)
+    mpath = os.path.join(args.out, "manifest.json")
+    manifest: Dict[str, Dict] = {}
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = {e["name"]: e for e in json.load(f)["artifacts"]}
+
+    t_all = time.time()
+    for spec in specs:
+        path = os.path.join(args.out, spec.name + ".hlo.txt")
+        prev = manifest.get(spec.name)
+        if (not args.force and prev is not None and prev.get("hash") == spec.hash()
+                and os.path.exists(path)):
+            print(f"  cached  {spec.name}")
+            continue
+        t0 = time.time()
+        ins = _shape_structs(spec)
+        lowered = jax.jit(_fn_for(spec)).lower(*[sd for _, sd in ins])
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[spec.name] = manifest_entry(spec, spec.name + ".hlo.txt",
+                                             ins, lowered)
+        print(f"  lowered {spec.name}  ({time.time() - t0:.1f}s, "
+              f"{len(text) / 1e6:.2f} MB)")
+
+    with open(mpath, "w") as f:
+        json.dump({"artifacts": list(manifest.values())}, f, indent=1)
+    print(f"manifest: {mpath}  ({len(manifest)} artifacts, "
+          f"{time.time() - t_all:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

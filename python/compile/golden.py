@@ -1,0 +1,55 @@
+"""Golden-file generator: pins the Python oracle's MoBA gate + attention
+outputs so the pure-Rust implementation (`rust/src/sparse/`) can be
+checked bit-for-bit (gate) / to f32 round-off (attention).
+
+Run by `make artifacts`; consumed by `rust/tests/golden_parity.rs`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from .kernels import ref
+
+CASES = [
+    # (name, n, heads, d, block, topk, seed)
+    ("small", 64, 2, 8, 16, 2, 101),
+    ("tall", 128, 1, 16, 32, 3, 202),
+    ("fine", 96, 3, 8, 8, 4, 303),
+    ("cover", 64, 2, 8, 16, 8, 404),  # topk covers everything
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/golden")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for name, n, h, d, block, topk, seed in CASES:
+        rng = np.random.default_rng(seed)
+        q = rng.normal(size=(n, h, d)).astype("float32")
+        k = rng.normal(size=(n, h, d)).astype("float32")
+        v = rng.normal(size=(n, h, d)).astype("float32")
+        gate = np.asarray(ref.moba_gate(q, k, block, topk))
+        out = np.asarray(ref.moba_attention_ref(q, k, v, block, topk))
+        doc = {
+            "n": n, "heads": h, "d": d, "block": block, "topk": topk,
+            "q": q.ravel().tolist(),
+            "k": k.ravel().tolist(),
+            "v": v.ravel().tolist(),
+            "gate": gate.ravel().astype(int).tolist(),
+            "out": out.ravel().tolist(),
+        }
+        path = os.path.join(args.out, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        print(f"  golden {name}: {path}")
+
+
+if __name__ == "__main__":
+    main()

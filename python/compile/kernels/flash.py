@@ -1,0 +1,80 @@
+"""Pallas causal full-attention kernel (FlashAttention-style baseline, L1).
+
+Same streaming/online-softmax structure as the MoBA kernel in ``moba.py``
+minus the gate: every causal KV block participates. This is the paper's
+"full attention (implemented with Flash Attention)" baseline in kernel
+form; it shares the VMEM tiling so Fig-2-style comparisons at the cost
+model level use the same per-block constants for both kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_block: int, q_tile: int,
+                  n_ctx: int):
+    qt = pl.program_id(1)
+    d = q_ref.shape[-1]
+    nb = n_ctx // kv_block
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    q = q_ref[...].astype(jnp.float32) * scale
+    rows = qt * q_tile + jax.lax.iota(jnp.int32, q_tile)
+
+    def body(i, carry):
+        acc, m, l = carry
+        kb = pl.load(k_ref, (pl.dslice(i * kv_block, kv_block), slice(None)))
+        vb = pl.load(v_ref, (pl.dslice(i * kv_block, kv_block), slice(None)))
+        s = q @ kb.T
+        cols = i * kv_block + jax.lax.iota(jnp.int32, kv_block)
+        mask = rows[:, None] >= cols[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ vb
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((q_tile, d), jnp.float32)
+    m0 = jnp.full((q_tile,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_tile,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nb, body, (acc0, m0, l0))
+    o_ref[...] = acc / l[:, None]
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           kv_block: int = 64,
+                           q_tile: int | None = None) -> jnp.ndarray:
+    """Causal full attention via the Pallas kernel. q,k,v: [N,H,D] -> [N,H,D]."""
+    n, h, d = q.shape
+    if q_tile is None:
+        q_tile = min(128, n)
+    assert n % q_tile == 0 and n % kv_block == 0
+
+    qh = q.transpose(1, 0, 2)
+    kh = k.transpose(1, 0, 2)
+    vh = v.transpose(1, 0, 2)
+
+    kernel = functools.partial(_flash_kernel, kv_block=kv_block,
+                               q_tile=q_tile, n_ctx=n)
+    out = pl.pallas_call(
+        kernel,
+        grid=(h, n // q_tile),
+        in_specs=[
+            pl.BlockSpec((None, q_tile, d), lambda hh, qt: (hh, qt, 0)),
+            pl.BlockSpec((None, n, d), lambda hh, qt: (hh, 0, 0)),
+            pl.BlockSpec((None, n, d), lambda hh, qt: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, q_tile, d), lambda hh, qt: (hh, qt, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n, d), jnp.float32),
+        interpret=True,
+    )(qh, kh, vh)
+    return out.transpose(1, 0, 2)

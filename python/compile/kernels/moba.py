@@ -1,0 +1,126 @@
+"""Pallas MoBA attention kernel (L1).
+
+Implements the paper's Algorithm 1 as a streaming block-sparse kernel,
+re-thought for the TPU memory model (DESIGN.md §2 Hardware-Adaptation):
+
+- grid = (heads, query tiles). Each grid step holds one q-tile in VMEM
+  (``BlockSpec``-mapped) and streams KV blocks HBM->VMEM one at a time
+  via dynamic slices inside a ``fori_loop`` — the Pallas analogue of the
+  paper's FlashAttention-varlen segments. On a real TPU this loop is the
+  double-buffered DMA schedule; under ``interpret=True`` (mandatory on
+  CPU PJRT) it executes as the same dataflow in the interpreter.
+- the MoE-style gate (mean-pooled key affinity + top-k + causal rules) is
+  computed in jnp *outside* the kernel — it is O(N * n_blocks), negligible
+  next to attention — and passed in as a boolean gate ``G[H, N, nb]``.
+  The kernel skips the contribution of non-gated blocks through the mask,
+  which on TPU is where the FLOP savings realize (unselected KV blocks are
+  never DMA'd in the production schedule; the interpreter still walks them,
+  which is why wall-clock speed is *not* measured here — see DESIGN.md §7).
+- the paper's separate "current block attention" (causal) vs "history
+  block attention" (non-causal) paths, combined with online softmax
+  (Algorithm 1 lines 10-16), appear here as a single online-softmax loop
+  whose mask is `gate AND (j <= t)` — mathematically identical and
+  TPU-friendlier (no varlen re-arrangement needed when the q-tile loop is
+  dense).
+
+VMEM footprint per grid step (f32):
+  q-tile (Bq*D) + kv block (2*B*D) + scores (Bq*B) + accum (Bq*D + 2*Bq)
+which for the default Bq=128, B=64, D=32 is ~57 KiB — comfortably inside
+a TPU core's ~16 MiB VMEM with room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e30
+
+
+def _moba_kernel(gate_ref, q_ref, k_ref, v_ref, o_ref, *, block_size: int,
+                 q_tile: int, n_ctx: int):
+    """One (head, q-tile) grid step.
+
+    gate_ref: [q_tile, nb] bool   gate for this head's q-tile
+    q_ref:    [q_tile, D]         VMEM-resident query tile
+    k_ref:    [N, D]              full K for this head (HBM; sliced per block)
+    v_ref:    [N, D]              full V for this head
+    o_ref:    [q_tile, D]         output tile
+    """
+    qt = pl.program_id(1)
+    d = q_ref.shape[-1]
+    nb = n_ctx // block_size
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    q = q_ref[...].astype(jnp.float32) * scale
+    # global row positions of this q-tile
+    rows = qt * q_tile + jax.lax.iota(jnp.int32, q_tile)
+
+    def body(i, carry):
+        acc, m, l = carry
+        # HBM -> VMEM stream of the i-th KV block (on TPU: one DMA)
+        kb = pl.load(k_ref, (pl.dslice(i * block_size, block_size), slice(None)))
+        vb = pl.load(v_ref, (pl.dslice(i * block_size, block_size), slice(None)))
+        s = q @ kb.T  # [q_tile, B] — MXU matmul
+        cols = i * block_size + jax.lax.iota(jnp.int32, block_size)
+        sel = pl.load(gate_ref, (slice(None), i))  # [q_tile] gate for block i
+        mask = sel[:, None] & (rows[:, None] >= cols[None, :])
+        s = jnp.where(mask, s, NEG_INF)
+        # online softmax update (Algorithm 1 line 16 / Milakov-Gimelshein)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ vb
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((q_tile, d), jnp.float32)
+    m0 = jnp.full((q_tile,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_tile,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nb, body, (acc0, m0, l0))
+    o_ref[...] = acc / l[:, None]
+
+
+def moba_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                          block_size: int, topk: int,
+                          q_tile: int | None = None) -> jnp.ndarray:
+    """MoBA attention via the Pallas kernel. q, k, v: [N, H, D] -> [N, H, D].
+
+    The gate is computed with the same jnp code as the oracle (`ref.moba_gate`)
+    so kernel-vs-ref comparisons isolate the streaming attention math.
+    """
+    n, h, d = q.shape
+    assert n % block_size == 0
+    nb = n // block_size
+    if q_tile is None:
+        q_tile = min(128, n)
+    assert n % q_tile == 0
+
+    gate = ref.moba_gate(q, k, block_size, topk)  # [H, N, nb]
+
+    # head-major layout for the kernel grid
+    qh = q.transpose(1, 0, 2)  # [H, N, D]
+    kh = k.transpose(1, 0, 2)
+    vh = v.transpose(1, 0, 2)
+
+    kernel = functools.partial(_moba_kernel, block_size=block_size,
+                               q_tile=q_tile, n_ctx=n)
+    out = pl.pallas_call(
+        kernel,
+        grid=(h, n // q_tile),
+        in_specs=[
+            pl.BlockSpec((None, q_tile, nb), lambda hh, qt: (hh, qt, 0)),
+            pl.BlockSpec((None, q_tile, d), lambda hh, qt: (hh, qt, 0)),
+            pl.BlockSpec((None, n, d), lambda hh, qt: (hh, 0, 0)),
+            pl.BlockSpec((None, n, d), lambda hh, qt: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, q_tile, d), lambda hh, qt: (hh, qt, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n, d), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(gate, qh, kh, vh)
+    return out.transpose(1, 0, 2)

@@ -1,0 +1,135 @@
+"""Pure-jnp oracles for MoBA and full attention.
+
+These are the *correctness ground truth* for the whole stack:
+
+- the Pallas kernels in ``moba.py`` / ``flash.py`` are pytest-checked
+  ``allclose`` against these functions (see ``python/tests/``);
+- the L2 model (``model.py``) uses the dense-mask implementation below for
+  its training artifacts (identical math to the streaming kernel);
+- the Rust pure-f32 reference in ``rust/src/sparse/`` is checked against
+  golden files generated from these functions.
+
+Shapes follow Algorithm 1 of the paper: ``q, k, v: [N, H, D]`` (sequence,
+heads, head_dim). All math is f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # used instead of -inf so fully-masked rows stay finite
+
+
+def mean_pool_blocks(k: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Mean-pool keys along the sequence dim into block representatives.
+
+    k: [N, H, D] -> [n_blocks, H, D] with n_blocks = N // block_size.
+    N must be divisible by block_size (the paper's WLOG assumption; the
+    data pipeline pads sequences to a multiple of the block size).
+    """
+    n, h, d = k.shape
+    assert n % block_size == 0, f"N={n} not divisible by block_size={block_size}"
+    nb = n // block_size
+    return k.reshape(nb, block_size, h, d).mean(axis=1)
+
+
+def moba_gate(q: jnp.ndarray, k: jnp.ndarray, block_size: int, topk: int) -> jnp.ndarray:
+    """MoBA gating (paper Eq. 5-6 plus the two causality rules).
+
+    Returns a boolean gate ``G: [H, N, n_blocks]`` where, for query position
+    t and head h:
+
+    - ``G[h, t, c] = True`` for the *current* block ``c = t // B``
+      (mandatory routing, akin to a shared expert);
+    - ``G[h, t, i] = False`` for every *future* block ``i > c``;
+    - among *past* blocks ``i < c`` the ``topk - 1`` highest affinity scores
+      ``s_i = <q_t, mean_pool(K[I_i])>`` are selected (paper footnote 3:
+      top-k counts the current block, so k=3 means the current block plus
+      at most 2 history blocks).
+
+    Ties are broken deterministically toward the lower block index so that
+    the Rust router reproduces the selection bit-for-bit.
+    """
+    n, h, d = q.shape
+    nb = n // block_size
+    pooled = mean_pool_blocks(k, block_size)  # [nb, H, D]
+    # affinity scores: s[h, t, i] = <q[t, h], pooled[i, h]>
+    s = jnp.einsum("nhd,bhd->hnb", q, pooled)
+
+    t_idx = jnp.arange(n)
+    cur = t_idx // block_size  # current block of each query position
+    blk = jnp.arange(nb)
+    is_future = blk[None, :] > cur[:, None]   # [N, nb]
+    is_current = blk[None, :] == cur[:, None]  # [N, nb]
+
+    big = jnp.asarray(1e30, s.dtype)
+    # current block is forced into the top-k; future blocks are excluded.
+    s = jnp.where(is_current[None], big, s)
+    s = jnp.where(is_future[None], -big, s)
+
+    # deterministic tie-break toward lower block index
+    tie = -blk.astype(s.dtype) * 1e-6
+    s = s + tie[None, None, :]
+
+    kk = min(topk, nb)
+    # Selection is *hard* top-k: gradients never flow through the gate
+    # (as in hard MoE routing), so stop_gradient is semantically a no-op
+    # here — and it is also load-bearing twice over for this image:
+    #  1. lax.top_k lowers to the `topk` HLO instruction, which the
+    #     xla_extension 0.5.1 HLO parser rejects -> use sort (ancient HLO);
+    #  2. sort's VJP emits a gather with operand_batching_dims, which the
+    #     installed jaxlib cannot construct under vmap -> stop_gradient
+    #     keeps the sort out of the backward graph entirely.
+    s = jax.lax.stop_gradient(s)
+    kth = jnp.sort(s, axis=-1)[..., nb - kk]
+    gate = (s >= kth[..., None]) & (~is_future[None])
+    return gate
+
+
+def moba_token_mask(gate: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Expand a block gate ``[H, N, nb]`` to a token-level attention mask
+    ``[H, N, N]``: position t may attend to j iff block(j) is gated for t
+    AND j <= t (causality inside the current block; history blocks satisfy
+    j <= t automatically but the constraint is applied uniformly)."""
+    h, n, nb = gate.shape
+    # block i covers columns [i*B, (i+1)*B): expand by uniform repeat
+    # (broadcast+reshape — avoids a gather, which breaks vmap lowering on
+    # the image's old HLO converter).
+    tok = jnp.repeat(gate, block_size, axis=2)  # [H, N, N]
+    causal = jnp.arange(n)[:, None] >= jnp.arange(n)[None, :]
+    return tok & causal[None]
+
+
+def attention_with_mask(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked softmax attention. q, k, v: [N, H, D]; mask: [H, N, N] bool."""
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = jnp.einsum("nhd,mhd->hnm", q, k) * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = scores - scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores)
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hnm,mhd->nhd", p, v)
+
+
+def full_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Causal full attention oracle. q, k, v: [N, H, D] -> [N, H, D]."""
+    n = q.shape[0]
+    causal = jnp.arange(n)[:, None] >= jnp.arange(n)[None, :]
+    mask = jnp.broadcast_to(causal[None], (q.shape[1], n, n))
+    return attention_with_mask(q, k, v, mask)
+
+
+def moba_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       block_size: int, topk: int) -> jnp.ndarray:
+    """MoBA attention oracle (paper Eq. 2), dense-mask formulation.
+
+    Mathematically identical to the streaming block-sparse kernel: the
+    softmax over the union of gated blocks equals the online-softmax
+    combination of per-block partial attentions (paper §2.3 step 5).
+    """
+    gate = moba_gate(q, k, block_size, topk)
+    mask = moba_token_mask(gate, block_size)
+    return attention_with_mask(q, k, v, mask)

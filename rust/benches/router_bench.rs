@@ -1,0 +1,55 @@
+//! Bench: Algorithm-1 router throughput — gate computation and dispatch
+//! plan construction, in token-assignments/s. The L3 hot-path components
+//! a serving deployment would run per prefill.
+
+use std::time::Instant;
+
+use moba::coordinator::RoutingPlan;
+use moba::sparse::moba_gate;
+use moba::tensor::Tensor;
+use moba::util::rng::Rng;
+
+fn rand_t(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+}
+
+fn main() {
+    println!("== router bench: gate + dispatch plan ==");
+    println!(
+        "{:>8} {:>6} {:>8} {:>12} {:>14} {:>14}",
+        "N", "heads", "block", "gate_ms", "plan_ms", "assign/s"
+    );
+    let mut rng = Rng::new(1);
+    for &(n, h, block, topk) in
+        &[(1024usize, 2usize, 64usize, 3usize), (4096, 2, 64, 3), (4096, 8, 64, 3), (16384, 2, 256, 3)]
+    {
+        let q = rand_t(&[n, h, 32], &mut rng);
+        let k = rand_t(&[n, h, 32], &mut rng);
+        let reps = 3;
+
+        let t0 = Instant::now();
+        let mut gate = None;
+        for _ in 0..reps {
+            gate = Some(moba_gate(&q, &k, block, topk));
+        }
+        let gate_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let gate = gate.unwrap();
+
+        let t1 = Instant::now();
+        let mut pairs = 0usize;
+        for _ in 0..reps {
+            pairs = 0;
+            for hh in 0..h {
+                let plan = RoutingPlan::build(&gate, hh, block);
+                pairs += plan.total_pairs();
+            }
+        }
+        let plan_ms = t1.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let per_s = pairs as f64 / (plan_ms / 1e3);
+        println!(
+            "{:>8} {:>6} {:>8} {:>12.2} {:>14.3} {:>14.0}",
+            n, h, block, gate_ms, plan_ms, per_s
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! Bench: pure-Rust attention kernels — GFLOP/s of the full-attention
+//! baseline vs MoBA block-sparse streaming, and the mean-pool gate.
+//! These are the measured kernels behind the Fig-2 CPU crossover.
+
+use std::time::Instant;
+
+use moba::attn_sim::{full_attention_flops, moba_attention_flops, AttnShape};
+use moba::sparse;
+use moba::tensor::Tensor;
+use moba::util::rng::Rng;
+
+fn rand_t(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+}
+
+fn main() {
+    println!("== sparse kernel bench (H=2, D=32, block 64, top-3) ==");
+    println!(
+        "{:>8} {:>12} {:>10} {:>12} {:>10} {:>9}",
+        "N", "full_ms", "full_GF/s", "moba_ms", "moba_GF/s", "speedup"
+    );
+    let mut rng = Rng::new(3);
+    let (h, d, block, topk) = (2usize, 32usize, 64usize, 3usize);
+    let mut n = 512usize;
+    while n <= 4096 {
+        let q = rand_t(&[n, h, d], &mut rng);
+        let k = rand_t(&[n, h, d], &mut rng);
+        let v = rand_t(&[n, h, d], &mut rng);
+        let reps = if n <= 1024 { 3 } else { 1 };
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let _ = sparse::full_attention(&q, &k, &v);
+        }
+        let full_s = t0.elapsed().as_secs_f64() / reps as f64;
+
+        let t1 = Instant::now();
+        for _ in 0..reps {
+            let _ = sparse::moba_attention(&q, &k, &v, block, topk);
+        }
+        let moba_s = t1.elapsed().as_secs_f64() / reps as f64;
+
+        let shape = AttnShape::new(n, h, d);
+        let f_gf = full_attention_flops(shape) / full_s / 1e9;
+        let m_gf = moba_attention_flops(shape, block, topk) / moba_s / 1e9;
+        println!(
+            "{:>8} {:>12.1} {:>10.2} {:>12.1} {:>10.2} {:>9.2}",
+            n,
+            full_s * 1e3,
+            f_gf,
+            moba_s * 1e3,
+            m_gf,
+            full_s / moba_s
+        );
+        n *= 2;
+    }
+}

@@ -1,0 +1,98 @@
+//! Bench: end-to-end PJRT train-step latency with the marshal/execute
+//! breakdown — the number that bounds every experiment's wall clock and
+//! the main L3 §Perf target (state roundtrip must stay a small fraction
+//! of the step).
+
+use std::time::Instant;
+
+use moba::data::Corpus;
+use moba::runtime::{artifacts_dir, Engine, ModelState};
+
+fn main() {
+    let engine = Engine::new(&artifacts_dir()).expect("run `make artifacts` first");
+    println!("== train-step bench (PJRT CPU) ==");
+    println!(
+        "{:>26} {:>10} {:>10} {:>12} {:>12} {:>10}",
+        "artifact", "params", "step_ms", "exec_ms", "marshal_ms", "marshal%"
+    );
+    for name in ["quickstart_train", "scaling_s2_moba_train", "scaling_s2_full_train"] {
+        let art = match engine.manifest.get(name) {
+            Ok(a) => a.clone(),
+            Err(_) => continue,
+        };
+        let mut state = ModelState::init(&art, 1).unwrap();
+        let corpus = Corpus::for_vocab(art.model.vocab, 1);
+        let (tokens, mask) = corpus.batch(1, 0, art.batch, art.seq);
+        // warmup (includes XLA compile)
+        engine.train_step(name, &mut state, 1e-3, &tokens, &mask).unwrap();
+        engine.reset_timers();
+        let reps = 5;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            engine.train_step(name, &mut state, 1e-3, &tokens, &mask).unwrap();
+        }
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let exec_ms = *engine.exec_secs.borrow() * 1e3 / reps as f64;
+        let marshal_ms = *engine.marshal_secs.borrow() * 1e3 / reps as f64;
+        println!(
+            "{:>26} {:>10} {:>10.1} {:>12.1} {:>12.1} {:>9.1}%",
+            name,
+            art.model.param_count,
+            step_ms,
+            exec_ms,
+            marshal_ms,
+            100.0 * marshal_ms / step_ms
+        );
+    }
+
+    // §Perf: scan-fused K-step graphs vs single-step loops
+    println!("\n== fused train_k vs single-step loop (per-step ms) ==");
+    println!("{:>30} {:>12} {:>12} {:>9}", "artifact", "single_ms", "fused_ms", "speedup");
+    for (single, fused) in [
+        ("quickstart_train", "quickstart_train_k8"),
+        ("scaling_s2_moba_train", "scaling_s2_moba_train_k8"),
+    ] {
+        let (Ok(art), Ok(artk)) = (engine.manifest.get(single), engine.manifest.get(fused))
+        else {
+            continue;
+        };
+        let (art, artk) = (art.clone(), artk.clone());
+        let k = artk.k_steps;
+        let corpus = Corpus::for_vocab(art.model.vocab, 2);
+        let mut state = moba::runtime::ModelState::init(&art, 2).unwrap();
+        let (tokens, mask) = corpus.batch(2, 0, art.batch, art.seq);
+        engine.train_step(single, &mut state, 1e-3, &tokens, &mask).unwrap(); // warm
+        let reps = 2;
+        let t0 = Instant::now();
+        for _ in 0..reps * k {
+            engine.train_step(single, &mut state, 1e-3, &tokens, &mask).unwrap();
+        }
+        let single_ms = t0.elapsed().as_secs_f64() * 1e3 / (reps * k) as f64;
+
+        let mut toks = Vec::new();
+        let mut masks = Vec::new();
+        for i in 0..k {
+            let (t, m) = corpus.batch(2, i as u64, art.batch, art.seq);
+            toks.extend(t.data);
+            masks.extend(m.data);
+        }
+        let ktokens =
+            moba::tensor::IntTensor::from_vec(&[k, art.batch, art.seq], toks).unwrap();
+        let kmask =
+            moba::tensor::Tensor::from_vec(&[k, art.batch, art.seq - 1], masks).unwrap();
+        let lrs = vec![1e-3f32; k];
+        engine.train_k_steps(fused, &mut state, &lrs, &ktokens, &kmask).unwrap(); // warm
+        let t1 = Instant::now();
+        for _ in 0..reps {
+            engine.train_k_steps(fused, &mut state, &lrs, &ktokens, &kmask).unwrap();
+        }
+        let fused_ms = t1.elapsed().as_secs_f64() * 1e3 / (reps * k) as f64;
+        println!(
+            "{:>30} {:>12.1} {:>12.1} {:>9.2}",
+            fused,
+            single_ms,
+            fused_ms,
+            single_ms / fused_ms
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! Device profiles for the cost model: a published-spec A100 profile
+//! (the paper's testbed class) and a calibrated profile of *this* CPU,
+//! fitted from the measured pure-Rust kernels so the model's crossover
+//! predictions can be validated against wall-clock reality.
+
+use crate::sparse;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: String,
+    /// sustained attention FLOP/s (peak x achievable MFU)
+    pub flops_per_s: f64,
+    /// sustained memory bandwidth, bytes/s
+    pub mem_bw: f64,
+    /// per kernel-launch overhead, seconds
+    pub kernel_overhead_s: f64,
+    /// query tile used by the flash schedule
+    pub tile_q: usize,
+    pub elem_bytes: usize,
+    /// pipeline-depth constant for varlen segments: a KV segment of
+    /// length B runs at `B / (B + segment_pipeline)` of peak. Models the
+    /// launch/drain cost of MoBA's many small varlen kernels — the reason
+    /// the paper's Fig 2b inset shows near-parity at 32K despite 95%
+    /// sparsity. 0 disables the penalty (CPU scalar loops don't pipeline).
+    pub segment_pipeline: usize,
+}
+
+impl DeviceProfile {
+    /// Efficiency multiplier for streaming KV segments of length `b`.
+    pub fn segment_efficiency(&self, b: usize) -> f64 {
+        if self.segment_pipeline == 0 {
+            1.0
+        } else {
+            b as f64 / (b + self.segment_pipeline) as f64
+        }
+    }
+}
+
+/// A100-80GB class device running bf16 FlashAttention at ~40% MFU —
+/// the regime of the paper's Fig 2 measurements.
+pub fn a100_like() -> DeviceProfile {
+    DeviceProfile {
+        name: "a100-bf16".into(),
+        flops_per_s: 312e12 * 0.40,
+        mem_bw: 2.0e12 * 0.80,
+        kernel_overhead_s: 8e-6,
+        tile_q: 128,
+        elem_bytes: 2,
+        segment_pipeline: 2048,
+    }
+}
+
+/// Calibrate a profile for the local CPU by timing the pure-Rust full
+/// attention kernel at a modest size and backing out sustained FLOP/s.
+pub fn calibrate_cpu(seed: u64) -> DeviceProfile {
+    let (n, h, d) = (1024usize, 2usize, 32usize);
+    let mut rng = Rng::new(seed);
+    let mk = |rng: &mut Rng| {
+        Tensor::from_vec(&[n, h, d], (0..n * h * d).map(|_| rng.normal_f32(1.0)).collect())
+            .unwrap()
+    };
+    let q = mk(&mut rng);
+    let k = mk(&mut rng);
+    let v = mk(&mut rng);
+    // warmup + timed run
+    let _ = sparse::full_attention(&q, &k, &v);
+    let t0 = std::time::Instant::now();
+    let reps = 3;
+    for _ in 0..reps {
+        let _ = sparse::full_attention(&q, &k, &v);
+    }
+    let secs = t0.elapsed().as_secs_f64() / reps as f64;
+    let flops = super::full_attention_flops(super::AttnShape::new(n, h, d));
+    DeviceProfile {
+        name: "cpu-calibrated".into(),
+        flops_per_s: (flops / secs).max(1e8),
+        mem_bw: 8e9,
+        kernel_overhead_s: 0.0, // in-process function calls
+        tile_q: 1,
+        elem_bytes: 4,
+        segment_pipeline: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_profile_sane() {
+        let d = a100_like();
+        assert!(d.flops_per_s > 1e13);
+        assert!(d.mem_bw > 1e11);
+    }
+
+    #[test]
+    fn cpu_calibration_positive() {
+        let d = calibrate_cpu(1);
+        assert!(d.flops_per_s > 1e7, "calibrated {} FLOP/s", d.flops_per_s);
+        assert!(d.flops_per_s < 1e12, "implausibly fast CPU");
+    }
+}

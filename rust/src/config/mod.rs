@@ -1,0 +1,133 @@
+//! Configuration system: typed run configs with JSON load/save and the
+//! experiment presets (scaled Table-1 ladder, ablation grids).
+
+pub mod presets;
+
+use anyhow::Result;
+
+use crate::util::json::{num, obj, Json};
+
+/// Training-run hyperparameters owned by L3 (everything the AOT graphs
+/// left as runtime inputs: step count, LR policy, seeding, data shape).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    pub steps: u64,
+    pub base_lr: f64,
+    /// linear warmup, as a fraction of total steps
+    pub warmup_frac: f64,
+    /// cosine floor, as a fraction of base_lr
+    pub min_lr_frac: f64,
+    pub seed: u64,
+    pub batch: usize,
+    pub seq: usize,
+    pub log_every: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 200,
+            base_lr: 3e-3,
+            warmup_frac: 0.05,
+            min_lr_frac: 0.1,
+            seed: 42,
+            batch: 1,
+            seq: 512,
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("steps", num(self.steps as f64)),
+            ("base_lr", num(self.base_lr)),
+            ("warmup_frac", num(self.warmup_frac)),
+            ("min_lr_frac", num(self.min_lr_frac)),
+            ("seed", num(self.seed as f64)),
+            ("batch", num(self.batch as f64)),
+            ("seq", num(self.seq as f64)),
+            ("log_every", num(self.log_every as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrainConfig> {
+        let d = TrainConfig::default();
+        let g_u = |k: &str, dv: u64| -> Result<u64> {
+            Ok(j.opt(k).map(|x| x.usize()).transpose()?.map(|v| v as u64).unwrap_or(dv))
+        };
+        let g_us = |k: &str, dv: usize| -> Result<usize> {
+            Ok(j.opt(k).map(|x| x.usize()).transpose()?.unwrap_or(dv))
+        };
+        let g_f = |k: &str, dv: f64| -> Result<f64> {
+            Ok(j.opt(k).map(|x| x.num()).transpose()?.unwrap_or(dv))
+        };
+        Ok(TrainConfig {
+            steps: g_u("steps", d.steps)?,
+            base_lr: g_f("base_lr", d.base_lr)?,
+            warmup_frac: g_f("warmup_frac", d.warmup_frac)?,
+            min_lr_frac: g_f("min_lr_frac", d.min_lr_frac)?,
+            seed: g_u("seed", d.seed)?,
+            batch: g_us("batch", d.batch)?,
+            seq: g_us("seq", d.seq)?,
+            log_every: g_u("log_every", d.log_every)?,
+        })
+    }
+
+    /// Override from parsed CLI options (only keys that are present).
+    pub fn apply_cli(&mut self, args: &crate::util::cli::Args) -> Result<()> {
+        self.steps = args.get_u64("steps", self.steps)?;
+        self.base_lr = args.get_f64("lr", self.base_lr)?;
+        self.seed = args.get_u64("seed", self.seed)?;
+        self.log_every = args.get_u64("log-every", self.log_every)?;
+        Ok(())
+    }
+
+    /// Effective tokens consumed by this run.
+    pub fn tokens(&self) -> u64 {
+        self.steps * (self.batch * self.seq) as u64
+    }
+}
+
+pub use presets::{ladder_sizes, table1, LadderEntry};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = TrainConfig::default();
+        c.steps = 77;
+        c.base_lr = 1.5e-3;
+        let j = c.to_json();
+        let back = TrainConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"steps": 5}"#).unwrap();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c.steps, 5);
+        assert_eq!(c.batch, TrainConfig::default().batch);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let argv: Vec<String> = ["--steps", "9", "--lr", "0.01"]
+            .iter().map(|s| s.to_string()).collect();
+        let args = crate::util::cli::Args::parse(&argv, &[]).unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_cli(&args).unwrap();
+        assert_eq!(c.steps, 9);
+        assert_eq!(c.base_lr, 0.01);
+    }
+
+    #[test]
+    fn token_budget() {
+        let c = TrainConfig { steps: 10, batch: 2, seq: 512, ..Default::default() };
+        assert_eq!(c.tokens(), 10 * 1024);
+    }
+}

@@ -1,0 +1,86 @@
+//! Experiment presets: the scaled Table-1 ladder and per-experiment
+//! step budgets (DESIGN.md §8 documents the scaling rationale).
+
+use anyhow::Result;
+
+use crate::runtime::Manifest;
+
+/// One row of the scaled scaling-law ladder (paper Table 1).
+#[derive(Clone, Debug)]
+pub struct LadderEntry {
+    pub name: &'static str,
+    /// paper-analogue description
+    pub paper_params: &'static str,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// Chinchilla-style token multiple (tokens = mult * params), scaled
+    pub token_mult: f64,
+}
+
+/// The five model sizes (mirrors `python/compile/aot.py::LADDER`).
+pub fn ladder_sizes() -> Vec<LadderEntry> {
+    vec![
+        LadderEntry { name: "s0", paper_params: "568M", d_model: 48, n_layers: 3, n_heads: 3, token_mult: 19.0 },
+        LadderEntry { name: "s1", paper_params: "822M", d_model: 64, n_layers: 4, n_heads: 4, token_mult: 18.6 },
+        LadderEntry { name: "s2", paper_params: "1.1B", d_model: 96, n_layers: 5, n_heads: 6, token_mult: 18.7 },
+        LadderEntry { name: "s3", paper_params: "1.5B", d_model: 128, n_layers: 6, n_heads: 8, token_mult: 18.3 },
+        LadderEntry { name: "s4", paper_params: "2.1B", d_model: 160, n_layers: 7, n_heads: 10, token_mult: 17.6 },
+    ]
+}
+
+/// Render the scaled Table 1 (configuration of scaling-law experiments),
+/// pulling live parameter counts from the manifest.
+pub fn table1(manifest: &Manifest) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("Table 1 (scaled): Configuration of Scaling Law Experiments\n");
+    out.push_str("paper row -> this repo  (seq 512, block 32, top-3, 81.25% sparsity)\n\n");
+    out.push_str(&format!(
+        "{:<6} {:<10} {:>8} {:>6} {:>6} {:>7} {:>12} {:>10} {:>5}\n",
+        "size", "paper", "params", "heads", "layers", "hidden", "tokens(opt)", "block", "topk"
+    ));
+    for e in ladder_sizes() {
+        let art = manifest.get(&format!("scaling_{}_moba_train", e.name))?;
+        let params = art.model.param_count;
+        let tokens = (params as f64 * e.token_mult) as u64;
+        out.push_str(&format!(
+            "{:<6} {:<10} {:>8} {:>6} {:>6} {:>7} {:>12} {:>10} {:>5}\n",
+            e.name,
+            e.paper_params,
+            params,
+            art.model.n_heads,
+            art.model.n_layers,
+            art.model.d_model,
+            tokens,
+            art.model.block_size,
+            art.model.topk,
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_monotone() {
+        let l = ladder_sizes();
+        assert_eq!(l.len(), 5);
+        for w in l.windows(2) {
+            assert!(w[0].d_model < w[1].d_model);
+            assert!(w[0].n_layers < w[1].n_layers);
+        }
+    }
+
+    #[test]
+    fn table1_renders() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let m = Manifest::load(&dir).unwrap();
+        if m.artifacts.contains_key("scaling_s0_moba_train") {
+            let t = table1(&m).unwrap();
+            assert!(t.contains("s4"));
+            assert!(t.contains("2.1B"));
+        }
+    }
+}

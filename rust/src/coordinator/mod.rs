@@ -1,0 +1,14 @@
+//! L3 coordination: the paper's system contribution.
+//!
+//! - `router`: Algorithm-1 MoE-style dispatch — query→KV-block assignment,
+//!   varlen packing, scatter-back bookkeeping, load statistics;
+//! - `stages`: MoBA↔full executable scheduling (hybrid training recipes,
+//!   continual pre-training stages).
+//!
+//! Request-level batching for the serving path lives in `crate::serve`.
+
+pub mod router;
+pub mod stages;
+
+pub use router::{BlockAssignment, RoutingPlan};
+pub use stages::{Stage, StageSchedule};

@@ -1,0 +1,207 @@
+//! Algorithm-1 router: the MoE-style dispatch plan for MoBA.
+//!
+//! The paper's high-performance implementation (§2.3, Algorithm 1 lines
+//! 9-12) arranges query tokens by their assigned KV block so each block's
+//! attention runs as one varlen FlashAttention segment, then scatters the
+//! partial outputs back and merges them with online softmax. On TPU the
+//! merge lives inside the kernel (see `python/compile/kernels/moba.py`),
+//! but the *dispatch plan* — which queries visit which blocks, in what
+//! packed order — is coordinator logic, and this module owns it.
+//!
+//! It produces, per KV block: the self-attention segment (queries whose
+//! *current* block it is; causal) and the history segment (queries routed
+//! here by the gate; non-causal), plus varlen offsets (`cu_seqlens`-style)
+//! and the inverse permutation for the scatter-back. Property tests pin
+//! the invariants; the serving engine uses the same plan to batch prefill
+//! chunks.
+
+use crate::sparse::Gate;
+
+/// One KV block's share of the dispatch.
+#[derive(Clone, Debug, Default)]
+pub struct BlockAssignment {
+    /// queries (token indices) for which this is the current block —
+    /// attended with a causal mask (Algorithm 1 line 13)
+    pub self_queries: Vec<u32>,
+    /// queries routed here as a *history* block — non-causal
+    /// (Algorithm 1 line 14)
+    pub hist_queries: Vec<u32>,
+}
+
+/// The full dispatch plan for one head.
+#[derive(Clone, Debug)]
+pub struct RoutingPlan {
+    pub block_size: usize,
+    pub n: usize,
+    pub blocks: Vec<BlockAssignment>,
+    /// varlen offsets over the packed history segments:
+    /// `hist_offsets[i]..hist_offsets[i+1]` indexes block i's queries in
+    /// `packed_hist`
+    pub hist_offsets: Vec<u32>,
+    /// concatenation of all history segments (the "arranged" query order,
+    /// Algorithm 1 line 11)
+    pub packed_hist: Vec<u32>,
+}
+
+impl RoutingPlan {
+    /// Build the plan for head `h` of a gate.
+    pub fn build(gate: &Gate, h: usize, block_size: usize) -> RoutingPlan {
+        let nb = gate.n_blocks;
+        let mut blocks = vec![BlockAssignment::default(); nb];
+        for t in 0..gate.n {
+            let cur = t / block_size;
+            for i in 0..=cur.min(nb - 1) {
+                if gate.get(h, t, i) {
+                    if i == cur {
+                        blocks[i].self_queries.push(t as u32);
+                    } else {
+                        blocks[i].hist_queries.push(t as u32);
+                    }
+                }
+            }
+        }
+        let mut hist_offsets = Vec::with_capacity(nb + 1);
+        let mut packed_hist = Vec::new();
+        hist_offsets.push(0u32);
+        for b in &blocks {
+            packed_hist.extend_from_slice(&b.hist_queries);
+            hist_offsets.push(packed_hist.len() as u32);
+        }
+        RoutingPlan { block_size, n: gate.n, blocks, hist_offsets, packed_hist }
+    }
+
+    /// Total (query, block) attention pairs — proportional to FLOPs.
+    pub fn total_pairs(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| b.self_queries.len() + b.hist_queries.len())
+            .sum()
+    }
+
+    /// Inverse map: for each query, how many partial outputs will be
+    /// produced (current block + gated history blocks). The online-softmax
+    /// combine (Algorithm 1 line 16) merges exactly this many partials.
+    pub fn partials_per_query(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.n];
+        for b in &self.blocks {
+            for &q in &b.self_queries {
+                counts[q as usize] += 1;
+            }
+            for &q in &b.hist_queries {
+                counts[q as usize] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Expert-utilization statistics: per-block history load (how many
+    /// queries routed to each block). The MoE load-balance lens on MoBA.
+    pub fn block_loads(&self) -> Vec<usize> {
+        self.blocks.iter().map(|b| b.hist_queries.len()).collect()
+    }
+
+    /// Load-imbalance factor: max/mean history load over *routable*
+    /// blocks (blocks that at least one later query could select).
+    pub fn imbalance(&self) -> f64 {
+        let loads = self.block_loads();
+        // the last block can never be a history target
+        let routable = &loads[..loads.len().saturating_sub(1)];
+        if routable.is_empty() {
+            return 1.0;
+        }
+        let max = *routable.iter().max().unwrap() as f64;
+        let mean = routable.iter().sum::<usize>() as f64 / routable.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::moba_gate;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn rand_t(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+    }
+
+    fn plan(seed: u64, n: usize, bs: usize, topk: usize) -> (RoutingPlan, Gate) {
+        let q = rand_t(&[n, 1, 8], seed);
+        let k = rand_t(&[n, 1, 8], seed + 1);
+        let g = moba_gate(&q, &k, bs, topk);
+        (RoutingPlan::build(&g, 0, bs), g)
+    }
+
+    #[test]
+    fn every_query_in_exactly_one_self_segment() {
+        let (p, _) = plan(1, 128, 16, 3);
+        let mut seen = vec![0; 128];
+        for (i, b) in p.blocks.iter().enumerate() {
+            for &q in &b.self_queries {
+                seen[q as usize] += 1;
+                assert_eq!(q as usize / 16, i, "query in wrong self block");
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn hist_segments_respect_causality() {
+        let (p, _) = plan(2, 128, 16, 3);
+        for (i, b) in p.blocks.iter().enumerate() {
+            for &q in &b.hist_queries {
+                assert!(
+                    q as usize / 16 > i,
+                    "history block {i} got query {q} from a non-later block"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pairs_match_gate_totals() {
+        let (p, g) = plan(3, 256, 32, 3);
+        assert_eq!(p.total_pairs(), g.total_selected());
+    }
+
+    #[test]
+    fn partials_equal_topk_bounded() {
+        let topk = 3;
+        let (p, _) = plan(4, 256, 32, topk);
+        for (t, &c) in p.partials_per_query().iter().enumerate() {
+            let avail = t / 32 + 1;
+            assert_eq!(c as usize, topk.min(avail), "t={t}");
+        }
+    }
+
+    #[test]
+    fn varlen_offsets_consistent() {
+        let (p, _) = plan(5, 128, 16, 2);
+        assert_eq!(p.hist_offsets.len(), p.blocks.len() + 1);
+        for (i, b) in p.blocks.iter().enumerate() {
+            let lo = p.hist_offsets[i] as usize;
+            let hi = p.hist_offsets[i + 1] as usize;
+            assert_eq!(&p.packed_hist[lo..hi], b.hist_queries.as_slice());
+        }
+        assert_eq!(*p.hist_offsets.last().unwrap() as usize, p.packed_hist.len());
+    }
+
+    #[test]
+    fn last_block_gets_no_history_queries() {
+        let (p, _) = plan(6, 128, 16, 3);
+        assert!(p.blocks.last().unwrap().hist_queries.is_empty());
+    }
+
+    #[test]
+    fn imbalance_at_least_one() {
+        let (p, _) = plan(7, 512, 32, 3);
+        assert!(p.imbalance() >= 1.0);
+    }
+}

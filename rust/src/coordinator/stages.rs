@@ -1,0 +1,121 @@
+//! Stage scheduling: the paper's seamless MoBA <-> full-attention
+//! switching, expressed as a training-time executable schedule.
+//!
+//! Because MoBA adds no parameters, the *same* `ModelState` can be fed to
+//! the MoBA train-step executable for the first 90% of tokens and the
+//! full-attention executable for the last 10% (the paper's MoBA/full
+//! hybrid recipe, Fig 5a), or to any layer-wise hybrid artifact. The
+//! scheduler maps a global step index to the artifact that should run it.
+
+use anyhow::{bail, Result};
+
+/// One training stage: run `artifact` for `steps` optimizer steps.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stage {
+    pub artifact: String,
+    pub steps: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct StageSchedule {
+    stages: Vec<Stage>,
+}
+
+impl StageSchedule {
+    /// Single-stage schedule (plain MoBA or plain full training).
+    pub fn single(artifact: &str, steps: u64) -> StageSchedule {
+        StageSchedule { stages: vec![Stage { artifact: artifact.into(), steps }] }
+    }
+
+    /// The paper's hybrid recipe: `frac` of the steps on `first`, the
+    /// remainder on `second` (e.g. 0.9 MoBA then 0.1 full).
+    pub fn hybrid(first: &str, second: &str, total: u64, frac: f64) -> Result<StageSchedule> {
+        if !(0.0..=1.0).contains(&frac) {
+            bail!("fraction {frac} outside [0,1]");
+        }
+        let first_steps = ((total as f64) * frac).round() as u64;
+        let stages = vec![
+            Stage { artifact: first.into(), steps: first_steps },
+            Stage { artifact: second.into(), steps: total - first_steps },
+        ];
+        Ok(StageSchedule { stages })
+    }
+
+    /// Multi-stage (continual pre-training recipe, Fig 6): arbitrary
+    /// (artifact, steps) list, e.g. 512-ctx -> 1024-ctx(PI) -> 2048-ctx(PI).
+    pub fn stages(stages: Vec<Stage>) -> StageSchedule {
+        StageSchedule { stages }
+    }
+
+    pub fn total_steps(&self) -> u64 {
+        self.stages.iter().map(|s| s.steps).sum()
+    }
+
+    /// Artifact for 0-based global step, or None past the end.
+    pub fn artifact_for(&self, step: u64) -> Option<&str> {
+        let mut acc = 0;
+        for st in &self.stages {
+            acc += st.steps;
+            if step < acc {
+                return Some(&st.artifact);
+            }
+        }
+        None
+    }
+
+    /// Global steps at which the executable switches (for loss-spike
+    /// inspection around the transition, paper §3.2).
+    pub fn switch_points(&self) -> Vec<u64> {
+        let mut pts = Vec::new();
+        let mut acc = 0;
+        for st in &self.stages[..self.stages.len().saturating_sub(1)] {
+            acc += st.steps;
+            pts.push(acc);
+        }
+        pts
+    }
+
+    pub fn stage_list(&self) -> &[Stage] {
+        &self.stages
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_covers_all_steps() {
+        let s = StageSchedule::single("a", 10);
+        assert_eq!(s.artifact_for(0), Some("a"));
+        assert_eq!(s.artifact_for(9), Some("a"));
+        assert_eq!(s.artifact_for(10), None);
+    }
+
+    #[test]
+    fn hybrid_90_10() {
+        let s = StageSchedule::hybrid("moba", "full", 100, 0.9).unwrap();
+        assert_eq!(s.artifact_for(89), Some("moba"));
+        assert_eq!(s.artifact_for(90), Some("full"));
+        assert_eq!(s.switch_points(), vec![90]);
+        assert_eq!(s.total_steps(), 100);
+    }
+
+    #[test]
+    fn hybrid_rejects_bad_fraction() {
+        assert!(StageSchedule::hybrid("a", "b", 10, 1.5).is_err());
+    }
+
+    #[test]
+    fn multi_stage_boundaries() {
+        let s = StageSchedule::stages(vec![
+            Stage { artifact: "s512".into(), steps: 5 },
+            Stage { artifact: "s1024".into(), steps: 3 },
+            Stage { artifact: "s2048".into(), steps: 2 },
+        ]);
+        assert_eq!(s.artifact_for(4), Some("s512"));
+        assert_eq!(s.artifact_for(5), Some("s1024"));
+        assert_eq!(s.artifact_for(8), Some("s2048"));
+        assert_eq!(s.switch_points(), vec![5, 8]);
+    }
+}

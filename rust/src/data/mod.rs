@@ -1,0 +1,23 @@
+//! Data pipeline: synthetic corpora and task generators (DESIGN.md §4
+//! documents how each substitutes for the paper's proprietary data).
+//!
+//! - `corpus`: Zipf-Markov LM stream with long-range replay spans;
+//! - `needle`: needle-in-a-haystack retrieval (Fig 7);
+//! - `sft`: prompt-masked retrieval SFT (Fig 5b/c).
+//!
+//! All generators are deterministic functions of (seed, stream id), so
+//! every experiment is exactly reproducible and train/val streams are
+//! disjoint by construction.
+
+pub mod corpus;
+pub mod needle;
+pub mod sft;
+
+pub use corpus::{Corpus, CorpusCfg};
+pub use needle::{NeedleGen, NeedleSample};
+pub use sft::SftGen;
+
+/// Stream-id convention shared by the experiment harnesses: training
+/// batches use ids [0, 2^32), validation uses [2^32, ...), so the two
+/// never collide for any step count.
+pub const VAL_STREAM_BASE: u64 = 1 << 32;

@@ -1,0 +1,196 @@
+//! Needle-in-a-haystack generator (paper Fig 7, scaled per DESIGN.md §4).
+//!
+//! A sequence is filler text (drawn from the corpus generator) with one
+//! key-value fact planted at a controllable depth:
+//!
+//! `... filler ... [KEY] k [VAL] v ... filler ... [QUERY] k [SEP] -> v`
+//!
+//! The model must emit `v` after `[SEP]`. Training samples randomize
+//! depth and length; the Fig-7 evaluation sweeps (context length × depth)
+//! and scores exact retrieval, producing the same heatmap the paper draws
+//! at 1M scale.
+
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::Rng;
+
+use super::corpus::{Corpus, CorpusCfg};
+
+/// Special token ids (top of the 512 vocab; base corpus stays below 500).
+pub const TOK_KEY: i32 = 511;
+pub const TOK_VAL: i32 = 510;
+pub const TOK_QUERY: i32 = 509;
+pub const TOK_SEP: i32 = 508;
+
+/// keys and values are drawn from disjoint ordinary-token ranges so the
+/// model cannot cheat via unigram statistics
+pub const KEY_RANGE: (i32, i32) = (400, 450);
+pub const VAL_RANGE: (i32, i32) = (450, 500);
+
+#[derive(Clone, Debug)]
+pub struct NeedleSample {
+    pub tokens: Vec<i32>,
+    /// position of the answer token (== value) — the model must predict
+    /// `tokens[answer_pos]` from the prefix ending at `answer_pos - 1`
+    pub answer_pos: usize,
+    pub value: i32,
+    /// where the needle was planted, as a fraction of the haystack
+    pub depth: f64,
+}
+
+pub struct NeedleGen {
+    corpus: Corpus,
+}
+
+impl NeedleGen {
+    pub fn new(seed: u64) -> NeedleGen {
+        NeedleGen { corpus: Corpus::new(CorpusCfg::default(), seed) }
+    }
+
+    /// One sample of total length `seq` with the needle at `depth` in
+    /// [0, 1]. The trailing 4 positions hold `[QUERY] k [SEP] v`.
+    pub fn sample(&self, rng: &mut Rng, seq: usize, depth: f64) -> NeedleSample {
+        assert!(seq >= 16, "sequence too short for a needle");
+        let key = KEY_RANGE.0 + rng.below((KEY_RANGE.1 - KEY_RANGE.0) as u64) as i32;
+        let value = VAL_RANGE.0 + rng.below((VAL_RANGE.1 - VAL_RANGE.0) as u64) as i32;
+
+        let haystack_len = seq - 4; // reserve the query suffix
+        let mut tokens = self.corpus.sequence(rng, haystack_len);
+        // avoid accidental needle-range collisions in the filler
+        for t in tokens.iter_mut() {
+            if *t >= KEY_RANGE.0 {
+                *t %= KEY_RANGE.0;
+            }
+        }
+        // plant [KEY] k [VAL] v at the depth-determined offset
+        let max_pos = haystack_len - 4;
+        let pos = ((max_pos as f64) * depth).round() as usize;
+        tokens[pos] = TOK_KEY;
+        tokens[pos + 1] = key;
+        tokens[pos + 2] = TOK_VAL;
+        tokens[pos + 3] = value;
+        // query suffix
+        tokens.push(TOK_QUERY);
+        tokens.push(key);
+        tokens.push(TOK_SEP);
+        tokens.push(value);
+        NeedleSample { tokens, answer_pos: seq - 1, value, depth }
+    }
+
+    /// Training batch: random depths; loss masked to *only* the answer
+    /// position (retrieval supervision) plus a light LM weight elsewhere
+    /// so representations keep improving.
+    pub fn train_batch(
+        &self,
+        seed: u64,
+        stream: u64,
+        batch: usize,
+        seq: usize,
+        lm_weight: f32,
+    ) -> (IntTensor, Tensor) {
+        let mut toks = Vec::with_capacity(batch * seq);
+        let mut mask = vec![lm_weight; batch * (seq - 1)];
+        for b in 0..batch {
+            let mut rng = Rng::new(seed ^ stream.wrapping_mul(0xABCD_EF01) ^ ((b as u64) << 40));
+            let depth = rng.f64();
+            let s = self.sample(&mut rng, seq, depth);
+            // answer at seq-1 is predicted from position seq-2 -> mask idx seq-2
+            mask[b * (seq - 1) + (s.answer_pos - 1)] = 1.0;
+            toks.extend(s.tokens);
+        }
+        (
+            IntTensor::from_vec(&[batch, seq], toks).unwrap(),
+            Tensor::from_vec(&[batch, seq - 1], mask).unwrap(),
+        )
+    }
+
+    /// Evaluation grid cell: `n_samples` needles at (seq, depth).
+    pub fn eval_samples(
+        &self,
+        seed: u64,
+        seq: usize,
+        depth: f64,
+        n_samples: usize,
+    ) -> Vec<NeedleSample> {
+        (0..n_samples)
+            .map(|i| {
+                let mut rng = Rng::new(seed ^ 0xEEE ^ ((i as u64) << 24) ^ (seq as u64));
+                self.sample(&mut rng, seq, depth)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_structure() {
+        let g = NeedleGen::new(1);
+        let mut rng = Rng::new(2);
+        let s = g.sample(&mut rng, 256, 0.5);
+        assert_eq!(s.tokens.len(), 256);
+        assert_eq!(s.tokens[252], TOK_QUERY);
+        assert_eq!(s.tokens[254], TOK_SEP);
+        assert_eq!(s.tokens[255], s.value);
+        assert_eq!(s.answer_pos, 255);
+    }
+
+    #[test]
+    fn needle_is_planted_and_consistent() {
+        let g = NeedleGen::new(3);
+        let mut rng = Rng::new(4);
+        let s = g.sample(&mut rng, 128, 0.25);
+        let kpos = s.tokens.iter().position(|&t| t == TOK_KEY).unwrap();
+        assert_eq!(s.tokens[kpos + 2], TOK_VAL);
+        assert_eq!(s.tokens[kpos + 3], s.value);
+        // queried key matches planted key
+        assert_eq!(s.tokens[kpos + 1], s.tokens[125]);
+    }
+
+    #[test]
+    fn depth_zero_and_one() {
+        let g = NeedleGen::new(5);
+        let mut rng = Rng::new(6);
+        let s0 = g.sample(&mut rng, 128, 0.0);
+        assert_eq!(s0.tokens[0], TOK_KEY);
+        let s1 = g.sample(&mut rng, 128, 1.0);
+        let kpos = s1.tokens.iter().position(|&t| t == TOK_KEY).unwrap();
+        assert_eq!(kpos, 128 - 4 - 4);
+    }
+
+    #[test]
+    fn filler_never_collides_with_markers() {
+        let g = NeedleGen::new(7);
+        let mut rng = Rng::new(8);
+        let s = g.sample(&mut rng, 512, 0.6);
+        let kpos = s.tokens.iter().position(|&t| t == TOK_KEY).unwrap();
+        for (i, &t) in s.tokens[..508].iter().enumerate() {
+            if !(kpos..kpos + 4).contains(&i) {
+                assert!(t < KEY_RANGE.0, "filler token {t} at {i} inside reserved range");
+            }
+        }
+    }
+
+    #[test]
+    fn train_batch_mask_targets_answer() {
+        let g = NeedleGen::new(9);
+        let (toks, mask) = g.train_batch(1, 0, 2, 128, 0.1);
+        assert_eq!(toks.shape, vec![2, 128]);
+        assert_eq!(mask.shape, vec![2, 127]);
+        for b in 0..2 {
+            assert_eq!(mask.data[b * 127 + 126], 1.0);
+        }
+        let tenths = mask.data.iter().filter(|&&x| x == 0.1).count();
+        assert_eq!(tenths, 2 * 126);
+    }
+
+    #[test]
+    fn eval_samples_deterministic() {
+        let g = NeedleGen::new(11);
+        let a = g.eval_samples(5, 128, 0.5, 3);
+        let b = g.eval_samples(5, 128, 0.5, 3);
+        assert_eq!(a[0].tokens, b[0].tokens);
+        assert_eq!(a.len(), 3);
+    }
+}

@@ -1,0 +1,173 @@
+//! Position-wise LM loss aggregation.
+//!
+//! The eval artifacts return masked per-position CE losses `[B, S-1]`.
+//! This module accumulates them over validation batches and derives the
+//! paper's three loss views:
+//!
+//! - mean LM loss (Fig 3a),
+//! - trailing LM loss: mean over the last T positions (Fig 3b, 5c),
+//! - position-wise LM loss / position-bucket means (Fig 5a, Table 3).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Engine;
+use crate::tensor::{IntTensor, Tensor};
+
+/// Accumulated per-position loss sums and counts.
+#[derive(Clone, Debug)]
+pub struct PositionLosses {
+    pub sums: Vec<f64>,
+    pub counts: Vec<f64>,
+}
+
+impl PositionLosses {
+    pub fn new(positions: usize) -> PositionLosses {
+        PositionLosses { sums: vec![0.0; positions], counts: vec![0.0; positions] }
+    }
+
+    /// Fold in one `[B, S-1]` masked loss tensor with its mask.
+    pub fn add(&mut self, losses: &Tensor, mask: &Tensor) -> Result<()> {
+        if losses.shape != mask.shape || losses.rank() != 2 {
+            bail!("loss/mask shape mismatch: {:?} vs {:?}", losses.shape, mask.shape);
+        }
+        let (b, s) = (losses.shape[0], losses.shape[1]);
+        if s != self.sums.len() {
+            bail!("position count mismatch: {} vs {}", s, self.sums.len());
+        }
+        for bi in 0..b {
+            for p in 0..s {
+                let m = mask.at2(bi, p) as f64;
+                if m > 0.0 {
+                    self.sums[p] += losses.at2(bi, p) as f64;
+                    self.counts[p] += m;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Mean loss per position (NaN-free: unobserved positions -> 0).
+    pub fn per_position(&self) -> Vec<f64> {
+        self.sums
+            .iter()
+            .zip(&self.counts)
+            .map(|(&s, &c)| if c > 0.0 { s / c } else { 0.0 })
+            .collect()
+    }
+
+    /// Overall mean.
+    pub fn mean(&self) -> f64 {
+        let total: f64 = self.sums.iter().sum();
+        let n: f64 = self.counts.iter().sum();
+        if n > 0.0 {
+            total / n
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean over the last `t` positions (trailing LM loss).
+    pub fn trailing(&self, t: usize) -> f64 {
+        let start = self.sums.len().saturating_sub(t);
+        let total: f64 = self.sums[start..].iter().sum();
+        let n: f64 = self.counts[start..].iter().sum();
+        if n > 0.0 {
+            total / n
+        } else {
+            0.0
+        }
+    }
+
+    /// Bucketed means: positions grouped into `bucket` wide ranges
+    /// (Table 3 uses 2K-token buckets at 32K; we use scaled buckets).
+    pub fn buckets(&self, bucket: usize) -> Vec<(usize, usize, f64)> {
+        let mut out = Vec::new();
+        let mut lo = 0;
+        while lo < self.sums.len() {
+            let hi = (lo + bucket).min(self.sums.len());
+            let total: f64 = self.sums[lo..hi].iter().sum();
+            let n: f64 = self.counts[lo..hi].iter().sum();
+            out.push((lo, hi, if n > 0.0 { total / n } else { 0.0 }));
+            lo = hi;
+        }
+        out
+    }
+}
+
+/// Evaluate mean LM loss of `params` over `n_batches` validation batches.
+pub fn positionwise_mean(
+    engine: &Engine,
+    eval_artifact: &str,
+    params: &[Tensor],
+    mut batches: impl FnMut(u64) -> (IntTensor, Tensor),
+    n_batches: u64,
+) -> Result<PositionLosses> {
+    let art = engine.manifest.get(eval_artifact)?;
+    let mut acc = PositionLosses::new(art.seq - 1);
+    for i in 0..n_batches {
+        let (tokens, mask) = batches(i);
+        let losses = engine.eval_losses(eval_artifact, params, &tokens, &mask)?;
+        acc.add(&losses, &mask)?;
+    }
+    Ok(acc)
+}
+
+/// Convenience: trailing mean over the last `frac` of the context.
+pub fn trailing_mean(acc: &PositionLosses, frac: f64) -> f64 {
+    let t = ((acc.sums.len() as f64) * frac).round().max(1.0) as usize;
+    acc.trailing(t)
+}
+
+/// Convenience: bucket means with `n_buckets` equal ranges.
+pub fn bucket_means(acc: &PositionLosses, n_buckets: usize) -> Vec<(usize, usize, f64)> {
+    let w = (acc.sums.len() / n_buckets).max(1);
+    acc.buckets(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_means() {
+        let mut acc = PositionLosses::new(4);
+        let l = Tensor::from_vec(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let m = Tensor::ones(&[1, 4]);
+        acc.add(&l, &m).unwrap();
+        acc.add(&l, &m).unwrap();
+        assert_eq!(acc.per_position(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(acc.mean(), 2.5);
+        assert_eq!(acc.trailing(2), 3.5);
+    }
+
+    #[test]
+    fn respects_mask() {
+        let mut acc = PositionLosses::new(3);
+        let l = Tensor::from_vec(&[1, 3], vec![5.0, 0.0, 1.0]).unwrap();
+        let m = Tensor::from_vec(&[1, 3], vec![1.0, 0.0, 1.0]).unwrap();
+        acc.add(&l, &m).unwrap();
+        let pp = acc.per_position();
+        assert_eq!(pp[1], 0.0); // unobserved
+        assert_eq!(acc.mean(), 3.0);
+    }
+
+    #[test]
+    fn buckets_cover_all_positions() {
+        let mut acc = PositionLosses::new(10);
+        let l = Tensor::from_vec(&[1, 10], (0..10).map(|x| x as f32).collect()).unwrap();
+        let m = Tensor::ones(&[1, 10]);
+        acc.add(&l, &m).unwrap();
+        let b = acc.buckets(4);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0], (0, 4, 1.5));
+        assert_eq!(b[2].0, 8);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut acc = PositionLosses::new(4);
+        let l = Tensor::ones(&[1, 3]);
+        let m = Tensor::ones(&[1, 3]);
+        assert!(acc.add(&l, &m).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation: position-wise loss aggregation (Fig 3b/5a/Table 3),
+//! needle scoring (Fig 7) and the downstream task suite (Table 2).
+
+pub mod losses;
+pub mod needle_score;
+pub mod suite;
+
+pub use losses::{bucket_means, positionwise_mean, trailing_mean, PositionLosses};
+pub use needle_score::score_needles;
+pub use suite::{run_suite, SuiteResult};

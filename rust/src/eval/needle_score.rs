@@ -1,0 +1,47 @@
+//! Needle-in-a-haystack scoring (paper Fig 7).
+//!
+//! Runs a `logits` artifact over generated needle samples and checks
+//! whether the model's argmax at the query position is the planted
+//! value. One call scores one (context length, depth) heatmap cell.
+
+use anyhow::{bail, Result};
+
+use crate::data::needle::NeedleSample;
+use crate::runtime::Engine;
+use crate::tensor::IntTensor;
+
+/// Accuracy of exact retrieval over `samples` (all of one seq length).
+pub fn score_needles(
+    engine: &Engine,
+    logits_artifact: &str,
+    params: &[crate::tensor::Tensor],
+    samples: &[NeedleSample],
+) -> Result<f64> {
+    if samples.is_empty() {
+        bail!("no needle samples");
+    }
+    let art = engine.manifest.get(logits_artifact)?;
+    let seq = art.seq;
+    let vocab = art.model.vocab;
+    let mut correct = 0usize;
+    for s in samples {
+        if s.tokens.len() != seq {
+            bail!("sample length {} != artifact seq {}", s.tokens.len(), seq);
+        }
+        let tokens = IntTensor::from_vec(&[1, seq], s.tokens.clone())?;
+        let logits = engine.logits(logits_artifact, params, &tokens)?; // [1, S, V]
+        // predict tokens[answer_pos] from logits at answer_pos - 1
+        let off = (s.answer_pos - 1) * vocab;
+        let row = &logits.data[off..off + vocab];
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+        if argmax == s.value {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / samples.len() as f64)
+}

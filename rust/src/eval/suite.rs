@@ -1,0 +1,163 @@
+//! Downstream evaluation suite — the Table-2 substitute (DESIGN.md §4).
+//!
+//! The paper compares MoBA vs full checkpoints on public benchmarks and
+//! finds parity at matched training. Our tiny models cannot express
+//! AGIEval; the *claim under test* is the parity, so the suite measures
+//! it on tasks a tiny model can express:
+//!
+//! - `heldout_ppl`  — perplexity on a disjoint corpus stream (LM quality);
+//! - `needle_acc`   — exact retrieval at the trained context length;
+//! - `copy_acc`     — verbatim continuation of a repeated span
+//!                    (induction/copying circuit);
+//! - `multiquery`   — SFT-style multi-fact recall accuracy.
+
+use anyhow::Result;
+
+use crate::data::{needle::NeedleGen, Corpus, VAL_STREAM_BASE};
+use crate::eval::losses::positionwise_mean;
+use crate::eval::needle_score::score_needles;
+use crate::runtime::Engine;
+use crate::tensor::{IntTensor, Tensor};
+
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    pub heldout_ppl: f64,
+    pub needle_acc: f64,
+    pub copy_acc: f64,
+    pub multiquery_acc: f64,
+}
+
+impl SuiteResult {
+    pub fn rows(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("HeldoutPPL", self.heldout_ppl),
+            ("NeedleRetrieval", self.needle_acc),
+            ("CopySpan", self.copy_acc),
+            ("MultiQueryRecall", self.multiquery_acc),
+        ]
+    }
+}
+
+/// Build a copy-task sequence: random span, separator, repeat. Scoring is
+/// teacher-forced argmax accuracy over the repeated half.
+fn copy_sample(rng: &mut crate::util::rng::Rng, seq: usize) -> (Vec<i32>, usize) {
+    let half = (seq - 1) / 2;
+    let mut toks = Vec::with_capacity(seq);
+    for _ in 0..half {
+        toks.push(rng.range(0, 380) as i32);
+    }
+    toks.push(crate::data::needle::TOK_SEP);
+    let prefix: Vec<i32> = toks[..half].to_vec();
+    toks.extend_from_slice(&prefix);
+    while toks.len() < seq {
+        toks.push(0);
+    }
+    (toks, half + 1) // copy region starts after the separator
+}
+
+/// Run the suite against one checkpoint through its eval + logits
+/// artifacts (which must share geometry).
+pub fn run_suite(
+    engine: &Engine,
+    eval_artifact: &str,
+    logits_artifact: &str,
+    params: &[Tensor],
+    seed: u64,
+    n_eval_batches: u64,
+) -> Result<SuiteResult> {
+    let eval_art = engine.manifest.get(eval_artifact)?;
+    let (batch, seq) = (eval_art.batch, eval_art.seq);
+
+    // --- held-out perplexity ---------------------------------------------
+    let corpus = Corpus::for_vocab(eval_art.model.vocab, seed);
+    let acc = positionwise_mean(
+        engine,
+        eval_artifact,
+        params,
+        |i| corpus.batch(seed, VAL_STREAM_BASE + i, batch, seq),
+        n_eval_batches,
+    )?;
+    let heldout_ppl = acc.mean().exp();
+
+    // --- needle retrieval --------------------------------------------------
+    let logits_art = engine.manifest.get(logits_artifact)?;
+    let gen = NeedleGen::new(seed);
+    let mut needle_samples = Vec::new();
+    for &depth in &[0.1, 0.5, 0.9] {
+        needle_samples.extend(gen.eval_samples(seed ^ 77, logits_art.seq, depth, 4));
+    }
+    let needle_acc = score_needles(engine, logits_artifact, params, &needle_samples)?;
+
+    // --- copy span ----------------------------------------------------------
+    let vocab = logits_art.model.vocab;
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0xC0);
+    let mut copy_correct = 0usize;
+    let mut copy_total = 0usize;
+    for _ in 0..6 {
+        let (toks, copy_start) = copy_sample(&mut rng, logits_art.seq);
+        let tokens = IntTensor::from_vec(&[1, logits_art.seq], toks.clone())?;
+        let logits = engine.logits(logits_artifact, params, &tokens)?;
+        // score the first 32 copied positions (teacher-forced)
+        let span = 32.min(logits_art.seq - copy_start - 1);
+        for p in copy_start..copy_start + span {
+            let off = (p - 1) * vocab;
+            let row = &logits.data[off..off + vocab];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap();
+            if argmax == toks[p] {
+                copy_correct += 1;
+            }
+            copy_total += 1;
+        }
+    }
+    let copy_acc = copy_correct as f64 / copy_total.max(1) as f64;
+
+    // --- multi-query recall ---------------------------------------------
+    let sft = crate::data::SftGen::new(seed ^ 0x51);
+    let mut mq_correct = 0usize;
+    let mut mq_total = 0usize;
+    for i in 0..6u64 {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0x51F7 ^ (i << 16));
+        let (toks, _) = sft.sample(&mut rng, logits_art.seq);
+        let tokens = IntTensor::from_vec(&[1, logits_art.seq], toks.clone())?;
+        let logits = engine.logits(logits_artifact, params, &tokens)?;
+        // answers sit at positions seq-1-4q for q in 0..n_queries
+        for q in 0..sft.n_queries {
+            let pos = logits_art.seq - 1 - q * 4; // value positions from the end
+            let off = (pos - 1) * vocab;
+            let row = &logits.data[off..off + vocab];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap();
+            if argmax == toks[pos] {
+                mq_correct += 1;
+            }
+            mq_total += 1;
+        }
+    }
+    let multiquery_acc = mq_correct as f64 / mq_total.max(1) as f64;
+
+    Ok(SuiteResult { heldout_ppl, needle_acc, copy_acc, multiquery_acc })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copy_sample_structure() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let (toks, start) = copy_sample(&mut rng, 129);
+        assert_eq!(toks.len(), 129);
+        assert_eq!(toks[start - 1], crate::data::needle::TOK_SEP);
+        let half = 64;
+        assert_eq!(&toks[..half], &toks[start..start + half]);
+    }
+}

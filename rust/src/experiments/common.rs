@@ -1,0 +1,79 @@
+//! Shared experiment plumbing: train-then-eval runs over corpus data.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::StageSchedule;
+use crate::data::{Corpus, VAL_STREAM_BASE};
+use crate::eval::losses::{positionwise_mean, PositionLosses};
+use crate::metrics::writer::CsvWriter;
+use crate::runtime::{Engine, ModelState};
+use crate::train::{LrSchedule, Trainer};
+
+/// Outcome of one train+eval run.
+pub struct RunOutcome {
+    pub state: ModelState,
+    pub train_losses: Vec<f32>,
+    pub eval: PositionLosses,
+    pub train_secs: f64,
+}
+
+/// Train on the synthetic corpus under `schedule`, then evaluate
+/// position-wise losses on held-out streams with `eval_artifact`.
+pub fn train_and_eval(
+    engine: &Engine,
+    schedule: StageSchedule,
+    eval_artifact: &str,
+    cfg: &TrainConfig,
+    n_eval_batches: u64,
+    mut loss_csv: Option<&mut CsvWriter>,
+) -> Result<RunOutcome> {
+    let first = schedule.stage_list()[0].artifact.clone();
+    let train_art = engine.manifest.get(&first)?;
+    let corpus = Corpus::for_vocab(train_art.model.vocab, cfg.seed);
+    let (batch, seq) = (train_art.batch, train_art.seq);
+
+    let lr = LrSchedule::new(cfg.base_lr, schedule.total_steps(), cfg.warmup_frac, cfg.min_lr_frac);
+    let mut trainer = Trainer::new(engine, schedule, lr, cfg.seed)?;
+    let seed = cfg.seed;
+    let log_every = cfg.log_every;
+    let summary = trainer.run(
+        |step| corpus.batch(seed, step, batch, seq),
+        |info| {
+            if let Some(csv) = loss_csv.as_deref_mut() {
+                let _ = csv.row(&[info.step as f64, info.loss as f64, info.lr]);
+            }
+            if info.step % log_every == 0 {
+                eprintln!(
+                    "    step {:>5}  loss {:.4}  lr {:.2e}  ({:.2}s/step)  [{}]",
+                    info.step, info.loss, info.lr, info.step_secs, info.artifact
+                );
+            }
+        },
+    )?;
+    if let Some(csv) = loss_csv.as_deref_mut() {
+        csv.flush()?;
+    }
+
+    let eval_art = engine.manifest.get(eval_artifact)?;
+    let (eb, es) = (eval_art.batch, eval_art.seq);
+    let eval = positionwise_mean(
+        engine,
+        eval_artifact,
+        &trainer.state.params,
+        |i| corpus.batch(seed, VAL_STREAM_BASE + i, eb, es),
+        n_eval_batches,
+    )?;
+    Ok(RunOutcome {
+        state: trainer.state,
+        train_losses: summary.losses,
+        eval,
+        train_secs: summary.total_secs,
+    })
+}
+
+/// Training compute proxy C = 6 * params * tokens (Chinchilla convention),
+/// used as the x-axis of the scaling fits.
+pub fn compute_flops(param_count: usize, tokens: u64) -> f64 {
+    6.0 * param_count as f64 * tokens as f64
+}

@@ -1,0 +1,144 @@
+//! Fig 2a/2b: MoBA vs FlashAttention efficiency.
+//!
+//! Two evidence layers (DESIGN.md §4):
+//!
+//! 1. **Cost model at paper scale** — the calibrated roofline model
+//!    sweeps 8K→1M (Fig 2a, block 4096 top-12, the paper's 1M-model
+//!    setting) and 8K→10M at fixed 64 blocks/top-3 (Fig 2b), on an
+//!    A100-class profile. The claim under test is the *shape*: a
+//!    crossover after which MoBA wins, growing to ~6.5x at 1M and ~16x
+//!    at 10M.
+//! 2. **Measured CPU kernels at small scale** — the pure-Rust MoBA and
+//!    full-attention kernels are timed head-to-head (256→4096 tokens),
+//!    verifying the crossover direction empirically and validating the
+//!    cost model's CPU-profile predictions against wall clock.
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::attn_sim::{
+    self,
+    profiles::{a100_like, calibrate_cpu},
+    AttnShape,
+};
+use crate::metrics::writer::RunDir;
+use crate::sparse;
+use crate::tensor::Tensor;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Rng;
+
+pub struct EfficiencyArgs {
+    /// max measured length for the CPU comparison
+    pub measure_max: usize,
+    pub seed: u64,
+}
+
+impl Default for EfficiencyArgs {
+    fn default() -> Self {
+        EfficiencyArgs { measure_max: 4096, seed: 42 }
+    }
+}
+
+fn rand_qkv(n: usize, h: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+    let mut rng = Rng::new(seed);
+    let mut mk = || {
+        Tensor::from_vec(&[n, h, d], (0..n * h * d).map(|_| rng.normal_f32(1.0)).collect())
+            .unwrap()
+    };
+    (mk(), mk(), mk())
+}
+
+pub fn run(args: &EfficiencyArgs) -> Result<()> {
+    let dir = RunDir::create("efficiency")?;
+    let mut rows_json = Vec::new();
+
+    // ---- Fig 2a: cost model, 1M-model setting --------------------------
+    let dev = a100_like();
+    println!("== Fig 2a — MoBA vs FlashAttention, 1M-model setting (cost model, {}) ==", dev.name);
+    println!("block 4096, top-12 (paper §3.3); H=32, D=128");
+    println!("{:>10} {:>12} {:>12} {:>9} {:>10}", "N", "flash_ms", "moba_ms", "speedup", "sparsity");
+    let lengths_2a: Vec<usize> =
+        [8, 16, 32, 64, 128, 256, 512, 1024].iter().map(|k| k * 1024).collect();
+    for r in attn_sim::sweep_fixed_block(&lengths_2a, 4096, 12, 32, 128, &dev) {
+        println!(
+            "{:>10} {:>12.2} {:>12.2} {:>9.2} {:>9.1}%",
+            r.n, r.full_ms, r.moba_ms, r.speedup, r.sparsity * 100.0
+        );
+        rows_json.push(obj(vec![
+            ("figure", s("2a")),
+            ("n", num(r.n as f64)),
+            ("full_ms", num(r.full_ms)),
+            ("moba_ms", num(r.moba_ms)),
+            ("speedup", num(r.speedup)),
+        ]));
+    }
+
+    // ---- Fig 2b: fixed 64 blocks, top-3, to 10M ------------------------
+    println!("\n== Fig 2b — fixed 95.31% sparsity (64 blocks, top-3) to 10M ==");
+    println!("{:>10} {:>12} {:>12} {:>9}", "N", "flash_ms", "moba_ms", "speedup");
+    let lengths_2b: Vec<usize> = [
+        8 * 1024, 32 * 1024, 128 * 1024, 512 * 1024, 1 << 20, 2 << 20, 5 << 20, 10 << 20,
+    ]
+    .to_vec();
+    for r in attn_sim::sweep_fixed_nblocks(&lengths_2b, 64, 3, 32, 128, &dev) {
+        println!("{:>10} {:>12.2} {:>12.2} {:>9.2}", r.n, r.full_ms, r.moba_ms, r.speedup);
+        rows_json.push(obj(vec![
+            ("figure", s("2b")),
+            ("n", num(r.n as f64)),
+            ("full_ms", num(r.full_ms)),
+            ("moba_ms", num(r.moba_ms)),
+            ("speedup", num(r.speedup)),
+        ]));
+    }
+
+    // ---- measured CPU kernels -------------------------------------------
+    println!("\n== measured CPU kernels (pure-Rust, H=2 D=32, block 64 top-3) ==");
+    println!(
+        "{:>8} {:>12} {:>12} {:>9} {:>12} {:>12}",
+        "N", "full_ms", "moba_ms", "speedup", "pred_full", "pred_moba"
+    );
+    let cpu = calibrate_cpu(args.seed);
+    let (h, d, block, topk) = (2usize, 32usize, 64usize, 3usize);
+    let mut n = 256usize;
+    while n <= args.measure_max {
+        let (q, k, v) = rand_qkv(n, h, d, args.seed ^ n as u64);
+        let reps = if n <= 1024 { 3 } else { 1 };
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let _ = sparse::full_attention(&q, &k, &v);
+        }
+        let full_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let t1 = Instant::now();
+        for _ in 0..reps {
+            let _ = sparse::moba_attention(&q, &k, &v, block, topk);
+        }
+        let moba_ms = t1.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let shape = AttnShape::new(n, h, d);
+        let pred_full = attn_sim::full_time(shape, &cpu) * 1e3;
+        let pred_moba = attn_sim::moba_time(shape, block, topk, &cpu) * 1e3;
+        println!(
+            "{:>8} {:>12.2} {:>12.2} {:>9.2} {:>12.2} {:>12.2}",
+            n,
+            full_ms,
+            moba_ms,
+            full_ms / moba_ms,
+            pred_full,
+            pred_moba
+        );
+        rows_json.push(obj(vec![
+            ("figure", s("2_measured")),
+            ("n", num(n as f64)),
+            ("full_ms", num(full_ms)),
+            ("moba_ms", num(moba_ms)),
+            ("speedup", num(full_ms / moba_ms)),
+            ("pred_full_ms", num(pred_full)),
+            ("pred_moba_ms", num(pred_moba)),
+        ]));
+        n *= 2;
+    }
+    println!("\ncpu profile: {:.2} GFLOP/s sustained", cpu.flops_per_s / 1e9);
+
+    dir.write_json("fig2.json", &Json::Arr(rows_json))?;
+    println!("-> runs/efficiency/fig2.json");
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! Fig 3c + Table 3: power-law fits over the scaling runs.
+//!
+//! Consumes `runs/scaling/*/summary.json` (produced by the `scaling`
+//! harness), fits `L = a * C^b` per attention variant for the overall
+//! validation loss (Fig 3c) and per position bucket (Table 3), and
+//! prints the paper-shaped table of `a * C^b` entries for MoBA vs full.
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::fit::fit_power_law;
+use crate::metrics::writer::RunDir;
+use crate::util::json::{num, obj, s, Json};
+
+struct RunRow {
+    variant: String,
+    compute: f64,
+    val_loss: f64,
+    trailing: f64,
+    positionwise: Vec<f64>,
+}
+
+fn load_summary(path: &std::path::Path) -> Result<Vec<RunRow>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {} — run `repro exp scaling` first", path.display()))?;
+    let j = Json::parse(&text)?;
+    let mut rows = Vec::new();
+    for r in j.arr()? {
+        rows.push(RunRow {
+            variant: r.get("variant")?.str()?.to_string(),
+            compute: r.get("compute")?.num()?,
+            val_loss: r.get("val_loss")?.num()?,
+            trailing: r.get("trailing_loss")?.num()?,
+            positionwise: r
+                .get("positionwise")?
+                .arr()?
+                .iter()
+                .map(|x| x.num())
+                .collect::<Result<_>>()?,
+        });
+    }
+    Ok(rows)
+}
+
+fn fit_variant(rows: &[RunRow], variant: &str, y: impl Fn(&RunRow) -> f64) -> Option<(f64, f64, f64)> {
+    let xs: Vec<f64> = rows.iter().filter(|r| r.variant == variant).map(|r| r.compute).collect();
+    let ys: Vec<f64> = rows.iter().filter(|r| r.variant == variant).map(&y).collect();
+    fit_power_law(&xs, &ys).map(|f| (f.a, f.b, f.r2))
+}
+
+pub fn run() -> Result<()> {
+    let runs_base = std::env::var("MOBA_RUNS").unwrap_or_else(|_| "runs".into());
+    let dir = RunDir::create("fits")?;
+    let mut out_rows = Vec::new();
+
+    // ---- Fig 3c: overall validation-loss scaling curve ----------------
+    let short = std::path::Path::new(&runs_base).join("scaling/fig3a/summary.json");
+    if short.exists() {
+        let rows = load_summary(&short)?;
+        println!("== Fig 3c — fitted scaling curves (seq 512 runs) ==");
+        println!("{:<8} {:>26} {:>8}", "variant", "fit  L = a * C^b", "R^2");
+        for v in ["moba", "full"] {
+            if let Some((a, b, r2)) = fit_variant(&rows, v, |r| r.val_loss) {
+                println!("{:<8} {:>14.3} * C^{:<8.4} {:>8.3}", v, a, b, r2);
+                out_rows.push(obj(vec![
+                    ("figure", s("3c")),
+                    ("variant", s(v)),
+                    ("a", num(a)),
+                    ("b", num(b)),
+                    ("r2", num(r2)),
+                ]));
+            }
+        }
+    } else {
+        println!("(skipping Fig 3c: {} not found)", short.display());
+    }
+
+    // ---- Table 3: position-bucket fits over the long-context runs ------
+    let long = std::path::Path::new(&runs_base).join("scaling/fig3b_long/summary.json");
+    if long.exists() {
+        let rows = load_summary(&long)?;
+        let n_pos = rows
+            .first()
+            .map(|r| r.positionwise.len())
+            .unwrap_or(0);
+        if n_pos == 0 {
+            bail!("summary has no positionwise data");
+        }
+        let n_buckets = 16; // paper: 16 x 2K buckets over 32K; scaled: 16 x 128 over 2048
+        let w = n_pos / n_buckets;
+        println!("\n== Table 3 — loss scaling with different positions ==");
+        println!(
+            "{:<16} {:>24} {:>24}",
+            "position range", "MoBA  a * C^b", "Full  a * C^b"
+        );
+        for bidx in 0..n_buckets {
+            let lo = bidx * w;
+            let hi = ((bidx + 1) * w).min(n_pos);
+            let bucket_mean = |r: &RunRow| -> f64 {
+                let xs = &r.positionwise[lo..hi];
+                xs.iter().sum::<f64>() / xs.len().max(1) as f64
+            };
+            let fm = fit_variant(&rows, "moba", bucket_mean);
+            let ff = fit_variant(&rows, "full", bucket_mean);
+            let fmt = |f: Option<(f64, f64, f64)>| match f {
+                Some((a, b, _)) => format!("{a:.3} * C^{b:.3}"),
+                None => "-".into(),
+            };
+            println!("{:<16} {:>24} {:>24}", format!("{lo} - {hi}"), fmt(fm), fmt(ff));
+            if let (Some((ma, mb, mr)), Some((fa, fb, fr))) = (fm, ff) {
+                out_rows.push(obj(vec![
+                    ("figure", s("table3")),
+                    ("bucket_lo", num(lo as f64)),
+                    ("bucket_hi", num(hi as f64)),
+                    ("moba_a", num(ma)),
+                    ("moba_b", num(mb)),
+                    ("moba_r2", num(mr)),
+                    ("full_a", num(fa)),
+                    ("full_b", num(fb)),
+                    ("full_r2", num(fr)),
+                ]));
+            }
+        }
+        // trailing-loss fits (the Fig 3b companion claim)
+        println!("\ntrailing-loss fits:");
+        for v in ["moba", "full"] {
+            if let Some((a, b, r2)) = fit_variant(&rows, v, |r| r.trailing) {
+                println!("  {v:<6} {a:.3} * C^{b:.4}   (R^2 {r2:.3})");
+            }
+        }
+    } else {
+        println!("(skipping Table 3: {} not found)", long.display());
+    }
+
+    dir.write_json("fits.json", &Json::Arr(out_rows))?;
+    println!("-> runs/fits/fits.json");
+    Ok(())
+}

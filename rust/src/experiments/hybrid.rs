@@ -1,0 +1,105 @@
+//! Fig 5a: MoBA/full hybrid training.
+//!
+//! Three recipes at matched budget (paper §3.2): (1) MoBA-only, (2) full
+//! attention throughout, (3) the hybrid — MoBA for the first 90% of
+//! steps, full attention for the last 10%. Because MoBA adds no
+//! parameters, the hybrid just swaps the train-step *executable* at the
+//! switch point (the stage scheduler) with the optimizer state untouched.
+//! Output: position-wise LM loss for all three recipes + the loss series
+//! around the switch (checking the paper's "no loss spike" observation).
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::StageSchedule;
+use crate::metrics::writer::RunDir;
+use crate::runtime::Engine;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::common::train_and_eval;
+
+pub struct HybridArgs {
+    pub steps: u64,
+    pub seed: u64,
+    pub eval_batches: u64,
+    pub moba_frac: f64,
+}
+
+impl Default for HybridArgs {
+    fn default() -> Self {
+        HybridArgs { steps: 150, seed: 42, eval_batches: 4, moba_frac: 0.9 }
+    }
+}
+
+pub fn run(engine: &Engine, args: &HybridArgs) -> Result<()> {
+    let dir = RunDir::create("hybrid")?;
+    let moba_train = "hybrid_moba_train";
+    let full_train = "hybrid_full_train";
+    let art = engine.manifest.get(moba_train)?;
+    let cfg = TrainConfig {
+        steps: args.steps,
+        seed: args.seed,
+        batch: art.batch,
+        seq: art.seq,
+        ..Default::default()
+    };
+
+    let recipes: Vec<(&str, StageSchedule)> = vec![
+        ("moba", StageSchedule::single(moba_train, args.steps)),
+        ("full", StageSchedule::single(full_train, args.steps)),
+        (
+            "hybrid",
+            StageSchedule::hybrid(moba_train, full_train, args.steps, args.moba_frac)?,
+        ),
+    ];
+
+    println!("== Fig 5a — MoBA/full hybrid training (switch at {:.0}%) ==", args.moba_frac * 100.0);
+    println!("{:<8} {:>10} {:>10} {:>12}", "recipe", "val_loss", "trailing", "switch_spike");
+    let mut rows = Vec::new();
+    for (name, schedule) in recipes {
+        let switch_points = schedule.switch_points();
+        // evaluate every recipe with the FULL-attention eval graph so the
+        // positionwise comparison isolates what training built into the
+        // weights (paper evaluates all recipes identically)
+        let eval_name = "hybrid_full_eval";
+        let mut csv = dir.csv(&format!("{name}_loss.csv"), &["step", "loss", "lr"])?;
+        let out = train_and_eval(engine, schedule, eval_name, &cfg, args.eval_batches, Some(&mut csv))?;
+        let val_loss = out.eval.mean();
+        let trailing = out.eval.trailing(out.eval.sums.len() / 8);
+
+        // loss spike at the switch: |mean(5 after) - mean(5 before)|
+        let spike = switch_points
+            .first()
+            .map(|&sp| {
+                let sp = sp as usize;
+                let lo = sp.saturating_sub(5);
+                let hi = (sp + 5).min(out.train_losses.len());
+                if sp > lo && hi > sp {
+                    let before: f64 =
+                        out.train_losses[lo..sp].iter().map(|&x| x as f64).sum::<f64>()
+                            / (sp - lo) as f64;
+                    let after: f64 = out.train_losses[sp..hi].iter().map(|&x| x as f64).sum::<f64>()
+                        / (hi - sp) as f64;
+                    after - before
+                } else {
+                    0.0
+                }
+            })
+            .unwrap_or(0.0);
+
+        println!("{:<8} {:>10.4} {:>10.4} {:>12.4}", name, val_loss, trailing, spike);
+        rows.push(obj(vec![
+            ("recipe", s(name)),
+            ("val_loss", num(val_loss)),
+            ("trailing_loss", num(trailing)),
+            ("switch_spike", num(spike)),
+            (
+                "positionwise",
+                arr(out.eval.per_position().iter().map(|&x| num(x)).collect()),
+            ),
+        ]));
+    }
+    dir.write_json("summary.json", &Json::Arr(rows))?;
+    println!("-> runs/hybrid/summary.json");
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Experiment harnesses: one module per paper table/figure
+//! (see DESIGN.md §5 for the full index).
+//!
+//! | module        | reproduces                                   |
+//! |---------------|----------------------------------------------|
+//! | `efficiency`  | Fig 2a/2b (cost model + measured CPU kernels)|
+//! | `scaling`     | Fig 3a (LM loss), Fig 3b (trailing loss)     |
+//! | `fits`        | Fig 3c + Table 3 (power-law fits)            |
+//! | `granularity` | Fig 4 (block segmentation ablation)          |
+//! | `hybrid`      | Fig 5a (MoBA/full hybrid training)           |
+//! | `sft`         | Fig 5b/5c (layer-wise hybrid SFT)            |
+//! | `needle`      | Fig 6 recipe + Fig 7 heatmap                 |
+//! | `table2`      | Table 2 (downstream parity suite)            |
+//!
+//! Every harness writes CSV + JSON into `runs/<name>/` and prints a
+//! paper-shaped table to stdout.
+
+pub mod common;
+pub mod efficiency;
+pub mod fits;
+pub mod gate_ablation;
+pub mod granularity;
+pub mod hybrid;
+pub mod needle;
+pub mod scaling;
+pub mod sft;
+pub mod table2;

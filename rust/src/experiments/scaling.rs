@@ -1,0 +1,96 @@
+//! Fig 3a / 3b: scaling-law comparison of MoBA vs full attention.
+//!
+//! Trains the five-model ladder under both attention regimes at matched
+//! hyperparameters (the only difference is the attention module — same
+//! guarantee the paper makes), evaluates validation LM loss (Fig 3a) and
+//! trailing-token loss at the long context (Fig 3b), and writes the
+//! per-run loss curves + a summary CSV that `fits` consumes for Fig 3c
+//! and Table 3.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::StageSchedule;
+use crate::eval::losses::trailing_mean;
+use crate::metrics::writer::RunDir;
+use crate::runtime::Engine;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::common::{compute_flops, train_and_eval};
+
+pub struct ScalingArgs {
+    pub sizes: Vec<String>,
+    pub steps: u64,
+    /// long-context (Fig 3b) mode: seq 2048 @ 95.31% sparsity artifacts
+    pub long: bool,
+    pub seed: u64,
+    pub eval_batches: u64,
+}
+
+impl Default for ScalingArgs {
+    fn default() -> Self {
+        ScalingArgs {
+            sizes: ["s0", "s1", "s2", "s3", "s4"].iter().map(|x| x.to_string()).collect(),
+            steps: 120,
+            long: false,
+            seed: 42,
+            eval_batches: 4,
+        }
+    }
+}
+
+pub fn run(engine: &Engine, args: &ScalingArgs) -> Result<()> {
+    let tag = if args.long { "fig3b_long" } else { "fig3a" };
+    let dir = RunDir::create(&format!("scaling/{tag}"))?;
+    let prefix = if args.long { "long" } else { "scaling" };
+    let mut summary_rows = Vec::new();
+
+    println!("== Fig 3{} — scaling law: MoBA vs full ==", if args.long { "b" } else { "a" });
+    println!(
+        "{:<6} {:<6} {:>10} {:>12} {:>10} {:>10} {:>8}",
+        "size", "attn", "params", "compute", "val_loss", "trailing", "secs"
+    );
+
+    for size in &args.sizes {
+        for variant in ["moba", "full"] {
+            let train_name = format!("{prefix}_{size}_{variant}_train");
+            let eval_name = format!("{prefix}_{size}_{variant}_eval");
+            let art = engine.manifest.get(&train_name)?;
+            let cfg = TrainConfig {
+                steps: args.steps,
+                seed: args.seed,
+                batch: art.batch,
+                seq: art.seq,
+                ..Default::default()
+            };
+            let mut csv = dir.csv(&format!("{size}_{variant}_loss.csv"), &["step", "loss", "lr"])?;
+            let schedule = StageSchedule::single(&train_name, cfg.steps);
+            let out = train_and_eval(engine, schedule, &eval_name, &cfg, args.eval_batches, Some(&mut csv))?;
+
+            let val_loss = out.eval.mean();
+            // paper Fig 3b: last 1K of 32K = last 1/32 of the context
+            let trailing = trailing_mean(&out.eval, 1.0 / 32.0);
+            let compute = compute_flops(art.model.param_count, cfg.tokens());
+            println!(
+                "{:<6} {:<6} {:>10} {:>12.3e} {:>10.4} {:>10.4} {:>8.1}",
+                size, variant, art.model.param_count, compute, val_loss, trailing, out.train_secs
+            );
+            summary_rows.push(obj(vec![
+                ("size", s(size)),
+                ("variant", s(variant)),
+                ("params", num(art.model.param_count as f64)),
+                ("compute", num(compute)),
+                ("val_loss", num(val_loss)),
+                ("trailing_loss", num(trailing)),
+                (
+                    "positionwise",
+                    arr(out.eval.per_position().iter().map(|&x| num(x)).collect()),
+                ),
+                ("train_secs", num(out.train_secs)),
+            ]));
+        }
+    }
+    dir.write_json("summary.json", &Json::Arr(summary_rows))?;
+    println!("-> runs/scaling/{tag}/summary.json");
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Fig 5b/5c: layer-wise hybrid for supervised fine-tuning.
+//!
+//! The paper observes MoBA underperforming during SFT (prompt tokens are
+//! loss-masked → sparse gradients through sparse attention) and fixes it
+//! by switching the *last k* layers to full attention. We pretrain one
+//! base model, then SFT it under layer-wise hybrids with k ∈
+//! {0,1,2,3,all} full layers, reporting SFT LM loss (5b) and trailing
+//! loss (5c) as functions of k.
+
+use anyhow::Result;
+
+use crate::coordinator::StageSchedule;
+use crate::data::{Corpus, SftGen, VAL_STREAM_BASE};
+use crate::eval::losses::positionwise_mean;
+use crate::metrics::writer::RunDir;
+use crate::runtime::Engine;
+use crate::train::{LrSchedule, Trainer};
+use crate::util::json::{num, obj, Json};
+
+pub struct SftArgs {
+    pub pretrain_steps: u64,
+    pub sft_steps: u64,
+    pub seed: u64,
+    pub eval_batches: u64,
+    /// number of trailing positions for Fig 5c (paper: last 2K of 32K)
+    pub trailing_frac: f64,
+}
+
+impl Default for SftArgs {
+    fn default() -> Self {
+        SftArgs {
+            pretrain_steps: 150,
+            sft_steps: 60,
+            seed: 42,
+            eval_batches: 4,
+            trailing_frac: 1.0 / 16.0,
+        }
+    }
+}
+
+/// full-last-k values matching the artifacts lowered by aot.py
+pub const FULL_LAST: [usize; 5] = [0, 1, 2, 3, 5];
+
+pub fn run(engine: &Engine, args: &SftArgs) -> Result<()> {
+    let dir = RunDir::create("sft")?;
+    println!("== Fig 5b/5c — layer-wise hybrid SFT ==");
+
+    // ---- shared pretraining (pure MoBA, matching geometry) --------------
+    let base_train = "sft_full0_train"; // all-MoBA artifact
+    let art = engine.manifest.get(base_train)?;
+    let corpus = Corpus::for_vocab(art.model.vocab, args.seed);
+    let (batch, seq) = (art.batch, art.seq);
+    eprintln!("  pretraining base model ({} steps)...", args.pretrain_steps);
+    let lr = LrSchedule::new(3e-3, args.pretrain_steps, 0.05, 0.1);
+    let mut trainer = Trainer::new(
+        engine,
+        StageSchedule::single(base_train, args.pretrain_steps),
+        lr,
+        args.seed,
+    )?;
+    let seed = args.seed;
+    trainer.run(
+        |step| corpus.batch(seed, step, batch, seq),
+        |info| {
+            if info.step % 25 == 0 {
+                eprintln!("    pretrain step {:>4} loss {:.4}", info.step, info.loss);
+            }
+        },
+    )?;
+    let base_state = trainer.state.clone();
+
+    // ---- SFT under each layer-wise hybrid --------------------------------
+    let sft_gen = SftGen::new(args.seed ^ 0xAB);
+    println!(
+        "{:<12} {:>12} {:>12} {:>12}",
+        "full_layers", "sft_loss", "eval_loss", "trailing"
+    );
+    let mut rows = Vec::new();
+    for k in FULL_LAST {
+        let train_name = format!("sft_full{k}_train");
+        let eval_name = format!("sft_full{k}_eval");
+        let lr = LrSchedule::new(1e-3, args.sft_steps, 0.1, 0.1);
+        let mut t = Trainer::with_state(
+            engine,
+            base_state.clone(),
+            StageSchedule::single(&train_name, args.sft_steps),
+            lr,
+        );
+        let mut csv = dir.csv(&format!("sft_full{k}_loss.csv"), &["step", "loss", "lr"])?;
+        let summary = t.run(
+            |step| sft_gen.batch(seed, step, batch, seq),
+            |info| {
+                let _ = csv.row(&[info.step as f64, info.loss as f64, info.lr]);
+            },
+        )?;
+        csv.flush()?;
+
+        // held-out SFT eval (masked like training: response-only loss)
+        let eval = positionwise_mean(
+            engine,
+            &eval_name,
+            &t.state.params,
+            |i| sft_gen.batch(seed, VAL_STREAM_BASE + i, batch, seq),
+            args.eval_batches,
+        )?;
+        let eval_loss = eval.mean();
+        let trailing = eval.trailing(((seq as f64) * args.trailing_frac) as usize);
+        println!(
+            "{:<12} {:>12.4} {:>12.4} {:>12.4}",
+            k, summary.mean_last_quarter, eval_loss, trailing
+        );
+        rows.push(obj(vec![
+            ("full_layers", num(k as f64)),
+            ("sft_train_loss", num(summary.mean_last_quarter)),
+            ("sft_eval_loss", num(eval_loss)),
+            ("trailing_loss", num(trailing)),
+        ]));
+    }
+    dir.write_json("summary.json", &Json::Arr(rows))?;
+    println!("-> runs/sft/summary.json");
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! # MoBA: Mixture of Block Attention — reproduction library
+//!
+//! A three-layer reproduction of *MoBA: Mixture of Block Attention for
+//! Long-Context LLMs* (Lu et al., 2025):
+//!
+//! - **L1** (build-time Python): Pallas MoBA / flash kernels, lowered AOT;
+//! - **L2** (build-time Python): transformer train/eval graphs embedding
+//!   the kernels, lowered to HLO text in `artifacts/`;
+//! - **L3** (this crate): the coordinator — config, data pipeline,
+//!   Algorithm-1 router, training loop, serving engine, cost-model
+//!   simulator and every experiment harness of the paper.
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod attn_sim;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod serve;
+pub mod sparse;
+pub mod tensor;
+pub mod train;
+pub mod util;

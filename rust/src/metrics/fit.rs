@@ -1,0 +1,92 @@
+//! Power-law fitting: `y = a * x^b` via least squares in log-log space.
+//!
+//! Used for the fitted scaling curves (paper Fig 3c) and the per-position
+//! loss fits `L(C) = a * C^b` of Table 3, where C is training compute.
+
+/// A fitted `y = a * x^b` with goodness-of-fit.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerLaw {
+    pub a: f64,
+    pub b: f64,
+    pub r2: f64,
+}
+
+impl PowerLaw {
+    pub fn eval(&self, x: f64) -> f64 {
+        self.a * x.powf(self.b)
+    }
+}
+
+/// Fit `y = a x^b` to positive samples. Returns None with fewer than two
+/// valid points or degenerate x.
+pub fn fit_power_law(xs: &[f64], ys: &[f64]) -> Option<PowerLaw> {
+    let pts: Vec<(f64, f64)> = xs
+        .iter()
+        .zip(ys)
+        .filter(|(&x, &y)| x > 0.0 && y > 0.0)
+        .map(|(&x, &y)| (x.ln(), y.ln()))
+        .collect();
+    if pts.len() < 2 {
+        return None;
+    }
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    let lna = (sy - b * sx) / n;
+
+    // R^2 in log space
+    let ybar = sy / n;
+    let ss_tot: f64 = pts.iter().map(|p| (p.1 - ybar).powi(2)).sum();
+    let ss_res: f64 = pts.iter().map(|p| (p.1 - (lna + b * p.0)).powi(2)).sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+
+    Some(PowerLaw { a: lna.exp(), b, r2 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_power_law_recovered() {
+        let xs: Vec<f64> = (1..=6).map(|i| 10f64.powi(i)).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.1 * x.powf(-0.085)).collect();
+        let f = fit_power_law(&xs, &ys).unwrap();
+        assert!((f.a - 3.1).abs() < 1e-9, "a={}", f.a);
+        assert!((f.b + 0.085).abs() < 1e-12, "b={}", f.b);
+        assert!(f.r2 > 0.999999);
+    }
+
+    #[test]
+    fn noisy_fit_reasonable() {
+        let xs: Vec<f64> = (1..=20).map(|i| (i * i) as f64).collect();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 2.0 * x.powf(0.5) * (1.0 + 0.01 * rng.normal()))
+            .collect();
+        let f = fit_power_law(&xs, &ys).unwrap();
+        assert!((f.b - 0.5).abs() < 0.02);
+        assert!(f.r2 > 0.99);
+    }
+
+    #[test]
+    fn rejects_degenerate() {
+        assert!(fit_power_law(&[1.0], &[2.0]).is_none());
+        assert!(fit_power_law(&[1.0, 1.0], &[2.0, 3.0]).is_none());
+        assert!(fit_power_law(&[-1.0, 2.0], &[2.0, -3.0]).is_none());
+    }
+
+    #[test]
+    fn eval_matches() {
+        let f = PowerLaw { a: 2.0, b: -0.5, r2: 1.0 };
+        assert!((f.eval(4.0) - 1.0).abs() < 1e-12);
+    }
+}

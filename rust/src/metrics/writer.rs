@@ -1,0 +1,108 @@
+//! Run directories and CSV series writers.
+//!
+//! Every experiment writes into `runs/<experiment>/`: CSV series (loss
+//! curves, sweeps) plus a JSON summary, so EXPERIMENTS.md numbers are
+//! regenerable from disk.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// A run output directory, `runs/<name>` by default.
+pub struct RunDir {
+    pub path: PathBuf,
+}
+
+impl RunDir {
+    pub fn create(name: &str) -> Result<RunDir> {
+        let base = std::env::var("MOBA_RUNS").unwrap_or_else(|_| "runs".into());
+        let path = Path::new(&base).join(name);
+        std::fs::create_dir_all(&path)
+            .with_context(|| format!("creating run dir {}", path.display()))?;
+        Ok(RunDir { path })
+    }
+
+    pub fn csv(&self, name: &str, header: &[&str]) -> Result<CsvWriter> {
+        CsvWriter::create(&self.path.join(name), header)
+    }
+
+    pub fn write_json(&self, name: &str, value: &Json) -> Result<()> {
+        std::fs::write(self.path.join(name), value.to_string())?;
+        Ok(())
+    }
+
+    pub fn write_text(&self, name: &str, text: &str) -> Result<()> {
+        std::fs::write(self.path.join(name), text)?;
+        Ok(())
+    }
+}
+
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<CsvWriter> {
+        let mut w = BufWriter::new(
+            File::create(path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        debug_assert_eq!(values.len(), self.cols);
+        let line: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.w, "{}", line.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_mixed(&mut self, values: &[String]) -> Result<()> {
+        debug_assert_eq!(values.len(), self.cols);
+        writeln!(self.w, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("moba_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.csv");
+        {
+            let mut w = CsvWriter::create(&p, &["step", "loss"]).unwrap();
+            w.row(&[1.0, 2.5]).unwrap();
+            w.row(&[2.0, 2.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "step,loss\n1,2.5\n2,2.25\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_dir_env_override() {
+        let tmp = std::env::temp_dir().join("moba_runs_test");
+        std::env::set_var("MOBA_RUNS", &tmp);
+        let rd = RunDir::create("unit").unwrap();
+        assert!(rd.path.starts_with(&tmp));
+        rd.write_text("note.txt", "hello").unwrap();
+        assert_eq!(std::fs::read_to_string(rd.path.join("note.txt")).unwrap(), "hello");
+        std::env::remove_var("MOBA_RUNS");
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

@@ -1,0 +1,143 @@
+//! Checkpoint I/O for `ModelState`: a simple self-describing binary
+//! format (magic + JSON header + raw f32 little-endian payload).
+//!
+//! Used by the training loop for resumable runs and by the experiment
+//! harnesses to hand trained models to the eval/serve paths.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::ModelState;
+use crate::tensor::Tensor;
+use crate::util::json::{arr, num, obj, s, Json};
+
+const MAGIC: &[u8; 8] = b"MOBACKP1";
+
+pub fn save(state: &ModelState, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let header = obj(vec![
+        ("step", num(state.step as f64)),
+        ("n_leaves", num(state.params.len() as f64)),
+        (
+            "shapes",
+            arr(state
+                .params
+                .iter()
+                .map(|t| arr(t.shape.iter().map(|&d| num(d as f64)).collect()))
+                .collect()),
+        ),
+        ("format", s("f32le:params,m,v")),
+    ])
+    .to_string();
+
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for group in [&state.params, &state.m, &state.v] {
+            for t in group {
+                for &x in &t.data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)?; // atomic publish
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<ModelState> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a MoBA checkpoint", path.display());
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+    let step = header.get("step")?.usize()? as u64;
+    let shapes: Vec<Vec<usize>> = header
+        .get("shapes")?
+        .arr()?
+        .iter()
+        .map(|sh| -> Result<Vec<usize>> { sh.arr()?.iter().map(|d| d.usize()).collect() })
+        .collect::<Result<_>>()?;
+
+    let mut read_group = |shapes: &[Vec<usize>]| -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(shapes.len());
+        for sh in shapes {
+            let n: usize = sh.iter().product();
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            out.push(Tensor::from_vec(sh, data)?);
+        }
+        Ok(out)
+    };
+
+    let params = read_group(&shapes)?;
+    let m = read_group(&shapes)?;
+    let v = read_group(&shapes)?;
+    Ok(ModelState { params, m, v, step })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_state() -> ModelState {
+        let mut rng = Rng::new(1);
+        let mk = |shape: &[usize], rng: &mut Rng| {
+            let n: usize = shape.iter().product();
+            Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+        };
+        let params = vec![mk(&[4, 3], &mut rng), mk(&[3], &mut rng)];
+        let m = vec![mk(&[4, 3], &mut rng), mk(&[3], &mut rng)];
+        let v = vec![mk(&[4, 3], &mut rng), mk(&[3], &mut rng)];
+        ModelState { params, m, v, step: 17 }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("moba_ckpt_test");
+        let path = dir.join("state.ckpt");
+        let state = tiny_state();
+        save(&state, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.step, 17);
+        assert_eq!(loaded.params, state.params);
+        assert_eq!(loaded.m, state.m);
+        assert_eq!(loaded.v, state.v);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let dir = std::env::temp_dir().join("moba_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bogus.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

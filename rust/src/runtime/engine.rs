@@ -1,0 +1,358 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts and runs them.
+//!
+//! This is the only module that touches the `xla` crate. Pattern (see
+//! /opt/xla-example/load_hlo): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! Executables are compiled once and cached per artifact name.
+//!
+//! All state crosses the boundary as host `Tensor`s. The AOT graphs are
+//! lowered with `return_tuple=True`, so every execution yields one tuple
+//! literal which is decomposed back into leaves here.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Artifact, Manifest};
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::Rng;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// cumulative host<->device marshalling time (perf accounting)
+    pub marshal_secs: RefCell<f64>,
+    /// cumulative execute time
+    pub exec_secs: RefCell<f64>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            marshal_secs: RefCell::new(0.0),
+            exec_secs: RefCell::new(0.0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let art = self.manifest.get(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&art.path)
+            .with_context(|| format!("parsing HLO text {}", art.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("XLA compile of '{name}'"))?,
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        if dt > 1.0 {
+            eprintln!("[engine] compiled {name} in {dt:.1}s");
+        }
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on already-marshalled literals; decompose the
+    /// result tuple.
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let art = self.manifest.get(name)?;
+        if inputs.len() != art.inputs.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                art.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.load(name)?;
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        *self.exec_secs.borrow_mut() += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        *self.marshal_secs.borrow_mut() += t1.elapsed().as_secs_f64();
+        if parts.len() != art.outputs.len() {
+            bail!(
+                "artifact '{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                art.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Execute with host tensors in / host tensors out (f32 outputs only).
+    pub fn run_tensors(&self, name: &str, inputs: &[Input]) -> Result<Vec<Tensor>> {
+        let t0 = Instant::now();
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        *self.marshal_secs.borrow_mut() += t0.elapsed().as_secs_f64();
+        let outs = self.run(name, &lits)?;
+        let t1 = Instant::now();
+        let tensors = outs.iter().map(literal_to_tensor).collect::<Result<_>>()?;
+        *self.marshal_secs.borrow_mut() += t1.elapsed().as_secs_f64();
+        Ok(tensors)
+    }
+
+    pub fn reset_timers(&self) {
+        *self.marshal_secs.borrow_mut() = 0.0;
+        *self.exec_secs.borrow_mut() = 0.0;
+    }
+}
+
+/// A host-side input value (f32 or i32 tensor).
+pub enum Input<'a> {
+    F(&'a Tensor),
+    I(&'a IntTensor),
+}
+
+pub fn to_literal(input: &Input) -> Result<xla::Literal> {
+    match input {
+        Input::F(t) => {
+            if t.shape.is_empty() {
+                return Ok(xla::Literal::scalar(t.data[0]));
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+        }
+        Input::I(t) => {
+            if t.shape.is_empty() {
+                return Ok(xla::Literal::scalar(t.data[0]));
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+        }
+    }
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Tensor::from_vec(&dims, data)
+}
+
+pub fn literal_to_int_tensor(lit: &xla::Literal) -> Result<IntTensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<i32>()?;
+    IntTensor::from_vec(&dims, data)
+}
+
+// ---------------------------------------------------------------------------
+// model state: params + Adam moments, initialized from the manifest spec
+// ---------------------------------------------------------------------------
+
+/// Full optimizer state for one model geometry. Host-resident between
+/// steps; uploaded per call (see DESIGN.md §7 for the measured cost).
+#[derive(Clone)]
+pub struct ModelState {
+    pub params: Vec<Tensor>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub step: u64,
+}
+
+impl ModelState {
+    /// Initialize from the artifact's parameter spec with the repo RNG.
+    /// Mirrors `model.init_params` (normal / zeros / ones per leaf).
+    pub fn init(art: &Artifact, seed: u64) -> Result<ModelState> {
+        let mut root = Rng::new(seed);
+        let mut params = Vec::with_capacity(art.params.len());
+        for (i, spec) in art.params.iter().enumerate() {
+            let mut rng = root.split(i as u64);
+            let n = spec.numel();
+            let data = match spec.init.as_str() {
+                "normal" => (0..n).map(|_| rng.normal_f32(spec.scale as f32)).collect(),
+                "zeros" => vec![0.0; n],
+                "ones" => vec![1.0; n],
+                other => bail!("unknown init kind '{other}'"),
+            };
+            params.push(Tensor::from_vec(&spec.shape, data)?);
+        }
+        let zeros: Vec<Tensor> =
+            art.params.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+        Ok(ModelState { params, m: zeros.clone(), v: zeros, step: 0 })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|t| t.len()).sum()
+    }
+
+    /// Verify leaf shapes against another artifact of the same geometry
+    /// (used when the stage scheduler swaps executables, Fig 5a).
+    pub fn compatible_with(&self, art: &Artifact) -> bool {
+        self.params.len() == art.params.len()
+            && self
+                .params
+                .iter()
+                .zip(&art.params)
+                .all(|(t, s)| t.shape == s.shape)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// high-level drivers for each artifact kind
+// ---------------------------------------------------------------------------
+
+impl Engine {
+    /// One optimizer step. Mutates `state` in place; returns the batch loss.
+    pub fn train_step(
+        &self,
+        name: &str,
+        state: &mut ModelState,
+        lr: f32,
+        tokens: &IntTensor,
+        mask: &Tensor,
+    ) -> Result<f32> {
+        let art = self.manifest.get(name)?;
+        if art.kind != "train" {
+            bail!("'{name}' is kind={}, not train", art.kind);
+        }
+        if !state.compatible_with(art) {
+            bail!("state geometry does not match artifact '{name}'");
+        }
+        state.step += 1;
+        let step_t = Tensor::scalar(state.step as f32);
+        let lr_t = Tensor::scalar(lr);
+        let mut inputs: Vec<Input> = Vec::with_capacity(3 * state.params.len() + 4);
+        inputs.extend(state.params.iter().map(Input::F));
+        inputs.extend(state.m.iter().map(Input::F));
+        inputs.extend(state.v.iter().map(Input::F));
+        inputs.push(Input::F(&step_t));
+        inputs.push(Input::F(&lr_t));
+        inputs.push(Input::I(tokens));
+        inputs.push(Input::F(mask));
+        let outs = self.run_tensors(name, &inputs)?;
+        let n = state.params.len();
+        let loss = outs[3 * n].data[0];
+        let mut it = outs.into_iter();
+        for p in state.params.iter_mut() {
+            *p = it.next().unwrap();
+        }
+        for m in state.m.iter_mut() {
+            *m = it.next().unwrap();
+        }
+        for v in state.v.iter_mut() {
+            *v = it.next().unwrap();
+        }
+        Ok(loss)
+    }
+
+    /// K fused optimizer steps in one PJRT call (kind=train_k): the §Perf
+    /// path that amortizes the host<->device state roundtrip K-fold.
+    /// `lrs` has one LR per fused step; `tokens` is `[K, B, S]`, `masks`
+    /// `[K, B, S-1]`. Returns the K per-step losses.
+    pub fn train_k_steps(
+        &self,
+        name: &str,
+        state: &mut ModelState,
+        lrs: &[f32],
+        tokens: &IntTensor,
+        masks: &Tensor,
+    ) -> Result<Vec<f32>> {
+        let art = self.manifest.get(name)?;
+        if art.kind != "train_k" {
+            bail!("'{name}' is kind={}, not train_k", art.kind);
+        }
+        let k = art.k_steps;
+        if lrs.len() != k || tokens.shape.first() != Some(&k) {
+            bail!("expected {k} fused steps, got lrs={} tokens={:?}", lrs.len(), tokens.shape);
+        }
+        if !state.compatible_with(art) {
+            bail!("state geometry does not match artifact '{name}'");
+        }
+        let step_t = Tensor::scalar(state.step as f32 + 1.0);
+        let lr_t = Tensor::from_vec(&[k], lrs.to_vec())?;
+        state.step += k as u64;
+        let mut inputs: Vec<Input> = Vec::with_capacity(3 * state.params.len() + 4);
+        inputs.extend(state.params.iter().map(Input::F));
+        inputs.extend(state.m.iter().map(Input::F));
+        inputs.extend(state.v.iter().map(Input::F));
+        inputs.push(Input::F(&step_t));
+        inputs.push(Input::F(&lr_t));
+        inputs.push(Input::I(tokens));
+        inputs.push(Input::F(masks));
+        let outs = self.run_tensors(name, &inputs)?;
+        let n = state.params.len();
+        let losses = outs[3 * n].data.clone();
+        let mut it = outs.into_iter();
+        for p in state.params.iter_mut() {
+            *p = it.next().unwrap();
+        }
+        for m in state.m.iter_mut() {
+            *m = it.next().unwrap();
+        }
+        for v in state.v.iter_mut() {
+            *v = it.next().unwrap();
+        }
+        Ok(losses)
+    }
+
+    /// Per-position losses `[B, S-1]` (masked positions contribute 0).
+    pub fn eval_losses(
+        &self,
+        name: &str,
+        params: &[Tensor],
+        tokens: &IntTensor,
+        mask: &Tensor,
+    ) -> Result<Tensor> {
+        let art = self.manifest.get(name)?;
+        if art.kind != "eval" {
+            bail!("'{name}' is kind={}, not eval", art.kind);
+        }
+        let mut inputs: Vec<Input> = params.iter().map(Input::F).collect();
+        inputs.push(Input::I(tokens));
+        inputs.push(Input::F(mask));
+        let mut outs = self.run_tensors(name, &inputs)?;
+        Ok(outs.remove(0))
+    }
+
+    /// Full logits `[B, S, vocab]` (kind=logits) or `[B, vocab]`
+    /// (kind=last_logits).
+    pub fn logits(
+        &self,
+        name: &str,
+        params: &[Tensor],
+        tokens: &IntTensor,
+    ) -> Result<Tensor> {
+        let art = self.manifest.get(name)?;
+        if art.kind != "logits" && art.kind != "last_logits" {
+            bail!("'{name}' is kind={}, not logits", art.kind);
+        }
+        let mut inputs: Vec<Input> = params.iter().map(Input::F).collect();
+        inputs.push(Input::I(tokens));
+        let mut outs = self.run_tensors(name, &inputs)?;
+        Ok(outs.remove(0))
+    }
+
+    /// Run a standalone L1 kernel artifact: q,k,v `[N,H,D]` -> out `[N,H,D]`.
+    pub fn kernel(&self, name: &str, q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Tensor> {
+        let art = self.manifest.get(name)?;
+        if !art.kind.starts_with("kernel_") {
+            bail!("'{name}' is kind={}, not a kernel", art.kind);
+        }
+        let mut outs =
+            self.run_tensors(name, &[Input::F(q), Input::F(k), Input::F(v)])?;
+        Ok(outs.remove(0))
+    }
+}

@@ -1,0 +1,279 @@
+//! Typed view of `artifacts/manifest.json` (written by `python -m
+//! compile.aot`). The manifest is the only channel through which the L2
+//! build-time world describes itself to the L3 runtime: artifact paths,
+//! model geometry, the ordered parameter spec (layout + init), and the
+//! full input/output signatures.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            _ => bail!("unsupported dtype '{s}'"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "normal" | "zeros" | "ones"
+    pub init: String,
+    pub scale: f64,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub block_size: usize,
+    pub topk: usize,
+    pub pi_scale: f64,
+    pub layer_variants: Vec<String>,
+    pub param_count: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub group: String,
+    /// train | train_k | eval | logits | last_logits | kernel_moba | kernel_flash
+    pub kind: String,
+    pub path: PathBuf,
+    pub batch: usize,
+    pub seq: usize,
+    /// fused optimizer steps per call (1 except kind=train_k)
+    pub k_steps: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub model: ModelMeta,
+    pub params: Vec<ParamSpec>,
+}
+
+impl Artifact {
+    pub fn n_leaves(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Attention sparsity of the MoBA config at this artifact's seq length
+    /// (paper: `1 - block_size * topk / N`).
+    pub fn sparsity(&self) -> f64 {
+        let bs = self.model.block_size as f64;
+        let k = self.model.topk as f64;
+        (1.0 - bs * k / self.seq as f64).max(0.0)
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+fn io_spec(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.opt("name").map(|n| n.str().unwrap_or("").to_string()).unwrap_or_default(),
+        shape: j.get("shape")?.arr()?.iter().map(|x| x.usize()).collect::<Result<_>>()?,
+        dtype: Dtype::parse(j.get("dtype")?.str()?)?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} — run `make artifacts` first", mpath.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = BTreeMap::new();
+        for a in root.get("artifacts")?.arr()? {
+            let name = a.get("name")?.str()?.to_string();
+            let model = a.get("model")?;
+            let meta = ModelMeta {
+                vocab: model.opt("vocab").map(|x| x.usize()).transpose()?.unwrap_or(0),
+                d_model: model.opt("d_model").map(|x| x.usize()).transpose()?.unwrap_or(0),
+                n_layers: model.opt("n_layers").map(|x| x.usize()).transpose()?.unwrap_or(0),
+                n_heads: model
+                    .opt("n_heads")
+                    .or_else(|| model.opt("heads"))
+                    .map(|x| x.usize())
+                    .transpose()?
+                    .unwrap_or(0),
+                head_dim: model.opt("head_dim").map(|x| x.usize()).transpose()?.unwrap_or(0),
+                block_size: model.opt("block_size").map(|x| x.usize()).transpose()?.unwrap_or(0),
+                topk: model.opt("topk").map(|x| x.usize()).transpose()?.unwrap_or(0),
+                pi_scale: model.opt("pi_scale").map(|x| x.num()).transpose()?.unwrap_or(1.0),
+                layer_variants: model
+                    .opt("layer_variants")
+                    .map(|v| -> Result<Vec<String>> {
+                        v.arr()?.iter().map(|x| Ok(x.str()?.to_string())).collect()
+                    })
+                    .transpose()?
+                    .unwrap_or_default(),
+                param_count: model.opt("param_count").map(|x| x.usize()).transpose()?.unwrap_or(0),
+            };
+            let params = match a.opt("params") {
+                Some(ps) => ps
+                    .arr()?
+                    .iter()
+                    .map(|p| -> Result<ParamSpec> {
+                        Ok(ParamSpec {
+                            name: p.get("name")?.str()?.to_string(),
+                            shape: p
+                                .get("shape")?
+                                .arr()?
+                                .iter()
+                                .map(|x| x.usize())
+                                .collect::<Result<_>>()?,
+                            init: p.get("init")?.str()?.to_string(),
+                            scale: p.get("scale")?.num()?,
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+                None => Vec::new(),
+            };
+            let art = Artifact {
+                name: name.clone(),
+                group: a.get("group")?.str()?.to_string(),
+                kind: a.get("kind")?.str()?.to_string(),
+                path: dir.join(a.get("path")?.str()?),
+                batch: a.get("batch")?.usize()?,
+                seq: a.get("seq")?.usize()?,
+                k_steps: a.opt("k_steps").map(|x| x.usize()).transpose()?.unwrap_or(1),
+                inputs: a.get("inputs")?.arr()?.iter().map(io_spec).collect::<Result<_>>()?,
+                outputs: a.get("outputs")?.arr()?.iter().map(io_spec).collect::<Result<_>>()?,
+                model: meta,
+                params,
+            };
+            artifacts.insert(name, art);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact '{name}' not in manifest ({} known); run `make artifacts`",
+                self.artifacts.len()
+            )
+        })
+    }
+
+    pub fn by_group(&self, group: &str) -> Vec<&Artifact> {
+        self.artifacts.values().filter(|a| a.group == group).collect()
+    }
+}
+
+/// Validate internal consistency of an artifact: the declared inputs must
+/// match the train/eval conventions for its kind.
+pub fn validate(art: &Artifact) -> Result<()> {
+    let n = art.n_leaves();
+    let expect_inputs = match art.kind.as_str() {
+        "train" | "train_k" => 3 * n + 4,
+        "eval" => n + 2,
+        "logits" | "last_logits" => n + 1,
+        "kernel_moba" | "kernel_flash" => 3,
+        k => bail!("unknown artifact kind '{k}'"),
+    };
+    if art.inputs.len() != expect_inputs {
+        bail!(
+            "artifact '{}' kind={} declares {} inputs, expected {}",
+            art.name, art.kind, art.inputs.len(), expect_inputs
+        );
+    }
+    if art.kind == "train" || art.kind == "train_k" {
+        let expect_outputs = 3 * n + 1;
+        if art.outputs.len() != expect_outputs {
+            bail!(
+                "artifact '{}' declares {} outputs, expected {}",
+                art.name, art.outputs.len(), expect_outputs
+            );
+        }
+        // leaf shapes must line up across params/m/v blocks
+        for (i, p) in art.params.iter().enumerate() {
+            for block in 0..3 {
+                let spec = &art.inputs[block * n + i];
+                if spec.shape != p.shape {
+                    bail!(
+                        "artifact '{}': input {} shape {:?} != param '{}' shape {:?}",
+                        art.name, block * n + i, spec.shape, p.name, p.shape
+                    );
+                }
+            }
+        }
+    }
+    if !art.path.exists() {
+        bail!("artifact file missing: {}", art.path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&manifest_dir()).expect("manifest should load");
+        assert!(m.artifacts.len() >= 7, "expected at least the core group");
+        let q = m.get("quickstart_train").unwrap();
+        assert_eq!(q.kind, "train");
+        assert!(q.model.param_count > 0);
+        assert_eq!(q.params.len(), q.n_leaves());
+    }
+
+    #[test]
+    fn validates_core_artifacts() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        for a in m.by_group("core") {
+            validate(a).unwrap_or_else(|e| panic!("{}: {e}", a.name));
+        }
+    }
+
+    #[test]
+    fn sparsity_formula() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        let q = m.get("quickstart_train").unwrap();
+        // quickstart: seq 256, block 32, topk 2 -> 1 - 64/256 = 0.75
+        assert!((q.sparsity() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+}

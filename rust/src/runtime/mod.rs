@@ -1,0 +1,22 @@
+//! Runtime layer: PJRT client wrapper, artifact manifest, model state and
+//! checkpoints. The only module that links against the `xla` crate.
+//!
+//! Flow: `Manifest::load` (artifact metadata from python's AOT pass) →
+//! `Engine::load` (HLO text → compile, cached) → `Engine::train_step` /
+//! `eval_losses` / `logits` / `kernel` (host tensors in/out).
+
+pub mod checkpoint;
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Input, ModelState};
+pub use manifest::{Artifact, Manifest};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$MOBA_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("MOBA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

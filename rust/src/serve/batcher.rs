@@ -1,0 +1,136 @@
+//! Request batching: a vLLM-router-style admission queue in miniature.
+//!
+//! Requests arrive with timestamps; the batcher forms batches under two
+//! policies — `max_batch` (close a batch when full) and `max_wait`
+//! (close a batch when its oldest member has waited long enough) — and
+//! records queueing vs service latency per request. The serving example
+//! drives this with a simulated arrival process and reports the latency
+//! distribution, reproducing the paper's deployment-mode accounting.
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    /// arrival time, seconds (simulation clock)
+    pub arrival: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    pub id: u64,
+    pub output: Vec<i32>,
+    pub queue_secs: f64,
+    pub service_secs: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct BatcherCfg {
+    pub max_batch: usize,
+    pub max_wait_secs: f64,
+}
+
+impl Default for BatcherCfg {
+    fn default() -> Self {
+        BatcherCfg { max_batch: 4, max_wait_secs: 0.05 }
+    }
+}
+
+/// Deterministic batch former over a timestamped request stream.
+pub struct Batcher {
+    cfg: BatcherCfg,
+    queue: Vec<Request>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherCfg) -> Batcher {
+        Batcher { cfg, queue: Vec::new() }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Given the current clock, pop the next batch if either policy
+    /// triggers; otherwise None (keep accumulating).
+    pub fn pop_batch(&mut self, now: f64) -> Option<Vec<Request>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest_wait = now - self.queue[0].arrival;
+        if self.queue.len() >= self.cfg.max_batch || oldest_wait >= self.cfg.max_wait_secs {
+            let take = self.queue.len().min(self.cfg.max_batch);
+            let batch: Vec<Request> = self.queue.drain(..take).collect();
+            return Some(batch);
+        }
+        None
+    }
+
+    /// Drain everything regardless of policy (end of stream).
+    pub fn drain(&mut self) -> Vec<Vec<Request>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let take = self.queue.len().min(self.cfg.max_batch);
+            out.push(self.queue.drain(..take).collect());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: f64) -> Request {
+        Request { id, prompt: vec![1, 2, 3], max_new: 4, arrival }
+    }
+
+    #[test]
+    fn batch_closes_when_full() {
+        let mut b = Batcher::new(BatcherCfg { max_batch: 2, max_wait_secs: 10.0 });
+        b.push(req(1, 0.0));
+        assert!(b.pop_batch(0.001).is_none());
+        b.push(req(2, 0.002));
+        let batch = b.pop_batch(0.003).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn batch_closes_on_timeout() {
+        let mut b = Batcher::new(BatcherCfg { max_batch: 8, max_wait_secs: 0.05 });
+        b.push(req(1, 0.0));
+        assert!(b.pop_batch(0.01).is_none());
+        let batch = b.pop_batch(0.06).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(BatcherCfg { max_batch: 2, max_wait_secs: 0.0 });
+        for i in 0..5 {
+            b.push(req(i, i as f64 * 0.001));
+        }
+        let mut ids = Vec::new();
+        while let Some(batch) = b.pop_batch(1.0) {
+            ids.extend(batch.iter().map(|r| r.id));
+        }
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn drain_takes_all() {
+        let mut b = Batcher::new(BatcherCfg { max_batch: 3, max_wait_secs: 100.0 });
+        for i in 0..7 {
+            b.push(req(i, 0.0));
+        }
+        let batches = b.drain();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches.iter().map(|x| x.len()).sum::<usize>(), 7);
+        assert_eq!(b.pending(), 0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Serving path: MoBA-prefill / full-attention-decode, the paper's
+//! deployment mode (§3.3: "MoBA is used for prefill only, while we
+//! switch to full attention during generation").
+//!
+//! - `engine`: generation over logits artifacts (prefill scoring with the
+//!   MoBA graph, per-token decode with the full-attention graph);
+//! - `batcher`: request queue + batch former with latency accounting.
+
+pub mod batcher;
+pub mod engine;
+
+pub use batcher::{Batcher, BatcherCfg, Request, RequestResult};
+pub use engine::{GenStats, ServeEngine};

@@ -1,0 +1,256 @@
+//! Pure-Rust attention kernels: causal full attention (flash-style
+//! streaming) and MoBA block-sparse attention.
+//!
+//! Two roles:
+//! 1. correctness oracle for property tests and golden parity with the
+//!    Python reference;
+//! 2. the *measured* CPU kernels behind the Fig-2 efficiency benches —
+//!    both use the same online-softmax inner loop, so their runtime
+//!    ratio isolates the sparsity effect exactly as the paper's A100
+//!    measurement isolates it against FlashAttention.
+//!
+//! Layout: q, k, v are `[N, H, D]` row-major f32 (Algorithm 1's layout).
+
+use crate::tensor::Tensor;
+
+use super::gate::{moba_gate, Gate};
+
+const NEG_INF: f32 = -1e30;
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    // simple 4-lane unroll; autovectorizes well at opt-level 3
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[inline]
+fn axpy(acc: &mut [f32], alpha: f32, x: &[f32]) {
+    for (a, &xv) in acc.iter_mut().zip(x) {
+        *a += alpha * xv;
+    }
+}
+
+/// Streaming softmax state for one query row.
+struct OnlineRow {
+    m: f32,
+    l: f32,
+    acc: Vec<f32>,
+}
+
+impl OnlineRow {
+    fn new(d: usize) -> Self {
+        OnlineRow { m: NEG_INF, l: 0.0, acc: vec![0.0; d] }
+    }
+
+    /// Fold in one (score, value-row) pair.
+    #[inline]
+    fn push(&mut self, s: f32, v: &[f32]) {
+        if s > self.m {
+            let alpha = (self.m - s).exp();
+            self.l *= alpha;
+            for a in self.acc.iter_mut() {
+                *a *= alpha;
+            }
+            self.m = s;
+        }
+        let p = (s - self.m).exp();
+        self.l += p;
+        axpy(&mut self.acc, p, v);
+    }
+
+    fn finish(self, out: &mut [f32]) {
+        let inv = 1.0 / self.l;
+        for (o, a) in out.iter_mut().zip(self.acc) {
+            *o = a * inv;
+        }
+    }
+}
+
+/// Causal full attention, flash-style streaming (no N^2 materialization).
+pub fn full_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let (n, h, d) = (q.shape[0], q.shape[1], q.shape[2]);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Tensor::zeros(&[n, h, d]);
+    for hh in 0..h {
+        for t in 0..n {
+            let qrow = &q.data[(t * h + hh) * d..(t * h + hh) * d + d];
+            let mut row = OnlineRow::new(d);
+            for j in 0..=t {
+                let koff = (j * h + hh) * d;
+                let s = dot(qrow, &k.data[koff..koff + d]) * scale;
+                row.push(s, &v.data[koff..koff + d]);
+            }
+            let ooff = (t * h + hh) * d;
+            row.finish(&mut out.data[ooff..ooff + d]);
+        }
+    }
+    out
+}
+
+/// MoBA attention with a precomputed gate (used by benches to separate
+/// gating cost from attention cost).
+pub fn moba_attention_gated(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    gate: &Gate,
+    block_size: usize,
+) -> Tensor {
+    let (n, h, d) = (q.shape[0], q.shape[1], q.shape[2]);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Tensor::zeros(&[n, h, d]);
+    for hh in 0..h {
+        for t in 0..n {
+            let qrow = &q.data[(t * h + hh) * d..(t * h + hh) * d + d];
+            let mut row = OnlineRow::new(d);
+            for b in 0..gate.n_blocks {
+                if !gate.get(hh, t, b) {
+                    continue;
+                }
+                let hi = ((b + 1) * block_size).min(t + 1); // causal inside current block
+                for j in b * block_size..hi {
+                    let koff = (j * h + hh) * d;
+                    let s = dot(qrow, &k.data[koff..koff + d]) * scale;
+                    row.push(s, &v.data[koff..koff + d]);
+                }
+            }
+            let ooff = (t * h + hh) * d;
+            row.finish(&mut out.data[ooff..ooff + d]);
+        }
+    }
+    out
+}
+
+/// MoBA attention end-to-end: gate + block-sparse streaming attention.
+pub fn moba_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    block_size: usize,
+    topk: usize,
+) -> Tensor {
+    let gate = moba_gate(q, k, block_size, topk);
+    moba_attention_gated(q, k, v, &gate, block_size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_t(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+    }
+
+    /// Naive O(N^2) masked softmax reference to check the streaming paths.
+    fn naive_masked(q: &Tensor, k: &Tensor, v: &Tensor, allow: impl Fn(usize, usize, usize) -> bool) -> Tensor {
+        let (n, h, d) = (q.shape[0], q.shape[1], q.shape[2]);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut out = Tensor::zeros(&[n, h, d]);
+        for hh in 0..h {
+            for t in 0..n {
+                let mut scores = Vec::new();
+                for j in 0..n {
+                    if allow(hh, t, j) {
+                        let mut s = 0.0;
+                        for dd in 0..d {
+                            s += q.at3(t, hh, dd) * k.at3(j, hh, dd);
+                        }
+                        scores.push((j, s * scale));
+                    }
+                }
+                let m = scores.iter().map(|x| x.1).fold(NEG_INF, f32::max);
+                let z: f32 = scores.iter().map(|x| (x.1 - m).exp()).sum();
+                for (j, s) in scores {
+                    let p = (s - m).exp() / z;
+                    for dd in 0..d {
+                        out.data[(t * h + hh) * d + dd] += p * v.at3(j, hh, dd);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn full_matches_naive() {
+        let q = rand_t(&[32, 2, 8], 1);
+        let k = rand_t(&[32, 2, 8], 2);
+        let v = rand_t(&[32, 2, 8], 3);
+        let a = full_attention(&q, &k, &v);
+        let b = naive_masked(&q, &k, &v, |_, t, j| j <= t);
+        assert!(a.max_abs_diff(&b) < 1e-5, "diff={}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn moba_matches_naive_with_gate_mask() {
+        let q = rand_t(&[64, 2, 8], 4);
+        let k = rand_t(&[64, 2, 8], 5);
+        let v = rand_t(&[64, 2, 8], 6);
+        let bs = 16;
+        let gate = moba_gate(&q, &k, bs, 2);
+        let a = moba_attention_gated(&q, &k, &v, &gate, bs);
+        let b = naive_masked(&q, &k, &v, |h, t, j| j <= t && gate.get(h, t, j / bs));
+        assert!(a.max_abs_diff(&b) < 1e-5, "diff={}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn moba_covering_topk_equals_full() {
+        let q = rand_t(&[48, 1, 8], 7);
+        let k = rand_t(&[48, 1, 8], 8);
+        let v = rand_t(&[48, 1, 8], 9);
+        let a = moba_attention(&q, &k, &v, 16, 3); // 3 blocks, topk=3 covers all
+        let b = full_attention(&q, &k, &v);
+        assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+
+    #[test]
+    fn first_block_rows_equal_full() {
+        let q = rand_t(&[64, 2, 8], 10);
+        let k = rand_t(&[64, 2, 8], 11);
+        let v = rand_t(&[64, 2, 8], 12);
+        let a = moba_attention(&q, &k, &v, 16, 1);
+        let b = full_attention(&q, &k, &v);
+        for idx in 0..16 * 2 * 8 {
+            assert!((a.data[idx] - b.data[idx]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        let q = rand_t(&[32, 1, 8], 13);
+        let k = rand_t(&[32, 1, 8], 14);
+        let v = Tensor::ones(&[32, 1, 8]);
+        let a = moba_attention(&q, &k, &v, 8, 2);
+        for &x in &a.data {
+            assert!((x - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn online_softmax_stable_at_large_scores() {
+        let mut q = rand_t(&[32, 1, 8], 15);
+        for x in q.data.iter_mut() {
+            *x *= 50.0;
+        }
+        let k = rand_t(&[32, 1, 8], 16);
+        let v = rand_t(&[32, 1, 8], 17);
+        let a = moba_attention(&q, &k, &v, 8, 2);
+        assert!(a.data.iter().all(|x| x.is_finite()));
+    }
+}

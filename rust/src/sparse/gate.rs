@@ -1,0 +1,207 @@
+//! MoBA gating in pure Rust (paper Eq. 5-6 + causality rules).
+//!
+//! Bit-for-bit mirror of `python/compile/kernels/ref.py::moba_gate`
+//! (including the deterministic low-index tie-break), checked against
+//! golden files in `rust/tests/golden_parity.rs`. The router
+//! (`coordinator::router`) and the serving gate statistics build on this.
+
+use crate::tensor::Tensor;
+
+/// Boolean gate for all heads/queries: `gate[h][t][i]` says whether query
+/// t of head h attends KV block i.
+#[derive(Clone, Debug)]
+pub struct Gate {
+    pub heads: usize,
+    pub n: usize,
+    pub n_blocks: usize,
+    bits: Vec<bool>,
+}
+
+impl Gate {
+    #[inline]
+    pub fn get(&self, h: usize, t: usize, i: usize) -> bool {
+        self.bits[(h * self.n + t) * self.n_blocks + i]
+    }
+
+    /// Selected block indices for one (head, query).
+    pub fn selected(&self, h: usize, t: usize) -> Vec<usize> {
+        (0..self.n_blocks).filter(|&i| self.get(h, t, i)).collect()
+    }
+
+    /// Total selected (query, block) pairs — the routing workload size.
+    pub fn total_selected(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+}
+
+/// Mean-pool keys into per-block representatives.
+/// k: [N, H, D] -> pooled [n_blocks, H, D].
+pub fn mean_pool_blocks(k: &Tensor, block_size: usize) -> Tensor {
+    let (n, h, d) = (k.shape[0], k.shape[1], k.shape[2]);
+    assert_eq!(n % block_size, 0, "N={n} not divisible by block {block_size}");
+    let nb = n / block_size;
+    let mut out = Tensor::zeros(&[nb, h, d]);
+    let inv = 1.0 / block_size as f32;
+    for b in 0..nb {
+        for t in b * block_size..(b + 1) * block_size {
+            for hh in 0..h {
+                let src = (t * h + hh) * d;
+                let dst = (b * h + hh) * d;
+                for dd in 0..d {
+                    out.data[dst + dd] += k.data[src + dd];
+                }
+            }
+        }
+    }
+    for x in out.data.iter_mut() {
+        *x *= inv;
+    }
+    out
+}
+
+/// Affinity scores `s[h][t][i] = <q[t,h], pooled[i,h]>` with the causal
+/// rules applied: current block forced (+1e30), future blocks excluded
+/// (-1e30), and the low-index tie-break bias (-i * 1e-6) — identical to
+/// the Python oracle so selections agree bit-for-bit.
+pub fn affinity_scores(q: &Tensor, pooled: &Tensor, block_size: usize) -> Tensor {
+    let (n, h, d) = (q.shape[0], q.shape[1], q.shape[2]);
+    let nb = pooled.shape[0];
+    const BIG: f32 = 1e30;
+    let mut s = Tensor::zeros(&[h, n, nb]);
+    for t in 0..n {
+        let cur = t / block_size;
+        for hh in 0..h {
+            let qoff = (t * h + hh) * d;
+            for i in 0..nb {
+                let idx = (hh * n + t) * nb + i;
+                if i == cur {
+                    s.data[idx] = BIG - i as f32 * 1e-6;
+                } else if i > cur {
+                    s.data[idx] = -BIG - i as f32 * 1e-6;
+                } else {
+                    let poff = (i * h + hh) * d;
+                    let mut dot = 0.0f32;
+                    for dd in 0..d {
+                        dot += q.data[qoff + dd] * pooled.data[poff + dd];
+                    }
+                    s.data[idx] = dot - i as f32 * 1e-6;
+                }
+            }
+        }
+    }
+    s
+}
+
+/// The MoBA gate: top-k over the biased scores, future blocks excluded.
+pub fn moba_gate(q: &Tensor, k: &Tensor, block_size: usize, topk: usize) -> Gate {
+    let (n, h, _) = (q.shape[0], q.shape[1], q.shape[2]);
+    let nb = n / block_size;
+    let pooled = mean_pool_blocks(k, block_size);
+    let s = affinity_scores(q, &pooled, block_size);
+    let kk = topk.min(nb);
+    let mut bits = vec![false; h * n * nb];
+    let mut row = vec![0.0f32; nb];
+    for hh in 0..h {
+        for t in 0..n {
+            let cur = t / block_size;
+            let off = (hh * n + t) * nb;
+            row.copy_from_slice(&s.data[off..off + nb]);
+            // k-th largest by partial selection
+            let mut sorted = row.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let kth = sorted[kk - 1];
+            for i in 0..nb {
+                bits[off + i] = row[i] >= kth && i <= cur;
+            }
+        }
+    }
+    Gate { heads: h, n, n_blocks: nb, bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_t(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+    }
+
+    #[test]
+    fn mean_pool_correct() {
+        // two blocks of size 2, one head, d=1
+        let k = Tensor::from_vec(&[4, 1, 1], vec![1.0, 3.0, 5.0, 9.0]).unwrap();
+        let p = mean_pool_blocks(&k, 2);
+        assert_eq!(p.shape, vec![2, 1, 1]);
+        assert_eq!(p.data, vec![2.0, 7.0]);
+    }
+
+    #[test]
+    fn current_block_always_selected() {
+        let q = rand_t(&[64, 2, 8], 1);
+        let k = rand_t(&[64, 2, 8], 2);
+        let g = moba_gate(&q, &k, 16, 2);
+        for h in 0..2 {
+            for t in 0..64 {
+                assert!(g.get(h, t, t / 16), "h={h} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_future_blocks() {
+        let q = rand_t(&[64, 2, 8], 3);
+        let k = rand_t(&[64, 2, 8], 4);
+        let g = moba_gate(&q, &k, 16, 3);
+        for h in 0..2 {
+            for t in 0..64 {
+                for i in (t / 16 + 1)..4 {
+                    assert!(!g.get(h, t, i), "future block selected h={h} t={t} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn selection_count_exact() {
+        let q = rand_t(&[128, 1, 8], 5);
+        let k = rand_t(&[128, 1, 8], 6);
+        let topk = 3;
+        let g = moba_gate(&q, &k, 32, topk);
+        for t in 0..128 {
+            let avail = t / 32 + 1;
+            assert_eq!(g.selected(0, t).len(), topk.min(avail), "t={t}");
+        }
+    }
+
+    #[test]
+    fn topk_one_is_current_only() {
+        let q = rand_t(&[64, 1, 4], 7);
+        let k = rand_t(&[64, 1, 4], 8);
+        let g = moba_gate(&q, &k, 16, 1);
+        for t in 0..64 {
+            assert_eq!(g.selected(0, t), vec![t / 16]);
+        }
+    }
+
+    #[test]
+    fn gate_selects_highest_affinity_history() {
+        // keys constant within block: pooled == key value, so history
+        // selection must follow the constructed ordering.
+        let n = 64;
+        let bs = 16;
+        let mut kdat = vec![0.0f32; n * 1 * 1];
+        // block means 1, 9, 5, 3 — for the last query (cur=3) with topk=3,
+        // history picks blocks 1 (9) and 2 (5).
+        let means = [1.0, 9.0, 5.0, 3.0];
+        for (i, row) in kdat.iter_mut().enumerate() {
+            *row = means[i / bs];
+        }
+        let k = Tensor::from_vec(&[n, 1, 1], kdat).unwrap();
+        let q = Tensor::ones(&[n, 1, 1]);
+        let g = moba_gate(&q, &k, bs, 3);
+        assert_eq!(g.selected(0, n - 1), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Pure-Rust MoBA reference: gating (paper Eq. 5-6) and block-sparse
+//! streaming attention (paper Eq. 2 / Algorithm 1), plus the causal full
+//! attention baseline. Oracle for property tests, golden parity with the
+//! Python kernels, and the measured CPU kernel pair for Fig-2 benches.
+
+pub mod attention;
+pub mod gate;
+
+pub use attention::{full_attention, moba_attention, moba_attention_gated};
+pub use gate::{affinity_scores, mean_pool_blocks, moba_gate, Gate};

@@ -1,0 +1,7 @@
+//! Training: LR schedules and the stage-scheduled training loop.
+
+pub mod schedule;
+pub mod trainer;
+
+pub use schedule::LrSchedule;
+pub use trainer::{RunSummary, StepInfo, Trainer};

@@ -1,0 +1,73 @@
+//! Learning-rate schedule: linear warmup + cosine decay to a floor.
+//! Lives in L3 (the AOT train graphs take `lr` as an input each step).
+
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub base: f64,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+    pub min_frac: f64,
+}
+
+impl LrSchedule {
+    pub fn new(base: f64, total_steps: u64, warmup_frac: f64, min_frac: f64) -> LrSchedule {
+        let warmup_steps = ((total_steps as f64) * warmup_frac).round() as u64;
+        LrSchedule { base, warmup_steps, total_steps, min_frac }
+    }
+
+    /// LR at 0-based step.
+    pub fn at(&self, step: u64) -> f64 {
+        if self.total_steps == 0 {
+            return self.base;
+        }
+        if step < self.warmup_steps {
+            return self.base * (step + 1) as f64 / self.warmup_steps.max(1) as f64;
+        }
+        let decay_span = (self.total_steps - self.warmup_steps).max(1) as f64;
+        let t = ((step - self.warmup_steps) as f64 / decay_span).min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+        let floor = self.base * self.min_frac;
+        floor + (self.base - floor) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::new(1.0, 100, 0.1, 0.0);
+        assert!((s.at(0) - 0.1).abs() < 1e-12);
+        assert!((s.at(4) - 0.5).abs() < 1e-12);
+        assert!((s.at(9) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = LrSchedule::new(2.0, 100, 0.1, 0.05);
+        assert!((s.at(10) - 2.0).abs() < 1e-9);
+        let end = s.at(99);
+        assert!(end >= 2.0 * 0.05 - 1e-9);
+        assert!(end < 0.2, "end={end}");
+        // monotone decreasing after warmup
+        let mut prev = s.at(10);
+        for step in 11..100 {
+            let cur = s.at(step);
+            assert!(cur <= prev + 1e-12);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn past_end_clamps() {
+        let s = LrSchedule::new(1.0, 10, 0.0, 0.1);
+        assert!((s.at(1000) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_warmup_safe() {
+        let s = LrSchedule::new(1.0, 10, 0.0, 0.0);
+        assert!(s.at(0) > 0.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! The training loop: drives AOT train-step executables over a stage
+//! schedule, with the LR policy, batch sourcing, loss logging and
+//! checkpointing owned here in L3.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::StageSchedule;
+use crate::runtime::{Engine, ModelState};
+use crate::tensor::{IntTensor, Tensor};
+
+use super::schedule::LrSchedule;
+
+/// Per-step record handed to the observer callback.
+#[derive(Clone, Debug)]
+pub struct StepInfo {
+    pub step: u64,
+    pub artifact: String,
+    pub lr: f64,
+    pub loss: f32,
+    pub step_secs: f64,
+}
+
+/// Summary of a completed run.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub steps: u64,
+    pub final_loss: f32,
+    pub mean_last_quarter: f64,
+    pub total_secs: f64,
+    pub losses: Vec<f32>,
+}
+
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub state: ModelState,
+    pub schedule: StageSchedule,
+    pub lr: LrSchedule,
+}
+
+impl<'e> Trainer<'e> {
+    /// Build a trainer whose state is initialized from the first stage's
+    /// artifact spec.
+    pub fn new(
+        engine: &'e Engine,
+        schedule: StageSchedule,
+        lr: LrSchedule,
+        seed: u64,
+    ) -> Result<Trainer<'e>> {
+        let first = schedule
+            .stage_list()
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("empty stage schedule"))?;
+        let art = engine.manifest.get(&first.artifact)?;
+        if art.kind != "train" {
+            bail!("first stage artifact '{}' is not a train artifact", first.artifact);
+        }
+        let state = ModelState::init(art, seed)?;
+        Ok(Trainer { engine, state, schedule, lr })
+    }
+
+    /// Resume from an existing state (continual pre-training stages).
+    pub fn with_state(
+        engine: &'e Engine,
+        state: ModelState,
+        schedule: StageSchedule,
+        lr: LrSchedule,
+    ) -> Trainer<'e> {
+        Trainer { engine, state, schedule, lr }
+    }
+
+    /// Run the full schedule. `batches(step)` supplies (tokens, mask);
+    /// `observer` sees every step (logging, CSV, eval triggers).
+    pub fn run(
+        &mut self,
+        mut batches: impl FnMut(u64) -> (IntTensor, Tensor),
+        mut observer: impl FnMut(&StepInfo),
+    ) -> Result<RunSummary> {
+        let total = self.schedule.total_steps();
+        let mut losses = Vec::with_capacity(total as usize);
+        let t_run = Instant::now();
+        for step in 0..total {
+            let artifact = self
+                .schedule
+                .artifact_for(step)
+                .expect("step within total")
+                .to_string();
+            let lr = self.lr.at(step);
+            let (tokens, mask) = batches(step);
+            let t0 = Instant::now();
+            let loss = self
+                .engine
+                .train_step(&artifact, &mut self.state, lr as f32, &tokens, &mask)?;
+            if !loss.is_finite() {
+                bail!("non-finite loss {loss} at step {step} (artifact {artifact})");
+            }
+            losses.push(loss);
+            observer(&StepInfo {
+                step,
+                artifact,
+                lr,
+                loss,
+                step_secs: t0.elapsed().as_secs_f64(),
+            });
+        }
+        let q = losses.len().max(4) / 4;
+        let last_q = &losses[losses.len().saturating_sub(q)..];
+        Ok(RunSummary {
+            steps: total,
+            final_loss: *losses.last().unwrap_or(&f32::NAN),
+            mean_last_quarter: last_q.iter().map(|&x| x as f64).sum::<f64>()
+                / last_q.len().max(1) as f64,
+            total_secs: t_run.elapsed().as_secs_f64(),
+            losses,
+        })
+    }
+}

@@ -1,0 +1,124 @@
+//! Tiny argument parser (std-only; clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argv slice (without the program name).
+    /// `flag_names` lists options that take no value.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else {
+                    i += 1;
+                    if i >= argv.len() {
+                        bail!("option --{rest} needs a value");
+                    }
+                    out.options.insert(rest.to_string(), argv[i].clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = Args::parse(&sv(&["train", "--steps", "50", "--quiet",
+                                  "--lr=0.003", "extra"]),
+                            &["quiet"]).unwrap();
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 50);
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.003);
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--steps"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[]), &[]).unwrap();
+        assert_eq!(a.get_usize("x", 7).unwrap(), 7);
+        assert_eq!(a.get_str("y", "d"), "d");
+        assert_eq!(a.get_list("l", &["a", "b"]), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&sv(&["--sizes", "s0, s1,s2"]), &[]).unwrap();
+        assert_eq!(a.get_list("sizes", &[]), vec!["s0", "s1", "s2"]);
+    }
+}

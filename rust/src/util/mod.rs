@@ -1,0 +1,7 @@
+//! Std-only substrates: RNG, JSON, CLI parsing. The build image has no
+//! registry access beyond the vendored `xla` dep tree, so these replace
+//! `rand`, `serde_json` and `clap`.
+
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,213 @@
+//! Property-based tests (hand-rolled sweep harness — proptest is not
+//! available offline; `sweep!` runs each property over many random
+//! configurations and shrinks nothing but reports the failing seed).
+//!
+//! Invariants pinned here are the paper's §2.2 guarantees plus the
+//! router/coordinator contracts.
+
+use moba::coordinator::{RoutingPlan, StageSchedule};
+use moba::sparse::{self, moba_gate};
+use moba::tensor::Tensor;
+use moba::util::rng::Rng;
+
+/// Run `prop(seed)` for 40 derived seeds, reporting the failing one.
+fn sweep(name: &str, mut prop: impl FnMut(u64)) {
+    for trial in 0..40u64 {
+        let seed = 0xBEEF ^ (trial * 0x9E37_79B9);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(seed)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn rand_t(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+}
+
+/// Random (n, h, d, block, topk) with n a multiple of block.
+fn rand_cfg(rng: &mut Rng) -> (usize, usize, usize, usize, usize) {
+    let block = [8, 16, 32][rng.range(0, 3)];
+    let nb = rng.range(1, 7);
+    let n = block * nb;
+    let h = rng.range(1, 4);
+    let d = [4, 8, 16][rng.range(0, 3)];
+    let topk = rng.range(1, 5);
+    (n, h, d, block, topk)
+}
+
+#[test]
+fn prop_gate_causality_and_counts() {
+    sweep("gate causality", |seed| {
+        let mut rng = Rng::new(seed);
+        let (n, h, d, block, topk) = rand_cfg(&mut rng);
+        let q = rand_t(&[n, h, d], &mut rng);
+        let k = rand_t(&[n, h, d], &mut rng);
+        let g = moba_gate(&q, &k, block, topk);
+        for hh in 0..h {
+            for t in 0..n {
+                let cur = t / block;
+                assert!(g.get(hh, t, cur), "current block not selected");
+                for i in cur + 1..n / block {
+                    assert!(!g.get(hh, t, i), "future block selected");
+                }
+                let count = g.selected(hh, t).len();
+                assert_eq!(count, topk.min(cur + 1), "selection count");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_moba_equals_full_when_covering() {
+    sweep("covering topk == full attention", |seed| {
+        let mut rng = Rng::new(seed);
+        let block = [8, 16][rng.range(0, 2)];
+        let nb = rng.range(1, 5);
+        let (n, h, d) = (block * nb, rng.range(1, 3), 8);
+        let q = rand_t(&[n, h, d], &mut rng);
+        let k = rand_t(&[n, h, d], &mut rng);
+        let v = rand_t(&[n, h, d], &mut rng);
+        let a = sparse::moba_attention(&q, &k, &v, block, nb); // topk = nb covers
+        let b = sparse::full_attention(&q, &k, &v);
+        assert!(a.max_abs_diff(&b) < 1e-4, "diff {}", a.max_abs_diff(&b));
+    });
+}
+
+#[test]
+fn prop_output_rows_are_convex_combinations() {
+    sweep("convexity", |seed| {
+        let mut rng = Rng::new(seed);
+        let (n, h, d, block, topk) = rand_cfg(&mut rng);
+        let q = rand_t(&[n, h, d], &mut rng);
+        let k = rand_t(&[n, h, d], &mut rng);
+        // v constant per row -> every output must equal that constant
+        let v = Tensor::ones(&[n, h, d]);
+        let out = sparse::moba_attention(&q, &k, &v, block, topk);
+        for &x in &out.data {
+            assert!((x - 1.0).abs() < 1e-4, "not convex: {x}");
+        }
+    });
+}
+
+#[test]
+fn prop_ungated_values_never_leak() {
+    sweep("ungated value isolation", |seed| {
+        let mut rng = Rng::new(seed);
+        let block = 16;
+        let nb = rng.range(3, 6);
+        let n = block * nb;
+        let (h, d) = (1, 8);
+        let q = rand_t(&[n, h, d], &mut rng);
+        let k = rand_t(&[n, h, d], &mut rng);
+        let v = rand_t(&[n, h, d], &mut rng);
+        let topk = 2;
+        let g = moba_gate(&q, &k, block, topk);
+        let t = n - 1;
+        let ungated: Vec<usize> =
+            (0..nb).filter(|&i| !g.get(0, t, i)).collect();
+        if ungated.is_empty() {
+            return;
+        }
+        let out1 = sparse::moba_attention(&q, &k, &v, block, topk);
+        let mut v2 = v.clone();
+        for j in ungated[0] * block..(ungated[0] + 1) * block {
+            for dd in 0..d {
+                v2.data[(j * h) * d + dd] += 1000.0;
+            }
+        }
+        let out2 = sparse::moba_attention(&q, &k, &v2, block, topk);
+        for dd in 0..d {
+            let a = out1.data[(t * h) * d + dd];
+            let b = out2.data[(t * h) * d + dd];
+            assert!((a - b).abs() < 1e-4, "value leaked from ungated block");
+        }
+    });
+}
+
+#[test]
+fn prop_router_plan_partition() {
+    sweep("router partitions gate pairs", |seed| {
+        let mut rng = Rng::new(seed);
+        let (n, h, d, block, topk) = rand_cfg(&mut rng);
+        let q = rand_t(&[n, h, d], &mut rng);
+        let k = rand_t(&[n, h, d], &mut rng);
+        let g = moba_gate(&q, &k, block, topk);
+        let mut total = 0;
+        for hh in 0..h {
+            let plan = RoutingPlan::build(&g, hh, block);
+            total += plan.total_pairs();
+            // every query appears in exactly one self segment
+            let mut self_count = vec![0usize; n];
+            for (i, b) in plan.blocks.iter().enumerate() {
+                for &qq in &b.self_queries {
+                    self_count[qq as usize] += 1;
+                    assert_eq!(qq as usize / block, i);
+                }
+                for &qq in &b.hist_queries {
+                    assert!(qq as usize / block > i, "history causality");
+                }
+            }
+            assert!(self_count.iter().all(|&c| c == 1));
+            // partials per query = gate row popcount
+            for (t, &c) in plan.partials_per_query().iter().enumerate() {
+                assert_eq!(c as usize, g.selected(hh, t).len());
+            }
+        }
+        assert_eq!(total, g.total_selected());
+    });
+}
+
+#[test]
+fn prop_stage_schedule_total_conservation() {
+    sweep("stage schedule covers every step exactly once", |seed| {
+        let mut rng = Rng::new(seed);
+        let total = rng.range(1, 200) as u64;
+        let frac = rng.f64();
+        let s = StageSchedule::hybrid("a", "b", total, frac).unwrap();
+        assert_eq!(s.total_steps(), total);
+        let mut a_count = 0u64;
+        for step in 0..total {
+            match s.artifact_for(step) {
+                Some("a") => a_count += 1,
+                Some("b") => {}
+                _ => panic!("uncovered step {step}"),
+            }
+        }
+        assert_eq!(a_count, ((total as f64) * frac).round() as u64);
+        assert_eq!(s.artifact_for(total), None);
+    });
+}
+
+#[test]
+fn prop_full_attention_matches_row_softmax() {
+    sweep("full attention row softmax", |seed| {
+        let mut rng = Rng::new(seed);
+        let n = rng.range(4, 48);
+        let d = 8;
+        let q = rand_t(&[n, 1, d], &mut rng);
+        let k = rand_t(&[n, 1, d], &mut rng);
+        let v = rand_t(&[n, 1, d], &mut rng);
+        let out = sparse::full_attention(&q, &k, &v);
+        // check one random row against direct softmax
+        let t = rng.range(0, n);
+        let scale = 1.0 / (d as f32).sqrt();
+        let scores: Vec<f32> = (0..=t)
+            .map(|j| {
+                (0..d).map(|dd| q.at3(t, 0, dd) * k.at3(j, 0, dd)).sum::<f32>() * scale
+            })
+            .collect();
+        let m = scores.iter().cloned().fold(f32::MIN, f32::max);
+        let z: f32 = scores.iter().map(|s| (s - m).exp()).sum();
+        for dd in 0..d {
+            let expect: f32 = scores
+                .iter()
+                .enumerate()
+                .map(|(j, s)| (s - m).exp() / z * v.at3(j, 0, dd))
+                .sum();
+            let got = out.at3(t, 0, dd);
+            assert!((expect - got).abs() < 1e-4, "row {t} dim {dd}: {expect} vs {got}");
+        }
+    });
+}
