@@ -1,0 +1,34 @@
+//! Continuous-batching serving demo on the pure-Rust stack — no AOT
+//! artifacts, no PJRT: a Poisson-ish arrival stream of synthetic prompts
+//! is prefilled once through the MoBA backend and then decoded
+//! incrementally over the KV/block-pool caches, with the iteration-level
+//! scheduler admitting new requests into the in-flight decode batch.
+//! Thin wrapper over the shared driver in `moba::serve::demo` (the
+//! `repro serve` subcommand drives the same code).
+//!
+//! Compare backends to see the cache win end-to-end:
+//!
+//! ```sh
+//! cargo run --release --example serve_continuous -- --backend cached-sparse
+//! cargo run --release --example serve_continuous -- --backend full   # recompute baseline
+//! ```
+
+use moba::serve::{run_demo, DemoCfg};
+use moba::sparse::BackendKind;
+use moba::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &[])?;
+    let cfg = DemoCfg {
+        requests: args.get_usize("requests", 12)?,
+        max_in_flight: args.get_usize("max-batch", 4)?,
+        prompt_len: args.get_usize("prompt-len", 256)?,
+        max_new: args.get_usize("max-new", 32)?,
+        block_size: args.get_usize("block", 32)?,
+        topk: args.get_usize("topk", 3)?,
+        backend: BackendKind::parse(args.get_str("backend", "cached-sparse"))?,
+        seed: args.get_u64("seed", 7)?,
+    };
+    run_demo(&cfg)
+}

@@ -14,7 +14,7 @@ use moba::coordinator::StageSchedule;
 use moba::data::NeedleGen;
 use moba::metrics::{mean, quantile};
 use moba::runtime::{artifacts_dir, Engine};
-use moba::serve::{Batcher, BatcherCfg, Request, RequestResult, ServeEngine};
+use moba::serve::{ArtifactServeEngine, Batcher, BatcherCfg, Request, RequestResult};
 use moba::train::{LrSchedule, Trainer};
 use moba::util::cli::Args;
 use moba::util::rng::Rng;
@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
         },
     )?;
 
-    let serve = ServeEngine::new(
+    let serve = ArtifactServeEngine::new(
         &engine,
         trainer.state.params.clone(),
         "needle_s0_logits",      // MoBA graph: prefill
@@ -102,7 +102,14 @@ fn main() -> anyhow::Result<()> {
             clock += service; // single worker: service advances the clock
             let expect = arrivals.iter().find(|(r, _)| r.id == req.id).unwrap().1;
             results.push((
-                RequestResult { id: req.id, output: out, queue_secs, service_secs: service },
+                RequestResult {
+                    id: req.id,
+                    output: out,
+                    queue_secs,
+                    prefill_secs: stats.prefill_secs,
+                    decode_secs: stats.decode_secs,
+                    decode_steps: stats.decode_steps,
+                },
                 expect,
             ));
         }
@@ -111,7 +118,7 @@ fn main() -> anyhow::Result<()> {
     // --- report -----------------------------------------------------------
     let correct = results.iter().filter(|(r, expect)| r.output[0] == *expect).count();
     let queues: Vec<f64> = results.iter().map(|(r, _)| r.queue_secs * 1e3).collect();
-    let services: Vec<f64> = results.iter().map(|(r, _)| r.service_secs * 1e3).collect();
+    let services: Vec<f64> = results.iter().map(|(r, _)| r.service_secs() * 1e3).collect();
     println!("\n== serving report ==");
     println!("retrieval accuracy: {correct}/{n_requests}");
     println!(

@@ -1,0 +1,134 @@
+//! Bench: cached incremental decode vs full recompute, per generated
+//! token, across context lengths — the serving rewrite's headline number.
+//!
+//! Four backends at each N: the recompute baselines (`full`, `moba` —
+//! what the old serving path did every step) and the cached backends
+//! (`cached-full` O(N·D), `cached-sparse` O(N/B·D + k·B·D)). Appends a
+//! trajectory entry to `BENCH_decode.json` and asserts the acceptance
+//! floor: cached-sparse beats full recompute by ≥5× at N=8192.
+//!
+//! ```sh
+//! cargo bench --bench decode_latency
+//! ```
+
+use std::time::Instant;
+
+use moba::sparse::{build_backend, AttentionBackend, BackendKind};
+use moba::tensor::Tensor;
+use moba::util::json::{arr, num, obj, s, Json};
+use moba::util::rng::Rng;
+
+const HEADS: usize = 2;
+const DIM: usize = 32;
+const BLOCK: usize = 64;
+const TOPK: usize = 3;
+
+fn rand_t(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+}
+
+fn prefix(t: &Tensor, n: usize) -> Tensor {
+    let w = t.shape[1] * t.shape[2];
+    Tensor::from_vec(&[n, t.shape[1], t.shape[2]], t.data[..n * w].to_vec()).unwrap()
+}
+
+fn row(t: &Tensor, i: usize) -> &[f32] {
+    let w = t.shape[1] * t.shape[2];
+    &t.data[i * w..(i + 1) * w]
+}
+
+/// Prefill `n - steps` tokens, then time `steps` decode tokens.
+/// Returns ms per decoded token.
+fn decode_ms_per_token(
+    kind: BackendKind,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    n: usize,
+    steps: usize,
+) -> f64 {
+    let mut backend = build_backend(kind, HEADS, DIM, BLOCK, TOPK);
+    let base = n - steps;
+    backend.prefill(&prefix(q, base), &prefix(k, base), &prefix(v, base));
+    let t0 = Instant::now();
+    for t in base..n {
+        let out = backend.decode(row(q, t), row(k, t), row(v, t));
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / steps as f64
+}
+
+fn main() {
+    println!("== decode latency: cached incremental vs recompute ==");
+    println!("H={HEADS} D={DIM} block={BLOCK} top-{TOPK}; per-token decode ms at context N");
+    println!(
+        "{:>8} {:>14} {:>14} {:>14} {:>14} {:>10}",
+        "N", "recomp_full", "recomp_moba", "cached_full", "cached_sparse", "speedup"
+    );
+
+    let mut rng = Rng::new(2025);
+    let mut rows = Vec::new();
+    let mut speedup_at_8192 = 0.0f64;
+    for &n in &[512usize, 2048, 8192] {
+        let q = rand_t(&[n, HEADS, DIM], &mut rng);
+        let k = rand_t(&[n, HEADS, DIM], &mut rng);
+        let v = rand_t(&[n, HEADS, DIM], &mut rng);
+        // recompute decode is O(N^2)/step — keep its sample count small;
+        // cached decode is cheap, average over more steps
+        let recompute_steps = if n >= 8192 { 2 } else { 4 };
+        let cached_steps = 32;
+
+        let rf = decode_ms_per_token(BackendKind::RecomputeFull, &q, &k, &v, n, recompute_steps);
+        let rm = decode_ms_per_token(BackendKind::RecomputeMoba, &q, &k, &v, n, recompute_steps);
+        let cf = decode_ms_per_token(BackendKind::CachedFull, &q, &k, &v, n, cached_steps);
+        let cs = decode_ms_per_token(BackendKind::CachedSparse, &q, &k, &v, n, cached_steps);
+
+        let speedup = rf / cs;
+        if n == 8192 {
+            speedup_at_8192 = speedup;
+        }
+        println!(
+            "{:>8} {:>14.3} {:>14.3} {:>14.4} {:>14.4} {:>9.0}x",
+            n, rf, rm, cf, cs, speedup
+        );
+        rows.push(obj(vec![
+            ("n", num(n as f64)),
+            ("recompute_full_ms_per_tok", num(rf)),
+            ("recompute_moba_ms_per_tok", num(rm)),
+            ("cached_full_ms_per_tok", num(cf)),
+            ("cached_sparse_ms_per_tok", num(cs)),
+            ("speedup_cached_sparse_vs_recompute_full", num(speedup)),
+        ]));
+    }
+
+    let unix_secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let entry = obj(vec![
+        ("bench", s("decode_latency")),
+        ("unix_secs", num(unix_secs)),
+        ("heads", num(HEADS as f64)),
+        ("head_dim", num(DIM as f64)),
+        ("block", num(BLOCK as f64)),
+        ("topk", num(TOPK as f64)),
+        ("rows", arr(rows)),
+    ]);
+    // trajectory file: append this run's entry to the JSON array
+    let path = "BENCH_decode.json";
+    let mut trajectory = match std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok())
+    {
+        Some(Json::Arr(entries)) => entries,
+        _ => Vec::new(),
+    };
+    trajectory.push(entry);
+    std::fs::write(path, Json::Arr(trajectory).to_string()).expect("writing BENCH_decode.json");
+    println!("-> {path}");
+
+    assert!(
+        speedup_at_8192 >= 5.0,
+        "acceptance: cached decode must beat recompute by >=5x at N=8192 (got {speedup_at_8192:.1}x)"
+    );
+    println!("acceptance OK: {speedup_at_8192:.0}x >= 5x at N=8192");
+}

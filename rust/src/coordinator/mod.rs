@@ -1,7 +1,9 @@
 //! L3 coordination: the paper's system contribution.
 //!
 //! - `router`: Algorithm-1 MoE-style dispatch — query→KV-block assignment,
-//!   varlen packing, scatter-back bookkeeping, load statistics;
+//!   varlen packing, scatter-back bookkeeping, load statistics; plans are
+//!   built from any gated `sparse::AttentionBackend`
+//!   (`RoutingPlan::from_backend`) rather than a hard-wired gate call;
 //! - `stages`: MoBA↔full executable scheduling (hybrid training recipes,
 //!   continual pre-training stages).
 //!

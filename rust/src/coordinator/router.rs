@@ -15,7 +15,8 @@
 //! the invariants; the serving engine uses the same plan to batch prefill
 //! chunks.
 
-use crate::sparse::Gate;
+use crate::sparse::{AttentionBackend, Gate};
+use crate::tensor::Tensor;
 
 /// One KV block's share of the dispatch.
 #[derive(Clone, Debug, Default)]
@@ -68,6 +69,21 @@ impl RoutingPlan {
             hist_offsets.push(packed_hist.len() as u32);
         }
         RoutingPlan { block_size, n: gate.n, blocks, hist_offsets, packed_hist }
+    }
+
+    /// Dispatch plans for all heads, gated by an attention backend: the
+    /// serving/experiment layers ask the *backend* which blocks each query
+    /// visits instead of calling `moba_gate` directly, so dense backends
+    /// (which return no gate — every query visits every causal block)
+    /// yield `None` and sparse backends yield one plan per head.
+    pub fn from_backend(
+        backend: &dyn AttentionBackend,
+        q: &Tensor,
+        k: &Tensor,
+        block_size: usize,
+    ) -> Option<Vec<RoutingPlan>> {
+        let gate = backend.gate(q, k)?;
+        Some((0..gate.heads).map(|h| RoutingPlan::build(&gate, h, block_size)).collect())
     }
 
     /// Total (query, block) attention pairs — proportional to FLOPs.
@@ -203,5 +219,23 @@ mod tests {
     fn imbalance_at_least_one() {
         let (p, _) = plan(7, 512, 32, 3);
         assert!(p.imbalance() >= 1.0);
+    }
+
+    #[test]
+    fn from_backend_matches_direct_gate_and_skips_dense() {
+        use crate::sparse::{FullAttention, MobaAttention};
+        let q = rand_t(&[128, 2, 8], 8);
+        let k = rand_t(&[128, 2, 8], 9);
+        let backend = MobaAttention::new(2, 8, 16, 3);
+        let plans = RoutingPlan::from_backend(&backend, &q, &k, 16).unwrap();
+        assert_eq!(plans.len(), 2);
+        let g = moba_gate(&q, &k, 16, 3);
+        for (h, p) in plans.iter().enumerate() {
+            let direct = RoutingPlan::build(&g, h, 16);
+            assert_eq!(p.total_pairs(), direct.total_pairs());
+            assert_eq!(p.packed_hist, direct.packed_hist);
+            assert_eq!(p.hist_offsets, direct.hist_offsets);
+        }
+        assert!(RoutingPlan::from_backend(&FullAttention::new(2, 8), &q, &k, 16).is_none());
     }
 }

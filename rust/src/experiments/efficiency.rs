@@ -22,7 +22,7 @@ use crate::attn_sim::{
     AttnShape,
 };
 use crate::metrics::writer::RunDir;
-use crate::sparse;
+use crate::sparse::{AttentionBackend, FullAttention, MobaAttention};
 use crate::tensor::Tensor;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::Rng;
@@ -99,18 +99,22 @@ pub fn run(args: &EfficiencyArgs) -> Result<()> {
     );
     let cpu = calibrate_cpu(args.seed);
     let (h, d, block, topk) = (2usize, 32usize, 64usize, 3usize);
+    // measured through the backend trait — the same objects the serving
+    // stack dispatches on, so these numbers price the deployed path
+    let full_backend = FullAttention::new(h, d);
+    let moba_backend = MobaAttention::new(h, d, block, topk);
     let mut n = 256usize;
     while n <= args.measure_max {
         let (q, k, v) = rand_qkv(n, h, d, args.seed ^ n as u64);
         let reps = if n <= 1024 { 3 } else { 1 };
         let t0 = Instant::now();
         for _ in 0..reps {
-            let _ = sparse::full_attention(&q, &k, &v);
+            let _ = full_backend.forward(&q, &k, &v);
         }
         let full_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
         let t1 = Instant::now();
         for _ in 0..reps {
-            let _ = sparse::moba_attention(&q, &k, &v, block, topk);
+            let _ = moba_backend.forward(&q, &k, &v);
         }
         let moba_ms = t1.elapsed().as_secs_f64() * 1e3 / reps as f64;
         let shape = AttnShape::new(n, h, d);

@@ -19,7 +19,7 @@
 use anyhow::Result;
 
 use crate::metrics::writer::RunDir;
-use crate::sparse::moba_gate;
+use crate::sparse::{AttentionBackend, MobaAttention};
 use crate::tensor::Tensor;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::Rng;
@@ -61,7 +61,8 @@ fn trial(rng: &mut Rng, nb: usize, block: usize, topk: usize) -> (bool, bool, bo
         }
     }
 
-    let gate = moba_gate(&q, &k, block, topk);
+    let backend = MobaAttention::new(h, d, block, topk);
+    let gate = backend.gate(&q, &k).expect("moba backend exposes its gate");
     let moba_hit = gate.get(0, t, target);
 
     // static policies at the same budget (current block + k-1 others)

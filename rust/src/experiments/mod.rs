@@ -13,15 +13,24 @@
 //! | `table2`      | Table 2 (downstream parity suite)            |
 //!
 //! Every harness writes CSV + JSON into `runs/<name>/` and prints a
-//! paper-shaped table to stdout.
+//! paper-shaped table to stdout. Harnesses that train or evaluate through
+//! AOT artifacts require the `xla` feature; `efficiency`, `fits` and
+//! `gate_ablation` run on the pure-Rust backend stack alone.
 
+#[cfg(feature = "xla")]
 pub mod common;
 pub mod efficiency;
 pub mod fits;
 pub mod gate_ablation;
+#[cfg(feature = "xla")]
 pub mod granularity;
+#[cfg(feature = "xla")]
 pub mod hybrid;
+#[cfg(feature = "xla")]
 pub mod needle;
+#[cfg(feature = "xla")]
 pub mod scaling;
+#[cfg(feature = "xla")]
 pub mod sft;
+#[cfg(feature = "xla")]
 pub mod table2;

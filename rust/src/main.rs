@@ -1,31 +1,31 @@
 //! `repro` — the MoBA reproduction CLI (L3 leader entrypoint).
 //!
 //! ```text
-//! repro info                         list artifacts + platform
-//! repro table1                       print the scaled Table 1
-//! repro quickstart [--steps N]       tiny end-to-end train/eval smoke
-//! repro train --artifact A --steps N generic training run
-//! repro serve [--requests N]         serving demo (MoBA prefill/full decode)
-//! repro exp scaling [--long] [--steps N] [--sizes s0,s1,...]   Fig 3a/3b
-//! repro exp granularity [--steps N]                            Fig 4
-//! repro exp hybrid [--steps N]                                 Fig 5a
-//! repro exp sft [--pretrain-steps N] [--sft-steps N]           Fig 5b/5c
-//! repro exp needle [--full] [--stage-steps a,b,c]              Fig 6/7
-//! repro exp table2 [--steps N]                                 Table 2
-//! repro exp fits                                               Fig 3c + Table 3
-//! repro exp efficiency [--measure-max N]                       Fig 2a/2b
-//! repro exp all [--steps N]          every experiment at smoke scale
+//! repro info                         list artifacts + platform      [xla]
+//! repro table1                       print the scaled Table 1       [xla]
+//! repro quickstart [--steps N]       tiny end-to-end train/eval     [xla]
+//! repro train --artifact A --steps N generic training run           [xla]
+//! repro serve [--requests N] [--backend B]
+//!     continuous-batching serving demo over the cached-decode stack
+//! repro serve-artifact [--requests N]
+//!     artifact serving demo (MoBA prefill/full decode)              [xla]
+//! repro exp efficiency | fits | gate-ablation                       pure
+//! repro exp scaling | granularity | hybrid | sft | needle | table2  [xla]
+//! repro exp all [--steps N]          every available experiment
 //! ```
+//!
+//! Commands marked `[xla]` drive AOT artifacts through PJRT and require
+//! building with `--features xla`; everything else runs on the pure-Rust
+//! attention-backend stack.
+
+// the Args-then-assign-fields pattern is the local experiment-config idiom
+#![allow(clippy::field_reassign_with_default)]
 
 use anyhow::{bail, Result};
 
-use moba::config::{table1, TrainConfig};
-use moba::coordinator::StageSchedule;
-use moba::data::Corpus;
 use moba::experiments as exp;
-use moba::runtime::{artifacts_dir, Engine};
-use moba::serve::ServeEngine;
-use moba::train::{LrSchedule, Trainer};
+use moba::serve::{run_demo, DemoCfg};
+use moba::sparse::BackendKind;
 use moba::util::cli::Args;
 
 fn main() {
@@ -44,19 +44,16 @@ fn run(argv: &[String]) -> Result<()> {
             print!("{}", HELP);
             Ok(())
         }
-        "info" => info(),
+        "info" => engine_cmds::info(),
         "kernel-report" => {
             print!("{}", moba::attn_sim::tpu_estimate::report());
             Ok(())
         }
-        "table1" => {
-            let engine = Engine::new(&artifacts_dir())?;
-            print!("{}", table1(&engine.manifest)?);
-            Ok(())
-        }
-        "quickstart" => quickstart(&args),
-        "train" => train_cmd(&args),
+        "table1" => engine_cmds::table1(),
+        "quickstart" => engine_cmds::quickstart(&args),
+        "train" => engine_cmds::train_cmd(&args),
         "serve" => serve_cmd(&args),
+        "serve-artifact" => engine_cmds::serve_artifact_cmd(&args),
         "exp" => exp_cmd(&args),
         other => bail!("unknown command '{other}' (try `repro help`)"),
     }
@@ -66,134 +63,30 @@ const HELP: &str = "\
 repro — MoBA (Mixture of Block Attention) reproduction driver
 
 commands:
-  info | table1 | quickstart | train | serve | exp <name>
-experiments (exp): scaling [--long], granularity, hybrid, sft, needle
-  [--full], table2, fits, efficiency, all
+  info | table1 | quickstart | train | serve | serve-artifact | exp <name>
+experiments (exp): efficiency, fits, gate-ablation (pure Rust);
+  scaling [--long], granularity, hybrid, sft, needle [--full], table2
+  (need --features xla + artifacts); all
+serve options: --requests N --max-batch M --prompt-len P --max-new K
+  --backend full|moba|cached-full|cached-sparse --block B --topk K
 common options: --steps N  --seed N  --sizes s0,s1  --artifact NAME
 ";
 
-fn info() -> Result<()> {
-    let engine = Engine::new(&artifacts_dir())?;
-    println!("platform: {}", engine.platform());
-    println!("artifacts ({}):", engine.manifest.artifacts.len());
-    for a in engine.manifest.artifacts.values() {
-        println!(
-            "  {:<28} {:<12} {:<12} batch={} seq={} params={}",
-            a.name, a.group, a.kind, a.batch, a.seq, a.model.param_count
-        );
-    }
-    Ok(())
-}
-
-fn quickstart(args: &Args) -> Result<()> {
-    let engine = Engine::new(&artifacts_dir())?;
-    let steps = args.get_u64("steps", 30)?;
-    println!("platform: {}", engine.platform());
-    let art = engine.manifest.get("quickstart_train")?;
-    let cfg = TrainConfig {
-        steps,
-        batch: art.batch,
-        seq: art.seq,
-        seed: args.get_u64("seed", 42)?,
-        ..Default::default()
-    };
-    let corpus = Corpus::for_vocab(art.model.vocab, cfg.seed);
-    let lr = LrSchedule::new(cfg.base_lr, steps, cfg.warmup_frac, cfg.min_lr_frac);
-    let mut trainer = Trainer::new(&engine, StageSchedule::single("quickstart_train", steps), lr, cfg.seed)?;
-    let seed = cfg.seed;
-    let (batch, seq) = (cfg.batch, cfg.seq);
-    let summary = trainer.run(
-        |step| corpus.batch(seed, step, batch, seq),
-        |info| {
-            if info.step % 5 == 0 {
-                println!("step {:>4}  loss {:.4}  lr {:.2e}", info.step, info.loss, info.lr);
-            }
-        },
-    )?;
-    println!(
-        "trained {} steps in {:.1}s — loss {:.4} -> {:.4}",
-        summary.steps,
-        summary.total_secs,
-        summary.losses.first().unwrap(),
-        summary.final_loss
-    );
-    Ok(())
-}
-
-fn train_cmd(args: &Args) -> Result<()> {
-    let engine = Engine::new(&artifacts_dir())?;
-    let artifact = args
-        .get("artifact")
-        .ok_or_else(|| anyhow::anyhow!("--artifact NAME required"))?
-        .to_string();
-    let art = engine.manifest.get(&artifact)?;
-    let mut cfg = TrainConfig { batch: art.batch, seq: art.seq, ..Default::default() };
-    cfg.apply_cli(args)?;
-    let corpus = Corpus::for_vocab(art.model.vocab, cfg.seed);
-    let lr = LrSchedule::new(cfg.base_lr, cfg.steps, cfg.warmup_frac, cfg.min_lr_frac);
-    let mut trainer = Trainer::new(&engine, StageSchedule::single(&artifact, cfg.steps), lr, cfg.seed)?;
-    let seed = cfg.seed;
-    let (batch, seq) = (cfg.batch, cfg.seq);
-    let log_every = cfg.log_every;
-    let summary = trainer.run(
-        |step| corpus.batch(seed, step, batch, seq),
-        |info| {
-            if info.step % log_every == 0 {
-                println!("step {:>5}  loss {:.4}  ({:.2}s)", info.step, info.loss, info.step_secs);
-            }
-        },
-    )?;
-    println!("final loss {:.4} ({} steps, {:.1}s)", summary.final_loss, summary.steps, summary.total_secs);
-    if let Some(out) = args.get("save") {
-        moba::runtime::checkpoint::save(&trainer.state, std::path::Path::new(out))?;
-        println!("checkpoint -> {out}");
-    }
-    Ok(())
-}
-
+/// Continuous-batching serving demo on the pure-Rust stack (shared
+/// driver: `serve::demo`).
 fn serve_cmd(args: &Args) -> Result<()> {
-    let engine = Engine::new(&artifacts_dir())?;
-    let n_requests = args.get_usize("requests", 4)?;
-    // quick demo: a lightly trained needle model serving retrieval prompts
-    let steps = args.get_u64("steps", 60)?;
-    println!("training a small model for the demo ({steps} steps)...");
-    let gen = moba::data::NeedleGen::new(7);
-    let lr = LrSchedule::new(2e-3, steps, 0.05, 0.1);
-    let mut trainer = Trainer::new(&engine, StageSchedule::single("needle_s0_train", steps), lr, 7)?;
-    trainer.run(
-        |step| gen.train_batch(7, step, 1, 512, 0.1),
-        |info| {
-            if info.step % 20 == 0 {
-                println!("  step {:>4} loss {:.4}", info.step, info.loss);
-            }
-        },
-    )?;
-    let serve = ServeEngine::new(
-        &engine,
-        trainer.state.params.clone(),
-        "needle_s0_logits",
-        "needle_s0_full_logits",
-    )?;
-    println!("serving {n_requests} retrieval prompts (MoBA prefill, full decode):");
-    let mut correct = 0;
-    for i in 0..n_requests {
-        let mut rng = moba::util::rng::Rng::new(1000 + i as u64);
-        let sample = gen.eval_samples(55 + i as u64, 512, rng.f64(), 1).remove(0);
-        let prompt = &sample.tokens[..sample.answer_pos];
-        let (out, stats) = serve.generate(prompt, 1)?;
-        let ok = out[0] == sample.value;
-        correct += ok as usize;
-        println!(
-            "  req {i}: answer={} expect={} {}  prefill {:.0}ms decode {:.0}ms/tok",
-            out[0],
-            sample.value,
-            if ok { "OK" } else { "MISS" },
-            stats.prefill_secs * 1e3,
-            if stats.decode_steps > 0 { stats.decode_secs * 1e3 / stats.decode_steps as f64 } else { 0.0 },
-        );
-    }
-    println!("retrieval: {correct}/{n_requests}");
-    Ok(())
+    let d = DemoCfg::default();
+    let cfg = DemoCfg {
+        requests: args.get_usize("requests", d.requests)?,
+        max_in_flight: args.get_usize("max-batch", d.max_in_flight)?,
+        prompt_len: args.get_usize("prompt-len", d.prompt_len)?,
+        max_new: args.get_usize("max-new", d.max_new)?,
+        block_size: args.get_usize("block", d.block_size)?,
+        topk: args.get_usize("topk", d.topk)?,
+        backend: BackendKind::parse(args.get_str("backend", d.backend.label()))?,
+        seed: args.get_u64("seed", d.seed)?,
+    };
+    run_demo(&cfg)
 }
 
 fn exp_cmd(args: &Args) -> Result<()> {
@@ -202,36 +95,221 @@ fn exp_cmd(args: &Args) -> Result<()> {
         .get(1)
         .map(|s| s.as_str())
         .ok_or_else(|| anyhow::anyhow!("exp needs a name (try `repro help`)"))?;
-    let needs_engine = !matches!(which, "fits" | "efficiency" | "gate-ablation");
-    let engine = if needs_engine { Some(Engine::new(&artifacts_dir())?) } else { None };
-    let run_one = |name: &str, engine: Option<&Engine>| -> Result<()> {
-        match name {
+    match which {
+        "fits" => exp::fits::run(),
+        "gate-ablation" => {
+            let mut a = exp::gate_ablation::GateAblationArgs::default();
+            a.trials = args.get_usize("trials", a.trials)?;
+            a.seed = args.get_u64("seed", a.seed)?;
+            exp::gate_ablation::run(&a)
+        }
+        "efficiency" => {
+            let mut a = exp::efficiency::EfficiencyArgs::default();
+            a.measure_max = args.get_usize("measure-max", a.measure_max)?;
+            exp::efficiency::run(&a)
+        }
+        "all" => {
+            exp::efficiency::run(&exp::efficiency::EfficiencyArgs {
+                measure_max: 1024,
+                ..Default::default()
+            })?;
+            exp::gate_ablation::run(&exp::gate_ablation::GateAblationArgs::default())?;
+            engine_cmds::exp_all_engine(args)
+        }
+        other => engine_cmds::exp_engine(other, args),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// artifact-driven commands: real implementations with the xla feature,
+// clear build-time guidance without it
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "xla")]
+mod engine_cmds {
+    use anyhow::{bail, Result};
+
+    use moba::config::{table1 as render_table1, TrainConfig};
+    use moba::coordinator::StageSchedule;
+    use moba::data::Corpus;
+    use moba::experiments as exp;
+    use moba::runtime::{artifacts_dir, Engine};
+    use moba::serve::ArtifactServeEngine;
+    use moba::train::{LrSchedule, Trainer};
+    use moba::util::cli::Args;
+
+    pub fn info() -> Result<()> {
+        let engine = Engine::new(&artifacts_dir())?;
+        println!("platform: {}", engine.platform());
+        println!("artifacts ({}):", engine.manifest.artifacts.len());
+        for a in engine.manifest.artifacts.values() {
+            println!(
+                "  {:<28} {:<12} {:<12} batch={} seq={} params={}",
+                a.name, a.group, a.kind, a.batch, a.seq, a.model.param_count
+            );
+        }
+        Ok(())
+    }
+
+    pub fn table1() -> Result<()> {
+        let engine = Engine::new(&artifacts_dir())?;
+        print!("{}", render_table1(&engine.manifest)?);
+        Ok(())
+    }
+
+    pub fn quickstart(args: &Args) -> Result<()> {
+        let engine = Engine::new(&artifacts_dir())?;
+        let steps = args.get_u64("steps", 30)?;
+        println!("platform: {}", engine.platform());
+        let art = engine.manifest.get("quickstart_train")?;
+        let cfg = TrainConfig {
+            steps,
+            batch: art.batch,
+            seq: art.seq,
+            seed: args.get_u64("seed", 42)?,
+            ..Default::default()
+        };
+        let corpus = Corpus::for_vocab(art.model.vocab, cfg.seed);
+        let lr = LrSchedule::new(cfg.base_lr, steps, cfg.warmup_frac, cfg.min_lr_frac);
+        let mut trainer =
+            Trainer::new(&engine, StageSchedule::single("quickstart_train", steps), lr, cfg.seed)?;
+        let seed = cfg.seed;
+        let (batch, seq) = (cfg.batch, cfg.seq);
+        let summary = trainer.run(
+            |step| corpus.batch(seed, step, batch, seq),
+            |info| {
+                if info.step % 5 == 0 {
+                    println!("step {:>4}  loss {:.4}  lr {:.2e}", info.step, info.loss, info.lr);
+                }
+            },
+        )?;
+        println!(
+            "trained {} steps in {:.1}s — loss {:.4} -> {:.4}",
+            summary.steps,
+            summary.total_secs,
+            summary.losses.first().unwrap(),
+            summary.final_loss
+        );
+        Ok(())
+    }
+
+    pub fn train_cmd(args: &Args) -> Result<()> {
+        let engine = Engine::new(&artifacts_dir())?;
+        let artifact = args
+            .get("artifact")
+            .ok_or_else(|| anyhow::anyhow!("--artifact NAME required"))?
+            .to_string();
+        let art = engine.manifest.get(&artifact)?;
+        let mut cfg = TrainConfig { batch: art.batch, seq: art.seq, ..Default::default() };
+        cfg.apply_cli(args)?;
+        let corpus = Corpus::for_vocab(art.model.vocab, cfg.seed);
+        let lr = LrSchedule::new(cfg.base_lr, cfg.steps, cfg.warmup_frac, cfg.min_lr_frac);
+        let mut trainer =
+            Trainer::new(&engine, StageSchedule::single(&artifact, cfg.steps), lr, cfg.seed)?;
+        let seed = cfg.seed;
+        let (batch, seq) = (cfg.batch, cfg.seq);
+        let log_every = cfg.log_every;
+        let summary = trainer.run(
+            |step| corpus.batch(seed, step, batch, seq),
+            |info| {
+                if info.step % log_every == 0 {
+                    println!(
+                        "step {:>5}  loss {:.4}  ({:.2}s)",
+                        info.step, info.loss, info.step_secs
+                    );
+                }
+            },
+        )?;
+        println!(
+            "final loss {:.4} ({} steps, {:.1}s)",
+            summary.final_loss, summary.steps, summary.total_secs
+        );
+        if let Some(out) = args.get("save") {
+            moba::runtime::checkpoint::save(&trainer.state, std::path::Path::new(out))?;
+            println!("checkpoint -> {out}");
+        }
+        Ok(())
+    }
+
+    pub fn serve_artifact_cmd(args: &Args) -> Result<()> {
+        let engine = Engine::new(&artifacts_dir())?;
+        let n_requests = args.get_usize("requests", 4)?;
+        // quick demo: a lightly trained needle model serving retrieval prompts
+        let steps = args.get_u64("steps", 60)?;
+        println!("training a small model for the demo ({steps} steps)...");
+        let gen = moba::data::NeedleGen::new(7);
+        let lr = LrSchedule::new(2e-3, steps, 0.05, 0.1);
+        let mut trainer =
+            Trainer::new(&engine, StageSchedule::single("needle_s0_train", steps), lr, 7)?;
+        trainer.run(
+            |step| gen.train_batch(7, step, 1, 512, 0.1),
+            |info| {
+                if info.step % 20 == 0 {
+                    println!("  step {:>4} loss {:.4}", info.step, info.loss);
+                }
+            },
+        )?;
+        let serve = ArtifactServeEngine::new(
+            &engine,
+            trainer.state.params.clone(),
+            "needle_s0_logits",
+            "needle_s0_full_logits",
+        )?;
+        println!("serving {n_requests} retrieval prompts (MoBA prefill, full decode):");
+        let mut correct = 0;
+        for i in 0..n_requests {
+            let mut rng = moba::util::rng::Rng::new(1000 + i as u64);
+            let sample = gen.eval_samples(55 + i as u64, 512, rng.f64(), 1).remove(0);
+            let prompt = &sample.tokens[..sample.answer_pos];
+            let (out, stats) = serve.generate(prompt, 1)?;
+            let ok = out[0] == sample.value;
+            correct += ok as usize;
+            println!(
+                "  req {i}: answer={} expect={} {}  prefill {:.0}ms decode {:.0}ms/tok",
+                out[0],
+                sample.value,
+                if ok { "OK" } else { "MISS" },
+                stats.prefill_secs * 1e3,
+                if stats.decode_steps > 0 {
+                    stats.decode_secs * 1e3 / stats.decode_steps as f64
+                } else {
+                    0.0
+                },
+            );
+        }
+        println!("retrieval: {correct}/{n_requests}");
+        Ok(())
+    }
+
+    pub fn exp_engine(which: &str, args: &Args) -> Result<()> {
+        let engine = Engine::new(&artifacts_dir())?;
+        match which {
             "scaling" => {
                 let mut a = exp::scaling::ScalingArgs::default();
                 a.long = args.flag("long");
                 a.steps = args.get_u64("steps", if a.long { 80 } else { 120 })?;
                 a.seed = args.get_u64("seed", a.seed)?;
                 a.sizes = args.get_list("sizes", &["s0", "s1", "s2", "s3", "s4"]);
-                exp::scaling::run(engine.unwrap(), &a)
+                exp::scaling::run(&engine, &a)
             }
             "granularity" => {
                 let mut a = exp::granularity::GranularityArgs::default();
                 a.steps = args.get_u64("steps", a.steps)?;
                 a.seed = args.get_u64("seed", a.seed)?;
-                exp::granularity::run(engine.unwrap(), &a)
+                exp::granularity::run(&engine, &a)
             }
             "hybrid" => {
                 let mut a = exp::hybrid::HybridArgs::default();
                 a.steps = args.get_u64("steps", a.steps)?;
                 a.seed = args.get_u64("seed", a.seed)?;
-                exp::hybrid::run(engine.unwrap(), &a)
+                exp::hybrid::run(&engine, &a)
             }
             "sft" => {
                 let mut a = exp::sft::SftArgs::default();
                 a.pretrain_steps = args.get_u64("pretrain-steps", a.pretrain_steps)?;
                 a.sft_steps = args.get_u64("sft-steps", a.sft_steps)?;
                 a.seed = args.get_u64("seed", a.seed)?;
-                exp::sft::run(engine.unwrap(), &a)
+                exp::sft::run(&engine, &a)
             }
             "needle" => {
                 let mut a = exp::needle::NeedleArgs::default();
@@ -244,36 +322,22 @@ fn exp_cmd(args: &Args) -> Result<()> {
                         .map(|x| x.trim().parse::<u64>())
                         .collect::<std::result::Result<_, _>>()?;
                 }
-                exp::needle::run(engine.unwrap(), &a)
+                exp::needle::run(&engine, &a)
             }
             "table2" => {
                 let mut a = exp::table2::Table2Args::default();
                 a.steps = args.get_u64("steps", a.steps)?;
                 a.seed = args.get_u64("seed", a.seed)?;
-                exp::table2::run(engine.unwrap(), &a)
-            }
-            "fits" => exp::fits::run(),
-            "gate-ablation" => {
-                let mut a = exp::gate_ablation::GateAblationArgs::default();
-                a.trials = args.get_usize("trials", a.trials)?;
-                a.seed = args.get_u64("seed", a.seed)?;
-                exp::gate_ablation::run(&a)
-            }
-            "efficiency" => {
-                let mut a = exp::efficiency::EfficiencyArgs::default();
-                a.measure_max = args.get_usize("measure-max", a.measure_max)?;
-                exp::efficiency::run(&a)
+                exp::table2::run(&engine, &a)
             }
             other => bail!("unknown experiment '{other}'"),
         }
-    };
-    if which == "all" {
-        // smoke-scale sweep of every harness, in dependency order
+    }
+
+    /// The artifact-driven tail of `exp all` (the pure experiments have
+    /// already run by the time this is called).
+    pub fn exp_all_engine(args: &Args) -> Result<()> {
         let engine = Engine::new(&artifacts_dir())?;
-        exp::efficiency::run(&exp::efficiency::EfficiencyArgs {
-            measure_max: 1024,
-            ..Default::default()
-        })?;
         let steps = args.get_u64("steps", 25)?;
         exp::scaling::run(&engine, &exp::scaling::ScalingArgs { steps, ..Default::default() })?;
         exp::scaling::run(
@@ -281,19 +345,82 @@ fn exp_cmd(args: &Args) -> Result<()> {
             &exp::scaling::ScalingArgs { steps: steps / 2 + 1, long: true, ..Default::default() },
         )?;
         exp::fits::run()?;
-        exp::granularity::run(&engine, &exp::granularity::GranularityArgs { steps, ..Default::default() })?;
+        exp::granularity::run(
+            &engine,
+            &exp::granularity::GranularityArgs { steps, ..Default::default() },
+        )?;
         exp::hybrid::run(&engine, &exp::hybrid::HybridArgs { steps, ..Default::default() })?;
         exp::sft::run(
             &engine,
-            &exp::sft::SftArgs { pretrain_steps: steps, sft_steps: steps / 2 + 1, ..Default::default() },
+            &exp::sft::SftArgs {
+                pretrain_steps: steps,
+                sft_steps: steps / 2 + 1,
+                ..Default::default()
+            },
         )?;
         exp::needle::run(
             &engine,
-            &exp::needle::NeedleArgs { stage_steps: vec![steps, steps / 2 + 1, steps / 4 + 1], ..Default::default() },
+            &exp::needle::NeedleArgs {
+                stage_steps: vec![steps, steps / 2 + 1, steps / 4 + 1],
+                ..Default::default()
+            },
         )?;
         exp::table2::run(&engine, &exp::table2::Table2Args { steps, ..Default::default() })?;
-        exp::gate_ablation::run(&exp::gate_ablation::GateAblationArgs::default())?;
-        return Ok(());
+        Ok(())
     }
-    run_one(which, engine.as_ref())
+}
+
+#[cfg(not(feature = "xla"))]
+mod engine_cmds {
+    use anyhow::{bail, Result};
+
+    use moba::util::cli::Args;
+
+    const NEEDS_XLA: &str =
+        "this command drives AOT artifacts through PJRT — rebuild with `--features xla` \
+         (and run `make artifacts`)";
+
+    pub fn info() -> Result<()> {
+        bail!(NEEDS_XLA)
+    }
+
+    pub fn table1() -> Result<()> {
+        bail!(NEEDS_XLA)
+    }
+
+    pub fn quickstart(_args: &Args) -> Result<()> {
+        bail!(NEEDS_XLA)
+    }
+
+    pub fn train_cmd(_args: &Args) -> Result<()> {
+        bail!(NEEDS_XLA)
+    }
+
+    pub fn serve_artifact_cmd(_args: &Args) -> Result<()> {
+        bail!(NEEDS_XLA)
+    }
+
+    pub fn exp_engine(which: &str, _args: &Args) -> Result<()> {
+        match which {
+            "scaling" | "granularity" | "hybrid" | "sft" | "needle" | "table2" => {
+                bail!("experiment '{which}': {NEEDS_XLA}")
+            }
+            other => bail!("unknown experiment '{other}'"),
+        }
+    }
+
+    pub fn exp_all_engine(_args: &Args) -> Result<()> {
+        // `fits` is pure Rust but consumes `runs/scaling` summaries, which
+        // only the xla-gated scaling experiment produces — run it
+        // opportunistically against any existing output.
+        match moba::experiments::fits::run() {
+            Ok(()) => {}
+            Err(e) => println!("(fits skipped: {e:#})"),
+        }
+        println!(
+            "(artifact-driven experiments skipped: build with --features xla to include \
+             scaling/granularity/hybrid/sft/needle/table2)"
+        );
+        Ok(())
+    }
 }

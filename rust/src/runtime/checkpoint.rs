@@ -9,7 +9,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::engine::ModelState;
+use super::state::ModelState;
 use crate::tensor::Tensor;
 use crate::util::json::{arr, num, obj, s, Json};
 

@@ -1,13 +1,15 @@
 //! PJRT execution engine: loads AOT HLO-text artifacts and runs them.
 //!
-//! This is the only module that touches the `xla` crate. Pattern (see
+//! This is the only module that touches the `xla` crate, and it only
+//! compiles with the `xla` feature. Pattern (see
 //! /opt/xla-example/load_hlo): `HloModuleProto::from_text_file` →
 //! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
 //! Executables are compiled once and cached per artifact name.
 //!
-//! All state crosses the boundary as host `Tensor`s. The AOT graphs are
-//! lowered with `return_tuple=True`, so every execution yields one tuple
-//! literal which is decomposed back into leaves here.
+//! All state crosses the boundary as host `Tensor`s (`ModelState` itself
+//! lives in `runtime::state`, which is feature-independent). The AOT
+//! graphs are lowered with `return_tuple=True`, so every execution yields
+//! one tuple literal which is decomposed back into leaves here.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -17,9 +19,9 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::manifest::{Artifact, Manifest};
+use super::manifest::Manifest;
+use super::state::ModelState;
 use crate::tensor::{IntTensor, Tensor};
-use crate::util::rng::Rng;
 
 pub struct Engine {
     client: xla::PjRtClient,
@@ -156,58 +158,6 @@ pub fn literal_to_int_tensor(lit: &xla::Literal) -> Result<IntTensor> {
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
     let data = lit.to_vec::<i32>()?;
     IntTensor::from_vec(&dims, data)
-}
-
-// ---------------------------------------------------------------------------
-// model state: params + Adam moments, initialized from the manifest spec
-// ---------------------------------------------------------------------------
-
-/// Full optimizer state for one model geometry. Host-resident between
-/// steps; uploaded per call (see DESIGN.md §7 for the measured cost).
-#[derive(Clone)]
-pub struct ModelState {
-    pub params: Vec<Tensor>,
-    pub m: Vec<Tensor>,
-    pub v: Vec<Tensor>,
-    pub step: u64,
-}
-
-impl ModelState {
-    /// Initialize from the artifact's parameter spec with the repo RNG.
-    /// Mirrors `model.init_params` (normal / zeros / ones per leaf).
-    pub fn init(art: &Artifact, seed: u64) -> Result<ModelState> {
-        let mut root = Rng::new(seed);
-        let mut params = Vec::with_capacity(art.params.len());
-        for (i, spec) in art.params.iter().enumerate() {
-            let mut rng = root.split(i as u64);
-            let n = spec.numel();
-            let data = match spec.init.as_str() {
-                "normal" => (0..n).map(|_| rng.normal_f32(spec.scale as f32)).collect(),
-                "zeros" => vec![0.0; n],
-                "ones" => vec![1.0; n],
-                other => bail!("unknown init kind '{other}'"),
-            };
-            params.push(Tensor::from_vec(&spec.shape, data)?);
-        }
-        let zeros: Vec<Tensor> =
-            art.params.iter().map(|s| Tensor::zeros(&s.shape)).collect();
-        Ok(ModelState { params, m: zeros.clone(), v: zeros, step: 0 })
-    }
-
-    pub fn param_count(&self) -> usize {
-        self.params.iter().map(|t| t.len()).sum()
-    }
-
-    /// Verify leaf shapes against another artifact of the same geometry
-    /// (used when the stage scheduler swaps executables, Fig 5a).
-    pub fn compatible_with(&self, art: &Artifact) -> bool {
-        self.params.len() == art.params.len()
-            && self
-                .params
-                .iter()
-                .zip(&art.params)
-                .all(|(t, s)| t.shape == s.shape)
-    }
 }
 
 // ---------------------------------------------------------------------------

@@ -1,16 +1,23 @@
-//! Runtime layer: PJRT client wrapper, artifact manifest, model state and
-//! checkpoints. The only module that links against the `xla` crate.
+//! Runtime layer: artifact manifest, model state and checkpoints, plus —
+//! behind the `xla` feature — the PJRT client wrapper (`engine`), the only
+//! module in the crate that links against the `xla` crate.
 //!
 //! Flow: `Manifest::load` (artifact metadata from python's AOT pass) →
 //! `Engine::load` (HLO text → compile, cached) → `Engine::train_step` /
-//! `eval_losses` / `logits` / `kernel` (host tensors in/out).
+//! `eval_losses` / `logits` / `kernel` (host tensors in/out). Manifest,
+//! `ModelState` and checkpoint I/O are pure host code and compile (and
+//! test) without any device runtime.
 
 pub mod checkpoint;
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
+pub mod state;
 
-pub use engine::{Engine, Input, ModelState};
+#[cfg(feature = "xla")]
+pub use engine::{Engine, Input};
 pub use manifest::{Artifact, Manifest};
+pub use state::ModelState;
 
 use std::path::PathBuf;
 

@@ -1,0 +1,58 @@
+//! Host-resident model state: parameters + Adam moments, initialized from
+//! the manifest's parameter spec. Pure host code — the PJRT engine (behind
+//! the `xla` feature) consumes it, but checkpointing and initialization
+//! need no device runtime.
+
+use anyhow::{bail, Result};
+
+use super::manifest::Artifact;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Full optimizer state for one model geometry. Host-resident between
+/// steps; uploaded per call (see DESIGN.md §7 for the measured cost).
+#[derive(Clone)]
+pub struct ModelState {
+    pub params: Vec<Tensor>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub step: u64,
+}
+
+impl ModelState {
+    /// Initialize from the artifact's parameter spec with the repo RNG.
+    /// Mirrors `model.init_params` (normal / zeros / ones per leaf).
+    pub fn init(art: &Artifact, seed: u64) -> Result<ModelState> {
+        let mut root = Rng::new(seed);
+        let mut params = Vec::with_capacity(art.params.len());
+        for (i, spec) in art.params.iter().enumerate() {
+            let mut rng = root.split(i as u64);
+            let n = spec.numel();
+            let data = match spec.init.as_str() {
+                "normal" => (0..n).map(|_| rng.normal_f32(spec.scale as f32)).collect(),
+                "zeros" => vec![0.0; n],
+                "ones" => vec![1.0; n],
+                other => bail!("unknown init kind '{other}'"),
+            };
+            params.push(Tensor::from_vec(&spec.shape, data)?);
+        }
+        let zeros: Vec<Tensor> =
+            art.params.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+        Ok(ModelState { params, m: zeros.clone(), v: zeros, step: 0 })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|t| t.len()).sum()
+    }
+
+    /// Verify leaf shapes against another artifact of the same geometry
+    /// (used when the stage scheduler swaps executables, Fig 5a).
+    pub fn compatible_with(&self, art: &Artifact) -> bool {
+        self.params.len() == art.params.len()
+            && self
+                .params
+                .iter()
+                .zip(&art.params)
+                .all(|(t, s)| t.shape == s.shape)
+    }
+}

@@ -1,0 +1,131 @@
+//! Artifact-backed generation engine (requires the `xla` feature):
+//! drives AOT logits graphs through PJRT.
+//!
+//! Prefill runs the **MoBA** logits graph once over the padded prompt
+//! (block-sparse — the paper's speedup target); each decode step runs the
+//! **full-attention** logits graph (the paper switches to full attention
+//! for generation quality). Causality makes right-padding safe: logits at
+//! position p never see the pad region beyond p.
+//!
+//! The AOT graphs are fixed-shape and expose no KV cache, so *this* path
+//! still recomputes per decode step — it exists for parity with the
+//! L1/L2 artifacts. The crate's serving default is `serve::engine`, which
+//! decodes incrementally over `sparse::KvCache` through any
+//! `AttentionBackend`; lowering a cache-carrying decode graph so the
+//! artifact path can join it is tracked in ROADMAP.md.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Engine;
+use crate::tensor::{IntTensor, Tensor};
+
+use super::engine::GenStats;
+
+/// Generation over a (MoBA-prefill, full-decode) pair of logits artifacts.
+pub struct ArtifactServeEngine<'e> {
+    engine: &'e Engine,
+    params: Vec<Tensor>,
+    /// MoBA logits artifact used for prefill
+    prefill_artifact: String,
+    /// full-attention logits artifact used for decode
+    decode_artifact: String,
+    seq: usize,
+    vocab: usize,
+}
+
+impl<'e> ArtifactServeEngine<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        params: Vec<Tensor>,
+        prefill_artifact: &str,
+        decode_artifact: &str,
+    ) -> Result<ArtifactServeEngine<'e>> {
+        let pa = engine.manifest.get(prefill_artifact)?;
+        let da = engine.manifest.get(decode_artifact)?;
+        if pa.kind != "logits" || da.kind != "logits" {
+            bail!("serve artifacts must be kind=logits");
+        }
+        if pa.seq != da.seq || pa.model.vocab != da.model.vocab {
+            bail!("prefill/decode artifact geometry mismatch");
+        }
+        Ok(ArtifactServeEngine {
+            engine,
+            params,
+            prefill_artifact: prefill_artifact.into(),
+            decode_artifact: decode_artifact.into(),
+            seq: pa.seq,
+            vocab: pa.model.vocab,
+        })
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.seq
+    }
+
+    fn argmax_at(&self, logits: &Tensor, pos: usize) -> i32 {
+        let off = pos * self.vocab;
+        let row = &logits.data[off..off + self.vocab];
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i as i32)
+            .unwrap()
+    }
+
+    /// Greedy generation: returns (generated tokens, stats).
+    pub fn generate(&self, prompt: &[i32], max_new: usize) -> Result<(Vec<i32>, GenStats)> {
+        if prompt.is_empty() || prompt.len() + max_new > self.seq {
+            bail!(
+                "prompt {} + max_new {} exceeds artifact seq {}",
+                prompt.len(),
+                max_new,
+                self.seq
+            );
+        }
+        let mut buf = vec![0i32; self.seq];
+        buf[..prompt.len()].copy_from_slice(prompt);
+        let mut stats = GenStats::default();
+
+        // prefill with the MoBA graph: logits for the whole prompt
+        let t0 = std::time::Instant::now();
+        let tokens = IntTensor::from_vec(&[1, self.seq], buf.clone())?;
+        let logits = self
+            .engine
+            .logits(&self.prefill_artifact, &self.params, &tokens)?;
+        stats.prefill_secs = t0.elapsed().as_secs_f64();
+        let mut next = self.argmax_at(&logits, prompt.len() - 1);
+
+        let mut out = Vec::with_capacity(max_new);
+        let mut cursor = prompt.len();
+        for _ in 0..max_new {
+            out.push(next);
+            if cursor >= self.seq {
+                break;
+            }
+            buf[cursor] = next;
+            cursor += 1;
+            if out.len() == max_new {
+                break;
+            }
+            // decode step with the full-attention graph (whole-sequence
+            // recompute: the graph carries no cache)
+            let t1 = std::time::Instant::now();
+            let tokens = IntTensor::from_vec(&[1, self.seq], buf.clone())?;
+            let logits = self
+                .engine
+                .logits(&self.decode_artifact, &self.params, &tokens)?;
+            stats.decode_secs += t1.elapsed().as_secs_f64();
+            stats.decode_steps += 1;
+            next = self.argmax_at(&logits, cursor - 1);
+        }
+        Ok((out, stats))
+    }
+
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+}

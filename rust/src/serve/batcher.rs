@@ -1,11 +1,17 @@
-//! Request batching: a vLLM-router-style admission queue in miniature.
+//! Request admission: the queue in front of the serving engine.
 //!
-//! Requests arrive with timestamps; the batcher forms batches under two
-//! policies — `max_batch` (close a batch when full) and `max_wait`
-//! (close a batch when its oldest member has waited long enough) — and
-//! records queueing vs service latency per request. The serving example
-//! drives this with a simulated arrival process and reports the latency
-//! distribution, reproducing the paper's deployment-mode accounting.
+//! Requests arrive with timestamps; the batcher supports two serving
+//! disciplines:
+//!
+//! - **batch mode** (`pop_batch` / `drain`): close a batch when full
+//!   (`max_batch`) or when the oldest member has waited long enough
+//!   (`max_wait_secs`) — the original vLLM-router-style accounting;
+//! - **continuous mode** (`admit`): hand over up to `free_slots` arrived
+//!   requests immediately, used by `serve::scheduler` to refill in-flight
+//!   decode batches every tick without waiting for a batch boundary.
+//!
+//! Per-request latency is split into queue / prefill / decode components
+//! in [`RequestResult`].
 
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -16,12 +22,25 @@ pub struct Request {
     pub arrival: f64,
 }
 
+/// Completed request with its latency breakdown.
 #[derive(Clone, Debug)]
 pub struct RequestResult {
     pub id: u64,
     pub output: Vec<i32>,
+    /// arrival → admission (simulation clock)
     pub queue_secs: f64,
-    pub service_secs: f64,
+    /// measured prompt-ingest time (wall clock)
+    pub prefill_secs: f64,
+    /// measured total decode time (wall clock)
+    pub decode_secs: f64,
+    pub decode_steps: usize,
+}
+
+impl RequestResult {
+    /// Total service time (prefill + decode).
+    pub fn service_secs(&self) -> f64 {
+        self.prefill_secs + self.decode_secs
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -36,7 +55,7 @@ impl Default for BatcherCfg {
     }
 }
 
-/// Deterministic batch former over a timestamped request stream.
+/// Deterministic FIFO admission queue over a timestamped request stream.
 pub struct Batcher {
     cfg: BatcherCfg,
     queue: Vec<Request>,
@@ -55,8 +74,23 @@ impl Batcher {
         self.queue.len()
     }
 
-    /// Given the current clock, pop the next batch if either policy
-    /// triggers; otherwise None (keep accumulating).
+    /// Continuous admission: pop up to `free_slots` FIFO requests that
+    /// have arrived by `now`. Never waits — a continuous scheduler calls
+    /// this every tick to top up the in-flight batch. O(queue) total: the
+    /// ready requests form a prefix (FIFO arrival order), so they are
+    /// counted and drained in one pass.
+    pub fn admit(&mut self, now: f64, free_slots: usize) -> Vec<Request> {
+        let ready = self
+            .queue
+            .iter()
+            .take(free_slots)
+            .take_while(|r| r.arrival <= now)
+            .count();
+        self.queue.drain(..ready).collect()
+    }
+
+    /// Batch mode: given the current clock, pop the next batch if either
+    /// policy triggers; otherwise None (keep accumulating).
     pub fn pop_batch(&mut self, now: f64) -> Option<Vec<Request>> {
         if self.queue.is_empty() {
             return None;
@@ -132,5 +166,37 @@ mod tests {
         assert_eq!(batches.len(), 3);
         assert_eq!(batches.iter().map(|x| x.len()).sum::<usize>(), 7);
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn admit_respects_arrival_and_capacity() {
+        let mut b = Batcher::new(BatcherCfg::default());
+        for i in 0..4 {
+            b.push(req(i, i as f64)); // arrivals at t = 0,1,2,3
+        }
+        // at t=1.5 only requests 0 and 1 have arrived
+        let got = b.admit(1.5, 8);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.pending(), 2);
+        // capacity caps admission even when more have arrived
+        let got = b.admit(10.0, 1);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 2);
+        // nothing ready → empty, queue untouched
+        assert!(b.admit(-1.0, 8).is_empty());
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn result_service_time_is_prefill_plus_decode() {
+        let r = RequestResult {
+            id: 1,
+            output: vec![],
+            queue_secs: 0.5,
+            prefill_secs: 0.2,
+            decode_secs: 0.3,
+            decode_steps: 3,
+        };
+        assert!((r.service_secs() - 0.5).abs() < 1e-12);
     }
 }

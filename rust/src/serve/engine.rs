@@ -1,20 +1,34 @@
-//! Generation engine over AOT logits artifacts.
+//! Generation engine over pluggable attention backends — prefill once,
+//! then incremental decode against the KV/block-pool caches.
 //!
-//! Prefill runs the **MoBA** logits graph once over the padded prompt
-//! (block-sparse — the paper's speedup target); each decode step runs the
-//! **full-attention** logits graph (the paper switches to full attention
-//! for generation quality). Causality makes right-padding safe: logits at
-//! position p never see the pad region beyond p.
+//! The old caveat ("decode is recompute-based, no KV cache") is gone:
+//! each request owns a [`DecodeSession`] whose backend ingests the prompt
+//! once (`AttentionBackend::prefill`, MoBA block-sparse by default — the
+//! paper's prefill mode) and then appends one token per decode step
+//! (`AttentionBackend::decode`). With the default
+//! `BackendKind::CachedSparse` a decode step costs O(N/B·D) gating +
+//! O(k·B·D) attention instead of the old O(N²) whole-graph recompute;
+//! `BackendKind::CachedFull` gives the paper's §3.3 full-attention-decode
+//! deployment mode at O(N·D) per token. The recompute kinds (`full`,
+//! `moba`) remain selectable as baselines — same API, same outputs,
+//! bit-for-bit (see `sparse/README.md`).
 //!
-//! On this CPU testbed decode is recompute-based (no KV cache in the AOT
-//! graphs); the serving metrics therefore report prefill/decode time per
-//! *graph execution*, which is the unit the Fig-2 analysis prices.
+//! Sessions are independent and stepped one token at a time, which is
+//! what lets `serve::scheduler` interleave many requests in a continuous
+//! batch. The model behind the projections is abstracted as
+//! [`TokenModel`]; the artifact/PJRT path lives in `serve::artifact`
+//! behind the `xla` feature.
+
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::Engine;
-use crate::tensor::{IntTensor, Tensor};
+use crate::sparse::{build_backend, AttentionBackend, BackendKind};
+use crate::tensor::Tensor;
 
+use super::model::TokenModel;
+
+/// Per-request serving statistics.
 #[derive(Clone, Debug, Default)]
 pub struct GenStats {
     pub prefill_secs: f64,
@@ -22,109 +36,232 @@ pub struct GenStats {
     pub decode_steps: usize,
 }
 
-pub struct ServeEngine<'e> {
-    engine: &'e Engine,
-    params: Vec<Tensor>,
-    /// MoBA logits artifact used for prefill
-    prefill_artifact: String,
-    /// full-attention logits artifact used for decode
-    decode_artifact: String,
-    seq: usize,
-    vocab: usize,
+/// Serving configuration: attention geometry + backend selection.
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    pub block_size: usize,
+    pub topk: usize,
+    pub max_seq: usize,
+    pub backend: BackendKind,
 }
 
-impl<'e> ServeEngine<'e> {
-    pub fn new(
-        engine: &'e Engine,
-        params: Vec<Tensor>,
-        prefill_artifact: &str,
-        decode_artifact: &str,
-    ) -> Result<ServeEngine<'e>> {
-        let pa = engine.manifest.get(prefill_artifact)?;
-        let da = engine.manifest.get(decode_artifact)?;
-        if pa.kind != "logits" || da.kind != "logits" {
-            bail!("serve artifacts must be kind=logits");
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg { block_size: 64, topk: 3, max_seq: 4096, backend: BackendKind::CachedSparse }
+    }
+}
+
+/// One in-flight request: its backend state (caches), token history and
+/// latency accounting. Created by `ServeEngine::start` (prefill), then
+/// advanced one token per `ServeEngine::step`.
+pub struct DecodeSession {
+    backend: Box<dyn AttentionBackend>,
+    prompt_len: usize,
+    max_seq: usize,
+    max_new: usize,
+    /// next token to emit (argmax of the last computed logits)
+    pending: i32,
+    generated: Vec<i32>,
+    pub stats: GenStats,
+}
+
+impl DecodeSession {
+    pub fn finished(&self) -> bool {
+        self.generated.len() >= self.max_new
+            || self.prompt_len + self.generated.len() >= self.max_seq
+    }
+
+    pub fn output(&self) -> &[i32] {
+        &self.generated
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    /// Tokens currently resident in the backend's incremental state.
+    pub fn context_len(&self) -> usize {
+        self.backend.seq_len()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+/// Backend-based generation engine. Stateless across requests: every
+/// request gets a fresh backend (and thus fresh caches) in its session.
+pub struct ServeEngine<M: TokenModel> {
+    model: M,
+    cfg: ServeCfg,
+}
+
+impl<M: TokenModel> ServeEngine<M> {
+    pub fn new(model: M, cfg: ServeCfg) -> ServeEngine<M> {
+        ServeEngine { model, cfg }
+    }
+
+    pub fn cfg(&self) -> &ServeCfg {
+        &self.cfg
+    }
+
+    pub fn model(&self) -> &M {
+        &self.model
+    }
+
+    /// Prefill `prompt` through a fresh backend and return the live
+    /// session with its first pending token.
+    pub fn start(&self, prompt: &[i32], max_new: usize) -> Result<DecodeSession> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
         }
-        if pa.seq != da.seq || pa.model.vocab != da.model.vocab {
-            bail!("prefill/decode artifact geometry mismatch");
+        if prompt.len() + max_new > self.cfg.max_seq {
+            bail!(
+                "prompt {} + max_new {} exceeds max_seq {}",
+                prompt.len(),
+                max_new,
+                self.cfg.max_seq
+            );
         }
-        Ok(ServeEngine {
-            engine,
-            params,
-            prefill_artifact: prefill_artifact.into(),
-            decode_artifact: decode_artifact.into(),
-            seq: pa.seq,
-            vocab: pa.model.vocab,
+        let (h, d) = (self.model.heads(), self.model.head_dim());
+        let mut backend =
+            build_backend(self.cfg.backend, h, d, self.cfg.block_size, self.cfg.topk);
+
+        let t0 = Instant::now();
+        let n = prompt.len();
+        let w = h * d;
+        let (mut qs, mut ks, mut vs) =
+            (Vec::with_capacity(n * w), Vec::with_capacity(n * w), Vec::with_capacity(n * w));
+        for (pos, &tok) in prompt.iter().enumerate() {
+            let (q, k, v) = self.model.qkv(tok, pos);
+            qs.extend_from_slice(&q);
+            ks.extend_from_slice(&k);
+            vs.extend_from_slice(&v);
+        }
+        let q = Tensor::from_vec(&[n, h, d], qs)?;
+        let k = Tensor::from_vec(&[n, h, d], ks)?;
+        let v = Tensor::from_vec(&[n, h, d], vs)?;
+        let out = backend.prefill(&q, &k, &v);
+        let pending = argmax(&self.model.logits(&out.data[(n - 1) * w..n * w]));
+        let stats = GenStats { prefill_secs: t0.elapsed().as_secs_f64(), ..Default::default() };
+
+        Ok(DecodeSession {
+            backend,
+            prompt_len: n,
+            max_seq: self.cfg.max_seq,
+            max_new,
+            pending,
+            generated: Vec::with_capacity(max_new),
+            stats,
         })
     }
 
-    pub fn max_seq(&self) -> usize {
-        self.seq
+    /// One decode step: emit the session's pending token, append it to the
+    /// incremental state and compute the next. Returns the emitted token,
+    /// or `None` if the session is already finished.
+    pub fn step(&self, s: &mut DecodeSession) -> Option<i32> {
+        if s.finished() {
+            return None;
+        }
+        let tok = s.pending;
+        s.generated.push(tok);
+        if s.finished() {
+            return Some(tok); // budget exhausted: no need to compute a successor
+        }
+        let t0 = Instant::now();
+        let pos = s.prompt_len + s.generated.len() - 1;
+        let (q, k, v) = self.model.qkv(tok, pos);
+        let out = s.backend.decode(&q, &k, &v);
+        s.pending = argmax(&self.model.logits(&out));
+        s.stats.decode_secs += t0.elapsed().as_secs_f64();
+        s.stats.decode_steps += 1;
+        Some(tok)
     }
 
-    fn argmax_at(&self, logits: &Tensor, pos: usize) -> i32 {
-        let off = pos * self.vocab;
-        let row = &logits.data[off..off + self.vocab];
-        row.iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i as i32)
-            .unwrap()
-    }
-
-    /// Greedy generation: returns (generated tokens, stats).
+    /// Greedy generation, single request: prefill + run the session to
+    /// completion. Returns (generated tokens, stats).
     pub fn generate(&self, prompt: &[i32], max_new: usize) -> Result<(Vec<i32>, GenStats)> {
-        if prompt.is_empty() || prompt.len() + max_new > self.seq {
-            bail!(
-                "prompt {} + max_new {} exceeds artifact seq {}",
-                prompt.len(),
-                max_new,
-                self.seq
-            );
-        }
-        let mut buf = vec![0i32; self.seq];
-        buf[..prompt.len()].copy_from_slice(prompt);
-        let mut stats = GenStats::default();
+        let mut session = self.start(prompt, max_new)?;
+        while self.step(&mut session).is_some() {}
+        let DecodeSession { generated, stats, .. } = session;
+        Ok((generated, stats))
+    }
+}
 
-        // prefill with the MoBA graph: logits for the whole prompt
-        let t0 = std::time::Instant::now();
-        let tokens = IntTensor::from_vec(&[1, self.seq], buf.clone())?;
-        let logits = self
-            .engine
-            .logits(&self.prefill_artifact, &self.params, &tokens)?;
-        stats.prefill_secs = t0.elapsed().as_secs_f64();
-        let mut next = self.argmax_at(&logits, prompt.len() - 1);
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::model::ToyModel;
 
-        let mut out = Vec::with_capacity(max_new);
-        let mut cursor = prompt.len();
-        for _ in 0..max_new {
-            out.push(next);
-            if cursor >= self.seq {
-                break;
-            }
-            buf[cursor] = next;
-            cursor += 1;
-            if out.len() == max_new {
-                break;
-            }
-            // decode step with the full-attention graph
-            let t1 = std::time::Instant::now();
-            let tokens = IntTensor::from_vec(&[1, self.seq], buf.clone())?;
-            let logits = self
-                .engine
-                .logits(&self.decode_artifact, &self.params, &tokens)?;
-            stats.decode_secs += t1.elapsed().as_secs_f64();
-            stats.decode_steps += 1;
-            next = self.argmax_at(&logits, cursor - 1);
-        }
-        Ok((out, stats))
+    fn engine(backend: BackendKind) -> ServeEngine<ToyModel> {
+        ServeEngine::new(
+            ToyModel::new(48, 2, 8, 11),
+            ServeCfg { block_size: 16, topk: 2, max_seq: 256, backend },
+        )
     }
 
-    pub fn engine(&self) -> &Engine {
-        self.engine
+    #[test]
+    fn generates_requested_tokens() {
+        let e = engine(BackendKind::CachedSparse);
+        let prompt: Vec<i32> = (0..40).map(|i| i % 48).collect();
+        let (out, stats) = e.generate(&prompt, 6).unwrap();
+        assert_eq!(out.len(), 6);
+        assert_eq!(stats.decode_steps, 5); // last token needs no successor
+        assert!(stats.prefill_secs > 0.0);
     }
 
-    pub fn params(&self) -> &[Tensor] {
-        &self.params
+    #[test]
+    fn cached_decode_matches_recompute_decode() {
+        // the serving-level restatement of the kernel parity: same tokens
+        // out of the cached backend and the recompute baselines
+        let prompt: Vec<i32> = (0..50).map(|i| (i * 7) % 48).collect();
+        let reference = engine(BackendKind::RecomputeFull).generate(&prompt, 8).unwrap().0;
+        let cached = engine(BackendKind::CachedFull).generate(&prompt, 8).unwrap().0;
+        assert_eq!(cached, reference);
+        let sparse_ref = engine(BackendKind::RecomputeMoba).generate(&prompt, 8).unwrap().0;
+        let sparse_cached = engine(BackendKind::CachedSparse).generate(&prompt, 8).unwrap().0;
+        assert_eq!(sparse_cached, sparse_ref);
+    }
+
+    #[test]
+    fn stepwise_equals_generate() {
+        let e = engine(BackendKind::CachedSparse);
+        let prompt: Vec<i32> = (0..33).map(|i| i % 48).collect();
+        let (out, _) = e.generate(&prompt, 5).unwrap();
+        let mut s = e.start(&prompt, 5).unwrap();
+        let mut stepped = Vec::new();
+        while let Some(tok) = e.step(&mut s) {
+            stepped.push(tok);
+        }
+        assert_eq!(stepped, out);
+        assert!(s.finished());
+        assert_eq!(s.output(), out.as_slice());
+        // context = prompt + generated minus the final (never-appended) token
+        assert_eq!(s.context_len(), prompt.len() + 4);
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        let e = engine(BackendKind::CachedSparse);
+        assert!(e.start(&[], 4).is_err());
+        let long: Vec<i32> = vec![1; 300];
+        assert!(e.start(&long, 4).is_err());
+    }
+
+    #[test]
+    fn zero_budget_session_is_finished_immediately() {
+        let e = engine(BackendKind::CachedSparse);
+        let mut s = e.start(&[1, 2, 3], 0).unwrap();
+        assert!(s.finished());
+        assert_eq!(e.step(&mut s), None);
+        assert!(s.output().is_empty());
     }
 }

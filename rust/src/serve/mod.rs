@@ -1,13 +1,36 @@
-//! Serving path: MoBA-prefill / full-attention-decode, the paper's
-//! deployment mode (§3.3: "MoBA is used for prefill only, while we
-//! switch to full attention during generation").
+//! Serving stack: prefill-once / incremental-decode sessions over the
+//! pluggable attention backends, behind a continuous-batching scheduler.
 //!
-//! - `engine`: generation over logits artifacts (prefill scoring with the
-//!   MoBA graph, per-token decode with the full-attention graph);
-//! - `batcher`: request queue + batch former with latency accounting.
+//! - `model`: the [`TokenModel`] contract (per-token q/k/v + logits) and
+//!   the deterministic `ToyModel` CPU-testbed implementation;
+//! - `engine`: [`ServeEngine`] + per-request [`DecodeSession`] — prompt
+//!   ingested once through `AttentionBackend::prefill`, then O(k·B)
+//!   cached decode steps (paper §3.3's deployment modes, selectable via
+//!   `BackendKind`);
+//! - `batcher`: timestamped admission queue (batch + continuous modes)
+//!   with queue/prefill/decode latency accounting;
+//! - `scheduler`: [`ContinuousScheduler`] — iteration-level scheduling:
+//!   admit into the in-flight decode batch, step every session one token,
+//!   retire finished requests;
+//! - `demo`: the shared arrival-stream demo driver behind `repro serve`
+//!   and `examples/serve_continuous.rs`;
+//! - `artifact` (feature `xla`): the AOT-graph generation path through
+//!   PJRT (MoBA-prefill / full-decode logits artifacts).
 
 pub mod batcher;
+pub mod demo;
 pub mod engine;
+pub mod model;
+pub mod scheduler;
+
+#[cfg(feature = "xla")]
+pub mod artifact;
 
 pub use batcher::{Batcher, BatcherCfg, Request, RequestResult};
-pub use engine::{GenStats, ServeEngine};
+pub use demo::{run_demo, DemoCfg};
+pub use engine::{DecodeSession, GenStats, ServeCfg, ServeEngine};
+pub use model::{TokenModel, ToyModel};
+pub use scheduler::{ContinuousScheduler, SchedStats, SchedulerCfg};
+
+#[cfg(feature = "xla")]
+pub use artifact::ArtifactServeEngine;

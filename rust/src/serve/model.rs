@@ -1,0 +1,149 @@
+//! Token-level model abstraction for the serving engine.
+//!
+//! The serving stack needs exactly two things from a model: per-token
+//! q/k/v projections and a map from an attention output back to vocab
+//! logits. [`TokenModel`] captures that contract so the engine, scheduler
+//! and benches are independent of where the projections come from.
+//!
+//! [`ToyModel`] is the CPU-testbed implementation: deterministic seeded
+//! embedding tables (one per role) plus an additive sinusoidal position
+//! signal, with logits by value-embedding similarity. It is *not* a
+//! trained transformer — it exists so the cache/backend/scheduler
+//! machinery runs end-to-end, deterministically, with real attention
+//! arithmetic and no AOT artifacts. The artifact-backed path (real
+//! trained models through PJRT) lives in `serve::artifact` behind the
+//! `xla` feature.
+
+use crate::util::rng::Rng;
+
+/// A model the serving engine can decode with.
+pub trait TokenModel {
+    fn heads(&self) -> usize;
+    fn head_dim(&self) -> usize;
+    fn vocab(&self) -> usize;
+
+    /// Projections for `token` at absolute position `pos`: (q, k, v) rows,
+    /// each `[heads * head_dim]`.
+    fn qkv(&self, token: i32, pos: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>);
+
+    /// Vocab logits from one attention output row `[heads * head_dim]`.
+    fn logits(&self, attn_row: &[f32]) -> Vec<f32>;
+}
+
+/// Deterministic stand-in model: seeded per-role embedding tables.
+pub struct ToyModel {
+    heads: usize,
+    head_dim: usize,
+    vocab: usize,
+    /// `[vocab, heads * head_dim]` row-major, one table per role
+    eq: Vec<f32>,
+    ek: Vec<f32>,
+    ev: Vec<f32>,
+}
+
+impl ToyModel {
+    pub fn new(vocab: usize, heads: usize, head_dim: usize, seed: u64) -> ToyModel {
+        assert!(vocab > 0 && heads > 0 && head_dim > 0);
+        let w = heads * head_dim;
+        let mut root = Rng::new(seed);
+        let mut table = |tag: u64| -> Vec<f32> {
+            let mut rng = root.split(tag);
+            (0..vocab * w).map(|_| rng.normal_f32(1.0)).collect()
+        };
+        ToyModel {
+            heads,
+            head_dim,
+            vocab,
+            eq: table(1),
+            ek: table(2),
+            ev: table(3),
+        }
+    }
+
+    fn row<'a>(table: &'a [f32], tok: usize, w: usize) -> &'a [f32] {
+        &table[tok * w..(tok + 1) * w]
+    }
+}
+
+impl TokenModel for ToyModel {
+    fn heads(&self) -> usize {
+        self.heads
+    }
+
+    fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn qkv(&self, token: i32, pos: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let w = self.heads * self.head_dim;
+        let tok = (token.max(0) as usize) % self.vocab;
+        let mut q = Self::row(&self.eq, tok, w).to_vec();
+        let mut k = Self::row(&self.ek, tok, w).to_vec();
+        let v = Self::row(&self.ev, tok, w).to_vec();
+        // additive sinusoidal position signal (queries and keys only)
+        for i in 0..w {
+            let phase = pos as f32 / (1.0 + i as f32);
+            q[i] += 0.25 * phase.sin();
+            k[i] += 0.25 * phase.cos();
+        }
+        (q, k, v)
+    }
+
+    fn logits(&self, attn_row: &[f32]) -> Vec<f32> {
+        let w = self.heads * self.head_dim;
+        debug_assert_eq!(attn_row.len(), w);
+        (0..self.vocab)
+            .map(|tok| {
+                let e = Self::row(&self.ev, tok, w);
+                let mut s = 0.0f32;
+                for i in 0..w {
+                    s += attn_row[i] * e[i];
+                }
+                s
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = ToyModel::new(32, 2, 8, 7);
+        let b = ToyModel::new(32, 2, 8, 7);
+        assert_eq!(a.qkv(5, 3), b.qkv(5, 3));
+        let c = ToyModel::new(32, 2, 8, 8);
+        assert_ne!(a.qkv(5, 3).0, c.qkv(5, 3).0);
+    }
+
+    #[test]
+    fn position_moves_q_and_k_but_not_v() {
+        let m = ToyModel::new(16, 1, 4, 1);
+        let (q0, k0, v0) = m.qkv(3, 0);
+        let (q9, k9, v9) = m.qkv(3, 9);
+        assert_ne!(q0, q9);
+        assert_ne!(k0, k9);
+        assert_eq!(v0, v9);
+    }
+
+    #[test]
+    fn logits_have_vocab_width() {
+        let m = ToyModel::new(24, 2, 4, 1);
+        let attn = vec![0.5; 8];
+        assert_eq!(m.logits(&attn).len(), 24);
+    }
+
+    #[test]
+    fn token_ids_wrap_into_vocab() {
+        let m = ToyModel::new(8, 1, 4, 1);
+        assert_eq!(m.qkv(2, 0), m.qkv(10, 0));
+        // negative ids clamp to 0
+        assert_eq!(m.qkv(-3, 0), m.qkv(0, 0));
+    }
+}

@@ -15,10 +15,10 @@ use crate::tensor::Tensor;
 
 use super::gate::{moba_gate, Gate};
 
-const NEG_INF: f32 = -1e30;
+pub(crate) const NEG_INF: f32 = -1e30;
 
 #[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
     // simple 4-lane unroll; autovectorizes well at opt-level 3
     let mut acc = [0.0f32; 4];
     let chunks = a.len() / 4;
@@ -43,21 +43,24 @@ fn axpy(acc: &mut [f32], alpha: f32, x: &[f32]) {
     }
 }
 
-/// Streaming softmax state for one query row.
-struct OnlineRow {
+/// Streaming softmax state for one query row. Shared with the incremental
+/// decode backends (`sparse::backend`), which must fold scores in the same
+/// order with the same arithmetic to stay bit-identical with these batch
+/// kernels.
+pub(crate) struct OnlineRow {
     m: f32,
     l: f32,
     acc: Vec<f32>,
 }
 
 impl OnlineRow {
-    fn new(d: usize) -> Self {
+    pub(crate) fn new(d: usize) -> Self {
         OnlineRow { m: NEG_INF, l: 0.0, acc: vec![0.0; d] }
     }
 
     /// Fold in one (score, value-row) pair.
     #[inline]
-    fn push(&mut self, s: f32, v: &[f32]) {
+    pub(crate) fn push(&mut self, s: f32, v: &[f32]) {
         if s > self.m {
             let alpha = (self.m - s).exp();
             self.l *= alpha;
@@ -71,7 +74,7 @@ impl OnlineRow {
         axpy(&mut self.acc, p, v);
     }
 
-    fn finish(self, out: &mut [f32]) {
+    pub(crate) fn finish(self, out: &mut [f32]) {
         let inv = 1.0 / self.l;
         for (o, a) in out.iter_mut().zip(self.acc) {
             *o = a * inv;
@@ -135,6 +138,9 @@ pub fn moba_attention_gated(
 }
 
 /// MoBA attention end-to-end: gate + block-sparse streaming attention.
+/// N need not be divisible by the block size (the trailing partial block
+/// is the current block of its own queries), which is what the
+/// append-one-token incremental decode parity tests exercise.
 pub fn moba_attention(
     q: &Tensor,
     k: &Tensor,
@@ -240,6 +246,19 @@ mod tests {
         for &x in &a.data {
             assert!((x - 1.0).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn moba_ragged_length_matches_naive() {
+        // N=52 with block 16: 3 full blocks + a 4-token tail block
+        let q = rand_t(&[52, 2, 8], 18);
+        let k = rand_t(&[52, 2, 8], 19);
+        let v = rand_t(&[52, 2, 8], 20);
+        let bs = 16;
+        let gate = moba_gate(&q, &k, bs, 2);
+        let a = moba_attention_gated(&q, &k, &v, &gate, bs);
+        let b = naive_masked(&q, &k, &v, |h, t, j| j <= t && gate.get(h, t, j / bs));
+        assert!(a.max_abs_diff(&b) < 1e-5, "diff={}", a.max_abs_diff(&b));
     }
 
     #[test]

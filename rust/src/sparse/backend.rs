@@ -1,0 +1,593 @@
+//! Pluggable attention backends: every layer of the crate that invokes
+//! attention (serving engine, router, experiments, benches) goes through
+//! the [`AttentionBackend`] trait instead of hard-wired kernel calls.
+//!
+//! Three implementations:
+//!
+//! - [`FullAttention`] — causal full attention; decode *recomputes* the
+//!   whole sequence per token (O(N²·D) per step), the honest model of a
+//!   serving path with no KV cache.
+//! - [`MobaAttention`] — the existing gated block-sparse kernel; decode
+//!   also recomputes (gate + sparse attention over the whole prefix).
+//! - [`CachedDecodeBackend`] — prefill once, then O(k·B·D) incremental
+//!   decode against [`KvCache`] + [`BlockPoolCache`]: each step gates
+//!   against the cached block representatives (O(N/B·D)) and attends only
+//!   the top-k selected blocks. Its outputs are bit-identical to the
+//!   recompute backends (same arithmetic in the same order), which the
+//!   parity tests in `tests/property_invariants.rs` and
+//!   `tests/golden_parity.rs` pin down.
+//!
+//! The trait exposes both the batch path (`forward`, prefill-shaped) and
+//! the incremental path (`prefill` + `decode`), plus the gate for
+//! dispatch-plan construction (`coordinator::RoutingPlan::from_backend`).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+use super::attention::{dot, full_attention, moba_attention, OnlineRow};
+use super::gate::{moba_gate, Gate};
+use super::kv_cache::{BlockPoolCache, KvCache};
+
+/// Forced-selection / exclusion magnitude — must match `gate::affinity_scores`.
+const BIG: f32 = 1e30;
+
+/// A swappable attention implementation with an incremental decode state.
+pub trait AttentionBackend {
+    /// Stable identifier for logs, benches and CLI selection.
+    fn name(&self) -> &'static str;
+
+    /// Stateless batch attention over a full sequence: q, k, v `[N, H, D]`
+    /// → out `[N, H, D]`. Does not touch the incremental state.
+    fn forward(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor;
+
+    /// The block gate this backend would apply to a batch input, if it is
+    /// a gated (sparse) backend; `None` for dense backends.
+    fn gate(&self, _q: &Tensor, _k: &Tensor) -> Option<Gate> {
+        None
+    }
+
+    /// Drop all incremental state.
+    fn reset(&mut self);
+
+    /// Ingest a prompt into the incremental state (must be empty) and
+    /// return per-position outputs `[N, H, D]`.
+    fn prefill(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor;
+
+    /// Append one token (q/k/v rows, each `[H * D]`) and return its
+    /// attention output row `[H * D]`.
+    fn decode(&mut self, q_row: &[f32], k_row: &[f32], v_row: &[f32]) -> Vec<f32>;
+
+    /// Tokens currently held in the incremental state.
+    fn seq_len(&self) -> usize;
+}
+
+fn last_row(out: &Tensor) -> Vec<f32> {
+    let (n, h, d) = (out.shape[0], out.shape[1], out.shape[2]);
+    out.data[(n - 1) * h * d..n * h * d].to_vec()
+}
+
+// ---------------------------------------------------------------------------
+// recompute backends: keep the raw q/k/v streams, re-run the batch kernel
+// ---------------------------------------------------------------------------
+
+/// Causal full attention; decode recomputes the entire prefix each step.
+pub struct FullAttention {
+    heads: usize,
+    head_dim: usize,
+    q_hist: Vec<f32>,
+    cache: KvCache,
+}
+
+impl FullAttention {
+    pub fn new(heads: usize, head_dim: usize) -> FullAttention {
+        FullAttention { heads, head_dim, q_hist: Vec::new(), cache: KvCache::new(heads, head_dim) }
+    }
+
+    fn history_tensors(&self) -> (Tensor, Tensor, Tensor) {
+        let n = self.cache.len();
+        let q = Tensor::from_vec(&[n, self.heads, self.head_dim], self.q_hist.clone())
+            .expect("query history layout is always consistent");
+        (q, self.cache.k_tensor(), self.cache.v_tensor())
+    }
+}
+
+impl AttentionBackend for FullAttention {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn forward(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        full_attention(q, k, v)
+    }
+
+    fn reset(&mut self) {
+        self.q_hist.clear();
+        self.cache.clear();
+    }
+
+    fn prefill(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        debug_assert!(self.cache.is_empty(), "prefill on non-empty state");
+        self.q_hist.extend_from_slice(&q.data);
+        self.cache.append_tensors(k, v);
+        full_attention(q, k, v)
+    }
+
+    fn decode(&mut self, q_row: &[f32], k_row: &[f32], v_row: &[f32]) -> Vec<f32> {
+        self.q_hist.extend_from_slice(q_row);
+        self.cache.append(k_row, v_row);
+        let (q, k, v) = self.history_tensors();
+        last_row(&full_attention(&q, &k, &v))
+    }
+
+    fn seq_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// MoBA gate + block-sparse attention; decode recomputes gate and
+/// attention over the entire prefix each step.
+pub struct MobaAttention {
+    heads: usize,
+    head_dim: usize,
+    block_size: usize,
+    topk: usize,
+    q_hist: Vec<f32>,
+    cache: KvCache,
+}
+
+impl MobaAttention {
+    pub fn new(heads: usize, head_dim: usize, block_size: usize, topk: usize) -> MobaAttention {
+        assert!(block_size > 0 && topk > 0);
+        MobaAttention {
+            heads,
+            head_dim,
+            block_size,
+            topk,
+            q_hist: Vec::new(),
+            cache: KvCache::new(heads, head_dim),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn topk(&self) -> usize {
+        self.topk
+    }
+}
+
+impl AttentionBackend for MobaAttention {
+    fn name(&self) -> &'static str {
+        "moba"
+    }
+
+    fn forward(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        moba_attention(q, k, v, self.block_size, self.topk)
+    }
+
+    fn gate(&self, q: &Tensor, k: &Tensor) -> Option<Gate> {
+        Some(moba_gate(q, k, self.block_size, self.topk))
+    }
+
+    fn reset(&mut self) {
+        self.q_hist.clear();
+        self.cache.clear();
+    }
+
+    fn prefill(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        debug_assert!(self.cache.is_empty(), "prefill on non-empty state");
+        self.q_hist.extend_from_slice(&q.data);
+        self.cache.append_tensors(k, v);
+        moba_attention(q, k, v, self.block_size, self.topk)
+    }
+
+    fn decode(&mut self, q_row: &[f32], k_row: &[f32], v_row: &[f32]) -> Vec<f32> {
+        self.q_hist.extend_from_slice(q_row);
+        self.cache.append(k_row, v_row);
+        let n = self.cache.len();
+        let q = Tensor::from_vec(&[n, self.heads, self.head_dim], self.q_hist.clone())
+            .expect("query history layout is always consistent");
+        let out = moba_attention(
+            &q,
+            &self.cache.k_tensor(),
+            &self.cache.v_tensor(),
+            self.block_size,
+            self.topk,
+        );
+        last_row(&out)
+    }
+
+    fn seq_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cached incremental decode
+// ---------------------------------------------------------------------------
+
+/// What a cached decode step computes per token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodePolicy {
+    /// Dense row over the whole cache — O(N·D) per token. Matches
+    /// `full_attention` recompute bit-for-bit (the paper's §3.3
+    /// full-attention-decode deployment mode, now without the recompute).
+    Full,
+    /// Gate against cached block representatives, attend top-k blocks —
+    /// O(N/B·D + k·B·D) per token. Matches `moba_attention` recompute
+    /// bit-for-bit.
+    Sparse,
+}
+
+/// Prefill-once / incremental-decode backend over `KvCache` +
+/// `BlockPoolCache`. Stores no query history: decode cost is independent
+/// of how many tokens were generated before (given a fixed context size).
+pub struct CachedDecodeBackend {
+    policy: DecodePolicy,
+    block_size: usize,
+    topk: usize,
+    cache: KvCache,
+    pool: BlockPoolCache,
+}
+
+impl CachedDecodeBackend {
+    pub fn new(
+        heads: usize,
+        head_dim: usize,
+        block_size: usize,
+        topk: usize,
+        policy: DecodePolicy,
+    ) -> CachedDecodeBackend {
+        assert!(block_size > 0 && topk > 0);
+        CachedDecodeBackend {
+            policy,
+            block_size,
+            topk,
+            cache: KvCache::new(heads, head_dim),
+            pool: BlockPoolCache::new(block_size, heads, head_dim),
+        }
+    }
+
+    pub fn policy(&self) -> DecodePolicy {
+        self.policy
+    }
+
+    /// Resident bytes of the cached decode state (KV payload; the block
+    /// pool adds `1/block_size` of that again).
+    pub fn payload_bytes(&self) -> usize {
+        self.cache.payload_bytes()
+    }
+
+    /// Dense decode row: stream every cached position, same arithmetic and
+    /// order as `full_attention`'s inner loop for the last query row.
+    fn decode_dense(&self, q_row: &[f32], out: &mut [f32]) {
+        let (h, d) = (self.cache.heads(), self.cache.head_dim());
+        let t = self.cache.len() - 1;
+        let scale = 1.0 / (d as f32).sqrt();
+        for hh in 0..h {
+            let qh = &q_row[hh * d..(hh + 1) * d];
+            let mut row = OnlineRow::new(d);
+            for j in 0..=t {
+                let s = dot(qh, self.cache.k_at(j, hh)) * scale;
+                row.push(s, self.cache.v_at(j, hh));
+            }
+            row.finish(&mut out[hh * d..(hh + 1) * d]);
+        }
+    }
+
+    /// Sparse decode row: biased affinity against cached block means
+    /// (plain sequential dot, exactly `gate::affinity_scores`), the same
+    /// `select_nth_unstable_by` threshold as `gate::moba_gate`, then the
+    /// block-sparse streaming loop of `moba_attention_gated`.
+    fn decode_sparse(&self, q_row: &[f32], out: &mut [f32]) {
+        let (h, d) = (self.cache.heads(), self.cache.head_dim());
+        let t = self.cache.len() - 1;
+        let scale = 1.0 / (d as f32).sqrt();
+        let nb = self.pool.n_blocks();
+        let cur = t / self.block_size;
+        let kk = self.topk.min(nb);
+        let mut mean = vec![0.0f32; d];
+        let mut scores = vec![0.0f32; nb];
+        let mut scratch = vec![0.0f32; nb];
+        for hh in 0..h {
+            let qh = &q_row[hh * d..(hh + 1) * d];
+            for (i, score) in scores.iter_mut().enumerate() {
+                *score = if i == cur {
+                    BIG - i as f32 * 1e-6
+                } else if i > cur {
+                    -BIG - i as f32 * 1e-6
+                } else {
+                    self.pool.mean_into(i, hh, &mut mean);
+                    let mut aff = 0.0f32;
+                    for dd in 0..d {
+                        aff += qh[dd] * mean[dd];
+                    }
+                    aff - i as f32 * 1e-6
+                };
+            }
+            scratch.copy_from_slice(&scores);
+            let (_, kth, _) = scratch.select_nth_unstable_by(kk - 1, |a, b| b.total_cmp(a));
+            let kth = *kth;
+            let mut row = OnlineRow::new(d);
+            for (b, &score) in scores.iter().enumerate() {
+                if score >= kth && b <= cur {
+                    let hi = ((b + 1) * self.block_size).min(t + 1);
+                    for j in b * self.block_size..hi {
+                        let s = dot(qh, self.cache.k_at(j, hh)) * scale;
+                        row.push(s, self.cache.v_at(j, hh));
+                    }
+                }
+            }
+            row.finish(&mut out[hh * d..(hh + 1) * d]);
+        }
+    }
+}
+
+impl AttentionBackend for CachedDecodeBackend {
+    fn name(&self) -> &'static str {
+        match self.policy {
+            DecodePolicy::Full => "cached-full",
+            DecodePolicy::Sparse => "cached-sparse",
+        }
+    }
+
+    fn forward(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        match self.policy {
+            DecodePolicy::Full => full_attention(q, k, v),
+            DecodePolicy::Sparse => moba_attention(q, k, v, self.block_size, self.topk),
+        }
+    }
+
+    fn gate(&self, q: &Tensor, k: &Tensor) -> Option<Gate> {
+        match self.policy {
+            DecodePolicy::Full => None,
+            DecodePolicy::Sparse => Some(moba_gate(q, k, self.block_size, self.topk)),
+        }
+    }
+
+    fn reset(&mut self) {
+        self.cache.clear();
+        self.pool.clear();
+    }
+
+    fn prefill(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        debug_assert!(self.cache.is_empty(), "prefill on non-empty state");
+        self.cache.append_tensors(k, v);
+        self.pool.append_tensor(k);
+        self.forward(q, k, v)
+    }
+
+    fn decode(&mut self, q_row: &[f32], k_row: &[f32], v_row: &[f32]) -> Vec<f32> {
+        self.cache.append(k_row, v_row);
+        self.pool.append(k_row);
+        let w = self.cache.row_width();
+        let mut out = vec![0.0f32; w];
+        match self.policy {
+            DecodePolicy::Full => self.decode_dense(q_row, &mut out),
+            DecodePolicy::Sparse => self.decode_sparse(q_row, &mut out),
+        }
+        out
+    }
+
+    fn seq_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// construction by name (CLI / config selection)
+// ---------------------------------------------------------------------------
+
+/// Named backend kinds, for CLI flags and serving configs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// `FullAttention` (recompute decode)
+    RecomputeFull,
+    /// `MobaAttention` (recompute decode)
+    RecomputeMoba,
+    /// `CachedDecodeBackend` with `DecodePolicy::Full`
+    CachedFull,
+    /// `CachedDecodeBackend` with `DecodePolicy::Sparse`
+    CachedSparse,
+}
+
+impl BackendKind {
+    pub fn parse(name: &str) -> Result<BackendKind> {
+        Ok(match name {
+            "full" => BackendKind::RecomputeFull,
+            "moba" => BackendKind::RecomputeMoba,
+            "cached-full" => BackendKind::CachedFull,
+            "cached-sparse" | "cached" => BackendKind::CachedSparse,
+            other => bail!(
+                "unknown backend '{other}' (expected full | moba | cached-full | cached-sparse)"
+            ),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::RecomputeFull => "full",
+            BackendKind::RecomputeMoba => "moba",
+            BackendKind::CachedFull => "cached-full",
+            BackendKind::CachedSparse => "cached-sparse",
+        }
+    }
+}
+
+/// Build a boxed backend of the given kind and geometry.
+pub fn build_backend(
+    kind: BackendKind,
+    heads: usize,
+    head_dim: usize,
+    block_size: usize,
+    topk: usize,
+) -> Box<dyn AttentionBackend> {
+    match kind {
+        BackendKind::RecomputeFull => Box::new(FullAttention::new(heads, head_dim)),
+        BackendKind::RecomputeMoba => {
+            Box::new(MobaAttention::new(heads, head_dim, block_size, topk))
+        }
+        BackendKind::CachedFull => Box::new(CachedDecodeBackend::new(
+            heads,
+            head_dim,
+            block_size,
+            topk,
+            DecodePolicy::Full,
+        )),
+        BackendKind::CachedSparse => Box::new(CachedDecodeBackend::new(
+            heads,
+            head_dim,
+            block_size,
+            topk,
+            DecodePolicy::Sparse,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_t(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+    }
+
+    fn row(t: &Tensor, i: usize) -> &[f32] {
+        let w = t.shape[1] * t.shape[2];
+        &t.data[i * w..(i + 1) * w]
+    }
+
+    fn sub(t: &Tensor, n: usize) -> Tensor {
+        let w = t.shape[1] * t.shape[2];
+        Tensor::from_vec(&[n, t.shape[1], t.shape[2]], t.data[..n * w].to_vec()).unwrap()
+    }
+
+    #[test]
+    fn forward_matches_free_kernels() {
+        let (q, k, v) = (rand_t(&[48, 2, 8], 1), rand_t(&[48, 2, 8], 2), rand_t(&[48, 2, 8], 3));
+        let full = FullAttention::new(2, 8);
+        assert_eq!(full.forward(&q, &k, &v).data, full_attention(&q, &k, &v).data);
+        let moba = MobaAttention::new(2, 8, 16, 2);
+        assert_eq!(
+            moba.forward(&q, &k, &v).data,
+            moba_attention(&q, &k, &v, 16, 2).data
+        );
+        let cached = CachedDecodeBackend::new(2, 8, 16, 2, DecodePolicy::Sparse);
+        assert_eq!(
+            cached.forward(&q, &k, &v).data,
+            moba_attention(&q, &k, &v, 16, 2).data
+        );
+    }
+
+    #[test]
+    fn cached_full_decode_bitwise_matches_batch_rows() {
+        let n = 41; // deliberately ragged
+        let (q, k, v) = (rand_t(&[n, 2, 8], 4), rand_t(&[n, 2, 8], 5), rand_t(&[n, 2, 8], 6));
+        let mut cached = CachedDecodeBackend::new(2, 8, 16, 2, DecodePolicy::Full);
+        for t in 0..n {
+            let got = cached.decode(row(&q, t), row(&k, t), row(&v, t));
+            let prefix = full_attention(&sub(&q, t + 1), &sub(&k, t + 1), &sub(&v, t + 1));
+            assert_eq!(got.as_slice(), row(&prefix, t), "t={t}");
+        }
+        assert_eq!(cached.seq_len(), n);
+    }
+
+    #[test]
+    fn cached_sparse_decode_bitwise_matches_batch_rows() {
+        let n = 53;
+        let (bs, topk) = (16, 2);
+        let (q, k, v) = (rand_t(&[n, 2, 8], 7), rand_t(&[n, 2, 8], 8), rand_t(&[n, 2, 8], 9));
+        let mut cached = CachedDecodeBackend::new(2, 8, bs, topk, DecodePolicy::Sparse);
+        for t in 0..n {
+            let got = cached.decode(row(&q, t), row(&k, t), row(&v, t));
+            let prefix =
+                moba_attention(&sub(&q, t + 1), &sub(&k, t + 1), &sub(&v, t + 1), bs, topk);
+            assert_eq!(got.as_slice(), row(&prefix, t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn recompute_backends_match_batch_rows() {
+        let n = 24;
+        let (q, k, v) = (rand_t(&[n, 1, 8], 10), rand_t(&[n, 1, 8], 11), rand_t(&[n, 1, 8], 12));
+        let mut full = FullAttention::new(1, 8);
+        let mut moba = MobaAttention::new(1, 8, 8, 2);
+        for t in 0..n {
+            let gf = full.decode(row(&q, t), row(&k, t), row(&v, t));
+            let gm = moba.decode(row(&q, t), row(&k, t), row(&v, t));
+            let pf = full_attention(&sub(&q, t + 1), &sub(&k, t + 1), &sub(&v, t + 1));
+            let pm = moba_attention(&sub(&q, t + 1), &sub(&k, t + 1), &sub(&v, t + 1), 8, 2);
+            assert_eq!(gf.as_slice(), row(&pf, t), "full t={t}");
+            assert_eq!(gm.as_slice(), row(&pm, t), "moba t={t}");
+        }
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_all_decode() {
+        let n = 40;
+        let split = 25; // ragged prefill boundary
+        let (q, k, v) = (rand_t(&[n, 2, 8], 13), rand_t(&[n, 2, 8], 14), rand_t(&[n, 2, 8], 15));
+        let mut a = CachedDecodeBackend::new(2, 8, 16, 2, DecodePolicy::Sparse);
+        let out = a.prefill(&sub(&q, split), &sub(&k, split), &sub(&v, split));
+        assert_eq!(out.shape, vec![split, 2, 8]);
+        let mut b = CachedDecodeBackend::new(2, 8, 16, 2, DecodePolicy::Sparse);
+        for t in 0..split {
+            b.decode(row(&q, t), row(&k, t), row(&v, t));
+        }
+        for t in split..n {
+            let ra = a.decode(row(&q, t), row(&k, t), row(&v, t));
+            let rb = b.decode(row(&q, t), row(&k, t), row(&v, t));
+            assert_eq!(ra, rb, "t={t}");
+        }
+    }
+
+    #[test]
+    fn gate_exposed_only_by_sparse_backends() {
+        let (q, k) = (rand_t(&[32, 1, 8], 16), rand_t(&[32, 1, 8], 17));
+        assert!(FullAttention::new(1, 8).gate(&q, &k).is_none());
+        let g = MobaAttention::new(1, 8, 16, 2).gate(&q, &k).unwrap();
+        assert_eq!(g.n_blocks, 2);
+        assert!(CachedDecodeBackend::new(1, 8, 16, 2, DecodePolicy::Full)
+            .gate(&q, &k)
+            .is_none());
+        assert!(CachedDecodeBackend::new(1, 8, 16, 2, DecodePolicy::Sparse)
+            .gate(&q, &k)
+            .is_some());
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let (q, k, v) = (rand_t(&[8, 1, 4], 18), rand_t(&[8, 1, 4], 19), rand_t(&[8, 1, 4], 20));
+        for kind in [
+            BackendKind::RecomputeFull,
+            BackendKind::RecomputeMoba,
+            BackendKind::CachedFull,
+            BackendKind::CachedSparse,
+        ] {
+            let mut b = build_backend(kind, 1, 4, 4, 2);
+            b.prefill(&q, &k, &v);
+            assert_eq!(b.seq_len(), 8, "{}", b.name());
+            b.reset();
+            assert_eq!(b.seq_len(), 0, "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn backend_kind_parse_roundtrip() {
+        for kind in [
+            BackendKind::RecomputeFull,
+            BackendKind::RecomputeMoba,
+            BackendKind::CachedFull,
+            BackendKind::CachedSparse,
+        ] {
+            assert_eq!(BackendKind::parse(kind.label()).unwrap(), kind);
+        }
+        assert_eq!(BackendKind::parse("cached").unwrap(), BackendKind::CachedSparse);
+        assert!(BackendKind::parse("nope").is_err());
+    }
+}

@@ -35,15 +35,23 @@ impl Gate {
 }
 
 /// Mean-pool keys into per-block representatives.
-/// k: [N, H, D] -> pooled [n_blocks, H, D].
+/// k: [N, H, D] -> pooled [ceil(N/block), H, D].
+///
+/// N need not be divisible by the block size: the trailing partial block
+/// (the in-progress *current* block during incremental decode) is averaged
+/// over its actual length. For divisible N this is bit-identical to the
+/// historical divisible-only version, which keeps the Python golden parity
+/// intact; the `BlockPoolCache` running-sum update mirrors the exact
+/// accumulation order here so cached and recomputed pooling agree
+/// bit-for-bit.
 pub fn mean_pool_blocks(k: &Tensor, block_size: usize) -> Tensor {
     let (n, h, d) = (k.shape[0], k.shape[1], k.shape[2]);
-    assert_eq!(n % block_size, 0, "N={n} not divisible by block {block_size}");
-    let nb = n / block_size;
+    assert!(block_size > 0, "block_size must be positive");
+    let nb = (n + block_size - 1) / block_size;
     let mut out = Tensor::zeros(&[nb, h, d]);
-    let inv = 1.0 / block_size as f32;
     for b in 0..nb {
-        for t in b * block_size..(b + 1) * block_size {
+        let hi = ((b + 1) * block_size).min(n);
+        for t in b * block_size..hi {
             for hh in 0..h {
                 let src = (t * h + hh) * d;
                 let dst = (b * h + hh) * d;
@@ -52,9 +60,13 @@ pub fn mean_pool_blocks(k: &Tensor, block_size: usize) -> Tensor {
                 }
             }
         }
-    }
-    for x in out.data.iter_mut() {
-        *x *= inv;
+        let inv = 1.0 / (hi - b * block_size) as f32;
+        for hh in 0..h {
+            let dst = (b * h + hh) * d;
+            for x in out.data[dst..dst + d].iter_mut() {
+                *x *= inv;
+            }
+        }
     }
     out
 }
@@ -93,23 +105,30 @@ pub fn affinity_scores(q: &Tensor, pooled: &Tensor, block_size: usize) -> Tensor
 }
 
 /// The MoBA gate: top-k over the biased scores, future blocks excluded.
+///
+/// The k-th-largest threshold uses `select_nth_unstable_by` with
+/// `f32::total_cmp` — O(nb) expected per row instead of the previous
+/// O(nb log nb) full sort, and total over NaN instead of panicking.
+/// Selections are unchanged: the k-th largest value is the same threshold
+/// either way (`rust/benches/router_bench.rs` asserts the counts).
 pub fn moba_gate(q: &Tensor, k: &Tensor, block_size: usize, topk: usize) -> Gate {
     let (n, h, _) = (q.shape[0], q.shape[1], q.shape[2]);
-    let nb = n / block_size;
+    let nb = (n + block_size - 1) / block_size;
     let pooled = mean_pool_blocks(k, block_size);
     let s = affinity_scores(q, &pooled, block_size);
     let kk = topk.min(nb);
     let mut bits = vec![false; h * n * nb];
     let mut row = vec![0.0f32; nb];
+    let mut scratch = vec![0.0f32; nb];
     for hh in 0..h {
         for t in 0..n {
             let cur = t / block_size;
             let off = (hh * n + t) * nb;
             row.copy_from_slice(&s.data[off..off + nb]);
-            // k-th largest by partial selection
-            let mut sorted = row.clone();
-            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
-            let kth = sorted[kk - 1];
+            scratch.copy_from_slice(&row);
+            let (_, kth, _) =
+                scratch.select_nth_unstable_by(kk - 1, |a, b| b.total_cmp(a));
+            let kth = *kth;
             for i in 0..nb {
                 bits[off + i] = row[i] >= kth && i <= cur;
             }
@@ -136,6 +155,32 @@ mod tests {
         let p = mean_pool_blocks(&k, 2);
         assert_eq!(p.shape, vec![2, 1, 1]);
         assert_eq!(p.data, vec![2.0, 7.0]);
+    }
+
+    #[test]
+    fn mean_pool_ragged_tail() {
+        // 5 tokens, block 2: tail block of one token pools to itself
+        let k = Tensor::from_vec(&[5, 1, 1], vec![1.0, 3.0, 5.0, 9.0, 4.0]).unwrap();
+        let p = mean_pool_blocks(&k, 2);
+        assert_eq!(p.shape, vec![3, 1, 1]);
+        assert_eq!(p.data, vec![2.0, 7.0, 4.0]);
+    }
+
+    #[test]
+    fn gate_handles_partial_current_block() {
+        // N not divisible by block: the in-progress tail block is the
+        // current block for its queries and must still be forced-selected.
+        let q = rand_t(&[37, 2, 8], 21);
+        let k = rand_t(&[37, 2, 8], 22);
+        let g = moba_gate(&q, &k, 16, 2);
+        assert_eq!(g.n_blocks, 3);
+        for h in 0..2 {
+            for t in 0..37 {
+                assert!(g.get(h, t, t / 16), "h={h} t={t}");
+                let avail = t / 16 + 1;
+                assert_eq!(g.selected(h, t).len(), 2usize.min(avail), "h={h} t={t}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Incremental KV + block-pool caches — the serving-side state behind
+//! `CachedDecodeBackend`.
+//!
+//! - [`KvCache`] holds appended K/V rows in the same `[N, H, D]` row-major
+//!   layout the batch kernels use, so a cached sequence can be handed back
+//!   to `full_attention` / `moba_attention` for parity checks at zero
+//!   translation cost.
+//! - [`BlockPoolCache`] maintains the per-block mean-pooled key
+//!   representatives of `gate::mean_pool_blocks` *incrementally*: one
+//!   running-sum update per appended token, no re-pooling. The
+//!   accumulation order matches `mean_pool_blocks` exactly (tokens in
+//!   order, then one multiply by `1/count`), so gating against cached
+//!   representatives is bit-identical to gating against recomputed ones.
+//!
+//! Together they turn a decode step from O(N²) full recompute into
+//! O(N/B · D) gating + O(k · B · D) attention.
+
+use crate::tensor::Tensor;
+
+/// Append-only K/V store for one sequence, `[len, H, D]` row-major.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    heads: usize,
+    head_dim: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(heads: usize, head_dim: usize) -> KvCache {
+        assert!(heads > 0 && head_dim > 0);
+        KvCache { heads, head_dim, k: Vec::new(), v: Vec::new(), len: 0 }
+    }
+
+    /// Tokens currently cached.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// Floats per token row (`H * D`).
+    pub fn row_width(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Append one token's K and V rows (each `[H * D]`).
+    pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        let w = self.row_width();
+        assert_eq!(k_row.len(), w, "k row width");
+        assert_eq!(v_row.len(), w, "v row width");
+        self.k.extend_from_slice(k_row);
+        self.v.extend_from_slice(v_row);
+        self.len += 1;
+    }
+
+    /// Append a whole `[N, H, D]` prefix (prefill path).
+    pub fn append_tensors(&mut self, k: &Tensor, v: &Tensor) {
+        assert_eq!(k.shape, v.shape, "k/v shape mismatch");
+        assert_eq!(k.rank(), 3, "expected [N, H, D]");
+        assert_eq!(k.shape[1], self.heads, "head count");
+        assert_eq!(k.shape[2], self.head_dim, "head dim");
+        self.k.extend_from_slice(&k.data);
+        self.v.extend_from_slice(&v.data);
+        self.len += k.shape[0];
+    }
+
+    /// Key slice `[D]` for (token, head).
+    #[inline]
+    pub fn k_at(&self, t: usize, h: usize) -> &[f32] {
+        let off = (t * self.heads + h) * self.head_dim;
+        &self.k[off..off + self.head_dim]
+    }
+
+    /// Value slice `[D]` for (token, head).
+    #[inline]
+    pub fn v_at(&self, t: usize, h: usize) -> &[f32] {
+        let off = (t * self.heads + h) * self.head_dim;
+        &self.v[off..off + self.head_dim]
+    }
+
+    /// Materialize the cached keys as a `[len, H, D]` tensor (recompute
+    /// baselines and parity tests).
+    pub fn k_tensor(&self) -> Tensor {
+        Tensor::from_vec(&[self.len, self.heads, self.head_dim], self.k.clone())
+            .expect("cache layout is always consistent")
+    }
+
+    /// Materialize the cached values as a `[len, H, D]` tensor.
+    pub fn v_tensor(&self) -> Tensor {
+        Tensor::from_vec(&[self.len, self.heads, self.head_dim], self.v.clone())
+            .expect("cache layout is always consistent")
+    }
+
+    pub fn clear(&mut self) {
+        self.k.clear();
+        self.v.clear();
+        self.len = 0;
+    }
+
+    /// Resident bytes of the cached K/V payload.
+    pub fn payload_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Incrementally maintained per-block mean-pooled key representatives
+/// (`[n_blocks, H, D]` running sums + per-block counts).
+#[derive(Clone, Debug)]
+pub struct BlockPoolCache {
+    block_size: usize,
+    heads: usize,
+    head_dim: usize,
+    /// running sums, `[n_blocks, H, D]` row-major, growing by whole blocks
+    sums: Vec<f32>,
+    /// tokens accumulated into each block (last entry may be partial)
+    counts: Vec<usize>,
+    len: usize,
+}
+
+impl BlockPoolCache {
+    pub fn new(block_size: usize, heads: usize, head_dim: usize) -> BlockPoolCache {
+        assert!(block_size > 0 && heads > 0 && head_dim > 0);
+        BlockPoolCache {
+            block_size,
+            heads,
+            head_dim,
+            sums: Vec::new(),
+            counts: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Tokens folded in so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Blocks currently represented (`ceil(len / block_size)`).
+    pub fn n_blocks(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Tokens accumulated into block `b`.
+    pub fn count(&self, b: usize) -> usize {
+        self.counts[b]
+    }
+
+    /// Fold one key row `[H * D]` into its block's running sum — O(H·D),
+    /// independent of sequence length; no re-pooling of earlier blocks.
+    pub fn append(&mut self, k_row: &[f32]) {
+        let w = self.heads * self.head_dim;
+        assert_eq!(k_row.len(), w, "k row width");
+        let b = self.len / self.block_size;
+        if b == self.counts.len() {
+            self.counts.push(0);
+            self.sums.extend(std::iter::repeat(0.0).take(w));
+        }
+        let off = b * w;
+        for (s, &x) in self.sums[off..off + w].iter_mut().zip(k_row) {
+            *s += x;
+        }
+        self.counts[b] += 1;
+        self.len += 1;
+    }
+
+    /// Append a whole `[N, H, D]` prefix (prefill path).
+    pub fn append_tensor(&mut self, k: &Tensor) {
+        assert_eq!(k.rank(), 3, "expected [N, H, D]");
+        assert_eq!(k.shape[1], self.heads, "head count");
+        assert_eq!(k.shape[2], self.head_dim, "head dim");
+        let w = self.heads * self.head_dim;
+        for t in 0..k.shape[0] {
+            self.append(&k.data[t * w..(t + 1) * w]);
+        }
+    }
+
+    /// Mean representative of block `b`, head `h`, written into `out`
+    /// (`[D]`). Bit-identical to `mean_pool_blocks` on the same prefix:
+    /// same accumulation order, one multiply by `1/count`.
+    pub fn mean_into(&self, b: usize, h: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.head_dim);
+        let inv = 1.0 / self.counts[b] as f32;
+        let off = (b * self.heads + h) * self.head_dim;
+        for (o, &s) in out.iter_mut().zip(&self.sums[off..off + self.head_dim]) {
+            *o = s * inv;
+        }
+    }
+
+    /// Materialize all representatives as `[n_blocks, H, D]` (diagnostics
+    /// and parity tests).
+    pub fn pooled_tensor(&self) -> Tensor {
+        let nb = self.n_blocks();
+        let mut out = Tensor::zeros(&[nb, self.heads, self.head_dim]);
+        for b in 0..nb {
+            for h in 0..self.heads {
+                let off = (b * self.heads + h) * self.head_dim;
+                self.mean_into(b, h, &mut out.data[off..off + self.head_dim]);
+            }
+        }
+        out
+    }
+
+    pub fn clear(&mut self) {
+        self.sums.clear();
+        self.counts.clear();
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gate::mean_pool_blocks;
+    use crate::util::rng::Rng;
+
+    fn rand_t(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+    }
+
+    #[test]
+    fn kv_roundtrip_row_by_row() {
+        let k = rand_t(&[7, 2, 4], 1);
+        let v = rand_t(&[7, 2, 4], 2);
+        let mut cache = KvCache::new(2, 4);
+        for t in 0..7 {
+            cache.append(&k.data[t * 8..(t + 1) * 8], &v.data[t * 8..(t + 1) * 8]);
+        }
+        assert_eq!(cache.len(), 7);
+        assert_eq!(cache.k_tensor(), k);
+        assert_eq!(cache.v_tensor(), v);
+        assert_eq!(cache.k_at(3, 1), &k.data[(3 * 2 + 1) * 4..(3 * 2 + 1) * 4 + 4]);
+    }
+
+    #[test]
+    fn kv_bulk_equals_row_appends() {
+        let k = rand_t(&[6, 2, 4], 3);
+        let v = rand_t(&[6, 2, 4], 4);
+        let mut bulk = KvCache::new(2, 4);
+        bulk.append_tensors(&k, &v);
+        let mut rows = KvCache::new(2, 4);
+        for t in 0..6 {
+            rows.append(&k.data[t * 8..(t + 1) * 8], &v.data[t * 8..(t + 1) * 8]);
+        }
+        assert_eq!(bulk.k_tensor(), rows.k_tensor());
+        assert_eq!(bulk.v_tensor(), rows.v_tensor());
+        assert!(bulk.payload_bytes() > 0);
+    }
+
+    #[test]
+    fn pool_matches_batch_mean_pool_bitwise() {
+        // divisible and ragged lengths; incremental means must equal the
+        // batch pooling exactly (same accumulation order)
+        for &n in &[32usize, 37, 48, 5] {
+            let k = rand_t(&[n, 2, 8], 100 + n as u64);
+            let mut pool = BlockPoolCache::new(16, 2, 8);
+            pool.append_tensor(&k);
+            let batch = mean_pool_blocks(&k, 16);
+            let inc = pool.pooled_tensor();
+            assert_eq!(inc.shape, batch.shape, "n={n}");
+            assert_eq!(inc.data, batch.data, "n={n}: pooled means differ");
+        }
+    }
+
+    #[test]
+    fn pool_grows_incrementally() {
+        let mut pool = BlockPoolCache::new(4, 1, 2);
+        assert_eq!(pool.n_blocks(), 0);
+        for i in 0..9 {
+            pool.append(&[i as f32, 1.0]);
+        }
+        assert_eq!(pool.len(), 9);
+        assert_eq!(pool.n_blocks(), 3);
+        assert_eq!(pool.count(0), 4);
+        assert_eq!(pool.count(2), 1);
+        let mut mean = [0.0f32; 2];
+        pool.mean_into(2, 0, &mut mean);
+        assert_eq!(mean, [8.0, 1.0]);
+    }
+
+    #[test]
+    fn clear_resets_both_caches() {
+        let mut cache = KvCache::new(1, 2);
+        cache.append(&[1.0, 2.0], &[3.0, 4.0]);
+        cache.clear();
+        assert!(cache.is_empty());
+        let mut pool = BlockPoolCache::new(2, 1, 2);
+        pool.append(&[1.0, 2.0]);
+        pool.clear();
+        assert!(pool.is_empty());
+        assert_eq!(pool.n_blocks(), 0);
+    }
+}

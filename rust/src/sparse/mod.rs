@@ -1,10 +1,25 @@
-//! Pure-Rust MoBA reference: gating (paper Eq. 5-6) and block-sparse
-//! streaming attention (paper Eq. 2 / Algorithm 1), plus the causal full
-//! attention baseline. Oracle for property tests, golden parity with the
-//! Python kernels, and the measured CPU kernel pair for Fig-2 benches.
+//! Pure-Rust MoBA attention stack: gating (paper Eq. 5-6), block-sparse
+//! streaming attention (paper Eq. 2 / Algorithm 1), the causal full
+//! attention baseline, and — new with the serving rewrite — the pluggable
+//! [`AttentionBackend`] trait plus the incremental KV/block-pool caches
+//! behind O(k·B) decode. See `README.md` in this directory for the
+//! backend + cache design.
+//!
+//! Roles:
+//! 1. correctness oracle for property tests and golden parity with the
+//!    Python kernels;
+//! 2. the measured CPU kernel pair for the Fig-2 efficiency benches;
+//! 3. the attention engine of the serving path (`crate::serve`).
 
 pub mod attention;
+pub mod backend;
 pub mod gate;
+pub mod kv_cache;
 
 pub use attention::{full_attention, moba_attention, moba_attention_gated};
+pub use backend::{
+    build_backend, AttentionBackend, BackendKind, CachedDecodeBackend, DecodePolicy,
+    FullAttention, MobaAttention,
+};
 pub use gate::{affinity_scores, mean_pool_blocks, moba_gate, Gate};
+pub use kv_cache::{BlockPoolCache, KvCache};

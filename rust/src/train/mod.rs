@@ -1,7 +1,10 @@
-//! Training: LR schedules and the stage-scheduled training loop.
+//! Training: LR schedules and (behind the `xla` feature) the
+//! stage-scheduled training loop over PJRT executables.
 
 pub mod schedule;
+#[cfg(feature = "xla")]
 pub mod trainer;
 
 pub use schedule::LrSchedule;
+#[cfg(feature = "xla")]
 pub use trainer::{RunSummary, StepInfo, Trainer};

@@ -6,7 +6,10 @@
 //! router/coordinator contracts.
 
 use moba::coordinator::{RoutingPlan, StageSchedule};
-use moba::sparse::{self, moba_gate};
+use moba::sparse::{
+    self, moba_gate, AttentionBackend, CachedDecodeBackend, DecodePolicy, FullAttention,
+    MobaAttention,
+};
 use moba::tensor::Tensor;
 use moba::util::rng::Rng;
 
@@ -177,6 +180,106 @@ fn prop_stage_schedule_total_conservation() {
         }
         assert_eq!(a_count, ((total as f64) * frac).round() as u64);
         assert_eq!(s.artifact_for(total), None);
+    });
+}
+
+/// Row `t` of a `[N, H, D]` tensor as a flat `[H * D]` slice.
+fn row(t: &Tensor, i: usize) -> &[f32] {
+    let w = t.shape[1] * t.shape[2];
+    &t.data[i * w..(i + 1) * w]
+}
+
+/// First `n` rows of a `[N, H, D]` tensor.
+fn prefix(t: &Tensor, n: usize) -> Tensor {
+    let w = t.shape[1] * t.shape[2];
+    Tensor::from_vec(&[n, t.shape[1], t.shape[2]], t.data[..n * w].to_vec()).unwrap()
+}
+
+#[test]
+fn prop_cached_decode_matches_recompute_bitwise() {
+    // The tentpole invariant: appending one token at a time through
+    // CachedDecodeBackend must reproduce the batch kernels' last row at
+    // EVERY length (including ragged, mid-block lengths) — within 1e-5,
+    // and in fact bit-for-bit.
+    sweep("cached decode == recompute", |seed| {
+        let mut rng = Rng::new(seed);
+        // kept small: every step recomputes the batch kernels over the
+        // whole prefix (O(n^3) total per trial, debug profile)
+        let block = [8, 16][rng.range(0, 2)];
+        let nb = rng.range(1, 5);
+        let h = rng.range(1, 3);
+        let d = [4, 8][rng.range(0, 2)];
+        let topk = rng.range(1, 4);
+        let n = block * nb + rng.range(0, block); // ragged final length
+        let q = rand_t(&[n, h, d], &mut rng);
+        let k = rand_t(&[n, h, d], &mut rng);
+        let v = rand_t(&[n, h, d], &mut rng);
+        let mut dense = CachedDecodeBackend::new(h, d, block, topk, DecodePolicy::Full);
+        let mut gated = CachedDecodeBackend::new(h, d, block, topk, DecodePolicy::Sparse);
+        for t in 0..n {
+            let got_dense = dense.decode(row(&q, t), row(&k, t), row(&v, t));
+            let got_gated = gated.decode(row(&q, t), row(&k, t), row(&v, t));
+            let (qp, kp, vp) = (prefix(&q, t + 1), prefix(&k, t + 1), prefix(&v, t + 1));
+            let full = sparse::full_attention(&qp, &kp, &vp);
+            let moba = sparse::moba_attention(&qp, &kp, &vp, block, topk);
+            for (a, b) in got_dense.iter().zip(row(&full, t)) {
+                assert!((a - b).abs() < 1e-5, "dense t={t}: {a} vs {b}");
+            }
+            for (a, b) in got_gated.iter().zip(row(&moba, t)) {
+                assert!((a - b).abs() < 1e-5, "gated t={t}: {a} vs {b}");
+            }
+            assert_eq!(got_dense.as_slice(), row(&full, t), "dense not bit-identical t={t}");
+            assert_eq!(got_gated.as_slice(), row(&moba, t), "gated not bit-identical t={t}");
+        }
+    });
+}
+
+#[test]
+fn prop_prefill_boundary_is_invisible() {
+    // Splitting a sequence into prefill + decode at ANY point must give
+    // the same cached state as decoding token by token from the start,
+    // and the same tokens as the recompute backends see.
+    sweep("prefill/decode boundary invisible", |seed| {
+        let mut rng = Rng::new(seed);
+        let (n, h, d, block, topk) = rand_cfg(&mut rng);
+        if n < 2 {
+            return;
+        }
+        let split = rng.range(1, n);
+        let q = rand_t(&[n, h, d], &mut rng);
+        let k = rand_t(&[n, h, d], &mut rng);
+        let v = rand_t(&[n, h, d], &mut rng);
+        let mut with_prefill = CachedDecodeBackend::new(h, d, block, topk, DecodePolicy::Sparse);
+        with_prefill.prefill(&prefix(&q, split), &prefix(&k, split), &prefix(&v, split));
+        let mut stepwise = CachedDecodeBackend::new(h, d, block, topk, DecodePolicy::Sparse);
+        for t in 0..split {
+            stepwise.decode(row(&q, t), row(&k, t), row(&v, t));
+        }
+        for t in split..n {
+            let a = with_prefill.decode(row(&q, t), row(&k, t), row(&v, t));
+            let b = stepwise.decode(row(&q, t), row(&k, t), row(&v, t));
+            assert_eq!(a, b, "t={t} split={split}");
+        }
+    });
+}
+
+#[test]
+fn prop_recompute_backends_agree_with_batch_kernels() {
+    // The trait's recompute baselines are exactly the batch kernels.
+    sweep("recompute backends == batch kernels", |seed| {
+        let mut rng = Rng::new(seed);
+        let (n, h, d, block, topk) = rand_cfg(&mut rng);
+        let q = rand_t(&[n, h, d], &mut rng);
+        let k = rand_t(&[n, h, d], &mut rng);
+        let v = rand_t(&[n, h, d], &mut rng);
+        let mut full = FullAttention::new(h, d);
+        let mut moba = MobaAttention::new(h, d, block, topk);
+        let fb = full.prefill(&q, &k, &v);
+        let mb = moba.prefill(&q, &k, &v);
+        assert_eq!(fb.data, sparse::full_attention(&q, &k, &v).data);
+        assert_eq!(mb.data, sparse::moba_attention(&q, &k, &v, block, topk).data);
+        assert_eq!(full.seq_len(), n);
+        assert_eq!(moba.seq_len(), n);
     });
 }
 

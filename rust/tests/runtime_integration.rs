@@ -2,8 +2,10 @@
 //! execution parity, a short end-to-end training run, eval/logits paths,
 //! checkpoint roundtrip through training, and failure injection.
 //!
-//! These need `artifacts/` (run `make artifacts` first); each test
-//! creates its own Engine (PJRT CPU clients are cheap).
+//! These need the `xla` feature (the whole file is compiled out without
+//! it) and `artifacts/` (run `make artifacts` first); each test creates
+//! its own Engine (PJRT CPU clients are cheap).
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
 
@@ -229,7 +231,7 @@ fn serve_engine_generates() {
     let e = engine();
     let art = e.manifest.get("needle_s0_logits").unwrap();
     let state = ModelState::init(art, 71).unwrap();
-    let serve = moba::serve::ServeEngine::new(
+    let serve = moba::serve::ArtifactServeEngine::new(
         &e,
         state.params,
         "needle_s0_logits",

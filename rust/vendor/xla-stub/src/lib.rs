@@ -1,0 +1,139 @@
+//! API stub for the `xla` PJRT bindings used by `moba::runtime::engine`.
+//!
+//! The real crate (vendored on PJRT-capable build images) wraps the XLA
+//! client: HLO-proto parsing, JIT compilation and device execution. This
+//! stub mirrors exactly the surface the engine consumes so that
+//! `--features xla` type-checks on any box; every entry point that would
+//! need a PJRT runtime returns [`Error::Unavailable`] instead. Swap the
+//! `xla` path dependency in `rust/Cargo.toml` to the real crate to run
+//! against actual artifacts.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: the PJRT runtime is not linked into this build.
+#[derive(Debug)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real PJRT-backed `xla` crate \
+                 (this build links the API stub in rust/vendor/xla-stub)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the engine marshals across the host/device boundary.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Host literal (stub: carries no data).
+#[derive(Debug, Default, Clone)]
+pub struct Literal {}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal {}
+    }
+
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal {}
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal {})
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::Unavailable("Literal::array_shape"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+}
+
+/// Array shape of a literal.
+#[derive(Debug, Default, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug, Default)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation built from a proto.
+#[derive(Debug, Default)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// Device-resident execution result buffer.
+#[derive(Debug, Default)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable.
+#[derive(Debug, Default)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug, Default)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
