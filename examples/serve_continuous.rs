@@ -20,6 +20,8 @@ use moba::util::cli::Args;
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv, &[])?;
+    // `--workers 0` / `--decode-workers 0` mean "all available cores"
+    let resolve = |n: usize| if n == 0 { moba::sparse::default_workers() } else { n };
     let cfg = DemoCfg {
         requests: args.get_usize("requests", 12)?,
         max_in_flight: args.get_usize("max-batch", 4)?,
@@ -28,6 +30,8 @@ fn main() -> anyhow::Result<()> {
         block_size: args.get_usize("block", 32)?,
         topk: args.get_usize("topk", 3)?,
         backend: BackendKind::parse(args.get_str("backend", "cached-sparse"))?,
+        workers: resolve(args.get_usize("workers", 1)?),
+        decode_workers: resolve(args.get_usize("decode-workers", 1)?),
         seed: args.get_u64("seed", 7)?,
     };
     run_demo(&cfg)

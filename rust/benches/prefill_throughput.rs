@@ -1,0 +1,164 @@
+//! Bench: prefill throughput (tokens/s) — fused single-pass MoBA vs the
+//! two-pass gate+attend baseline, single- and multi-worker.
+//!
+//! The fused kernel interleaves representative scoring, top-k selection
+//! and online-softmax streaming in one pass per query row (no
+//! materialized gate or affinity tensor); the head×query-tile
+//! partitioner then spreads rows over worker threads. Outputs are
+//! bit-identical across all of it, so this bench both measures AND
+//! asserts: fused ≥ 1.3× two-pass at N=8192 on one worker, multi-worker
+//! scaling ≥ 2× on a 4+ core box, and exact output equality everywhere.
+//! Appends a trajectory entry to `BENCH_prefill.json`.
+//!
+//! ```sh
+//! cargo bench --bench prefill_throughput            # full run + asserts
+//! cargo bench --bench prefill_throughput -- --quick # CI smoke: small N,
+//!                                                   # identity asserts only
+//! ```
+
+use std::time::Instant;
+
+use moba::sparse::{fused_moba_attention, moba_attention_par};
+use moba::tensor::Tensor;
+use moba::util::json::{arr, num, obj, s, Json};
+use moba::util::rng::Rng;
+
+const HEADS: usize = 2;
+const DIM: usize = 32;
+const BLOCK: usize = 64;
+const TOPK: usize = 3;
+
+fn rand_t(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+}
+
+/// Best-of-`reps` wall time for `f`, in seconds.
+fn time_best(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // physical cores, NOT default_workers(): a MOBA_WORKERS override must
+    // not distort the scaling measurement or fake a "4+ core box"
+    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let lengths: &[usize] = if quick { &[512] } else { &[4096, 8192] };
+    let reps = if quick { 1 } else { 2 };
+    let multi = ncpu.max(2); // scaling column even on small boxes
+
+    println!("== prefill throughput: fused single-pass vs two-pass gate+attend ==");
+    println!(
+        "H={HEADS} D={DIM} block={BLOCK} top-{TOPK}; tokens/s per kernel; {multi} workers multi{}",
+        if quick { " (quick mode)" } else { "" }
+    );
+    println!(
+        "{:>8} {:>14} {:>14} {:>9} {:>14} {:>9}",
+        "N", "two_pass_tok/s", "fused_tok/s", "fusedX", "fused_mt_tok/s", "scaleX"
+    );
+
+    let mut rng = Rng::new(2026);
+    let mut rows = Vec::new();
+    let mut fused_speedup_at_8192 = f64::NAN;
+    let mut scaling_at_8192 = f64::NAN;
+    for &n in lengths {
+        let q = rand_t(&[n, HEADS, DIM], &mut rng);
+        let k = rand_t(&[n, HEADS, DIM], &mut rng);
+        let v = rand_t(&[n, HEADS, DIM], &mut rng);
+
+        // outputs first — the identity contract this bench relies on
+        let two_pass = moba_attention_par(&q, &k, &v, BLOCK, TOPK, 1);
+        let fused = fused_moba_attention(&q, &k, &v, BLOCK, TOPK, 1);
+        let fused_mt = fused_moba_attention(&q, &k, &v, BLOCK, TOPK, multi);
+        assert_eq!(fused.data, two_pass.data, "fused != two-pass at N={n}");
+        assert_eq!(fused_mt.data, fused.data, "workers changed fused output at N={n}");
+
+        let two_pass_s = time_best(reps, || {
+            let _ = moba_attention_par(&q, &k, &v, BLOCK, TOPK, 1);
+        });
+        let fused_s = time_best(reps, || {
+            let _ = fused_moba_attention(&q, &k, &v, BLOCK, TOPK, 1);
+        });
+        let fused_mt_s = time_best(reps, || {
+            let _ = fused_moba_attention(&q, &k, &v, BLOCK, TOPK, multi);
+        });
+
+        let fused_x = two_pass_s / fused_s;
+        let scale_x = fused_s / fused_mt_s;
+        if n == 8192 {
+            fused_speedup_at_8192 = fused_x;
+            scaling_at_8192 = scale_x;
+        }
+        println!(
+            "{:>8} {:>14.0} {:>14.0} {:>8.2}x {:>14.0} {:>8.2}x",
+            n,
+            n as f64 / two_pass_s,
+            n as f64 / fused_s,
+            fused_x,
+            n as f64 / fused_mt_s,
+            scale_x
+        );
+        rows.push(obj(vec![
+            ("n", num(n as f64)),
+            ("two_pass_tok_per_s", num(n as f64 / two_pass_s)),
+            ("fused_tok_per_s", num(n as f64 / fused_s)),
+            ("fused_mt_tok_per_s", num(n as f64 / fused_mt_s)),
+            ("workers_mt", num(multi as f64)),
+            ("fused_speedup_vs_two_pass", num(fused_x)),
+            ("mt_scaling_vs_one_worker", num(scale_x)),
+        ]));
+    }
+
+    if quick {
+        println!("quick mode: outputs verified bit-identical; perf assertions skipped");
+        return;
+    }
+
+    let unix_secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let entry = obj(vec![
+        ("bench", s("prefill_throughput")),
+        ("unix_secs", num(unix_secs)),
+        ("heads", num(HEADS as f64)),
+        ("head_dim", num(DIM as f64)),
+        ("block", num(BLOCK as f64)),
+        ("topk", num(TOPK as f64)),
+        ("workers_multi", num(multi as f64)),
+        ("rows", arr(rows)),
+    ]);
+    // trajectory file: append this run's entry to the JSON array
+    let path = "BENCH_prefill.json";
+    let mut trajectory = match std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok())
+    {
+        Some(Json::Arr(entries)) => entries,
+        _ => Vec::new(),
+    };
+    trajectory.push(entry);
+    std::fs::write(path, Json::Arr(trajectory).to_string()).expect("writing BENCH_prefill.json");
+    println!("-> {path}");
+
+    assert!(
+        fused_speedup_at_8192 >= 1.3,
+        "acceptance: fused single-pass must beat two-pass by >=1.3x at N=8192 \
+         (got {fused_speedup_at_8192:.2}x)"
+    );
+    println!("acceptance OK: fused {fused_speedup_at_8192:.2}x >= 1.3x over two-pass at N=8192");
+    if ncpu >= 4 {
+        assert!(
+            scaling_at_8192 >= 2.0,
+            "acceptance: {ncpu}-worker prefill must scale >=2x over one worker at N=8192 \
+             (got {scaling_at_8192:.2}x)"
+        );
+        println!("acceptance OK: {ncpu}-worker scaling {scaling_at_8192:.2}x >= 2x at N=8192");
+    } else {
+        println!("scaling acceptance skipped: only {ncpu} cores available (needs 4+)");
+    }
+}

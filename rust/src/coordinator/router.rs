@@ -15,6 +15,7 @@
 //! the invariants; the serving engine uses the same plan to batch prefill
 //! chunks.
 
+use crate::sparse::parallel::parallel_map;
 use crate::sparse::{AttentionBackend, Gate};
 use crate::tensor::Tensor;
 
@@ -82,8 +83,27 @@ impl RoutingPlan {
         k: &Tensor,
         block_size: usize,
     ) -> Option<Vec<RoutingPlan>> {
+        Self::from_backend_par(backend, q, k, block_size, 1)
+    }
+
+    /// [`RoutingPlan::from_backend`] with the per-head plan builds spread
+    /// over `workers` threads. Heads are independent, so the returned
+    /// plans are identical to the serial build for any worker count.
+    ///
+    /// Only the plan-construction stage parallelizes; the gate itself is
+    /// computed by the backend serially (the trait's `gate` takes no
+    /// worker count) and usually dominates. Threading workers through the
+    /// gate is future work — it needs a generic-element `for_each_slot`
+    /// so `moba_gate`'s bit-set fills per-head in parallel.
+    pub fn from_backend_par(
+        backend: &dyn AttentionBackend,
+        q: &Tensor,
+        k: &Tensor,
+        block_size: usize,
+        workers: usize,
+    ) -> Option<Vec<RoutingPlan>> {
         let gate = backend.gate(q, k)?;
-        Some((0..gate.heads).map(|h| RoutingPlan::build(&gate, h, block_size)).collect())
+        Some(parallel_map(gate.heads, workers, |h| RoutingPlan::build(&gate, h, block_size)))
     }
 
     /// Total (query, block) attention pairs — proportional to FLOPs.
@@ -237,5 +257,25 @@ mod tests {
             assert_eq!(p.hist_offsets, direct.hist_offsets);
         }
         assert!(RoutingPlan::from_backend(&FullAttention::new(2, 8), &q, &k, 16).is_none());
+    }
+
+    #[test]
+    fn parallel_plan_build_matches_serial() {
+        use crate::sparse::FusedMobaAttention;
+        let q = rand_t(&[96, 4, 8], 10);
+        let k = rand_t(&[96, 4, 8], 11);
+        // the fused backend exposes the same gate as the two-pass one,
+        // so plans built from it match the direct gate
+        let backend = FusedMobaAttention::new(4, 8, 16, 3);
+        let serial = RoutingPlan::from_backend(&backend, &q, &k, 16).unwrap();
+        for workers in [2usize, 4, 8] {
+            let par = RoutingPlan::from_backend_par(&backend, &q, &k, 16, workers).unwrap();
+            assert_eq!(par.len(), serial.len());
+            for (a, b) in par.iter().zip(&serial) {
+                assert_eq!(a.packed_hist, b.packed_hist, "workers={workers}");
+                assert_eq!(a.hist_offsets, b.hist_offsets, "workers={workers}");
+                assert_eq!(a.total_pairs(), b.total_pairs(), "workers={workers}");
+            }
+        }
     }
 }

@@ -22,7 +22,9 @@ use crate::attn_sim::{
     AttnShape,
 };
 use crate::metrics::writer::RunDir;
-use crate::sparse::{AttentionBackend, FullAttention, MobaAttention};
+use crate::sparse::{
+    default_workers, AttentionBackend, FullAttention, FusedMobaAttention, MobaAttention,
+};
 use crate::tensor::Tensor;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::Rng;
@@ -92,10 +94,12 @@ pub fn run(args: &EfficiencyArgs) -> Result<()> {
     }
 
     // ---- measured CPU kernels -------------------------------------------
+    let ncpu = default_workers();
     println!("\n== measured CPU kernels (pure-Rust, H=2 D=32, block 64 top-3) ==");
+    println!("fused = single-pass gate+attend; _mt = {ncpu} workers (bit-identical outputs)");
     println!(
-        "{:>8} {:>12} {:>12} {:>9} {:>12} {:>12}",
-        "N", "full_ms", "moba_ms", "speedup", "pred_full", "pred_moba"
+        "{:>8} {:>12} {:>12} {:>12} {:>12} {:>9} {:>12} {:>12}",
+        "N", "full_ms", "moba_ms", "fused_ms", "fused_mt_ms", "speedup", "pred_full", "pred_moba"
     );
     let cpu = calibrate_cpu(args.seed);
     let (h, d, block, topk) = (2usize, 32usize, 64usize, 3usize);
@@ -103,28 +107,33 @@ pub fn run(args: &EfficiencyArgs) -> Result<()> {
     // stack dispatches on, so these numbers price the deployed path
     let full_backend = FullAttention::new(h, d);
     let moba_backend = MobaAttention::new(h, d, block, topk);
+    let fused_backend = FusedMobaAttention::new(h, d, block, topk);
+    let fused_mt_backend = FusedMobaAttention::new(h, d, block, topk).with_workers(ncpu);
     let mut n = 256usize;
     while n <= args.measure_max {
         let (q, k, v) = rand_qkv(n, h, d, args.seed ^ n as u64);
         let reps = if n <= 1024 { 3 } else { 1 };
-        let t0 = Instant::now();
-        for _ in 0..reps {
-            let _ = full_backend.forward(&q, &k, &v);
-        }
-        let full_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
-        let t1 = Instant::now();
-        for _ in 0..reps {
-            let _ = moba_backend.forward(&q, &k, &v);
-        }
-        let moba_ms = t1.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let time_ms = |b: &dyn AttentionBackend| {
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                let _ = b.forward(&q, &k, &v);
+            }
+            t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+        };
+        let full_ms = time_ms(&full_backend);
+        let moba_ms = time_ms(&moba_backend);
+        let fused_ms = time_ms(&fused_backend);
+        let fused_mt_ms = time_ms(&fused_mt_backend);
         let shape = AttnShape::new(n, h, d);
         let pred_full = attn_sim::full_time(shape, &cpu) * 1e3;
         let pred_moba = attn_sim::moba_time(shape, block, topk, &cpu) * 1e3;
         println!(
-            "{:>8} {:>12.2} {:>12.2} {:>9.2} {:>12.2} {:>12.2}",
+            "{:>8} {:>12.2} {:>12.2} {:>12.2} {:>12.2} {:>9.2} {:>12.2} {:>12.2}",
             n,
             full_ms,
             moba_ms,
+            fused_ms,
+            fused_mt_ms,
             full_ms / moba_ms,
             pred_full,
             pred_moba
@@ -134,6 +143,9 @@ pub fn run(args: &EfficiencyArgs) -> Result<()> {
             ("n", num(n as f64)),
             ("full_ms", num(full_ms)),
             ("moba_ms", num(moba_ms)),
+            ("fused_ms", num(fused_ms)),
+            ("fused_mt_ms", num(fused_mt_ms)),
+            ("workers_mt", num(ncpu as f64)),
             ("speedup", num(full_ms / moba_ms)),
             ("pred_full_ms", num(pred_full)),
             ("pred_moba_ms", num(pred_moba)),

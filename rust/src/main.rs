@@ -68,7 +68,9 @@ experiments (exp): efficiency, fits, gate-ablation (pure Rust);
   scaling [--long], granularity, hybrid, sft, needle [--full], table2
   (need --features xla + artifacts); all
 serve options: --requests N --max-batch M --prompt-len P --max-new K
-  --backend full|moba|cached-full|cached-sparse --block B --topk K
+  --backend full|moba|cached-full|cached-sparse|fused --block B --topk K
+  --workers W (kernel threads, 0 = all cores)
+  --decode-workers S (scheduler decode shards, 0 = all cores)
 common options: --steps N  --seed N  --sizes s0,s1  --artifact NAME
 ";
 
@@ -76,6 +78,8 @@ common options: --steps N  --seed N  --sizes s0,s1  --artifact NAME
 /// driver: `serve::demo`).
 fn serve_cmd(args: &Args) -> Result<()> {
     let d = DemoCfg::default();
+    // `--workers 0` / `--decode-workers 0` mean "all available cores"
+    let resolve = |n: usize| if n == 0 { moba::sparse::default_workers() } else { n };
     let cfg = DemoCfg {
         requests: args.get_usize("requests", d.requests)?,
         max_in_flight: args.get_usize("max-batch", d.max_in_flight)?,
@@ -84,6 +88,8 @@ fn serve_cmd(args: &Args) -> Result<()> {
         block_size: args.get_usize("block", d.block_size)?,
         topk: args.get_usize("topk", d.topk)?,
         backend: BackendKind::parse(args.get_str("backend", d.backend.label()))?,
+        workers: resolve(args.get_usize("workers", d.workers)?),
+        decode_workers: resolve(args.get_usize("decode-workers", d.decode_workers)?),
         seed: args.get_u64("seed", d.seed)?,
     };
     run_demo(&cfg)

@@ -25,6 +25,10 @@ pub struct DemoCfg {
     pub block_size: usize,
     pub topk: usize,
     pub backend: BackendKind,
+    /// intra-request kernel threads (prefill partitioning)
+    pub workers: usize,
+    /// scheduler decode shards stepping sessions concurrently
+    pub decode_workers: usize,
     pub seed: u64,
 }
 
@@ -38,6 +42,8 @@ impl Default for DemoCfg {
             block_size: 32,
             topk: 3,
             backend: BackendKind::CachedSparse,
+            workers: 1,
+            decode_workers: 1,
             seed: 42,
         }
     }
@@ -52,6 +58,7 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
         topk: cfg.topk,
         max_seq: 8192,
         backend: cfg.backend,
+        workers: cfg.workers.max(1),
     };
     println!(
         "== continuous serving demo: backend={} block={} topk={} max_in_flight={} ==",
@@ -60,9 +67,19 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
         cfg.topk,
         cfg.max_in_flight
     );
+    println!(
+        "   kernel workers={}  decode shards={}",
+        cfg.workers.max(1),
+        cfg.decode_workers.max(1)
+    );
     let engine = ServeEngine::new(model, serve_cfg);
-    let mut sched =
-        ContinuousScheduler::new(engine, SchedulerCfg { max_in_flight: cfg.max_in_flight });
+    let mut sched = ContinuousScheduler::new(
+        engine,
+        SchedulerCfg {
+            max_in_flight: cfg.max_in_flight,
+            decode_workers: cfg.decode_workers.max(1),
+        },
+    );
 
     // simulated arrival process
     let mut rng = Rng::new(cfg.seed ^ 0x5E12);
@@ -125,6 +142,12 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
         total_tokens as f64 / wall.max(1e-9),
         results.len() as f64 / wall.max(1e-9)
     );
+    for (i, w) in sched.worker_stats().iter().enumerate() {
+        println!(
+            "shard {i}: admitted {}  rounds {}  steps {}  busy {:.3}s  peak {}",
+            w.admitted, w.decode_rounds, w.decode_steps, w.busy_secs, w.peak_in_flight
+        );
+    }
     Ok(())
 }
 
@@ -138,6 +161,7 @@ mod tests {
             BackendKind::CachedSparse,
             BackendKind::CachedFull,
             BackendKind::RecomputeMoba,
+            BackendKind::Fused,
         ] {
             let cfg = DemoCfg {
                 requests: 3,
@@ -148,5 +172,19 @@ mod tests {
             };
             run_demo(&cfg).unwrap();
         }
+    }
+
+    #[test]
+    fn demo_runs_sharded_and_threaded() {
+        let cfg = DemoCfg {
+            requests: 4,
+            prompt_len: 48,
+            max_new: 4,
+            backend: BackendKind::Fused,
+            workers: 2,
+            decode_workers: 2,
+            ..Default::default()
+        };
+        run_demo(&cfg).unwrap();
     }
 }

@@ -23,7 +23,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::sparse::{build_backend, AttentionBackend, BackendKind};
+use crate::sparse::{build_backend_par, AttentionBackend, BackendKind};
 use crate::tensor::Tensor;
 
 use super::model::TokenModel;
@@ -43,11 +43,23 @@ pub struct ServeCfg {
     pub topk: usize,
     pub max_seq: usize,
     pub backend: BackendKind,
+    /// Intra-request kernel threads for prefill row partitioning (see
+    /// `sparse::parallel`). Outputs are bit-identical for every value.
+    /// 1 = serial. Decode steps always run inline — per-token work is far
+    /// below spawn cost; inter-request decode parallelism belongs to the
+    /// scheduler's decode shards instead.
+    pub workers: usize,
 }
 
 impl Default for ServeCfg {
     fn default() -> Self {
-        ServeCfg { block_size: 64, topk: 3, max_seq: 4096, backend: BackendKind::CachedSparse }
+        ServeCfg {
+            block_size: 64,
+            topk: 3,
+            max_seq: 4096,
+            backend: BackendKind::CachedSparse,
+            workers: 1,
+        }
     }
 }
 
@@ -132,8 +144,14 @@ impl<M: TokenModel> ServeEngine<M> {
             );
         }
         let (h, d) = (self.model.heads(), self.model.head_dim());
-        let mut backend =
-            build_backend(self.cfg.backend, h, d, self.cfg.block_size, self.cfg.topk);
+        let mut backend = build_backend_par(
+            self.cfg.backend,
+            h,
+            d,
+            self.cfg.block_size,
+            self.cfg.topk,
+            self.cfg.workers.max(1),
+        );
 
         let t0 = Instant::now();
         let n = prompt.len();
@@ -204,7 +222,7 @@ mod tests {
     fn engine(backend: BackendKind) -> ServeEngine<ToyModel> {
         ServeEngine::new(
             ToyModel::new(48, 2, 8, 11),
-            ServeCfg { block_size: 16, topk: 2, max_seq: 256, backend },
+            ServeCfg { block_size: 16, topk: 2, max_seq: 256, backend, workers: 1 },
         )
     }
 
@@ -229,6 +247,8 @@ mod tests {
         let sparse_ref = engine(BackendKind::RecomputeMoba).generate(&prompt, 8).unwrap().0;
         let sparse_cached = engine(BackendKind::CachedSparse).generate(&prompt, 8).unwrap().0;
         assert_eq!(sparse_cached, sparse_ref);
+        let fused = engine(BackendKind::Fused).generate(&prompt, 8).unwrap().0;
+        assert_eq!(fused, sparse_ref);
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub use batcher::{Batcher, BatcherCfg, Request, RequestResult};
 pub use demo::{run_demo, DemoCfg};
 pub use engine::{DecodeSession, GenStats, ServeCfg, ServeEngine};
 pub use model::{TokenModel, ToyModel};
-pub use scheduler::{ContinuousScheduler, SchedStats, SchedulerCfg};
+pub use scheduler::{ContinuousScheduler, SchedStats, SchedulerCfg, WorkerStats};
 
 #[cfg(feature = "xla")]
 pub use artifact::ArtifactServeEngine;

@@ -7,12 +7,23 @@
 //! ran each closed batch to completion before admitting anyone else: here
 //! a short request admitted late still finishes early, and prefill of a
 //! new request overlaps (in schedule order) with decode of older ones.
-//! Sessions are independent — interleaving cannot change any request's
-//! tokens, which `tests` pin against the one-request-at-a-time engine.
+//!
+//! **Sharded decode**: the in-flight set is partitioned across
+//! `decode_workers` shards. Admission balances across shards (least
+//! loaded wins, lowest index on ties — deterministic), and each tick
+//! steps all shards concurrently on scoped threads, one decode token per
+//! live session. Sessions are independent and a session is stepped only
+//! by its own shard's thread, so neither interleaving nor the shard
+//! count can change any request's tokens — `tests` pin the sharded
+//! scheduler's outputs against the one-request-at-a-time engine and
+//! against `decode_workers = 1`. Per-shard latency counters are exposed
+//! via [`ContinuousScheduler::worker_stats`].
 //!
 //! The scheduler is driven by a simulation clock (`tick(now)`), like the
 //! batcher, so arrival/queueing behavior is deterministic and testable;
 //! prefill/decode times are measured wall clock from the engine.
+
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -23,13 +34,17 @@ use super::model::TokenModel;
 /// Scheduler limits.
 #[derive(Clone, Debug)]
 pub struct SchedulerCfg {
-    /// decode-batch capacity: max sessions stepped per tick
+    /// decode-batch capacity: max sessions stepped per tick (across all
+    /// shards)
     pub max_in_flight: usize,
+    /// decode worker shards stepping the in-flight set concurrently;
+    /// 1 = the single-threaded scheduler
+    pub decode_workers: usize,
 }
 
 impl Default for SchedulerCfg {
     fn default() -> Self {
-        SchedulerCfg { max_in_flight: 8 }
+        SchedulerCfg { max_in_flight: 8, decode_workers: 1 }
     }
 }
 
@@ -43,30 +58,73 @@ pub struct SchedStats {
     pub peak_in_flight: usize,
 }
 
+/// Per-shard counters: admission balance and decode-latency accounting
+/// for one decode worker.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub admitted: usize,
+    pub decode_rounds: usize,
+    pub decode_steps: usize,
+    /// wall-clock seconds this shard spent stepping sessions
+    pub busy_secs: f64,
+    pub peak_in_flight: usize,
+}
+
 struct Live {
     id: u64,
     queue_secs: f64,
     session: DecodeSession,
 }
 
-/// Iteration-level scheduler over a `ServeEngine`.
+struct Shard {
+    running: Vec<Live>,
+    stats: WorkerStats,
+}
+
+impl Shard {
+    /// Step every live session one decode token; returns nothing — all
+    /// accounting lands in the shard's own stats (no shared state).
+    fn step_all<M: TokenModel>(&mut self, engine: &ServeEngine<M>) {
+        if self.running.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
+        let mut steps = 0;
+        for live in self.running.iter_mut() {
+            if engine.step(&mut live.session).is_some() {
+                steps += 1;
+            }
+        }
+        self.stats.decode_rounds += 1;
+        self.stats.decode_steps += steps;
+        self.stats.busy_secs += t0.elapsed().as_secs_f64();
+    }
+}
+
+/// Iteration-level scheduler over a `ServeEngine`, sharded across decode
+/// workers. `M: Sync` because shard threads step sessions against the
+/// shared engine concurrently.
 pub struct ContinuousScheduler<M: TokenModel> {
     engine: ServeEngine<M>,
     cfg: SchedulerCfg,
     queue: Batcher,
-    running: Vec<Live>,
+    shards: Vec<Shard>,
     pub stats: SchedStats,
 }
 
-impl<M: TokenModel> ContinuousScheduler<M> {
+impl<M: TokenModel + Sync> ContinuousScheduler<M> {
     pub fn new(engine: ServeEngine<M>, cfg: SchedulerCfg) -> ContinuousScheduler<M> {
         assert!(cfg.max_in_flight > 0);
+        assert!(cfg.decode_workers > 0);
+        let shards = (0..cfg.decode_workers)
+            .map(|_| Shard { running: Vec::new(), stats: WorkerStats::default() })
+            .collect();
         ContinuousScheduler {
             engine,
             cfg,
             // admission policy fields are unused in continuous mode
             queue: Batcher::new(BatcherCfg::default()),
-            running: Vec::new(),
+            shards,
             stats: SchedStats::default(),
         }
     }
@@ -80,63 +138,100 @@ impl<M: TokenModel> ContinuousScheduler<M> {
     }
 
     pub fn in_flight(&self) -> usize {
-        self.running.len()
+        self.shards.iter().map(|s| s.running.len()).sum()
     }
 
     pub fn idle(&self) -> bool {
-        self.running.is_empty() && self.queue.pending() == 0
+        self.in_flight() == 0 && self.queue.pending() == 0
     }
 
     pub fn engine(&self) -> &ServeEngine<M> {
         &self.engine
     }
 
+    /// Per-shard admission/latency counters, one entry per decode worker.
+    pub fn worker_stats(&self) -> Vec<WorkerStats> {
+        self.shards.iter().map(|s| s.stats.clone()).collect()
+    }
+
     /// One scheduler tick at simulation time `now`:
-    /// 1. admit arrived requests into free decode slots (prefill them);
-    /// 2. step every live session one decode token;
-    /// 3. retire finished sessions as `RequestResult`s.
+    /// 1. admit arrived requests into free decode slots (prefill them),
+    ///    balancing across the least-loaded shards;
+    /// 2. step every live session one decode token, shards in parallel;
+    /// 3. retire finished sessions as `RequestResult`s (shard order, so
+    ///    the result order is deterministic).
     pub fn tick(&mut self, now: f64) -> Result<Vec<RequestResult>> {
-        // 1. admission — new requests join the in-flight batch mid-stream
-        let free = self.cfg.max_in_flight - self.running.len();
+        // 1. admission — new requests join the in-flight batch mid-stream,
+        // each pinned to the currently least-loaded shard
+        let free = self.cfg.max_in_flight - self.in_flight();
         for req in self.queue.admit(now, free) {
             let session = self.engine.start(&req.prompt, req.max_new)?;
             self.stats.admitted += 1;
-            self.running.push(Live {
+            let shard = self
+                .shards
+                .iter_mut()
+                .min_by_key(|s| s.running.len())
+                .expect("at least one shard");
+            shard.stats.admitted += 1;
+            shard.running.push(Live {
                 id: req.id,
                 queue_secs: (now - req.arrival).max(0.0),
                 session,
             });
         }
-        self.stats.peak_in_flight = self.stats.peak_in_flight.max(self.running.len());
+        self.stats.peak_in_flight = self.stats.peak_in_flight.max(self.in_flight());
+        for shard in self.shards.iter_mut() {
+            shard.stats.peak_in_flight = shard.stats.peak_in_flight.max(shard.running.len());
+        }
 
-        // 2. one decode step per live session (the continuous batch)
-        if !self.running.is_empty() {
+        // 2. one decode step per live session — the continuous batch,
+        // shards stepped concurrently
+        if self.in_flight() > 0 {
             self.stats.decode_rounds += 1;
         }
+        let steps_before: usize = self.shards.iter().map(|s| s.stats.decode_steps).sum();
         let engine = &self.engine;
-        for live in self.running.iter_mut() {
-            if engine.step(&mut live.session).is_some() {
-                self.stats.decode_steps_total += 1;
+        // Scoped threads are re-spawned per tick (simple, no idle worker
+        // lifecycle); the spawn cost amortizes over each shard's sessions
+        // × per-token decode work, so decode_workers > 1 pays off for
+        // real contexts, not for a handful of tiny sessions. Persistent
+        // shard threads are a ROADMAP follow-on. Outputs are identical
+        // either way.
+        if self.cfg.decode_workers > 1 {
+            std::thread::scope(|scope| {
+                for shard in self.shards.iter_mut() {
+                    if !shard.running.is_empty() {
+                        scope.spawn(move || shard.step_all(engine));
+                    }
+                }
+            });
+        } else {
+            for shard in self.shards.iter_mut() {
+                shard.step_all(engine);
             }
         }
+        let steps_after: usize = self.shards.iter().map(|s| s.stats.decode_steps).sum();
+        self.stats.decode_steps_total += steps_after - steps_before;
 
-        // 3. retirement
+        // 3. retirement, shard by shard
         let mut finished = Vec::new();
-        let mut i = 0;
-        while i < self.running.len() {
-            if self.running[i].session.finished() {
-                let live = self.running.swap_remove(i);
-                self.stats.completed += 1;
-                finished.push(RequestResult {
-                    id: live.id,
-                    output: live.session.output().to_vec(),
-                    queue_secs: live.queue_secs,
-                    prefill_secs: live.session.stats.prefill_secs,
-                    decode_secs: live.session.stats.decode_secs,
-                    decode_steps: live.session.stats.decode_steps,
-                });
-            } else {
-                i += 1;
+        for shard in self.shards.iter_mut() {
+            let mut i = 0;
+            while i < shard.running.len() {
+                if shard.running[i].session.finished() {
+                    let live = shard.running.swap_remove(i);
+                    self.stats.completed += 1;
+                    finished.push(RequestResult {
+                        id: live.id,
+                        output: live.session.output().to_vec(),
+                        queue_secs: live.queue_secs,
+                        prefill_secs: live.session.stats.prefill_secs,
+                        decode_secs: live.session.stats.decode_secs,
+                        decode_steps: live.session.stats.decode_steps,
+                    });
+                } else {
+                    i += 1;
+                }
             }
         }
         Ok(finished)
@@ -188,6 +283,7 @@ mod tests {
                 topk: 2,
                 max_seq: 512,
                 backend: BackendKind::CachedSparse,
+                workers: 1,
             },
         )
     }
@@ -201,9 +297,13 @@ mod tests {
         }
     }
 
+    fn sched_cfg(max_in_flight: usize, decode_workers: usize) -> SchedulerCfg {
+        SchedulerCfg { max_in_flight, decode_workers }
+    }
+
     #[test]
     fn completes_all_requests_with_correct_outputs() {
-        let mut sched = ContinuousScheduler::new(engine(), SchedulerCfg { max_in_flight: 3 });
+        let mut sched = ContinuousScheduler::new(engine(), sched_cfg(3, 1));
         let requests: Vec<Request> =
             (0..7).map(|i| req(i, i as f64 * 0.1, 20 + i as usize, 4 + (i as usize % 3))).collect();
         // reference: every request served alone, outside the scheduler
@@ -228,7 +328,7 @@ mod tests {
 
     #[test]
     fn capacity_limits_in_flight_and_late_arrivals_wait() {
-        let mut sched = ContinuousScheduler::new(engine(), SchedulerCfg { max_in_flight: 2 });
+        let mut sched = ContinuousScheduler::new(engine(), sched_cfg(2, 1));
         for i in 0..4 {
             sched.submit(req(i, 0.0, 16, 8));
         }
@@ -246,7 +346,7 @@ mod tests {
     fn new_request_joins_inflight_decode_batch() {
         // continuous batching: request 1 is admitted while request 0 is
         // mid-decode, and both make progress in the same ticks
-        let mut sched = ContinuousScheduler::new(engine(), SchedulerCfg { max_in_flight: 4 });
+        let mut sched = ContinuousScheduler::new(engine(), sched_cfg(4, 1));
         sched.submit(req(0, 0.0, 16, 10));
         sched.tick(0.0).unwrap();
         assert_eq!(sched.in_flight(), 1);
@@ -266,7 +366,7 @@ mod tests {
 
     #[test]
     fn queue_latency_reflects_admission_delay() {
-        let mut sched = ContinuousScheduler::new(engine(), SchedulerCfg { max_in_flight: 1 });
+        let mut sched = ContinuousScheduler::new(engine(), sched_cfg(1, 1));
         sched.submit(req(0, 0.0, 16, 3));
         sched.submit(req(1, 0.0, 16, 3));
         let mut all = Vec::new();
@@ -277,5 +377,63 @@ mod tests {
         }
         all.sort_by_key(|r| r.id);
         assert!(all[0].queue_secs < all[1].queue_secs, "second request queued longer");
+    }
+
+    #[test]
+    fn sharded_outputs_match_single_worker() {
+        // the tentpole invariant at the serving layer: the shard count is
+        // invisible in every request's tokens and in the aggregate counts
+        let make_stream = || -> Vec<Request> {
+            (0..9).map(|i| req(i, i as f64 * 0.07, 18 + i as usize, 3 + (i as usize % 4))).collect()
+        };
+        let mut solo = ContinuousScheduler::new(engine(), sched_cfg(4, 1));
+        let mut baseline = solo.run_stream(make_stream(), 0.05).unwrap();
+        baseline.sort_by_key(|r| r.id);
+        for workers in [2usize, 3] {
+            let mut sched = ContinuousScheduler::new(engine(), sched_cfg(4, workers));
+            let mut results = sched.run_stream(make_stream(), 0.05).unwrap();
+            results.sort_by_key(|r| r.id);
+            assert_eq!(results.len(), baseline.len(), "workers={workers}");
+            for (r, b) in results.iter().zip(&baseline) {
+                assert_eq!(r.id, b.id);
+                assert_eq!(r.output, b.output, "req {} workers={workers}", r.id);
+            }
+            assert_eq!(sched.stats.completed, solo.stats.completed);
+            assert_eq!(sched.stats.decode_steps_total, solo.stats.decode_steps_total);
+        }
+    }
+
+    #[test]
+    fn admission_balances_across_shards() {
+        let mut sched = ContinuousScheduler::new(engine(), sched_cfg(6, 3));
+        for i in 0..6 {
+            sched.submit(req(i, 0.0, 16, 12));
+        }
+        sched.tick(0.0).unwrap();
+        assert_eq!(sched.in_flight(), 6);
+        let stats = sched.worker_stats();
+        assert_eq!(stats.len(), 3);
+        for (i, w) in stats.iter().enumerate() {
+            assert_eq!(w.admitted, 2, "shard {i} admission imbalance");
+            assert_eq!(w.peak_in_flight, 2, "shard {i}");
+            assert_eq!(w.decode_rounds, 1, "shard {i}");
+            assert!(w.decode_steps > 0, "shard {i}");
+        }
+    }
+
+    #[test]
+    fn worker_stats_account_all_steps() {
+        let mut sched = ContinuousScheduler::new(engine(), sched_cfg(4, 2));
+        for i in 0..4 {
+            sched.submit(req(i, 0.0, 20, 5));
+        }
+        let mut now = 0.0;
+        while !sched.idle() {
+            sched.tick(now).unwrap();
+            now += 0.1;
+        }
+        let per_shard: usize = sched.worker_stats().iter().map(|w| w.decode_steps).sum();
+        assert_eq!(per_shard, sched.stats.decode_steps_total);
+        assert!(sched.worker_stats().iter().all(|w| w.busy_secs >= 0.0));
     }
 }

@@ -1,19 +1,29 @@
 //! Pure-Rust attention kernels: causal full attention (flash-style
-//! streaming) and MoBA block-sparse attention.
+//! streaming), MoBA block-sparse attention (two-pass gate + attend and
+//! the fused single-pass variant), all with optional multi-core
+//! execution over the head×query-tile partitioner in [`super::parallel`].
 //!
-//! Two roles:
+//! Three roles:
 //! 1. correctness oracle for property tests and golden parity with the
 //!    Python reference;
 //! 2. the *measured* CPU kernels behind the Fig-2 efficiency benches —
-//!    both use the same online-softmax inner loop, so their runtime
-//!    ratio isolates the sparsity effect exactly as the paper's A100
-//!    measurement isolates it against FlashAttention.
+//!    full and MoBA share the same online-softmax inner loop, so their
+//!    runtime ratio isolates the sparsity effect exactly as the paper's
+//!    A100 measurement isolates it against FlashAttention;
+//! 3. the prefill engine of the serving path (`crate::serve`), via the
+//!    backends in `super::backend`.
+//!
+//! Determinism: every output row `(t, hh)` is computed with a fixed
+//! arithmetic order that does not depend on the worker count, so the
+//! `_par` variants and `fused_moba_attention` are bit-identical to the
+//! single-threaded kernels (`tests/thread_invariance.rs`).
 //!
 //! Layout: q, k, v are `[N, H, D]` row-major f32 (Algorithm 1's layout).
 
 use crate::tensor::Tensor;
 
-use super::gate::{moba_gate, Gate};
+use super::gate::{mean_pool_blocks, moba_gate, Gate, BIG};
+use super::parallel::for_each_slot;
 
 pub(crate) const NEG_INF: f32 = -1e30;
 
@@ -36,6 +46,36 @@ pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// Two independent dot products with interleaved accumulator chains.
+/// Each result carries out *exactly* the operation sequence of
+/// [`dot`] — interleaving independent chains changes instruction-level
+/// parallelism, not any chain's accumulation order — so `(dot2(a,b0,b1))
+/// == (dot(a,b0), dot(a,b1))` bit-for-bit.
+#[inline]
+pub(crate) fn dot2(a: &[f32], b0: &[f32], b1: &[f32]) -> (f32, f32) {
+    let mut x = [0.0f32; 4];
+    let mut y = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        x[0] += a[i] * b0[i];
+        y[0] += a[i] * b1[i];
+        x[1] += a[i + 1] * b0[i + 1];
+        y[1] += a[i + 1] * b1[i + 1];
+        x[2] += a[i + 2] * b0[i + 2];
+        y[2] += a[i + 2] * b1[i + 2];
+        x[3] += a[i + 3] * b0[i + 3];
+        y[3] += a[i + 3] * b1[i + 3];
+    }
+    let mut s0 = x[0] + x[1] + x[2] + x[3];
+    let mut s1 = y[0] + y[1] + y[2] + y[3];
+    for i in chunks * 4..a.len() {
+        s0 += a[i] * b0[i];
+        s1 += a[i] * b1[i];
+    }
+    (s0, s1)
+}
+
 #[inline]
 fn axpy(acc: &mut [f32], alpha: f32, x: &[f32]) {
     for (a, &xv) in acc.iter_mut().zip(x) {
@@ -46,7 +86,8 @@ fn axpy(acc: &mut [f32], alpha: f32, x: &[f32]) {
 /// Streaming softmax state for one query row. Shared with the incremental
 /// decode backends (`sparse::backend`), which must fold scores in the same
 /// order with the same arithmetic to stay bit-identical with these batch
-/// kernels.
+/// kernels. Reusable across rows via [`OnlineRow::reset`], so the batch
+/// kernels allocate one per worker instead of one per query.
 pub(crate) struct OnlineRow {
     m: f32,
     l: f32,
@@ -56,6 +97,13 @@ pub(crate) struct OnlineRow {
 impl OnlineRow {
     pub(crate) fn new(d: usize) -> Self {
         OnlineRow { m: NEG_INF, l: 0.0, acc: vec![0.0; d] }
+    }
+
+    /// Back to the freshly-constructed state, keeping the allocation.
+    pub(crate) fn reset(&mut self) {
+        self.m = NEG_INF;
+        self.l = 0.0;
+        self.acc.fill(0.0);
     }
 
     /// Fold in one (score, value-row) pair.
@@ -74,55 +122,70 @@ impl OnlineRow {
         axpy(&mut self.acc, p, v);
     }
 
-    pub(crate) fn finish(self, out: &mut [f32]) {
+    /// Write the normalized row into `out` without consuming the state
+    /// (callers reusing the row must `reset` before the next query).
+    pub(crate) fn finish_into(&mut self, out: &mut [f32]) {
         let inv = 1.0 / self.l;
-        for (o, a) in out.iter_mut().zip(self.acc) {
+        for (o, a) in out.iter_mut().zip(&self.acc) {
             *o = a * inv;
         }
     }
 }
 
-/// Causal full attention, flash-style streaming (no N^2 materialization).
-pub fn full_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+/// Causal full attention, flash-style streaming (no N^2 materialization),
+/// head×query rows spread over `workers` threads.
+pub fn full_attention_par(q: &Tensor, k: &Tensor, v: &Tensor, workers: usize) -> Tensor {
     let (n, h, d) = (q.shape[0], q.shape[1], q.shape[2]);
     let scale = 1.0 / (d as f32).sqrt();
     let mut out = Tensor::zeros(&[n, h, d]);
-    for hh in 0..h {
-        for t in 0..n {
+    for_each_slot(
+        &mut out.data,
+        d,
+        workers,
+        || OnlineRow::new(d),
+        |row, slot, out_row| {
+            let (t, hh) = (slot / h, slot % h);
             let qrow = &q.data[(t * h + hh) * d..(t * h + hh) * d + d];
-            let mut row = OnlineRow::new(d);
+            row.reset();
             for j in 0..=t {
                 let koff = (j * h + hh) * d;
                 let s = dot(qrow, &k.data[koff..koff + d]) * scale;
                 row.push(s, &v.data[koff..koff + d]);
             }
-            let ooff = (t * h + hh) * d;
-            row.finish(&mut out.data[ooff..ooff + d]);
-        }
-    }
+            row.finish_into(out_row);
+        },
+    );
     out
 }
 
+/// Causal full attention on the calling thread (the parity oracle).
+pub fn full_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    full_attention_par(q, k, v, 1)
+}
+
 /// MoBA attention with a precomputed gate (used by benches to separate
-/// gating cost from attention cost).
-pub fn moba_attention_gated(
+/// gating cost from attention cost), parallel over head×query rows.
+pub fn moba_attention_gated_par(
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
     gate: &Gate,
     block_size: usize,
+    workers: usize,
 ) -> Tensor {
     let (n, h, d) = (q.shape[0], q.shape[1], q.shape[2]);
     let scale = 1.0 / (d as f32).sqrt();
     let mut out = Tensor::zeros(&[n, h, d]);
-    for hh in 0..h {
-        for t in 0..n {
+    for_each_slot(
+        &mut out.data,
+        d,
+        workers,
+        || OnlineRow::new(d),
+        |row, slot, out_row| {
+            let (t, hh) = (slot / h, slot % h);
             let qrow = &q.data[(t * h + hh) * d..(t * h + hh) * d + d];
-            let mut row = OnlineRow::new(d);
-            for b in 0..gate.n_blocks {
-                if !gate.get(hh, t, b) {
-                    continue;
-                }
+            row.reset();
+            for b in gate.selected_iter(hh, t) {
                 let hi = ((b + 1) * block_size).min(t + 1); // causal inside current block
                 for j in b * block_size..hi {
                     let koff = (j * h + hh) * d;
@@ -130,11 +193,35 @@ pub fn moba_attention_gated(
                     row.push(s, &v.data[koff..koff + d]);
                 }
             }
-            let ooff = (t * h + hh) * d;
-            row.finish(&mut out.data[ooff..ooff + d]);
-        }
-    }
+            row.finish_into(out_row);
+        },
+    );
     out
+}
+
+/// MoBA attention with a precomputed gate, single-threaded.
+pub fn moba_attention_gated(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    gate: &Gate,
+    block_size: usize,
+) -> Tensor {
+    moba_attention_gated_par(q, k, v, gate, block_size, 1)
+}
+
+/// Two-pass MoBA end-to-end (gate materialized, then block-sparse
+/// attention), parallel over head×query rows.
+pub fn moba_attention_par(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    block_size: usize,
+    topk: usize,
+    workers: usize,
+) -> Tensor {
+    let gate = moba_gate(q, k, block_size, topk);
+    moba_attention_gated_par(q, k, v, &gate, block_size, workers)
 }
 
 /// MoBA attention end-to-end: gate + block-sparse streaming attention.
@@ -148,8 +235,238 @@ pub fn moba_attention(
     block_size: usize,
     topk: usize,
 ) -> Tensor {
-    let gate = moba_gate(q, k, block_size, topk);
-    moba_attention_gated(q, k, v, &gate, block_size)
+    moba_attention_par(q, k, v, block_size, topk, 1)
+}
+
+// ---------------------------------------------------------------------------
+// fused single-pass MoBA (Flash-MoBA style)
+// ---------------------------------------------------------------------------
+
+/// Per-worker scratch for the fused kernel: one softmax state, the causal
+/// affinity scores, the select-nth workspace and a per-block token-score
+/// buffer — no allocation happens per query row. Shared with the fused
+/// decode path in `sparse::backend`.
+pub(crate) struct FusedScratch {
+    row: OnlineRow,
+    scores: Vec<f32>,
+    select: Vec<f32>,
+    sbuf: Vec<f32>,
+}
+
+impl FusedScratch {
+    pub(crate) fn new(d: usize, nb: usize, block_size: usize) -> FusedScratch {
+        FusedScratch {
+            row: OnlineRow::new(d),
+            scores: vec![0.0; nb],
+            select: vec![0.0; nb],
+            sbuf: vec![0.0; block_size],
+        }
+    }
+
+    /// Grow the per-block buffers to hold `nb` blocks — lets a scratch
+    /// stored on a decode backend live across tokens as the sequence (and
+    /// block count) grows, instead of reallocating per token.
+    pub(crate) fn ensure_blocks(&mut self, nb: usize) {
+        if self.scores.len() < nb {
+            self.scores.resize(nb, 0.0);
+            self.select.resize(nb, 0.0);
+        }
+    }
+}
+
+/// Fused gate+attention: representative scoring, top-k selection and
+/// online-softmax block streaming interleaved in ONE pass per query row —
+/// no materialized `Gate`, no `[H, N, nb]` affinity tensor, nothing
+/// retained between rows beyond the per-worker scratch.
+///
+/// Bit-identical to `moba_attention` (the two-pass path):
+///
+/// - pooling is the shared `mean_pool_blocks` (one O(N·D) pass over K);
+/// - each history score runs the same sequential multiply-add chain as
+///   `gate::affinity_scores`, with the same `-i·1e-6` tie-break bias
+///   (four chains are interleaved for ILP; each chain's internal order
+///   is unchanged);
+/// - scores are computed for *causal* blocks only. This cannot change
+///   the selection: every future block's biased score is `-BIG` (the
+///   `-i·1e-6` bias is absorbed at f32 precision), strictly below any
+///   causal score, so the top-k of the full row is the top-k of its
+///   causal prefix with `k` clamped to the causal count — the same
+///   clamp `moba_gate`'s threshold test performs implicitly. (Like the
+///   bias scheme itself, this assumes affinity magnitudes stay below
+///   1e30.)
+/// - the threshold is the same `select_nth_unstable_by`/`total_cmp`
+///   k-th-largest, the selection test the same `score >= kth`;
+/// - selected blocks stream in ascending order through the same
+///   `dot`·scale / `OnlineRow::push` sequence (token scores for a block
+///   are precomputed into a buffer via [`dot2`] pairs — identical values,
+///   then folded in the identical order).
+pub fn fused_moba_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    block_size: usize,
+    topk: usize,
+    workers: usize,
+) -> Tensor {
+    let (n, h, d) = (q.shape[0], q.shape[1], q.shape[2]);
+    assert!(block_size > 0);
+    let nb = (n + block_size - 1) / block_size;
+    let pooled = mean_pool_blocks(k, block_size);
+    // transpose representatives to per-head contiguous rows
+    // ([nb, H, D] -> [H, nb, D]): pure data movement for gate-scan
+    // locality; every arithmetic op still sees the same operands.
+    let mut poolh = vec![0.0f32; h * nb * d];
+    for i in 0..nb {
+        for hh in 0..h {
+            let src = (i * h + hh) * d;
+            let dst = (hh * nb + i) * d;
+            poolh[dst..dst + d].copy_from_slice(&pooled.data[src..src + d]);
+        }
+    }
+    fused_moba_attention_with_reps(q, k, v, block_size, topk, workers, &poolh, nb)
+}
+
+/// The fused pass against *precomputed* per-head representative slabs:
+/// `reps[hh * reps_stride * D ..]` holds head `hh`'s `[nb, D]` means,
+/// `reps_stride >= nb` blocks. The values must equal
+/// `mean_pool_blocks`'s bit-for-bit — the `BlockPoolCache` running-sum
+/// means satisfy this (pinned by its tests), which is how the fused
+/// backend's prefill reuses its cache pooling instead of pooling K a
+/// second time.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fused_moba_attention_with_reps(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    block_size: usize,
+    topk: usize,
+    workers: usize,
+    reps: &[f32],
+    reps_stride: usize,
+) -> Tensor {
+    assert!(block_size > 0 && topk > 0);
+    let (n, h, d) = (q.shape[0], q.shape[1], q.shape[2]);
+    let scale = 1.0 / (d as f32).sqrt();
+    let nb = (n + block_size - 1) / block_size;
+    debug_assert!(reps_stride >= nb && reps.len() >= h * reps_stride * d);
+    let kk = topk.min(nb);
+    let mut out = Tensor::zeros(&[n, h, d]);
+    for_each_slot(
+        &mut out.data,
+        d,
+        workers,
+        || FusedScratch::new(d, nb, block_size),
+        |scratch, slot, out_row| {
+            let (t, hh) = (slot / h, slot % h);
+            let qrow = &q.data[(t * h + hh) * d..(t * h + hh) * d + d];
+            let head = hh * reps_stride * d;
+            let reps_h = &reps[head..head + nb * d];
+            let (kd, vd) = (&k.data[..], &v.data[..]);
+            fused_row(
+                qrow, kd, vd, reps_h, h, hh, d, block_size, kk, t, scale, scratch, out_row,
+            );
+        },
+    );
+    out
+}
+
+/// One fused query row: causal-only gate scores → k-th-largest threshold
+/// → selected-block streaming, all against the per-head representative
+/// slab `reps` (`[nb, D]` contiguous). `k`/`v` are `[*, H, D]` row-major
+/// slabs — the batch kernels pass tensor data, the cached decode path
+/// passes the KV cache's backing storage (same layout by design).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fused_row(
+    qrow: &[f32],
+    k: &[f32],
+    v: &[f32],
+    reps: &[f32],
+    h: usize,
+    hh: usize,
+    d: usize,
+    block_size: usize,
+    kk: usize,
+    t: usize,
+    scale: f32,
+    scratch: &mut FusedScratch,
+    out_row: &mut [f32],
+) {
+    let cur = t / block_size;
+    let nc = cur + 1; // causal block count for this row
+    let kk = kk.min(nc);
+
+    // gate scores over history blocks, four interleaved chains for ILP
+    let scores = &mut scratch.scores[..nc];
+    let mut i = 0;
+    while i + 4 <= cur {
+        let p0 = &reps[i * d..(i + 1) * d];
+        let p1 = &reps[(i + 1) * d..(i + 2) * d];
+        let p2 = &reps[(i + 2) * d..(i + 3) * d];
+        let p3 = &reps[(i + 3) * d..(i + 4) * d];
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for (dd, &qv) in qrow.iter().enumerate() {
+            a0 += qv * p0[dd];
+            a1 += qv * p1[dd];
+            a2 += qv * p2[dd];
+            a3 += qv * p3[dd];
+        }
+        scores[i] = a0 - i as f32 * 1e-6;
+        scores[i + 1] = a1 - (i + 1) as f32 * 1e-6;
+        scores[i + 2] = a2 - (i + 2) as f32 * 1e-6;
+        scores[i + 3] = a3 - (i + 3) as f32 * 1e-6;
+        i += 4;
+    }
+    while i < cur {
+        let p = &reps[i * d..(i + 1) * d];
+        let mut a = 0.0f32;
+        for (dd, &qv) in qrow.iter().enumerate() {
+            a += qv * p[dd];
+        }
+        scores[i] = a - i as f32 * 1e-6;
+        i += 1;
+    }
+    scores[cur] = BIG - cur as f32 * 1e-6; // current block forced
+
+    // k-th-largest threshold, exactly moba_gate's selection arithmetic
+    let select = &mut scratch.select[..nc];
+    select.copy_from_slice(scores);
+    let (_, kth, _) = select.select_nth_unstable_by(kk - 1, |a, b| b.total_cmp(a));
+    let kth = *kth;
+
+    // stream the selected blocks in ascending order; the selection test
+    // is the same *positive* `>=` as `moba_gate`'s, so NaN scores fall
+    // out unselected in both paths (a negated `< kth` skip would invert
+    // NaN handling and break the bit-identity contract)
+    let row = &mut scratch.row;
+    row.reset();
+    for b in 0..nc {
+        if scores[b] >= kth {
+            let lo = b * block_size;
+            let hi = ((b + 1) * block_size).min(t + 1); // causal inside current block
+            // token scores for the whole block first (independent dot
+            // pairs overlap their latency chains), then fold in token
+            // order — exactly the two-pass dot·scale / push sequence.
+            let sbuf = &mut scratch.sbuf[..hi - lo];
+            let mut j = lo;
+            while j + 2 <= hi {
+                let o0 = (j * h + hh) * d;
+                let o1 = ((j + 1) * h + hh) * d;
+                let (s0, s1) = dot2(qrow, &k[o0..o0 + d], &k[o1..o1 + d]);
+                sbuf[j - lo] = s0 * scale;
+                sbuf[j + 1 - lo] = s1 * scale;
+                j += 2;
+            }
+            if j < hi {
+                let o = (j * h + hh) * d;
+                sbuf[j - lo] = dot(qrow, &k[o..o + d]) * scale;
+            }
+            for (jj, &s) in sbuf.iter().enumerate() {
+                let voff = ((lo + jj) * h + hh) * d;
+                row.push(s, &v[voff..voff + d]);
+            }
+        }
+    }
+    row.finish_into(out_row);
 }
 
 #[cfg(test)]
@@ -271,5 +588,73 @@ mod tests {
         let v = rand_t(&[32, 1, 8], 17);
         let a = moba_attention(&q, &k, &v, 8, 2);
         assert!(a.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn dot2_bitwise_matches_two_dots() {
+        // every length, including non-multiples of the 4-lane unroll
+        for d in 1..=19usize {
+            let a = rand_t(&[d, 1, 1], 100 + d as u64);
+            let b0 = rand_t(&[d, 1, 1], 200 + d as u64);
+            let b1 = rand_t(&[d, 1, 1], 300 + d as u64);
+            let (s0, s1) = dot2(&a.data, &b0.data, &b1.data);
+            assert_eq!(s0.to_bits(), dot(&a.data, &b0.data).to_bits(), "d={d}");
+            assert_eq!(s1.to_bits(), dot(&a.data, &b1.data).to_bits(), "d={d}");
+        }
+    }
+
+    #[test]
+    fn fused_bitwise_matches_two_pass() {
+        // divisible and ragged lengths, several (block, topk) geometries
+        for &(n, bs, topk, seed) in
+            &[(64usize, 16usize, 2usize, 21u64), (52, 16, 2, 24), (96, 32, 3, 27), (37, 8, 4, 30)]
+        {
+            let q = rand_t(&[n, 2, 8], seed);
+            let k = rand_t(&[n, 2, 8], seed + 1);
+            let v = rand_t(&[n, 2, 8], seed + 2);
+            let two_pass = moba_attention(&q, &k, &v, bs, topk);
+            let fused = fused_moba_attention(&q, &k, &v, bs, topk, 1);
+            assert_eq!(fused.data, two_pass.data, "n={n} bs={bs} topk={topk}");
+        }
+    }
+
+    #[test]
+    fn parallel_kernels_bitwise_match_single_thread() {
+        let q = rand_t(&[52, 3, 8], 40);
+        let k = rand_t(&[52, 3, 8], 41);
+        let v = rand_t(&[52, 3, 8], 42);
+        let gate = moba_gate(&q, &k, 16, 2);
+        for workers in [2usize, 4, 16] {
+            assert_eq!(
+                full_attention_par(&q, &k, &v, workers).data,
+                full_attention(&q, &k, &v).data,
+                "full workers={workers}"
+            );
+            assert_eq!(
+                moba_attention_par(&q, &k, &v, 16, 2, workers).data,
+                moba_attention(&q, &k, &v, 16, 2).data,
+                "moba workers={workers}"
+            );
+            assert_eq!(
+                moba_attention_gated_par(&q, &k, &v, &gate, 16, workers).data,
+                moba_attention_gated(&q, &k, &v, &gate, 16).data,
+                "gated workers={workers}"
+            );
+            assert_eq!(
+                fused_moba_attention(&q, &k, &v, 16, 2, workers).data,
+                fused_moba_attention(&q, &k, &v, 16, 2, 1).data,
+                "fused workers={workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_covering_topk_equals_full() {
+        let q = rand_t(&[48, 1, 8], 50);
+        let k = rand_t(&[48, 1, 8], 51);
+        let v = rand_t(&[48, 1, 8], 52);
+        let a = fused_moba_attention(&q, &k, &v, 16, 3, 1);
+        let b = full_attention(&q, &k, &v);
+        assert!(a.max_abs_diff(&b) < 1e-5);
     }
 }

@@ -2,20 +2,27 @@
 //! attention (serving engine, router, experiments, benches) goes through
 //! the [`AttentionBackend`] trait instead of hard-wired kernel calls.
 //!
-//! Three implementations:
+//! Four implementations:
 //!
 //! - [`FullAttention`] — causal full attention; decode *recomputes* the
 //!   whole sequence per token (O(N²·D) per step), the honest model of a
 //!   serving path with no KV cache.
-//! - [`MobaAttention`] — the existing gated block-sparse kernel; decode
+//! - [`MobaAttention`] — the two-pass gated block-sparse kernel; decode
 //!   also recomputes (gate + sparse attention over the whole prefix).
 //! - [`CachedDecodeBackend`] — prefill once, then O(k·B·D) incremental
 //!   decode against [`KvCache`] + [`BlockPoolCache`]: each step gates
 //!   against the cached block representatives (O(N/B·D)) and attends only
-//!   the top-k selected blocks. Its outputs are bit-identical to the
-//!   recompute backends (same arithmetic in the same order), which the
-//!   parity tests in `tests/property_invariants.rs` and
-//!   `tests/golden_parity.rs` pin down.
+//!   the top-k selected blocks.
+//! - [`FusedMobaAttention`] — the Flash-MoBA-style hot path: prefill runs
+//!   the fused single-pass kernel (scoring, top-k selection and
+//!   online-softmax streaming interleaved per query row, no materialized
+//!   `Gate`), decode runs the same fused row against the caches.
+//!
+//! All backends take a `workers` count (see `sparse::parallel`); outputs
+//! are bit-identical across worker counts AND across backends of the same
+//! math (fused vs two-pass, cached vs recompute) — same arithmetic in the
+//! same order — which the parity tests in `tests/property_invariants.rs`,
+//! `tests/thread_invariance.rs` and `tests/golden_parity.rs` pin down.
 //!
 //! The trait exposes both the batch path (`forward`, prefill-shaped) and
 //! the incremental path (`prefill` + `decode`), plus the gate for
@@ -25,15 +32,17 @@ use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
 
-use super::attention::{dot, full_attention, moba_attention, OnlineRow};
+use super::attention::{
+    dot, full_attention_par, fused_moba_attention, fused_moba_attention_with_reps, fused_row,
+    moba_attention_par, FusedScratch, OnlineRow,
+};
 use super::gate::{moba_gate, Gate};
 use super::kv_cache::{BlockPoolCache, KvCache};
 
-/// Forced-selection / exclusion magnitude — must match `gate::affinity_scores`.
-const BIG: f32 = 1e30;
-
 /// A swappable attention implementation with an incremental decode state.
-pub trait AttentionBackend {
+/// `Send` so whole decode sessions can migrate onto scheduler worker
+/// threads (`serve::scheduler`).
+pub trait AttentionBackend: Send {
     /// Stable identifier for logs, benches and CLI selection.
     fn name(&self) -> &'static str;
 
@@ -75,13 +84,27 @@ fn last_row(out: &Tensor) -> Vec<f32> {
 pub struct FullAttention {
     heads: usize,
     head_dim: usize,
+    workers: usize,
     q_hist: Vec<f32>,
     cache: KvCache,
 }
 
 impl FullAttention {
     pub fn new(heads: usize, head_dim: usize) -> FullAttention {
-        FullAttention { heads, head_dim, q_hist: Vec::new(), cache: KvCache::new(heads, head_dim) }
+        FullAttention {
+            heads,
+            head_dim,
+            workers: 1,
+            q_hist: Vec::new(),
+            cache: KvCache::new(heads, head_dim),
+        }
+    }
+
+    /// Spread batch/prefill rows over `workers` threads (bit-identical
+    /// output for any count).
+    pub fn with_workers(mut self, workers: usize) -> FullAttention {
+        self.workers = workers.max(1);
+        self
     }
 
     fn history_tensors(&self) -> (Tensor, Tensor, Tensor) {
@@ -98,7 +121,7 @@ impl AttentionBackend for FullAttention {
     }
 
     fn forward(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
-        full_attention(q, k, v)
+        full_attention_par(q, k, v, self.workers)
     }
 
     fn reset(&mut self) {
@@ -110,14 +133,14 @@ impl AttentionBackend for FullAttention {
         debug_assert!(self.cache.is_empty(), "prefill on non-empty state");
         self.q_hist.extend_from_slice(&q.data);
         self.cache.append_tensors(k, v);
-        full_attention(q, k, v)
+        full_attention_par(q, k, v, self.workers)
     }
 
     fn decode(&mut self, q_row: &[f32], k_row: &[f32], v_row: &[f32]) -> Vec<f32> {
         self.q_hist.extend_from_slice(q_row);
         self.cache.append(k_row, v_row);
         let (q, k, v) = self.history_tensors();
-        last_row(&full_attention(&q, &k, &v))
+        last_row(&full_attention_par(&q, &k, &v, self.workers))
     }
 
     fn seq_len(&self) -> usize {
@@ -125,13 +148,14 @@ impl AttentionBackend for FullAttention {
     }
 }
 
-/// MoBA gate + block-sparse attention; decode recomputes gate and
-/// attention over the entire prefix each step.
+/// MoBA gate + block-sparse attention (two passes); decode recomputes
+/// gate and attention over the entire prefix each step.
 pub struct MobaAttention {
     heads: usize,
     head_dim: usize,
     block_size: usize,
     topk: usize,
+    workers: usize,
     q_hist: Vec<f32>,
     cache: KvCache,
 }
@@ -144,9 +168,17 @@ impl MobaAttention {
             head_dim,
             block_size,
             topk,
+            workers: 1,
             q_hist: Vec::new(),
             cache: KvCache::new(heads, head_dim),
         }
+    }
+
+    /// Spread batch/prefill rows over `workers` threads (bit-identical
+    /// output for any count).
+    pub fn with_workers(mut self, workers: usize) -> MobaAttention {
+        self.workers = workers.max(1);
+        self
     }
 
     pub fn block_size(&self) -> usize {
@@ -164,7 +196,7 @@ impl AttentionBackend for MobaAttention {
     }
 
     fn forward(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
-        moba_attention(q, k, v, self.block_size, self.topk)
+        moba_attention_par(q, k, v, self.block_size, self.topk, self.workers)
     }
 
     fn gate(&self, q: &Tensor, k: &Tensor) -> Option<Gate> {
@@ -180,7 +212,7 @@ impl AttentionBackend for MobaAttention {
         debug_assert!(self.cache.is_empty(), "prefill on non-empty state");
         self.q_hist.extend_from_slice(&q.data);
         self.cache.append_tensors(k, v);
-        moba_attention(q, k, v, self.block_size, self.topk)
+        moba_attention_par(q, k, v, self.block_size, self.topk, self.workers)
     }
 
     fn decode(&mut self, q_row: &[f32], k_row: &[f32], v_row: &[f32]) -> Vec<f32> {
@@ -189,12 +221,13 @@ impl AttentionBackend for MobaAttention {
         let n = self.cache.len();
         let q = Tensor::from_vec(&[n, self.heads, self.head_dim], self.q_hist.clone())
             .expect("query history layout is always consistent");
-        let out = moba_attention(
+        let out = moba_attention_par(
             &q,
             &self.cache.k_tensor(),
             &self.cache.v_tensor(),
             self.block_size,
             self.topk,
+            self.workers,
         );
         last_row(&out)
     }
@@ -207,6 +240,154 @@ impl AttentionBackend for MobaAttention {
 // ---------------------------------------------------------------------------
 // cached incremental decode
 // ---------------------------------------------------------------------------
+
+/// Materialized per-head block-representative slabs (`[H, cap, D]`) kept
+/// in sync with a `BlockPoolCache` — the slabs the fused gate scans.
+/// Steady-state decode sync is O(H·D): a token append changes exactly one
+/// block's running sum (the last), so only that block's means refresh; a
+/// full refill happens only when the block capacity grows. Every value is
+/// `sum * (1/count)` from the pool, so the slab always equals what
+/// `means_for_head_into` would recompute, bit-for-bit.
+struct RepsCache {
+    /// per-head block capacity of `data` (grows in powers of two)
+    cap: usize,
+    data: Vec<f32>,
+}
+
+impl RepsCache {
+    fn new() -> RepsCache {
+        RepsCache { cap: 0, data: Vec::new() }
+    }
+
+    fn clear(&mut self) {
+        self.cap = 0;
+        self.data.clear();
+    }
+
+    fn stride(&self) -> usize {
+        self.cap
+    }
+
+    /// Head `hh`'s `[nb, D]` slab.
+    fn head_slab(&self, hh: usize, nb: usize, d: usize) -> &[f32] {
+        let off = hh * self.cap * d;
+        &self.data[off..off + nb * d]
+    }
+
+    /// Refresh after pool appends. `full` forces rebuilding every block
+    /// (prefill); otherwise only the last block — the only one a single
+    /// appended token can touch — is refreshed, unless capacity grew.
+    fn sync(&mut self, pool: &BlockPoolCache, heads: usize, d: usize, full: bool) {
+        let nb = pool.n_blocks();
+        if nb == 0 {
+            return;
+        }
+        if full || nb > self.cap {
+            self.cap = self.cap.max(nb.next_power_of_two());
+            self.data.clear();
+            self.data.resize(heads * self.cap * d, 0.0);
+            for hh in 0..heads {
+                let off = hh * self.cap * d;
+                pool.means_for_head_into(hh, &mut self.data[off..off + nb * d]);
+            }
+        } else {
+            for hh in 0..heads {
+                let off = (hh * self.cap + (nb - 1)) * d;
+                pool.mean_into(nb - 1, hh, &mut self.data[off..off + d]);
+            }
+        }
+    }
+}
+
+/// The fused-decode state bundle: KV storage, running-sum pooling, the
+/// materialized representative slabs and the per-token scratch, with the
+/// append→sync ordering encapsulated in one place. Shared by
+/// `CachedDecodeBackend` and `FusedMobaAttention` so their lifecycles
+/// cannot drift (the `RepsCache` contract — sync after every append,
+/// full rebuild after bulk ingest — lives here and nowhere else).
+struct FusedDecodeState {
+    cache: KvCache,
+    pool: BlockPoolCache,
+    reps: RepsCache,
+    scratch: FusedScratch,
+}
+
+impl FusedDecodeState {
+    fn new(heads: usize, head_dim: usize, block_size: usize) -> FusedDecodeState {
+        FusedDecodeState {
+            cache: KvCache::new(heads, head_dim),
+            pool: BlockPoolCache::new(block_size, heads, head_dim),
+            reps: RepsCache::new(),
+            scratch: FusedScratch::new(head_dim, 0, block_size),
+        }
+    }
+
+    fn clear(&mut self) {
+        self.cache.clear();
+        self.pool.clear();
+        self.reps.clear();
+    }
+
+    /// Bulk-ingest a prompt. `sync_reps` is false for dense-decode
+    /// backends that never gate (the pool still accumulates so a later
+    /// policy could resume, matching the previous behavior).
+    fn ingest_prompt(&mut self, k: &Tensor, v: &Tensor, sync_reps: bool) {
+        self.cache.append_tensors(k, v);
+        self.pool.append_tensor(k);
+        if sync_reps {
+            let (h, d) = (self.cache.heads(), self.cache.head_dim());
+            self.reps.sync(&self.pool, h, d, true);
+        }
+    }
+
+    /// Append one token's K/V and keep the representative slabs current.
+    fn append_token(&mut self, k_row: &[f32], v_row: &[f32], sync_reps: bool) {
+        self.cache.append(k_row, v_row);
+        self.pool.append(k_row);
+        if sync_reps {
+            let (h, d) = (self.cache.heads(), self.cache.head_dim());
+            self.reps.sync(&self.pool, h, d, false);
+        }
+    }
+
+    /// The representative slabs + per-head stride (in blocks), for the
+    /// fused prefill to reuse instead of pooling K a second time.
+    fn reps_slab(&self) -> (&[f32], usize) {
+        (&self.reps.data, self.reps.stride())
+    }
+
+    /// One fused decode row: gate against the cached representatives,
+    /// select top-k, stream the selected blocks — all in a single pass
+    /// per head (`attention::fused_row` running directly over the cache's
+    /// `[len, H, D]` storage). Runs inline on the calling thread: a
+    /// decode row is microseconds of work, far below thread-spawn cost
+    /// (the `workers` knob applies to prefill; inter-request decode
+    /// parallelism belongs to the scheduler's shards). The scratch lives
+    /// here, so nothing is allocated per token. Bit-identical to
+    /// recomputing `moba_attention` over the whole prefix and taking the
+    /// last row.
+    fn decode_row(&mut self, topk: usize, q_row: &[f32]) -> Vec<f32> {
+        let (h, d) = (self.cache.heads(), self.cache.head_dim());
+        let block_size = self.pool.block_size();
+        let t = self.cache.len() - 1;
+        let scale = 1.0 / (d as f32).sqrt();
+        let nb = self.pool.n_blocks();
+        let kk = topk.min(nb);
+        let (kd, vd) = (self.cache.k_data(), self.cache.v_data());
+        let mut out = vec![0.0f32; self.cache.row_width()];
+        self.scratch.ensure_blocks(nb);
+        for hh in 0..h {
+            let qh = &q_row[hh * d..(hh + 1) * d];
+            let out_row = &mut out[hh * d..(hh + 1) * d];
+            let reps_h = self.reps.head_slab(hh, nb, d);
+            fused_row(
+                qh, kd, vd, reps_h, h, hh, d, block_size, kk, t, scale, &mut self.scratch,
+                out_row,
+            );
+        }
+        out
+    }
+}
 
 /// What a cached decode step computes per token.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -228,8 +409,8 @@ pub struct CachedDecodeBackend {
     policy: DecodePolicy,
     block_size: usize,
     topk: usize,
-    cache: KvCache,
-    pool: BlockPoolCache,
+    workers: usize,
+    state: FusedDecodeState,
 }
 
 impl CachedDecodeBackend {
@@ -245,9 +426,17 @@ impl CachedDecodeBackend {
             policy,
             block_size,
             topk,
-            cache: KvCache::new(heads, head_dim),
-            pool: BlockPoolCache::new(block_size, heads, head_dim),
+            workers: 1,
+            state: FusedDecodeState::new(heads, head_dim, block_size),
         }
+    }
+
+    /// Spread batch/prefill rows over `workers` threads (bit-identical
+    /// output for any count; decode rows run inline — too little work per
+    /// token to pay a spawn).
+    pub fn with_workers(mut self, workers: usize) -> CachedDecodeBackend {
+        self.workers = workers.max(1);
+        self
     }
 
     pub fn policy(&self) -> DecodePolicy {
@@ -257,70 +446,26 @@ impl CachedDecodeBackend {
     /// Resident bytes of the cached decode state (KV payload; the block
     /// pool adds `1/block_size` of that again).
     pub fn payload_bytes(&self) -> usize {
-        self.cache.payload_bytes()
+        self.state.cache.payload_bytes()
     }
 
     /// Dense decode row: stream every cached position, same arithmetic and
     /// order as `full_attention`'s inner loop for the last query row.
+    /// Inline, like the fused decode row.
     fn decode_dense(&self, q_row: &[f32], out: &mut [f32]) {
-        let (h, d) = (self.cache.heads(), self.cache.head_dim());
-        let t = self.cache.len() - 1;
+        let cache = &self.state.cache;
+        let (h, d) = (cache.heads(), cache.head_dim());
+        let t = cache.len() - 1;
         let scale = 1.0 / (d as f32).sqrt();
+        let mut row = OnlineRow::new(d);
         for hh in 0..h {
             let qh = &q_row[hh * d..(hh + 1) * d];
-            let mut row = OnlineRow::new(d);
+            row.reset();
             for j in 0..=t {
-                let s = dot(qh, self.cache.k_at(j, hh)) * scale;
-                row.push(s, self.cache.v_at(j, hh));
+                let s = dot(qh, cache.k_at(j, hh)) * scale;
+                row.push(s, cache.v_at(j, hh));
             }
-            row.finish(&mut out[hh * d..(hh + 1) * d]);
-        }
-    }
-
-    /// Sparse decode row: biased affinity against cached block means
-    /// (plain sequential dot, exactly `gate::affinity_scores`), the same
-    /// `select_nth_unstable_by` threshold as `gate::moba_gate`, then the
-    /// block-sparse streaming loop of `moba_attention_gated`.
-    fn decode_sparse(&self, q_row: &[f32], out: &mut [f32]) {
-        let (h, d) = (self.cache.heads(), self.cache.head_dim());
-        let t = self.cache.len() - 1;
-        let scale = 1.0 / (d as f32).sqrt();
-        let nb = self.pool.n_blocks();
-        let cur = t / self.block_size;
-        let kk = self.topk.min(nb);
-        let mut mean = vec![0.0f32; d];
-        let mut scores = vec![0.0f32; nb];
-        let mut scratch = vec![0.0f32; nb];
-        for hh in 0..h {
-            let qh = &q_row[hh * d..(hh + 1) * d];
-            for (i, score) in scores.iter_mut().enumerate() {
-                *score = if i == cur {
-                    BIG - i as f32 * 1e-6
-                } else if i > cur {
-                    -BIG - i as f32 * 1e-6
-                } else {
-                    self.pool.mean_into(i, hh, &mut mean);
-                    let mut aff = 0.0f32;
-                    for dd in 0..d {
-                        aff += qh[dd] * mean[dd];
-                    }
-                    aff - i as f32 * 1e-6
-                };
-            }
-            scratch.copy_from_slice(&scores);
-            let (_, kth, _) = scratch.select_nth_unstable_by(kk - 1, |a, b| b.total_cmp(a));
-            let kth = *kth;
-            let mut row = OnlineRow::new(d);
-            for (b, &score) in scores.iter().enumerate() {
-                if score >= kth && b <= cur {
-                    let hi = ((b + 1) * self.block_size).min(t + 1);
-                    for j in b * self.block_size..hi {
-                        let s = dot(qh, self.cache.k_at(j, hh)) * scale;
-                        row.push(s, self.cache.v_at(j, hh));
-                    }
-                }
-            }
-            row.finish(&mut out[hh * d..(hh + 1) * d]);
+            row.finish_into(&mut out[hh * d..(hh + 1) * d]);
         }
     }
 }
@@ -335,8 +480,10 @@ impl AttentionBackend for CachedDecodeBackend {
 
     fn forward(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
         match self.policy {
-            DecodePolicy::Full => full_attention(q, k, v),
-            DecodePolicy::Sparse => moba_attention(q, k, v, self.block_size, self.topk),
+            DecodePolicy::Full => full_attention_par(q, k, v, self.workers),
+            DecodePolicy::Sparse => {
+                moba_attention_par(q, k, v, self.block_size, self.topk, self.workers)
+            }
         }
     }
 
@@ -348,31 +495,133 @@ impl AttentionBackend for CachedDecodeBackend {
     }
 
     fn reset(&mut self) {
-        self.cache.clear();
-        self.pool.clear();
+        self.state.clear();
     }
 
     fn prefill(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
-        debug_assert!(self.cache.is_empty(), "prefill on non-empty state");
-        self.cache.append_tensors(k, v);
-        self.pool.append_tensor(k);
+        debug_assert!(self.state.cache.is_empty(), "prefill on non-empty state");
+        self.state.ingest_prompt(k, v, self.policy == DecodePolicy::Sparse);
         self.forward(q, k, v)
     }
 
     fn decode(&mut self, q_row: &[f32], k_row: &[f32], v_row: &[f32]) -> Vec<f32> {
-        self.cache.append(k_row, v_row);
-        self.pool.append(k_row);
-        let w = self.cache.row_width();
-        let mut out = vec![0.0f32; w];
+        self.state.append_token(k_row, v_row, self.policy == DecodePolicy::Sparse);
         match self.policy {
-            DecodePolicy::Full => self.decode_dense(q_row, &mut out),
-            DecodePolicy::Sparse => self.decode_sparse(q_row, &mut out),
+            DecodePolicy::Full => {
+                let mut out = vec![0.0f32; self.state.cache.row_width()];
+                self.decode_dense(q_row, &mut out);
+                out
+            }
+            DecodePolicy::Sparse => self.state.decode_row(self.topk, q_row),
         }
-        out
     }
 
     fn seq_len(&self) -> usize {
-        self.cache.len()
+        self.state.cache.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fused single-pass backend (Flash-MoBA style)
+// ---------------------------------------------------------------------------
+
+/// The fused hot path: batch/prefill through `fused_moba_attention`
+/// (gating, selection and streaming interleaved in one pass — no
+/// materialized `Gate`), incremental decode through the same fused row
+/// over [`KvCache`] + [`BlockPoolCache`]. Outputs are bit-identical to
+/// `MobaAttention` / `CachedDecodeBackend(Sparse)`; only the schedule
+/// differs.
+pub struct FusedMobaAttention {
+    block_size: usize,
+    topk: usize,
+    workers: usize,
+    state: FusedDecodeState,
+}
+
+impl FusedMobaAttention {
+    pub fn new(
+        heads: usize,
+        head_dim: usize,
+        block_size: usize,
+        topk: usize,
+    ) -> FusedMobaAttention {
+        assert!(block_size > 0 && topk > 0);
+        FusedMobaAttention {
+            block_size,
+            topk,
+            workers: 1,
+            state: FusedDecodeState::new(heads, head_dim, block_size),
+        }
+    }
+
+    /// Spread batch/prefill rows over `workers` threads (bit-identical
+    /// output for any count; decode rows run inline — too little work per
+    /// token to pay a spawn).
+    pub fn with_workers(mut self, workers: usize) -> FusedMobaAttention {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn topk(&self) -> usize {
+        self.topk
+    }
+
+    /// Resident bytes of the cached decode state.
+    pub fn payload_bytes(&self) -> usize {
+        self.state.cache.payload_bytes()
+    }
+}
+
+impl AttentionBackend for FusedMobaAttention {
+    fn name(&self) -> &'static str {
+        "fused"
+    }
+
+    fn forward(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        fused_moba_attention(q, k, v, self.block_size, self.topk, self.workers)
+    }
+
+    /// The gate the fused pass applies implicitly, materialized for
+    /// dispatch-plan construction (off the hot path: the fused kernel
+    /// itself never builds this).
+    fn gate(&self, q: &Tensor, k: &Tensor) -> Option<Gate> {
+        Some(moba_gate(q, k, self.block_size, self.topk))
+    }
+
+    fn reset(&mut self) {
+        self.state.clear();
+    }
+
+    fn prefill(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        debug_assert!(self.state.cache.is_empty(), "prefill on non-empty state");
+        self.state.ingest_prompt(k, v, true);
+        // reuse the cache's running-sum pooling as the fused pass's
+        // representatives (bit-identical to mean_pool_blocks) instead of
+        // pooling K a second time
+        let (reps, stride) = self.state.reps_slab();
+        fused_moba_attention_with_reps(
+            q,
+            k,
+            v,
+            self.block_size,
+            self.topk,
+            self.workers,
+            reps,
+            stride,
+        )
+    }
+
+    fn decode(&mut self, q_row: &[f32], k_row: &[f32], v_row: &[f32]) -> Vec<f32> {
+        self.state.append_token(k_row, v_row, true);
+        self.state.decode_row(self.topk, q_row)
+    }
+
+    fn seq_len(&self) -> usize {
+        self.state.cache.len()
     }
 }
 
@@ -391,6 +640,8 @@ pub enum BackendKind {
     CachedFull,
     /// `CachedDecodeBackend` with `DecodePolicy::Sparse`
     CachedSparse,
+    /// `FusedMobaAttention` (fused single-pass prefill + cached decode)
+    Fused,
 }
 
 impl BackendKind {
@@ -400,8 +651,9 @@ impl BackendKind {
             "moba" => BackendKind::RecomputeMoba,
             "cached-full" => BackendKind::CachedFull,
             "cached-sparse" | "cached" => BackendKind::CachedSparse,
+            "fused" => BackendKind::Fused,
             other => bail!(
-                "unknown backend '{other}' (expected full | moba | cached-full | cached-sparse)"
+                "unknown backend '{other}' (expected full|moba|cached-full|cached-sparse|fused)"
             ),
         })
     }
@@ -412,11 +664,43 @@ impl BackendKind {
             BackendKind::RecomputeMoba => "moba",
             BackendKind::CachedFull => "cached-full",
             BackendKind::CachedSparse => "cached-sparse",
+            BackendKind::Fused => "fused",
         }
     }
 }
 
-/// Build a boxed backend of the given kind and geometry.
+/// Build a boxed backend of the given kind and geometry with an explicit
+/// worker count for its batch/prefill (and cached-decode head) loops.
+pub fn build_backend_par(
+    kind: BackendKind,
+    heads: usize,
+    head_dim: usize,
+    block_size: usize,
+    topk: usize,
+    workers: usize,
+) -> Box<dyn AttentionBackend> {
+    match kind {
+        BackendKind::RecomputeFull => {
+            Box::new(FullAttention::new(heads, head_dim).with_workers(workers))
+        }
+        BackendKind::RecomputeMoba => {
+            Box::new(MobaAttention::new(heads, head_dim, block_size, topk).with_workers(workers))
+        }
+        BackendKind::CachedFull => Box::new(
+            CachedDecodeBackend::new(heads, head_dim, block_size, topk, DecodePolicy::Full)
+                .with_workers(workers),
+        ),
+        BackendKind::CachedSparse => Box::new(
+            CachedDecodeBackend::new(heads, head_dim, block_size, topk, DecodePolicy::Sparse)
+                .with_workers(workers),
+        ),
+        BackendKind::Fused => Box::new(
+            FusedMobaAttention::new(heads, head_dim, block_size, topk).with_workers(workers),
+        ),
+    }
+}
+
+/// Build a boxed backend of the given kind and geometry, single-threaded.
 pub fn build_backend(
     kind: BackendKind,
     heads: usize,
@@ -424,31 +708,13 @@ pub fn build_backend(
     block_size: usize,
     topk: usize,
 ) -> Box<dyn AttentionBackend> {
-    match kind {
-        BackendKind::RecomputeFull => Box::new(FullAttention::new(heads, head_dim)),
-        BackendKind::RecomputeMoba => {
-            Box::new(MobaAttention::new(heads, head_dim, block_size, topk))
-        }
-        BackendKind::CachedFull => Box::new(CachedDecodeBackend::new(
-            heads,
-            head_dim,
-            block_size,
-            topk,
-            DecodePolicy::Full,
-        )),
-        BackendKind::CachedSparse => Box::new(CachedDecodeBackend::new(
-            heads,
-            head_dim,
-            block_size,
-            topk,
-            DecodePolicy::Sparse,
-        )),
-    }
+    build_backend_par(kind, heads, head_dim, block_size, topk, 1)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse::attention::{full_attention, moba_attention};
     use crate::util::rng::Rng;
 
     fn rand_t(shape: &[usize], seed: u64) -> Tensor {
@@ -482,6 +748,11 @@ mod tests {
             cached.forward(&q, &k, &v).data,
             moba_attention(&q, &k, &v, 16, 2).data
         );
+        let fused = FusedMobaAttention::new(2, 8, 16, 2);
+        assert_eq!(
+            fused.forward(&q, &k, &v).data,
+            moba_attention(&q, &k, &v, 16, 2).data
+        );
     }
 
     #[test]
@@ -509,6 +780,24 @@ mod tests {
                 moba_attention(&sub(&q, t + 1), &sub(&k, t + 1), &sub(&v, t + 1), bs, topk);
             assert_eq!(got.as_slice(), row(&prefix, t), "t={t}");
         }
+    }
+
+    #[test]
+    fn fused_decode_bitwise_matches_batch_rows() {
+        // the fused backend's decode must ALSO reproduce the two-pass
+        // batch kernel's last row bit-for-bit at every (ragged) length
+        let n = 53;
+        let (bs, topk) = (16, 2);
+        let (q, k, v) =
+            (rand_t(&[n, 2, 8], 31), rand_t(&[n, 2, 8], 32), rand_t(&[n, 2, 8], 33));
+        let mut fused = FusedMobaAttention::new(2, 8, bs, topk);
+        for t in 0..n {
+            let got = fused.decode(row(&q, t), row(&k, t), row(&v, t));
+            let prefix =
+                moba_attention(&sub(&q, t + 1), &sub(&k, t + 1), &sub(&v, t + 1), bs, topk);
+            assert_eq!(got.as_slice(), row(&prefix, t), "t={t}");
+        }
+        assert_eq!(fused.seq_len(), n);
     }
 
     #[test]
@@ -547,6 +836,25 @@ mod tests {
     }
 
     #[test]
+    fn fused_prefill_then_decode_matches_all_decode() {
+        let n = 40;
+        let split = 25; // ragged prefill boundary
+        let (q, k, v) = (rand_t(&[n, 2, 8], 34), rand_t(&[n, 2, 8], 35), rand_t(&[n, 2, 8], 36));
+        let mut a = FusedMobaAttention::new(2, 8, 16, 2);
+        let out = a.prefill(&sub(&q, split), &sub(&k, split), &sub(&v, split));
+        assert_eq!(out.shape, vec![split, 2, 8]);
+        let mut b = FusedMobaAttention::new(2, 8, 16, 2);
+        for t in 0..split {
+            b.decode(row(&q, t), row(&k, t), row(&v, t));
+        }
+        for t in split..n {
+            let ra = a.decode(row(&q, t), row(&k, t), row(&v, t));
+            let rb = b.decode(row(&q, t), row(&k, t), row(&v, t));
+            assert_eq!(ra, rb, "t={t}");
+        }
+    }
+
+    #[test]
     fn gate_exposed_only_by_sparse_backends() {
         let (q, k) = (rand_t(&[32, 1, 8], 16), rand_t(&[32, 1, 8], 17));
         assert!(FullAttention::new(1, 8).gate(&q, &k).is_none());
@@ -558,6 +866,7 @@ mod tests {
         assert!(CachedDecodeBackend::new(1, 8, 16, 2, DecodePolicy::Sparse)
             .gate(&q, &k)
             .is_some());
+        assert!(FusedMobaAttention::new(1, 8, 16, 2).gate(&q, &k).is_some());
     }
 
     #[test]
@@ -568,6 +877,7 @@ mod tests {
             BackendKind::RecomputeMoba,
             BackendKind::CachedFull,
             BackendKind::CachedSparse,
+            BackendKind::Fused,
         ] {
             let mut b = build_backend(kind, 1, 4, 4, 2);
             b.prefill(&q, &k, &v);
@@ -584,10 +894,40 @@ mod tests {
             BackendKind::RecomputeMoba,
             BackendKind::CachedFull,
             BackendKind::CachedSparse,
+            BackendKind::Fused,
         ] {
             assert_eq!(BackendKind::parse(kind.label()).unwrap(), kind);
         }
         assert_eq!(BackendKind::parse("cached").unwrap(), BackendKind::CachedSparse);
         assert!(BackendKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn workers_do_not_change_backend_outputs() {
+        let (q, k, v) = (rand_t(&[37, 2, 8], 60), rand_t(&[37, 2, 8], 61), rand_t(&[37, 2, 8], 62));
+        for kind in [
+            BackendKind::RecomputeFull,
+            BackendKind::RecomputeMoba,
+            BackendKind::CachedFull,
+            BackendKind::CachedSparse,
+            BackendKind::Fused,
+        ] {
+            let mut one = build_backend_par(kind, 2, 8, 16, 2, 1);
+            let mut many = build_backend_par(kind, 2, 8, 16, 2, 4);
+            assert_eq!(
+                one.prefill(&q, &k, &v).data,
+                many.prefill(&q, &k, &v).data,
+                "{} prefill",
+                one.name()
+            );
+            let (qe, ke, ve) =
+                (rand_t(&[1, 2, 8], 63), rand_t(&[1, 2, 8], 64), rand_t(&[1, 2, 8], 65));
+            assert_eq!(
+                one.decode(&qe.data, &ke.data, &ve.data),
+                many.decode(&qe.data, &ke.data, &ve.data),
+                "{} decode",
+                one.name()
+            );
+        }
     }
 }

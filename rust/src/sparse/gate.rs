@@ -7,6 +7,12 @@
 
 use crate::tensor::Tensor;
 
+/// Forced-selection / future-exclusion magnitude of the affinity bias
+/// scheme (current block `+BIG`, future blocks `-BIG`). Shared by the
+/// two-pass gate, the fused streaming kernel and the cached decode path
+/// so the three stay bit-identical.
+pub(crate) const BIG: f32 = 1e30;
+
 /// Boolean gate for all heads/queries: `gate[h][t][i]` says whether query
 /// t of head h attends KV block i.
 #[derive(Clone, Debug)]
@@ -23,9 +29,20 @@ impl Gate {
         self.bits[(h * self.n + t) * self.n_blocks + i]
     }
 
-    /// Selected block indices for one (head, query).
+    /// Selected block indices for one (head, query), ascending, without
+    /// allocating — the form the streaming kernels iterate.
+    pub fn selected_iter(&self, h: usize, t: usize) -> impl Iterator<Item = usize> + '_ {
+        let off = (h * self.n + t) * self.n_blocks;
+        self.bits[off..off + self.n_blocks]
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &b)| b.then_some(i))
+    }
+
+    /// Selected block indices for one (head, query), materialized
+    /// (diagnostics and tests; hot paths use [`Gate::selected_iter`]).
     pub fn selected(&self, h: usize, t: usize) -> Vec<usize> {
-        (0..self.n_blocks).filter(|&i| self.get(h, t, i)).collect()
+        self.selected_iter(h, t).collect()
     }
 
     /// Total selected (query, block) pairs — the routing workload size.
@@ -78,7 +95,6 @@ pub fn mean_pool_blocks(k: &Tensor, block_size: usize) -> Tensor {
 pub fn affinity_scores(q: &Tensor, pooled: &Tensor, block_size: usize) -> Tensor {
     let (n, h, d) = (q.shape[0], q.shape[1], q.shape[2]);
     let nb = pooled.shape[0];
-    const BIG: f32 = 1e30;
     let mut s = Tensor::zeros(&[h, n, nb]);
     for t in 0..n {
         let cur = t / block_size;

@@ -76,6 +76,20 @@ impl KvCache {
         self.len += k.shape[0];
     }
 
+    /// The whole cached key payload as a `[len, H, D]` row-major slab —
+    /// the exact layout the batch kernels index, so the fused decode row
+    /// can run directly over cache storage with zero translation.
+    #[inline]
+    pub(crate) fn k_data(&self) -> &[f32] {
+        &self.k
+    }
+
+    /// The whole cached value payload as a `[len, H, D]` row-major slab.
+    #[inline]
+    pub(crate) fn v_data(&self) -> &[f32] {
+        &self.v
+    }
+
     /// Key slice `[D]` for (token, head).
     #[inline]
     pub fn k_at(&self, t: usize, h: usize) -> &[f32] {
@@ -206,6 +220,22 @@ impl BlockPoolCache {
         }
     }
 
+    /// All of head `h`'s block representatives written contiguously into
+    /// `out` (`[n_blocks, D]`) — the per-head slab the fused decode gate
+    /// scans. Each element is the same `sum * (1/count)` as
+    /// [`BlockPoolCache::mean_into`], bit-for-bit.
+    pub fn means_for_head_into(&self, h: usize, out: &mut [f32]) {
+        let (nb, d) = (self.n_blocks(), self.head_dim);
+        debug_assert_eq!(out.len(), nb * d);
+        for b in 0..nb {
+            let inv = 1.0 / self.counts[b] as f32;
+            let src = (b * self.heads + h) * d;
+            for (o, &s) in out[b * d..(b + 1) * d].iter_mut().zip(&self.sums[src..src + d]) {
+                *o = s * inv;
+            }
+        }
+    }
+
     /// Materialize all representatives as `[n_blocks, H, D]` (diagnostics
     /// and parity tests).
     pub fn pooled_tensor(&self) -> Tensor {
@@ -297,6 +327,23 @@ mod tests {
         let mut mean = [0.0f32; 2];
         pool.mean_into(2, 0, &mut mean);
         assert_eq!(mean, [8.0, 1.0]);
+    }
+
+    #[test]
+    fn per_head_means_match_mean_into() {
+        let k = rand_t(&[29, 3, 8], 7);
+        let mut pool = BlockPoolCache::new(8, 3, 8);
+        pool.append_tensor(&k);
+        let nb = pool.n_blocks();
+        let mut slab = vec![0.0f32; nb * 8];
+        let mut one = [0.0f32; 8];
+        for h in 0..3 {
+            pool.means_for_head_into(h, &mut slab);
+            for b in 0..nb {
+                pool.mean_into(b, h, &mut one);
+                assert_eq!(&slab[b * 8..(b + 1) * 8], &one, "h={h} b={b}");
+            }
+        }
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Pure-Rust MoBA attention stack: gating (paper Eq. 5-6), block-sparse
-//! streaming attention (paper Eq. 2 / Algorithm 1), the causal full
-//! attention baseline, and — new with the serving rewrite — the pluggable
-//! [`AttentionBackend`] trait plus the incremental KV/block-pool caches
-//! behind O(k·B) decode. See `README.md` in this directory for the
-//! backend + cache design.
+//! streaming attention (paper Eq. 2 / Algorithm 1) in two-pass and fused
+//! single-pass (Flash-MoBA style) forms, the causal full attention
+//! baseline, the pluggable [`AttentionBackend`] trait with the
+//! incremental KV/block-pool caches behind O(k·B) decode, and the
+//! head×query-tile multi-core partitioner (`parallel`). See `README.md`
+//! in this directory for the backend/cache design and the
+//! threading/determinism model.
 //!
 //! Roles:
 //! 1. correctness oracle for property tests and golden parity with the
@@ -15,11 +17,16 @@ pub mod attention;
 pub mod backend;
 pub mod gate;
 pub mod kv_cache;
+pub mod parallel;
 
-pub use attention::{full_attention, moba_attention, moba_attention_gated};
+pub use attention::{
+    full_attention, full_attention_par, fused_moba_attention, moba_attention,
+    moba_attention_gated, moba_attention_gated_par, moba_attention_par,
+};
 pub use backend::{
-    build_backend, AttentionBackend, BackendKind, CachedDecodeBackend, DecodePolicy,
-    FullAttention, MobaAttention,
+    build_backend, build_backend_par, AttentionBackend, BackendKind, CachedDecodeBackend,
+    DecodePolicy, FullAttention, FusedMobaAttention, MobaAttention,
 };
 pub use gate::{affinity_scores, mean_pool_blocks, moba_gate, Gate};
 pub use kv_cache::{BlockPoolCache, KvCache};
+pub use parallel::default_workers;

@@ -1,0 +1,201 @@
+//! Multi-core execution for the attention stack: a head×query-tile work
+//! partitioner over scoped threads (no external thread-pool dependency).
+//!
+//! Determinism contract: parallelism NEVER changes results. Work is
+//! partitioned at (head, query)-row granularity — each output row is
+//! computed by exactly one thread with exactly the arithmetic the
+//! single-threaded kernel uses, so outputs are bit-identical for every
+//! worker count (`tests/thread_invariance.rs` pins this). Threads write
+//! disjoint contiguous output ranges; no locks, no atomics, no sharing.
+//!
+//! Worker counts resolve through [`default_workers`]: the `MOBA_WORKERS`
+//! environment variable if set, else `std::thread::available_parallelism`.
+//! Passing `workers <= 1` (or having fewer slots than workers would
+//! justify) runs inline on the calling thread with zero spawn overhead.
+
+use std::ops::Range;
+
+/// Resolved default worker count: `MOBA_WORKERS` env override if set and
+/// positive, else the machine's available parallelism, else 1.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("MOBA_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `0..total` into at most `parts` contiguous, near-equal,
+/// non-empty ranges (the first `total % parts` ranges get one extra
+/// item). Deterministic for a given (total, parts).
+pub fn split_ranges(total: usize, parts: usize) -> Vec<Range<usize>> {
+    if total == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, total);
+    let base = total / parts;
+    let extra = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Partition `out` into `out.len() / slot_width` fixed-width slots and
+/// apply `work(scratch, slot_index, slot)` to every slot, spreading
+/// contiguous slot ranges over `workers` scoped threads. `init` builds
+/// one scratch value per worker, so kernels can reuse accumulators and
+/// score buffers across the queries of their tile instead of allocating
+/// per row.
+///
+/// For a `[N, H, D]` attention output, `slot_width = D` makes slot `i`
+/// the (head, query) row `(t, hh) = (i / H, i % H)` — range boundaries
+/// can cut between the heads of one query, which is exactly the
+/// head×query-tile partitioning the kernels want.
+pub fn for_each_slot<S, I, F>(out: &mut [f32], slot_width: usize, workers: usize, init: I, work: F)
+where
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &mut [f32]) + Sync,
+{
+    assert!(slot_width > 0, "slot_width must be positive");
+    assert_eq!(out.len() % slot_width, 0, "output not a whole number of slots");
+    let total = out.len() / slot_width;
+    if total == 0 {
+        return;
+    }
+    if workers.min(total) <= 1 {
+        let mut scratch = init();
+        for (i, slot) in out.chunks_exact_mut(slot_width).enumerate() {
+            work(&mut scratch, i, slot);
+        }
+        return;
+    }
+    let ranges = split_ranges(total, workers);
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        for range in ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(range.len() * slot_width);
+            rest = tail;
+            let (init, work) = (&init, &work);
+            scope.spawn(move || {
+                let mut scratch = init();
+                for (j, slot) in chunk.chunks_exact_mut(slot_width).enumerate() {
+                    work(&mut scratch, range.start + j, slot);
+                }
+            });
+        }
+    });
+}
+
+/// `(0..n).map(f)` with the index range spread over `workers` scoped
+/// threads. Results come back in index order regardless of which thread
+/// produced them or when it finished.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    if workers.min(n) <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let ranges = split_ranges(n, workers);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|range| {
+                let f = &f;
+                scope.spawn(move || range.map(f).collect::<Vec<T>>())
+            })
+            .collect();
+        let mut out = Vec::with_capacity(n);
+        for h in handles {
+            out.extend(h.join().expect("parallel_map worker panicked"));
+        }
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_ranges_cover_exactly() {
+        for total in [0usize, 1, 2, 7, 8, 100] {
+            for parts in [1usize, 2, 3, 8, 200] {
+                let ranges = split_ranges(total, parts);
+                assert!(ranges.len() <= parts.max(1));
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next, "total={total} parts={parts}");
+                    assert!(r.end > r.start, "empty range");
+                    next = r.end;
+                }
+                assert_eq!(next, total, "total={total} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_ranges_balanced() {
+        let ranges = split_ranges(10, 4);
+        let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+        assert_eq!(lens, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn for_each_slot_matches_serial_for_any_worker_count() {
+        let n_slots = 37;
+        let width = 3;
+        let run = |workers: usize| {
+            let mut out = vec![0.0f32; n_slots * width];
+            for_each_slot(
+                &mut out,
+                width,
+                workers,
+                || 0usize, // scratch: per-worker call counter
+                |calls, i, slot| {
+                    *calls += 1;
+                    for (d, x) in slot.iter_mut().enumerate() {
+                        *x = (i * width + d) as f32 * 0.5;
+                    }
+                },
+            );
+            out
+        };
+        let serial = run(1);
+        for workers in [2usize, 3, 8, 64] {
+            assert_eq!(run(workers), serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn for_each_slot_empty_is_noop() {
+        let mut out: Vec<f32> = Vec::new();
+        for_each_slot(&mut out, 4, 8, || (), |_, _, _| panic!("no slots"));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let serial: Vec<usize> = (0..23).map(|i| i * i).collect();
+        for workers in [1usize, 2, 5, 23, 100] {
+            assert_eq!(parallel_map(23, workers, |i| i * i), serial, "workers={workers}");
+        }
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn default_workers_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

@@ -130,6 +130,26 @@ fn prop_ungated_values_never_leak() {
 }
 
 #[test]
+fn prop_fused_equals_two_pass_bitwise() {
+    // the fused single-pass kernel must be indistinguishable from the
+    // two-pass gate+attend path at every geometry, ragged lengths and
+    // worker counts included
+    sweep("fused == two-pass", |seed| {
+        let mut rng = Rng::new(seed);
+        let (n0, h, d, block, topk) = rand_cfg(&mut rng);
+        let n = n0 + rng.range(0, block); // ragged final length
+        let q = rand_t(&[n, h, d], &mut rng);
+        let k = rand_t(&[n, h, d], &mut rng);
+        let v = rand_t(&[n, h, d], &mut rng);
+        let two_pass = sparse::moba_attention(&q, &k, &v, block, topk);
+        for workers in [1usize, 3] {
+            let fused = sparse::fused_moba_attention(&q, &k, &v, block, topk, workers);
+            assert_eq!(fused.data, two_pass.data, "workers={workers}");
+        }
+    });
+}
+
+#[test]
 fn prop_router_plan_partition() {
     sweep("router partitions gate pairs", |seed| {
         let mut rng = Rng::new(seed);

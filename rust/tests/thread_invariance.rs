@@ -1,0 +1,200 @@
+//! Thread-count invariance and fused-vs-two-pass parity.
+//!
+//! The determinism contract of `sparse::parallel`: worker counts NEVER
+//! change results. Every kernel partitions work at (head, query)-row
+//! granularity and computes each row with a fixed arithmetic order, so
+//! `workers = 1` and `workers = ncpu` must agree *bit-for-bit* — on the
+//! free kernels, on every backend's prefill/decode, and on the sharded
+//! continuous scheduler's served tokens. The fused single-pass kernel is
+//! additionally pinned bit-for-bit against the two-pass gate+attend path
+//! it replaces on the hot path.
+
+use moba::serve::{ContinuousScheduler, Request, SchedulerCfg, ServeCfg, ServeEngine, ToyModel};
+use moba::sparse::{
+    self, build_backend_par, default_workers, fused_moba_attention, moba_attention_par,
+    BackendKind,
+};
+use moba::tensor::Tensor;
+use moba::util::rng::Rng;
+
+fn rand_t(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+}
+
+/// Worker counts worth exercising: serial, a couple of fixed counts that
+/// don't divide typical row counts evenly, and whatever this box has.
+fn worker_counts() -> Vec<usize> {
+    let mut counts = vec![2, 3, 7];
+    let ncpu = default_workers();
+    if !counts.contains(&ncpu) {
+        counts.push(ncpu);
+    }
+    counts
+}
+
+#[test]
+fn free_kernels_are_worker_count_invariant() {
+    // ragged N and heads that don't divide evenly into tiles
+    for &(n, h, d, bs, topk, seed) in
+        &[(70usize, 3usize, 8usize, 16usize, 2usize, 1u64), (128, 2, 16, 32, 3, 5)]
+    {
+        let q = rand_t(&[n, h, d], seed);
+        let k = rand_t(&[n, h, d], seed + 1);
+        let v = rand_t(&[n, h, d], seed + 2);
+        let full_1 = sparse::full_attention(&q, &k, &v);
+        let moba_1 = sparse::moba_attention(&q, &k, &v, bs, topk);
+        let fused_1 = fused_moba_attention(&q, &k, &v, bs, topk, 1);
+        for workers in worker_counts() {
+            assert_eq!(
+                sparse::full_attention_par(&q, &k, &v, workers).data,
+                full_1.data,
+                "full n={n} workers={workers}"
+            );
+            assert_eq!(
+                moba_attention_par(&q, &k, &v, bs, topk, workers).data,
+                moba_1.data,
+                "moba n={n} workers={workers}"
+            );
+            assert_eq!(
+                fused_moba_attention(&q, &k, &v, bs, topk, workers).data,
+                fused_1.data,
+                "fused n={n} workers={workers}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_is_bitwise_equal_to_two_pass() {
+    // the golden fused-vs-two-pass parity: same selections, same
+    // streaming order, same arithmetic — so exactly the same bits,
+    // across geometries including ragged tails and covering top-k
+    for &(n, h, d, bs, topk, seed) in &[
+        (64usize, 2usize, 8usize, 16usize, 2usize, 11u64),
+        (53, 2, 8, 16, 2, 14),   // ragged tail block
+        (96, 1, 16, 32, 3, 17),  // single head
+        (48, 3, 8, 16, 3, 20),   // covering top-k (== full over blocks)
+        (37, 2, 4, 8, 5, 23),    // topk == n_blocks (full coverage)
+    ] {
+        let q = rand_t(&[n, h, d], seed);
+        let k = rand_t(&[n, h, d], seed + 1);
+        let v = rand_t(&[n, h, d], seed + 2);
+        let two_pass = sparse::moba_attention(&q, &k, &v, bs, topk);
+        let fused = fused_moba_attention(&q, &k, &v, bs, topk, 1);
+        assert_eq!(fused.data, two_pass.data, "n={n} h={h} bs={bs} topk={topk}");
+    }
+}
+
+#[test]
+fn backend_prefill_and_decode_are_worker_count_invariant() {
+    let n = 45; // ragged
+    let steps = 7;
+    let (h, d, bs, topk) = (2, 8, 16, 2);
+    let q = rand_t(&[n, h, d], 31);
+    let k = rand_t(&[n, h, d], 32);
+    let v = rand_t(&[n, h, d], 33);
+    let w = h * d;
+    for kind in [
+        BackendKind::RecomputeFull,
+        BackendKind::RecomputeMoba,
+        BackendKind::CachedFull,
+        BackendKind::CachedSparse,
+        BackendKind::Fused,
+    ] {
+        let mut base = build_backend_par(kind, h, d, bs, topk, 1);
+        let split = n - steps;
+        let sub = |t: &Tensor| {
+            Tensor::from_vec(&[split, h, d], t.data[..split * w].to_vec()).unwrap()
+        };
+        let base_prefill = base.prefill(&sub(&q), &sub(&k), &sub(&v));
+        let base_rows: Vec<Vec<f32>> = (split..n)
+            .map(|t| {
+                base.decode(
+                    &q.data[t * w..(t + 1) * w],
+                    &k.data[t * w..(t + 1) * w],
+                    &v.data[t * w..(t + 1) * w],
+                )
+            })
+            .collect();
+        for workers in worker_counts() {
+            let mut b = build_backend_par(kind, h, d, bs, topk, workers);
+            assert_eq!(
+                b.prefill(&sub(&q), &sub(&k), &sub(&v)).data,
+                base_prefill.data,
+                "{} prefill workers={workers}",
+                b.name()
+            );
+            for (i, t) in (split..n).enumerate() {
+                let got = b.decode(
+                    &q.data[t * w..(t + 1) * w],
+                    &k.data[t * w..(t + 1) * w],
+                    &v.data[t * w..(t + 1) * w],
+                );
+                assert_eq!(got, base_rows[i], "{} decode t={t} workers={workers}", b.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_backend_matches_cached_sparse_tokens() {
+    // serving-level restatement: the fused backend emits exactly the
+    // tokens of the cached-sparse (and recompute-moba) paths
+    let prompt: Vec<i32> = (0..60).map(|i| (i * 11) % 48).collect();
+    let engine = |backend: BackendKind, workers: usize| {
+        ServeEngine::new(
+            ToyModel::new(48, 2, 8, 11),
+            ServeCfg { block_size: 16, topk: 2, max_seq: 256, backend, workers },
+        )
+    };
+    let reference = engine(BackendKind::CachedSparse, 1).generate(&prompt, 10).unwrap().0;
+    for workers in [1usize, 3] {
+        let fused = engine(BackendKind::Fused, workers).generate(&prompt, 10).unwrap().0;
+        assert_eq!(fused, reference, "workers={workers}");
+    }
+}
+
+#[test]
+fn sharded_scheduler_tokens_are_shard_count_invariant() {
+    let engine = || {
+        ServeEngine::new(
+            ToyModel::new(48, 2, 8, 7),
+            ServeCfg {
+                block_size: 16,
+                topk: 2,
+                max_seq: 512,
+                backend: BackendKind::Fused,
+                workers: 1,
+            },
+        )
+    };
+    let stream = || -> Vec<Request> {
+        (0..8)
+            .map(|i| Request {
+                id: i,
+                prompt: (0..24 + i as i32).map(|j| (j * 3 + i as i32) % 48).collect(),
+                max_new: 3 + (i as usize % 4),
+                arrival: i as f64 * 0.08,
+            })
+            .collect()
+    };
+    let run = |decode_workers: usize| {
+        let cfg = SchedulerCfg { max_in_flight: 4, decode_workers };
+        let mut sched = ContinuousScheduler::new(engine(), cfg);
+        let mut results = sched.run_stream(stream(), 0.05).unwrap();
+        results.sort_by_key(|r| r.id);
+        let outputs: Vec<Vec<i32>> = results.iter().map(|r| r.output.clone()).collect();
+        (outputs, sched.stats.decode_steps_total, sched.worker_stats())
+    };
+    let (base_outputs, base_steps, _) = run(1);
+    for decode_workers in [2usize, 4] {
+        let (outputs, steps, workers) = run(decode_workers);
+        assert_eq!(outputs, base_outputs, "decode_workers={decode_workers}");
+        assert_eq!(steps, base_steps, "decode_workers={decode_workers}");
+        assert_eq!(workers.len(), decode_workers);
+        let stepped: usize = workers.iter().map(|w| w.decode_steps).sum();
+        assert_eq!(stepped, steps, "per-shard steps must sum to the total");
+    }
+}
