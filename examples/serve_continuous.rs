@@ -11,6 +11,9 @@
 //! ```sh
 //! cargo run --release --example serve_continuous -- --backend cached-sparse
 //! cargo run --release --example serve_continuous -- --backend full   # recompute baseline
+//! # shared-system-prompt serving over the copy-on-write paged pool:
+//! cargo run --release --example serve_continuous -- --backend paged \
+//!     --shared-prefix 1024 --pool-blocks 512
 //! ```
 
 use moba::serve::{run_demo, DemoCfg};
@@ -32,6 +35,8 @@ fn main() -> anyhow::Result<()> {
         backend: BackendKind::parse(args.get_str("backend", "cached-sparse"))?,
         workers: resolve(args.get_usize("workers", 1)?),
         decode_workers: resolve(args.get_usize("decode-workers", 1)?),
+        shared_prefix: args.get_usize("shared-prefix", 0)?,
+        pool_blocks: args.get_usize("pool-blocks", 0)?,
         seed: args.get_u64("seed", 7)?,
     };
     run_demo(&cfg)

@@ -1,19 +1,27 @@
 //! Bench: cached incremental decode vs full recompute, per generated
-//! token, across context lengths — the serving rewrite's headline number.
+//! token, across context lengths — the serving rewrite's headline number
+//! — plus the paged-pool sharing arm: bytes per session when S sessions
+//! share a long system prefix copy-on-write.
 //!
 //! Four backends at each N: the recompute baselines (`full`, `moba` —
 //! what the old serving path did every step) and the cached backends
-//! (`cached-full` O(N·D), `cached-sparse` O(N/B·D + k·B·D)). Appends a
-//! trajectory entry to `BENCH_decode.json` and asserts the acceptance
-//! floor: cached-sparse beats full recompute by ≥5× at N=8192.
+//! (`cached-full` O(N·D), `cached-sparse` O(N/B·D + k·B·D)). The paged
+//! arm forks S sessions off a shared 4096-token prefix and reports
+//! per-session decode latency and unique-KV bytes per session against
+//! the private-cache cost. Appends a trajectory entry to
+//! `BENCH_decode.json` at the repo root and asserts the acceptance
+//! floors: cached-sparse beats full recompute by ≥5× at N=8192, and the
+//! shared pool holds < 0.65× the private per-session bytes.
 //!
 //! ```sh
-//! cargo bench --bench decode_latency
+//! cargo bench --bench decode_latency            # full run + asserts
+//! cargo bench --bench decode_latency -- --quick # CI smoke: small N,
+//!                                               # bit-identity asserts only
 //! ```
 
 use std::time::Instant;
 
-use moba::sparse::{build_backend, AttentionBackend, BackendKind};
+use moba::sparse::{build_backend, shared_pool, AttentionBackend, BackendKind, PagedMobaAttention};
 use moba::tensor::Tensor;
 use moba::util::json::{arr, num, obj, s, Json};
 use moba::util::rng::Rng;
@@ -59,7 +67,83 @@ fn decode_ms_per_token(
     t0.elapsed().as_secs_f64() * 1e3 / steps as f64
 }
 
+/// Results of the paged-pool sharing arm.
+struct PagedArm {
+    json: Json,
+    ms_per_tok: f64,
+    pool_bytes_per_session: usize,
+    sharing_ratio: f64,
+}
+
+/// The paged-pool sharing arm: S sessions forked off an `n_prefix`-token
+/// shared system prompt, each decoding its own tail out to context `n`.
+/// Session 0 replays the original stream and must match a private
+/// cached-sparse session bit-for-bit — the parity contract the pool
+/// ships under; the rest decode divergent tails for the memory and
+/// latency numbers.
+fn paged_sharing_arm(n: usize, n_prefix: usize, sessions: usize, rng: &mut Rng) -> PagedArm {
+    assert!(sessions >= 2 && n_prefix < n && n_prefix % BLOCK == 0);
+    let q = rand_t(&[n, HEADS, DIM], rng);
+    let k = rand_t(&[n, HEADS, DIM], rng);
+    let v = rand_t(&[n, HEADS, DIM], rng);
+
+    let pool = shared_pool(BLOCK, HEADS, DIM, None);
+    let mut parent = PagedMobaAttention::new(pool.clone(), TOPK);
+    parent.prefill(&prefix(&q, n_prefix), &prefix(&k, n_prefix), &prefix(&v, n_prefix));
+
+    let mut forks: Vec<Box<dyn AttentionBackend>> =
+        (0..sessions).map(|_| parent.fork().expect("paged backend forks")).collect();
+
+    let mut reference = build_backend(BackendKind::CachedSparse, HEADS, DIM, BLOCK, TOPK);
+    reference.prefill(&prefix(&q, n_prefix), &prefix(&k, n_prefix), &prefix(&v, n_prefix));
+    for i in n_prefix..n {
+        let got = forks[0].decode(row(&q, i), row(&k, i), row(&v, i));
+        let want = reference.decode(row(&q, i), row(&k, i), row(&v, i));
+        assert_eq!(got, want, "paged fork diverged from private cache at t={i}");
+    }
+
+    let tail = n - n_prefix;
+    let mut decode_secs = 0.0f64;
+    for fork in forks.iter_mut().skip(1) {
+        // divergent per-session tails: fresh noise, same geometry
+        let qt = rand_t(&[tail, HEADS, DIM], rng);
+        let kt = rand_t(&[tail, HEADS, DIM], rng);
+        let vt = rand_t(&[tail, HEADS, DIM], rng);
+        let t0 = Instant::now();
+        for i in 0..tail {
+            let out = fork.decode(row(&qt, i), row(&kt, i), row(&vt, i));
+            assert!(out.iter().all(|x| x.is_finite()));
+        }
+        decode_secs += t0.elapsed().as_secs_f64();
+    }
+    // mean over every measured fork's tail, not just the last one
+    let ms_per_tok = decode_secs * 1e3 / ((sessions - 1) * tail) as f64;
+
+    // sample the pool while every session is still alive: S full contexts
+    // resident, prefix blocks held once
+    let (used_blocks, payload) = {
+        let p = pool.read().unwrap();
+        (p.used_blocks(), p.payload_bytes())
+    };
+    let row_bytes = HEADS * DIM * 2 * std::mem::size_of::<f32>();
+    let private_per_session = n * row_bytes;
+    let pool_per_session = payload / sessions;
+    let sharing_ratio = pool_per_session as f64 / private_per_session as f64;
+    let json = obj(vec![
+        ("n", num(n as f64)),
+        ("shared_prefix", num(n_prefix as f64)),
+        ("sessions", num(sessions as f64)),
+        ("paged_decode_ms_per_tok", num(ms_per_tok)),
+        ("pool_blocks", num(used_blocks as f64)),
+        ("pool_bytes_per_session", num(pool_per_session as f64)),
+        ("private_bytes_per_session", num(private_per_session as f64)),
+        ("sharing_ratio", num(sharing_ratio)),
+    ]);
+    PagedArm { json, ms_per_tok, pool_bytes_per_session: pool_per_session, sharing_ratio }
+}
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
     println!("== decode latency: cached incremental vs recompute ==");
     println!("H={HEADS} D={DIM} block={BLOCK} top-{TOPK}; per-token decode ms at context N");
     println!(
@@ -70,14 +154,15 @@ fn main() {
     let mut rng = Rng::new(2025);
     let mut rows = Vec::new();
     let mut speedup_at_8192 = 0.0f64;
-    for &n in &[512usize, 2048, 8192] {
+    let lengths: &[usize] = if quick { &[512] } else { &[512, 2048, 8192] };
+    for &n in lengths {
         let q = rand_t(&[n, HEADS, DIM], &mut rng);
         let k = rand_t(&[n, HEADS, DIM], &mut rng);
         let v = rand_t(&[n, HEADS, DIM], &mut rng);
         // recompute decode is O(N^2)/step — keep its sample count small;
         // cached decode is cheap, average over more steps
-        let recompute_steps = if n >= 8192 { 2 } else { 4 };
-        let cached_steps = 32;
+        let recompute_steps = if quick || n >= 8192 { 2 } else { 4 };
+        let cached_steps = if quick { 8 } else { 32 };
 
         let rf = decode_ms_per_token(BackendKind::RecomputeFull, &q, &k, &v, n, recompute_steps);
         let rm = decode_ms_per_token(BackendKind::RecomputeMoba, &q, &k, &v, n, recompute_steps);
@@ -102,6 +187,22 @@ fn main() {
         ]));
     }
 
+    // the paged-pool sharing arm: S sessions, one shared system prefix
+    let (pn, pprefix, psessions) = if quick { (512, 256, 3) } else { (8192, 4096, 8) };
+    let paged = paged_sharing_arm(pn, pprefix, psessions, &mut rng);
+    println!(
+        "paged sharing: N={pn} prefix={pprefix} S={psessions}: {:.4} ms/tok, \
+         {:.1} KiB/session unique KV ({:.2}x of private)",
+        paged.ms_per_tok,
+        paged.pool_bytes_per_session as f64 / 1024.0,
+        paged.sharing_ratio
+    );
+
+    if quick {
+        println!("quick mode: outputs verified finite + paged parity; perf assertions skipped");
+        return;
+    }
+
     let unix_secs = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
@@ -114,9 +215,10 @@ fn main() {
         ("block", num(BLOCK as f64)),
         ("topk", num(TOPK as f64)),
         ("rows", arr(rows)),
+        ("paged_sharing", paged.json),
     ]);
-    // trajectory file: append this run's entry to the JSON array
-    let path = "BENCH_decode.json";
+    // trajectory file at the REPO ROOT regardless of bench cwd
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json");
     let mut trajectory = match std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok())
     {
         Some(Json::Arr(entries)) => entries,
@@ -131,4 +233,13 @@ fn main() {
         "acceptance: cached decode must beat recompute by >=5x at N=8192 (got {speedup_at_8192:.1}x)"
     );
     println!("acceptance OK: {speedup_at_8192:.0}x >= 5x at N=8192");
+    assert!(
+        paged.sharing_ratio < 0.65,
+        "acceptance: shared pool must hold < 0.65x private bytes/session (got {:.2}x)",
+        paged.sharing_ratio
+    );
+    println!(
+        "acceptance OK: paged sharing at {:.2}x of private bytes/session",
+        paged.sharing_ratio
+    );
 }

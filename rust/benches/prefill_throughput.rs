@@ -8,7 +8,7 @@
 //! bit-identical across all of it, so this bench both measures AND
 //! asserts: fused ≥ 1.3× two-pass at N=8192 on one worker, multi-worker
 //! scaling ≥ 2× on a 4+ core box, and exact output equality everywhere.
-//! Appends a trajectory entry to `BENCH_prefill.json`.
+//! Appends a trajectory entry to `BENCH_prefill.json` at the repo root.
 //!
 //! ```sh
 //! cargo bench --bench prefill_throughput            # full run + asserts
@@ -134,8 +134,8 @@ fn main() {
         ("workers_multi", num(multi as f64)),
         ("rows", arr(rows)),
     ]);
-    // trajectory file: append this run's entry to the JSON array
-    let path = "BENCH_prefill.json";
+    // trajectory file at the REPO ROOT regardless of bench cwd
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_prefill.json");
     let mut trajectory = match std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok())
     {
         Some(Json::Arr(entries)) => entries,

@@ -68,9 +68,11 @@ experiments (exp): efficiency, fits, gate-ablation (pure Rust);
   scaling [--long], granularity, hybrid, sft, needle [--full], table2
   (need --features xla + artifacts); all
 serve options: --requests N --max-batch M --prompt-len P --max-new K
-  --backend full|moba|cached-full|cached-sparse|fused --block B --topk K
+  --backend full|moba|cached-full|cached-sparse|fused|paged --block B --topk K
   --workers W (kernel threads, 0 = all cores)
   --decode-workers S (scheduler decode shards, 0 = all cores)
+  --shared-prefix L (L-token system prompt forked per request; needs paged)
+  --pool-blocks N (paged pool capacity in blocks, 0 = unbounded)
 common options: --steps N  --seed N  --sizes s0,s1  --artifact NAME
 ";
 
@@ -90,6 +92,8 @@ fn serve_cmd(args: &Args) -> Result<()> {
         backend: BackendKind::parse(args.get_str("backend", d.backend.label()))?,
         workers: resolve(args.get_usize("workers", d.workers)?),
         decode_workers: resolve(args.get_usize("decode-workers", d.decode_workers)?),
+        shared_prefix: args.get_usize("shared-prefix", d.shared_prefix)?,
+        pool_blocks: args.get_usize("pool-blocks", d.pool_blocks)?,
         seed: args.get_u64("seed", d.seed)?,
     };
     run_demo(&cfg)

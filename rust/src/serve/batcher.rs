@@ -74,6 +74,13 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// The request `admit(now, 1)` would hand over, without taking it —
+    /// the probe a capacity-aware scheduler uses to check whether the
+    /// next admission fits (pool blocks, decode slots) before committing.
+    pub fn peek(&self, now: f64) -> Option<&Request> {
+        self.queue.first().filter(|r| r.arrival <= now)
+    }
+
     /// Continuous admission: pop up to `free_slots` FIFO requests that
     /// have arrived by `now`. Never waits — a continuous scheduler calls
     /// this every tick to top up the in-flight batch. O(queue) total: the
@@ -185,6 +192,17 @@ mod tests {
         // nothing ready → empty, queue untouched
         assert!(b.admit(-1.0, 8).is_empty());
         assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn peek_mirrors_single_admission() {
+        let mut b = Batcher::new(BatcherCfg::default());
+        assert!(b.peek(0.0).is_none());
+        b.push(req(7, 1.0));
+        assert!(b.peek(0.5).is_none(), "not yet arrived");
+        assert_eq!(b.peek(1.5).unwrap().id, 7);
+        assert_eq!(b.pending(), 1, "peek must not consume");
+        assert_eq!(b.admit(1.5, 1)[0].id, 7);
     }
 
     #[test]

@@ -29,6 +29,12 @@ pub struct DemoCfg {
     pub workers: usize,
     /// scheduler decode shards stepping sessions concurrently
     pub decode_workers: usize,
+    /// shared system-prompt tokens every request forks off copy-on-write
+    /// (0 = off; requires `backend: paged`)
+    pub shared_prefix: usize,
+    /// physical-block capacity of the paged pool (0 = unbounded;
+    /// admission then gates on it)
+    pub pool_blocks: usize,
     pub seed: u64,
 }
 
@@ -44,6 +50,8 @@ impl Default for DemoCfg {
             backend: BackendKind::CachedSparse,
             workers: 1,
             decode_workers: 1,
+            shared_prefix: 0,
+            pool_blocks: 0,
             seed: 42,
         }
     }
@@ -52,13 +60,15 @@ impl Default for DemoCfg {
 /// Run the demo: build the toy model + scheduler, synthesize the arrival
 /// stream, serve it to completion and print the latency report.
 pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
-    let model = ToyModel::new(64, 2, 16, cfg.seed);
+    let (heads, head_dim) = (2usize, 16usize);
+    let model = ToyModel::new(64, heads, head_dim, cfg.seed);
     let serve_cfg = ServeCfg {
         block_size: cfg.block_size,
         topk: cfg.topk,
         max_seq: 8192,
         backend: cfg.backend,
         workers: cfg.workers.max(1),
+        pool_blocks: cfg.pool_blocks,
     };
     println!(
         "== continuous serving demo: backend={} block={} topk={} max_in_flight={} ==",
@@ -81,14 +91,27 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
         },
     );
 
-    // simulated arrival process
+    // shared system prompt, prefilled once and forked per request
     let mut rng = Rng::new(cfg.seed ^ 0x5E12);
+    if cfg.shared_prefix > 0 {
+        let prefix: Vec<i32> =
+            (0..cfg.shared_prefix).map(|_| rng.range(0, 64) as i32).collect();
+        sched.set_shared_prefix(&prefix)?;
+        println!(
+            "   shared prefix: {} tokens held once in the paged pool",
+            cfg.shared_prefix
+        );
+    }
+
+    // simulated arrival process
     let mut arrivals = Vec::with_capacity(cfg.requests);
+    let mut prompt_tokens = 0usize;
     let mut t = 0.0f64;
     for id in 0..cfg.requests as u64 {
         t += -0.05 * (1.0 - rng.f64()).ln(); // exp(50ms) inter-arrival
         let len = cfg.prompt_len / 2 + rng.range(0, cfg.prompt_len / 2 + 1);
         let prompt: Vec<i32> = (0..len).map(|_| rng.range(0, 64) as i32).collect();
+        prompt_tokens += len;
         arrivals.push(Request { id, prompt, max_new: cfg.max_new, arrival: t });
     }
 
@@ -148,6 +171,37 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
             w.admitted, w.decode_rounds, w.decode_steps, w.busy_secs, w.peak_in_flight
         );
     }
+    if let Some(pool) = sched.engine().pool_status() {
+        // unique KV bytes at the pool's high-water mark vs what private
+        // per-session caches would have held for the same sequences
+        let row_bytes = heads * head_dim * 2 * std::mem::size_of::<f32>();
+        let block_bytes = cfg.block_size * row_bytes;
+        let peak_bytes = sched.stats.peak_pool_blocks * block_bytes;
+        // what the same peak batch would hold with a private cache per
+        // session: peak_in_flight full contexts, prefix duplicated S times
+        let avg_ctx = (prompt_tokens + total_tokens.saturating_sub(results.len()))
+            / results.len().max(1);
+        let private_peak_bytes = sched.stats.peak_in_flight
+            * (sched.shared_prefix_len() + avg_ctx)
+            * row_bytes;
+        let cap = match pool.capacity_blocks {
+            Some(c) => format!("{c}"),
+            None => "unbounded".to_string(),
+        };
+        println!(
+            "paged pool: peak {} blocks ({:.1} KiB unique KV), capacity {}, deferrals {}",
+            sched.stats.peak_pool_blocks,
+            peak_bytes as f64 / 1024.0,
+            cap,
+            sched.stats.pool_deferrals
+        );
+        println!(
+            "  peak batch: {:.1} KiB shared pool vs ~{:.1} KiB private caches ({:.1}x)",
+            peak_bytes as f64 / 1024.0,
+            private_peak_bytes as f64 / 1024.0,
+            private_peak_bytes as f64 / peak_bytes.max(1) as f64
+        );
+    }
     Ok(())
 }
 
@@ -162,6 +216,7 @@ mod tests {
             BackendKind::CachedFull,
             BackendKind::RecomputeMoba,
             BackendKind::Fused,
+            BackendKind::Paged,
         ] {
             let cfg = DemoCfg {
                 requests: 3,
@@ -186,5 +241,32 @@ mod tests {
             ..Default::default()
         };
         run_demo(&cfg).unwrap();
+    }
+
+    #[test]
+    fn demo_runs_shared_prefix_over_bounded_pool() {
+        let cfg = DemoCfg {
+            requests: 4,
+            prompt_len: 48,
+            max_new: 4,
+            backend: BackendKind::Paged,
+            shared_prefix: 96,
+            pool_blocks: 64,
+            decode_workers: 2,
+            ..Default::default()
+        };
+        run_demo(&cfg).unwrap();
+    }
+
+    #[test]
+    fn demo_shared_prefix_rejects_private_backends() {
+        let cfg = DemoCfg {
+            requests: 2,
+            prompt_len: 32,
+            max_new: 2,
+            shared_prefix: 32,
+            ..Default::default()
+        };
+        assert!(run_demo(&cfg).is_err(), "cached-sparse cannot share a prefix");
     }
 }

@@ -23,7 +23,10 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::sparse::{build_backend_par, AttentionBackend, BackendKind};
+use crate::sparse::{
+    build_backend_par, shared_pool, AttentionBackend, BackendKind, PagedMobaAttention,
+    SharedKvPool,
+};
 use crate::tensor::Tensor;
 
 use super::model::TokenModel;
@@ -49,6 +52,10 @@ pub struct ServeCfg {
     /// below spawn cost; inter-request decode parallelism belongs to the
     /// scheduler's decode shards instead.
     pub workers: usize,
+    /// Physical-block capacity of the shared paged KV pool (only
+    /// meaningful with `backend == BackendKind::Paged`; every paged
+    /// session of this engine allocates from one pool). 0 = unbounded.
+    pub pool_blocks: usize,
 }
 
 impl Default for ServeCfg {
@@ -59,8 +66,20 @@ impl Default for ServeCfg {
             max_seq: 4096,
             backend: BackendKind::CachedSparse,
             workers: 1,
+            pool_blocks: 0,
         }
     }
+}
+
+/// Occupancy snapshot of the engine's shared paged pool.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolStatus {
+    /// physical blocks currently referenced by at least one session
+    pub used_blocks: usize,
+    /// allocation ceiling (`None` = unbounded)
+    pub capacity_blocks: Option<usize>,
+    /// unique K/V payload bytes resident in the pool
+    pub payload_bytes: usize,
 }
 
 /// One in-flight request: its backend state (caches), token history and
@@ -109,16 +128,24 @@ fn argmax(xs: &[f32]) -> i32 {
         .unwrap_or(0)
 }
 
-/// Backend-based generation engine. Stateless across requests: every
-/// request gets a fresh backend (and thus fresh caches) in its session.
+/// Backend-based generation engine. Stateless across requests — every
+/// request gets a fresh backend in its session — except for the paged
+/// backend, whose sessions all allocate from one shared copy-on-write
+/// pool (which is what makes prefix sharing across requests possible).
 pub struct ServeEngine<M: TokenModel> {
     model: M,
     cfg: ServeCfg,
+    /// the shared pool, present iff `cfg.backend == BackendKind::Paged`
+    pool: Option<SharedKvPool>,
 }
 
 impl<M: TokenModel> ServeEngine<M> {
     pub fn new(model: M, cfg: ServeCfg) -> ServeEngine<M> {
-        ServeEngine { model, cfg }
+        let pool = (cfg.backend == BackendKind::Paged).then(|| {
+            let cap = (cfg.pool_blocks > 0).then_some(cfg.pool_blocks);
+            shared_pool(cfg.block_size, model.heads(), model.head_dim(), cap)
+        });
+        ServeEngine { model, cfg, pool }
     }
 
     pub fn cfg(&self) -> &ServeCfg {
@@ -127,6 +154,29 @@ impl<M: TokenModel> ServeEngine<M> {
 
     pub fn model(&self) -> &M {
         &self.model
+    }
+
+    /// Occupancy of the shared paged pool (`None` for private-cache
+    /// backends) — what the continuous scheduler admits against.
+    pub fn pool_status(&self) -> Option<PoolStatus> {
+        self.pool.as_ref().map(|pool| {
+            let p = pool.read().expect("paged pool lock");
+            PoolStatus {
+                used_blocks: p.used_blocks(),
+                capacity_blocks: p.capacity_blocks(),
+                payload_bytes: p.payload_bytes(),
+            }
+        })
+    }
+
+    /// Worst-case physical blocks a session forked at context length
+    /// `ctx` can allocate while appending `tokens` more: the blocks
+    /// spanning `[ctx, ctx + tokens)`. This is exact — when the session
+    /// shares a partial tail, the copy-on-write duplicate *is* the first
+    /// spanned block, not an extra one.
+    pub fn block_reserve(&self, ctx: usize, tokens: usize) -> usize {
+        let b = self.cfg.block_size;
+        (ctx % b + tokens + b - 1) / b
     }
 
     /// Prefill `prompt` through a fresh backend and return the live
@@ -144,14 +194,22 @@ impl<M: TokenModel> ServeEngine<M> {
             );
         }
         let (h, d) = (self.model.heads(), self.model.head_dim());
-        let mut backend = build_backend_par(
-            self.cfg.backend,
-            h,
-            d,
-            self.cfg.block_size,
-            self.cfg.topk,
-            self.cfg.workers.max(1),
-        );
+        let workers = self.cfg.workers.max(1);
+        let mut backend: Box<dyn AttentionBackend> = match &self.pool {
+            // paged sessions must share THE engine pool, not build their
+            // own — that is what makes cross-request prefix sharing work
+            Some(pool) => Box::new(
+                PagedMobaAttention::new(pool.clone(), self.cfg.topk).with_workers(workers),
+            ),
+            None => build_backend_par(
+                self.cfg.backend,
+                h,
+                d,
+                self.cfg.block_size,
+                self.cfg.topk,
+                workers,
+            ),
+        };
 
         let t0 = Instant::now();
         let n = prompt.len();
@@ -174,6 +232,55 @@ impl<M: TokenModel> ServeEngine<M> {
         Ok(DecodeSession {
             backend,
             prompt_len: n,
+            max_seq: self.cfg.max_seq,
+            max_new,
+            pending,
+            generated: Vec::with_capacity(max_new),
+            stats,
+        })
+    }
+
+    /// Fork `parent`'s state copy-on-write (paged backend only) and
+    /// ingest `continuation` on the fork — the shared-system-prompt
+    /// serving scenario: S sessions share one physical prefix, each pays
+    /// only its own divergent tail. Token-identical to
+    /// `start(prefix ++ continuation)` on a private backend: the decode
+    /// rows that ingest the continuation are bit-equal to the prefill
+    /// rows a private session would compute (the prefill/decode boundary
+    /// is invisible — `tests/property_invariants.rs`).
+    pub fn fork_session(
+        &self,
+        parent: &DecodeSession,
+        continuation: &[i32],
+        max_new: usize,
+    ) -> Result<DecodeSession> {
+        let ctx = parent.backend.seq_len();
+        if ctx + continuation.len() + max_new > self.cfg.max_seq {
+            bail!(
+                "prefix {} + continuation {} + max_new {} exceeds max_seq {}",
+                ctx,
+                continuation.len(),
+                max_new,
+                self.cfg.max_seq
+            );
+        }
+        let t0 = Instant::now();
+        let mut backend = parent.backend.fork()?;
+        let mut last_out = None;
+        for (i, &tok) in continuation.iter().enumerate() {
+            let (q, k, v) = self.model.qkv(tok, ctx + i);
+            last_out = Some(backend.decode(&q, &k, &v));
+        }
+        // only the final position's logits decide the pending token — an
+        // empty continuation is a pure clone of the parent's
+        let pending = match last_out {
+            Some(out) => argmax(&self.model.logits(&out)),
+            None => parent.pending,
+        };
+        let stats = GenStats { prefill_secs: t0.elapsed().as_secs_f64(), ..Default::default() };
+        Ok(DecodeSession {
+            backend,
+            prompt_len: ctx + continuation.len(),
             max_seq: self.cfg.max_seq,
             max_new,
             pending,
@@ -222,7 +329,7 @@ mod tests {
     fn engine(backend: BackendKind) -> ServeEngine<ToyModel> {
         ServeEngine::new(
             ToyModel::new(48, 2, 8, 11),
-            ServeCfg { block_size: 16, topk: 2, max_seq: 256, backend, workers: 1 },
+            ServeCfg { block_size: 16, topk: 2, max_seq: 256, backend, ..Default::default() },
         )
     }
 
@@ -249,6 +356,59 @@ mod tests {
         assert_eq!(sparse_cached, sparse_ref);
         let fused = engine(BackendKind::Fused).generate(&prompt, 8).unwrap().0;
         assert_eq!(fused, sparse_ref);
+        let paged = engine(BackendKind::Paged).generate(&prompt, 8).unwrap().0;
+        assert_eq!(paged, sparse_ref);
+    }
+
+    #[test]
+    fn forked_session_tokens_match_private_full_prompt() {
+        // shared system prefix + divergent continuations through the
+        // pool == private sessions over the concatenated prompts
+        let e = engine(BackendKind::Paged);
+        let prefix: Vec<i32> = (0..40).map(|i| (i * 3) % 48).collect();
+        let parent = e.start(&prefix, 0).unwrap();
+        let private = engine(BackendKind::CachedSparse);
+        for salt in [1i32, 2, 3] {
+            let cont: Vec<i32> = (0..9).map(|i| (i * 5 + salt) % 48).collect();
+            let mut forked = e.fork_session(&parent, &cont, 6).unwrap();
+            let mut got = Vec::new();
+            while let Some(tok) = e.step(&mut forked) {
+                got.push(tok);
+            }
+            let full: Vec<i32> = prefix.iter().chain(&cont).copied().collect();
+            let want = private.generate(&full, 6).unwrap().0;
+            assert_eq!(got, want, "salt={salt}");
+        }
+        // S sessions shared one prefix: the pool holds the prefix once
+        let status = e.pool_status().unwrap();
+        assert!(status.used_blocks >= prefix.len() / 16);
+        assert!(status.payload_bytes > 0);
+    }
+
+    #[test]
+    fn fork_rejects_private_backends_and_overflow() {
+        let e = engine(BackendKind::CachedSparse);
+        let parent = e.start(&[1, 2, 3], 0).unwrap();
+        assert!(e.fork_session(&parent, &[4, 5], 4).is_err());
+        let p = engine(BackendKind::Paged);
+        let parent = p.start(&[1, 2, 3], 0).unwrap();
+        assert!(p.fork_session(&parent, &[4, 5], 300).is_err(), "max_seq overflow");
+        // empty continuation is a pure clone: same pending token
+        let clone = p.fork_session(&parent, &[], 4).unwrap();
+        assert_eq!(clone.context_len(), parent.context_len());
+    }
+
+    #[test]
+    fn block_reserve_is_conservative() {
+        let e = engine(BackendKind::Paged);
+        // block 16: tokens [40, 60) span blocks 2..4 — the first spanned
+        // block is the CoW copy of the shared 8-token tail, not an extra
+        assert_eq!(e.block_reserve(40, 20), 2);
+        assert_eq!(e.block_reserve(0, 16), 1);
+        assert_eq!(e.block_reserve(0, 17), 2);
+        let status = e.pool_status().unwrap();
+        assert_eq!(status.capacity_blocks, None);
+        assert_eq!(status.used_blocks, 0);
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod artifact;
 
 pub use batcher::{Batcher, BatcherCfg, Request, RequestResult};
 pub use demo::{run_demo, DemoCfg};
-pub use engine::{DecodeSession, GenStats, ServeCfg, ServeEngine};
+pub use engine::{DecodeSession, GenStats, PoolStatus, ServeCfg, ServeEngine};
 pub use model::{TokenModel, ToyModel};
 pub use scheduler::{ContinuousScheduler, SchedStats, SchedulerCfg, WorkerStats};
 

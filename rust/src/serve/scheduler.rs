@@ -19,13 +19,22 @@
 //! against `decode_workers = 1`. Per-shard latency counters are exposed
 //! via [`ContinuousScheduler::worker_stats`].
 //!
+//! **Paged-pool admission**: with a bounded paged KV pool
+//! (`ServeCfg::pool_blocks`), admission is against *pool capacity*, not
+//! just decode slots — a candidate is admitted only when its worst-case
+//! block reservation (`ServeEngine::block_reserve`) fits beside the
+//! reservations of every live session, so a decode step can never hit an
+//! exhausted pool. With [`ContinuousScheduler::set_shared_prefix`], every
+//! admission *forks* one prefilled system-prompt session copy-on-write
+//! instead of prefilling from scratch; tokens are identical either way.
+//!
 //! The scheduler is driven by a simulation clock (`tick(now)`), like the
 //! batcher, so arrival/queueing behavior is deterministic and testable;
 //! prefill/decode times are measured wall clock from the engine.
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::batcher::{Batcher, BatcherCfg, Request, RequestResult};
 use super::engine::{DecodeSession, ServeEngine};
@@ -56,6 +65,12 @@ pub struct SchedStats {
     pub decode_rounds: usize,
     pub decode_steps_total: usize,
     pub peak_in_flight: usize,
+    /// admissions deferred because the paged pool could not cover the
+    /// candidate's worst-case block reservation
+    pub pool_deferrals: usize,
+    /// peak physical blocks resident in the shared paged pool (0 for
+    /// private-cache backends)
+    pub peak_pool_blocks: usize,
 }
 
 /// Per-shard counters: admission balance and decode-latency accounting
@@ -73,6 +88,9 @@ pub struct WorkerStats {
 struct Live {
     id: u64,
     queue_secs: f64,
+    /// worst-case pool blocks this session may still hold (its admission
+    /// reservation; 0 when the engine has no bounded pool)
+    reserve_blocks: usize,
     session: DecodeSession,
 }
 
@@ -109,6 +127,11 @@ pub struct ContinuousScheduler<M: TokenModel> {
     cfg: SchedulerCfg,
     queue: Batcher,
     shards: Vec<Shard>,
+    /// shared-system-prompt session every admission forks from (paged
+    /// backend): its physical blocks are held once for all requests
+    prefix: Option<DecodeSession>,
+    /// pool blocks held by the shared prefix itself
+    prefix_blocks: usize,
     pub stats: SchedStats,
 }
 
@@ -125,8 +148,44 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
             // admission policy fields are unused in continuous mode
             queue: Batcher::new(BatcherCfg::default()),
             shards,
+            prefix: None,
+            prefix_blocks: 0,
             stats: SchedStats::default(),
         }
+    }
+
+    /// Prefill `prompt` once as the shared system prefix: every request
+    /// admitted afterwards forks it copy-on-write (O(1) in data moved)
+    /// and decodes only its own continuation. Requires the paged backend
+    /// — private caches cannot share state across sessions.
+    pub fn set_shared_prefix(&mut self, prompt: &[i32]) -> Result<()> {
+        let Some(pool) = self.engine.pool_status() else {
+            bail!("shared-prefix serving requires the 'paged' backend");
+        };
+        let b = self.engine.cfg().block_size;
+        let need = (prompt.len() + b - 1) / b;
+        if let Some(cap) = pool.capacity_blocks {
+            if need >= cap {
+                bail!(
+                    "shared prefix needs {need} of {cap} pool blocks, leaving none for requests"
+                );
+            }
+        }
+        let session = self.engine.start(prompt, 0)?;
+        self.prefix_blocks = need;
+        self.prefix = Some(session);
+        Ok(())
+    }
+
+    /// Tokens in the shared prefix every admission forks from (0 = none).
+    pub fn shared_prefix_len(&self) -> usize {
+        self.prefix.as_ref().map(|s| s.context_len()).unwrap_or(0)
+    }
+
+    /// Worst-case pool blocks reserved by live sessions (their admission
+    /// reservations; each session's real usage never exceeds it).
+    fn reserved_blocks(&self) -> usize {
+        self.shards.iter().flat_map(|s| s.running.iter()).map(|l| l.reserve_blocks).sum()
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -155,17 +214,52 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
     }
 
     /// One scheduler tick at simulation time `now`:
-    /// 1. admit arrived requests into free decode slots (prefill them),
-    ///    balancing across the least-loaded shards;
+    /// 1. admit arrived requests into free decode slots (prefill them, or
+    ///    fork them off the shared prefix), balancing across the
+    ///    least-loaded shards — admission is against POOL CAPACITY when
+    ///    the engine runs a bounded paged pool: a candidate enters only
+    ///    if its worst-case block reservation fits next to the
+    ///    reservations of every live session, so decode can never hit an
+    ///    exhausted pool;
     /// 2. step every live session one decode token, shards in parallel;
     /// 3. retire finished sessions as `RequestResult`s (shard order, so
     ///    the result order is deterministic).
     pub fn tick(&mut self, now: f64) -> Result<Vec<RequestResult>> {
         // 1. admission — new requests join the in-flight batch mid-stream,
         // each pinned to the currently least-loaded shard
-        let free = self.cfg.max_in_flight - self.in_flight();
-        for req in self.queue.admit(now, free) {
-            let session = self.engine.start(&req.prompt, req.max_new)?;
+        let pool_cap = self.engine.pool_status().and_then(|p| p.capacity_blocks);
+        let mut free = self.cfg.max_in_flight - self.in_flight();
+        while free > 0 {
+            let Some(next) = self.queue.peek(now) else { break };
+            let reserve = match pool_cap {
+                Some(cap) => {
+                    let ctx = self.shared_prefix_len();
+                    let need =
+                        self.engine.block_reserve(ctx, next.prompt.len() + next.max_new);
+                    if self.prefix_blocks + need > cap {
+                        bail!(
+                            "request {} can never be served: needs {} pool blocks beyond \
+                             the {}-block shared prefix, capacity {}",
+                            next.id,
+                            need,
+                            self.prefix_blocks,
+                            cap
+                        );
+                    }
+                    if self.prefix_blocks + self.reserved_blocks() + need > cap {
+                        // wait for retirements to hand blocks back
+                        self.stats.pool_deferrals += 1;
+                        break;
+                    }
+                    need
+                }
+                None => 0,
+            };
+            let req = self.queue.admit(now, 1).pop().expect("peeked request");
+            let session = match &self.prefix {
+                Some(parent) => self.engine.fork_session(parent, &req.prompt, req.max_new)?,
+                None => self.engine.start(&req.prompt, req.max_new)?,
+            };
             self.stats.admitted += 1;
             let shard = self
                 .shards
@@ -176,8 +270,10 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
             shard.running.push(Live {
                 id: req.id,
                 queue_secs: (now - req.arrival).max(0.0),
+                reserve_blocks: reserve,
                 session,
             });
+            free -= 1;
         }
         self.stats.peak_in_flight = self.stats.peak_in_flight.max(self.in_flight());
         for shard in self.shards.iter_mut() {
@@ -212,6 +308,13 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
         }
         let steps_after: usize = self.shards.iter().map(|s| s.stats.decode_steps).sum();
         self.stats.decode_steps_total += steps_after - steps_before;
+
+        // pool high-water mark, sampled after the decode growth and
+        // before retirement frees blocks (deterministic: every session
+        // appends a fixed token count per tick regardless of shard count)
+        if let Some(p) = self.engine.pool_status() {
+            self.stats.peak_pool_blocks = self.stats.peak_pool_blocks.max(p.used_blocks);
+        }
 
         // 3. retirement, shard by shard
         let mut finished = Vec::new();
@@ -276,14 +379,19 @@ mod tests {
     use crate::sparse::BackendKind;
 
     fn engine() -> ServeEngine<ToyModel> {
+        engine_with(BackendKind::CachedSparse, 0)
+    }
+
+    fn engine_with(backend: BackendKind, pool_blocks: usize) -> ServeEngine<ToyModel> {
         ServeEngine::new(
             ToyModel::new(48, 2, 8, 5),
             ServeCfg {
                 block_size: 16,
                 topk: 2,
                 max_seq: 512,
-                backend: BackendKind::CachedSparse,
+                backend,
                 workers: 1,
+                pool_blocks,
             },
         )
     }
@@ -419,6 +527,83 @@ mod tests {
             assert_eq!(w.decode_rounds, 1, "shard {i}");
             assert!(w.decode_steps > 0, "shard {i}");
         }
+    }
+
+    #[test]
+    fn shared_prefix_stream_matches_private_full_prompts() {
+        // forked admission is invisible in the tokens: a paged scheduler
+        // forking every request off one shared prefix serves exactly what
+        // private sessions over prefix ++ continuation would
+        let prefix: Vec<i32> = (0..40).map(|i| (i * 3) % 48).collect();
+        let conts: Vec<Vec<i32>> =
+            (0..5).map(|i| (0..10).map(|j| (j * 7 + i) % 48).collect()).collect();
+        let mut sched =
+            ContinuousScheduler::new(engine_with(BackendKind::Paged, 0), sched_cfg(3, 1));
+        sched.set_shared_prefix(&prefix).unwrap();
+        let stream: Vec<Request> = conts
+            .iter()
+            .enumerate()
+            .map(|(i, c)| Request {
+                id: i as u64,
+                prompt: c.clone(),
+                max_new: 4 + i % 3,
+                arrival: i as f64 * 0.05,
+            })
+            .collect();
+        let mut results = sched.run_stream(stream, 0.02).unwrap();
+        results.sort_by_key(|r| r.id);
+        let solo = engine();
+        for (r, c) in results.iter().zip(&conts) {
+            let full: Vec<i32> = prefix.iter().chain(c).copied().collect();
+            let want = solo.generate(&full, r.output.len()).unwrap().0;
+            assert_eq!(r.output, want, "req {}", r.id);
+        }
+        assert!(sched.stats.peak_pool_blocks > 0);
+        // the prefix is resident once, not once per request
+        let naive = conts.len() * ((prefix.len() + 15) / 16);
+        assert!(
+            sched.stats.peak_pool_blocks < naive,
+            "no sharing: peak {} vs naive {naive}",
+            sched.stats.peak_pool_blocks
+        );
+    }
+
+    #[test]
+    fn pool_capacity_gates_admission_without_changing_tokens() {
+        let stream = || -> Vec<Request> { (0..6).map(|i| req(i, 0.0, 20, 6)).collect() };
+        // unbounded pool: all six run concurrently
+        let mut wide =
+            ContinuousScheduler::new(engine_with(BackendKind::Paged, 0), sched_cfg(6, 1));
+        let mut base = wide.run_stream(stream(), 0.01).unwrap();
+        base.sort_by_key(|r| r.id);
+        assert_eq!(wide.stats.peak_in_flight, 6);
+        // each session reserves ceil((20 + 6)/16) = 2 blocks; capacity
+        // 5 admits at most two at a time — same tokens, later admissions
+        let mut tight =
+            ContinuousScheduler::new(engine_with(BackendKind::Paged, 5), sched_cfg(6, 1));
+        let mut got = tight.run_stream(stream(), 0.01).unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), base.len());
+        for (g, b) in got.iter().zip(&base) {
+            assert_eq!(g.output, b.output, "req {} changed under pool pressure", g.id);
+        }
+        assert_eq!(tight.stats.peak_in_flight, 2, "capacity should cap concurrency");
+        assert!(tight.stats.pool_deferrals > 0);
+        assert!(tight.stats.peak_pool_blocks <= 5);
+    }
+
+    #[test]
+    fn impossible_pool_request_errors_instead_of_hanging() {
+        let mut sched =
+            ContinuousScheduler::new(engine_with(BackendKind::Paged, 2), sched_cfg(2, 1));
+        sched.submit(req(0, 0.0, 40, 8)); // needs 3 blocks, capacity 2
+        assert!(sched.tick(0.0).is_err());
+    }
+
+    #[test]
+    fn shared_prefix_requires_paged_backend() {
+        let mut sched = ContinuousScheduler::new(engine(), sched_cfg(2, 1));
+        assert!(sched.set_shared_prefix(&[1, 2, 3]).is_err());
     }
 
     #[test]

@@ -370,16 +370,16 @@ pub(crate) fn fused_moba_attention_with_reps(
     out
 }
 
-/// One fused query row: causal-only gate scores → k-th-largest threshold
-/// → selected-block streaming, all against the per-head representative
-/// slab `reps` (`[nb, D]` contiguous). `k`/`v` are `[*, H, D]` row-major
-/// slabs — the batch kernels pass tensor data, the cached decode path
-/// passes the KV cache's backing storage (same layout by design).
+/// One fused query row over *contiguous* `[*, H, D]` K/V slabs — the
+/// batch kernels pass tensor data, the cached decode path passes the KV
+/// cache's backing storage (same layout by design). Thin wrapper over
+/// [`fused_row_blocks`]: block `b`'s slab is just the contiguous storage
+/// starting at its first token.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn fused_row(
+pub(crate) fn fused_row<'s>(
     qrow: &[f32],
-    k: &[f32],
-    v: &[f32],
+    k: &'s [f32],
+    v: &'s [f32],
     reps: &[f32],
     h: usize,
     hh: usize,
@@ -390,6 +390,37 @@ pub(crate) fn fused_row(
     scale: f32,
     scratch: &mut FusedScratch,
     out_row: &mut [f32],
+) {
+    let w = h * d;
+    fused_row_blocks(
+        qrow, reps, h, hh, d, block_size, kk, t, scale, scratch, out_row,
+        |b| (&k[b * block_size * w..], &v[b * block_size * w..]),
+    );
+}
+
+/// One fused query row against block-granular K/V storage: causal-only
+/// gate scores → k-th-largest threshold → selected-block streaming, all
+/// against the per-head representative slab `reps` (`[nb, D]`
+/// contiguous). `block_kv(b)` hands back logical block `b`'s K and V
+/// slabs (`[len_b, H, D]` row-major, the block's first token at offset
+/// 0). The contiguous-cache path ([`fused_row`]) and the paged pool's
+/// block-table indirection (`sparse::paged`) both route through this one
+/// routine, so the gate arithmetic, the NaN-safe `>=` selection and the
+/// streaming order cannot drift between them.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fused_row_blocks<'s>(
+    qrow: &[f32],
+    reps: &[f32],
+    h: usize,
+    hh: usize,
+    d: usize,
+    block_size: usize,
+    kk: usize,
+    t: usize,
+    scale: f32,
+    scratch: &mut FusedScratch,
+    out_row: &mut [f32],
+    block_kv: impl Fn(usize) -> (&'s [f32], &'s [f32]),
 ) {
     let cur = t / block_size;
     let nc = cur + 1; // causal block count for this row
@@ -443,26 +474,28 @@ pub(crate) fn fused_row(
         if scores[b] >= kth {
             let lo = b * block_size;
             let hi = ((b + 1) * block_size).min(t + 1); // causal inside current block
+            let cnt = hi - lo;
+            let (kb, vb) = block_kv(b);
             // token scores for the whole block first (independent dot
             // pairs overlap their latency chains), then fold in token
             // order — exactly the two-pass dot·scale / push sequence.
-            let sbuf = &mut scratch.sbuf[..hi - lo];
-            let mut j = lo;
-            while j + 2 <= hi {
+            let sbuf = &mut scratch.sbuf[..cnt];
+            let mut j = 0;
+            while j + 2 <= cnt {
                 let o0 = (j * h + hh) * d;
                 let o1 = ((j + 1) * h + hh) * d;
-                let (s0, s1) = dot2(qrow, &k[o0..o0 + d], &k[o1..o1 + d]);
-                sbuf[j - lo] = s0 * scale;
-                sbuf[j + 1 - lo] = s1 * scale;
+                let (s0, s1) = dot2(qrow, &kb[o0..o0 + d], &kb[o1..o1 + d]);
+                sbuf[j] = s0 * scale;
+                sbuf[j + 1] = s1 * scale;
                 j += 2;
             }
-            if j < hi {
+            if j < cnt {
                 let o = (j * h + hh) * d;
-                sbuf[j - lo] = dot(qrow, &k[o..o + d]) * scale;
+                sbuf[j] = dot(qrow, &kb[o..o + d]) * scale;
             }
             for (jj, &s) in sbuf.iter().enumerate() {
-                let voff = ((lo + jj) * h + hh) * d;
-                row.push(s, &v[voff..voff + d]);
+                let voff = (jj * h + hh) * d;
+                row.push(s, &vb[voff..voff + d]);
             }
         }
     }

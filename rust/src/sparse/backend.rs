@@ -2,7 +2,8 @@
 //! attention (serving engine, router, experiments, benches) goes through
 //! the [`AttentionBackend`] trait instead of hard-wired kernel calls.
 //!
-//! Four implementations:
+//! Four implementations here (a fifth, the paged-pool backend
+//! `sparse::paged::PagedMobaAttention`, lives with its pool):
 //!
 //! - [`FullAttention`] — causal full attention; decode *recomputes* the
 //!   whole sequence per token (O(N²·D) per step), the honest model of a
@@ -38,6 +39,7 @@ use super::attention::{
 };
 use super::gate::{moba_gate, Gate};
 use super::kv_cache::{BlockPoolCache, KvCache};
+use super::paged::PagedMobaAttention;
 
 /// A swappable attention implementation with an incremental decode state.
 /// `Send` so whole decode sessions can migrate onto scheduler worker
@@ -69,6 +71,18 @@ pub trait AttentionBackend: Send {
 
     /// Tokens currently held in the incremental state.
     fn seq_len(&self) -> usize;
+
+    /// Duplicate the incremental state into an independent session that
+    /// shares the ingested prefix — O(1) copy-on-write where the backend
+    /// supports it (`sparse::paged`). Private-cache backends refuse:
+    /// cloning their state would double memory, which is exactly what
+    /// the paged pool exists to avoid.
+    fn fork(&self) -> Result<Box<dyn AttentionBackend>> {
+        bail!(
+            "backend '{}' has no copy-on-write state; use 'paged' for prefix sharing",
+            self.name()
+        )
+    }
 }
 
 fn last_row(out: &Tensor) -> Vec<f32> {
@@ -642,6 +656,10 @@ pub enum BackendKind {
     CachedSparse,
     /// `FusedMobaAttention` (fused single-pass prefill + cached decode)
     Fused,
+    /// `sparse::paged::PagedMobaAttention` (block-table decode over a
+    /// shared copy-on-write pool; standalone construction gets a private
+    /// unbounded pool)
+    Paged,
 }
 
 impl BackendKind {
@@ -652,8 +670,10 @@ impl BackendKind {
             "cached-full" => BackendKind::CachedFull,
             "cached-sparse" | "cached" => BackendKind::CachedSparse,
             "fused" => BackendKind::Fused,
+            "paged" => BackendKind::Paged,
             other => bail!(
-                "unknown backend '{other}' (expected full|moba|cached-full|cached-sparse|fused)"
+                "unknown backend '{other}' \
+                 (expected full|moba|cached-full|cached-sparse|fused|paged)"
             ),
         })
     }
@@ -665,6 +685,7 @@ impl BackendKind {
             BackendKind::CachedFull => "cached-full",
             BackendKind::CachedSparse => "cached-sparse",
             BackendKind::Fused => "fused",
+            BackendKind::Paged => "paged",
         }
     }
 }
@@ -696,6 +717,10 @@ pub fn build_backend_par(
         ),
         BackendKind::Fused => Box::new(
             FusedMobaAttention::new(heads, head_dim, block_size, topk).with_workers(workers),
+        ),
+        BackendKind::Paged => Box::new(
+            PagedMobaAttention::with_private_pool(heads, head_dim, block_size, topk)
+                .with_workers(workers),
         ),
     }
 }
@@ -878,6 +903,7 @@ mod tests {
             BackendKind::CachedFull,
             BackendKind::CachedSparse,
             BackendKind::Fused,
+            BackendKind::Paged,
         ] {
             let mut b = build_backend(kind, 1, 4, 4, 2);
             b.prefill(&q, &k, &v);
@@ -895,6 +921,7 @@ mod tests {
             BackendKind::CachedFull,
             BackendKind::CachedSparse,
             BackendKind::Fused,
+            BackendKind::Paged,
         ] {
             assert_eq!(BackendKind::parse(kind.label()).unwrap(), kind);
         }
@@ -911,6 +938,7 @@ mod tests {
             BackendKind::CachedFull,
             BackendKind::CachedSparse,
             BackendKind::Fused,
+            BackendKind::Paged,
         ] {
             let mut one = build_backend_par(kind, 2, 8, 16, 2, 1);
             let mut many = build_backend_par(kind, 2, 8, 16, 2, 4);

@@ -17,6 +17,19 @@
 
 use crate::tensor::Tensor;
 
+/// `out = sums * (1/count)` — THE block-representative mean formula: one
+/// reciprocal, then one multiply per element (never a per-element
+/// divide). Every cache that materializes means from running sums
+/// (`BlockPoolCache` here, `PagedKvPool` in `sparse::paged`) goes through
+/// this helper, so equal sums always yield bit-identical means.
+#[inline]
+pub(crate) fn write_mean(sums: &[f32], count: usize, out: &mut [f32]) {
+    let inv = 1.0 / count as f32;
+    for (o, &s) in out.iter_mut().zip(sums) {
+        *o = s * inv;
+    }
+}
+
 /// Append-only K/V store for one sequence, `[len, H, D]` row-major.
 #[derive(Clone, Debug)]
 pub struct KvCache {
@@ -213,11 +226,8 @@ impl BlockPoolCache {
     /// same accumulation order, one multiply by `1/count`.
     pub fn mean_into(&self, b: usize, h: usize, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.head_dim);
-        let inv = 1.0 / self.counts[b] as f32;
         let off = (b * self.heads + h) * self.head_dim;
-        for (o, &s) in out.iter_mut().zip(&self.sums[off..off + self.head_dim]) {
-            *o = s * inv;
-        }
+        write_mean(&self.sums[off..off + self.head_dim], self.counts[b], out);
     }
 
     /// All of head `h`'s block representatives written contiguously into
@@ -228,11 +238,8 @@ impl BlockPoolCache {
         let (nb, d) = (self.n_blocks(), self.head_dim);
         debug_assert_eq!(out.len(), nb * d);
         for b in 0..nb {
-            let inv = 1.0 / self.counts[b] as f32;
             let src = (b * self.heads + h) * d;
-            for (o, &s) in out[b * d..(b + 1) * d].iter_mut().zip(&self.sums[src..src + d]) {
-                *o = s * inv;
-            }
+            write_mean(&self.sums[src..src + d], self.counts[b], &mut out[b * d..(b + 1) * d]);
         }
     }
 

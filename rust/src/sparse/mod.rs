@@ -2,7 +2,8 @@
 //! streaming attention (paper Eq. 2 / Algorithm 1) in two-pass and fused
 //! single-pass (Flash-MoBA style) forms, the causal full attention
 //! baseline, the pluggable [`AttentionBackend`] trait with the
-//! incremental KV/block-pool caches behind O(k·B) decode, and the
+//! incremental KV/block-pool caches behind O(k·B) decode, the paged
+//! shared KV pool with copy-on-write prefix sharing (`paged`), and the
 //! head×query-tile multi-core partitioner (`parallel`). See `README.md`
 //! in this directory for the backend/cache design and the
 //! threading/determinism model.
@@ -17,6 +18,7 @@ pub mod attention;
 pub mod backend;
 pub mod gate;
 pub mod kv_cache;
+pub mod paged;
 pub mod parallel;
 
 pub use attention::{
@@ -29,4 +31,5 @@ pub use backend::{
 };
 pub use gate::{affinity_scores, mean_pool_blocks, moba_gate, Gate};
 pub use kv_cache::{BlockPoolCache, KvCache};
+pub use paged::{shared_pool, BlockTable, PagedKvPool, PagedMobaAttention, SharedKvPool};
 pub use parallel::default_workers;

@@ -1,0 +1,830 @@
+//! Paged shared KV pool with copy-on-write prefix sharing — the
+//! vLLM-style scaling move for heavy-traffic serving over MoBA's
+//! block-granular cache layout.
+//!
+//! MoBA already partitions the KV cache into fixed-size blocks (the gate
+//! pools keys per block), so the physical page size of a paged pool *is*
+//! the MoBA block size `B`:
+//!
+//! - [`PagedKvPool`] owns refcounted physical KV blocks (`[B, H, D]`
+//!   K and V slabs plus the block's key running sum — the same running
+//!   sum `BlockPoolCache` keeps, so representative means stay
+//!   bit-identical to `mean_pool_blocks`);
+//! - [`BlockTable`] maps one session's logical blocks to physical ids;
+//! - [`PagedKvPool::fork`] shares a whole prefix in O(blocks) refcount
+//!   bumps and zero data copies; a write into a *shared* tail block
+//!   copies that one block first (copy-on-write), so S sessions sharing
+//!   an N-token prefix hold O(N + S·tail) memory, not O(S·N);
+//! - [`PagedMobaAttention`] is the [`AttentionBackend`] over a pool
+//!   handle: fused single-pass prefill, and a decode row that streams
+//!   K/V and representative means *through the block table*
+//!   (`attention::fused_row_blocks`) — bit-identical to the
+//!   private-cache backends (same `dot`/`dot2` accumulation order, same
+//!   NaN-safe `>=` top-k selection, same `sum * (1/count)` means).
+//!
+//! Concurrency: the pool handle is `Arc<RwLock<..>>` so whole sessions
+//! can migrate across scheduler decode shards (`serve::scheduler`).
+//! Appends (and fork/release refcounting) take the write lock briefly;
+//! the expensive attention row then streams under a *read* lock, so
+//! decode shards run concurrently. This is sound because copy-on-write
+//! guarantees a session's mapped blocks are immutable while it holds
+//! references to them (another session's append can only CoW *its own*
+//! tail, never rewrite a block someone else maps), so lock order cannot
+//! change any session's bytes — outputs stay shard-count-invariant.
+
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+use super::attention::{
+    fused_moba_attention, fused_moba_attention_with_reps, fused_row_blocks, FusedScratch,
+};
+use super::backend::AttentionBackend;
+use super::gate::{moba_gate, Gate};
+use super::kv_cache::write_mean;
+
+/// Pool handle shared by many sessions (and scheduler shards).
+pub type SharedKvPool = Arc<RwLock<PagedKvPool>>;
+
+/// Build a shareable pool handle. `capacity_blocks = None` is unbounded;
+/// `Some(n)` makes allocation past `n` physical blocks an error (the
+/// continuous scheduler admits against this capacity).
+pub fn shared_pool(
+    block_size: usize,
+    heads: usize,
+    head_dim: usize,
+    capacity_blocks: Option<usize>,
+) -> SharedKvPool {
+    Arc::new(RwLock::new(PagedKvPool::new(block_size, heads, head_dim, capacity_blocks)))
+}
+
+/// Per-session logical→physical block mapping. Obtained from
+/// [`PagedKvPool::fork`] or built empty; deliberately NOT `Clone` — the
+/// only way to duplicate one is through the pool, which keeps refcounts
+/// honest.
+#[derive(Debug, Default)]
+pub struct BlockTable {
+    blocks: Vec<usize>,
+    len: usize,
+}
+
+impl BlockTable {
+    pub fn new() -> BlockTable {
+        BlockTable::default()
+    }
+
+    /// Tokens in this session's sequence.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Logical blocks currently mapped (`ceil(len / B)`).
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Physical id of logical block `b` (diagnostics and sharing tests).
+    pub fn physical(&self, b: usize) -> usize {
+        self.blocks[b]
+    }
+}
+
+/// Refcounted fixed-size physical KV block store. All mutation goes
+/// through a session's [`BlockTable`]; blocks referenced by more than
+/// one table are immutable until copy-on-write hands the writer a
+/// private copy.
+pub struct PagedKvPool {
+    block_size: usize,
+    heads: usize,
+    head_dim: usize,
+    /// floats per physical block in `k`/`v` (`B * H * D`)
+    slot: usize,
+    /// physical K payload, `[n_phys, B, H, D]` row-major per block
+    k: Vec<f32>,
+    /// physical V payload, same layout
+    v: Vec<f32>,
+    /// per-block key running sums, `[n_phys, H * D]` — accumulated in
+    /// token append order, exactly like `BlockPoolCache`
+    ksum: Vec<f32>,
+    /// tokens written into each physical block
+    fill: Vec<usize>,
+    /// tables referencing each physical block; 0 = free
+    refs: Vec<usize>,
+    /// free physical ids, reused before the store grows
+    free: Vec<usize>,
+    capacity: Option<usize>,
+    used: usize,
+}
+
+impl PagedKvPool {
+    pub fn new(
+        block_size: usize,
+        heads: usize,
+        head_dim: usize,
+        capacity_blocks: Option<usize>,
+    ) -> PagedKvPool {
+        assert!(block_size > 0 && heads > 0 && head_dim > 0);
+        PagedKvPool {
+            block_size,
+            heads,
+            head_dim,
+            slot: block_size * heads * head_dim,
+            k: Vec::new(),
+            v: Vec::new(),
+            ksum: Vec::new(),
+            fill: Vec::new(),
+            refs: Vec::new(),
+            free: Vec::new(),
+            capacity: capacity_blocks,
+            used: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// Physical blocks currently referenced by at least one table.
+    pub fn used_blocks(&self) -> usize {
+        self.used
+    }
+
+    pub fn capacity_blocks(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Blocks still allocatable under the capacity (`None` = unbounded).
+    pub fn free_blocks(&self) -> Option<usize> {
+        self.capacity.map(|c| c.saturating_sub(self.used))
+    }
+
+    /// Resident bytes of *unique* K/V block payload — the O(N + S·tail)
+    /// number prefix sharing is about (a private `KvCache` per session
+    /// would pay O(S·N)).
+    pub fn payload_bytes(&self) -> usize {
+        self.used * self.slot * 2 * std::mem::size_of::<f32>()
+    }
+
+    fn alloc(&mut self) -> Result<usize> {
+        if let Some(cap) = self.capacity {
+            if self.used >= cap {
+                bail!("paged pool exhausted: {} blocks in use, capacity {cap}", self.used);
+            }
+        }
+        let w = self.heads * self.head_dim;
+        self.used += 1;
+        if let Some(pid) = self.free.pop() {
+            self.fill[pid] = 0;
+            self.refs[pid] = 1;
+            self.ksum[pid * w..(pid + 1) * w].fill(0.0);
+            return Ok(pid);
+        }
+        let pid = self.refs.len();
+        self.k.resize((pid + 1) * self.slot, 0.0);
+        self.v.resize((pid + 1) * self.slot, 0.0);
+        self.ksum.resize((pid + 1) * w, 0.0);
+        self.fill.push(0);
+        self.refs.push(1);
+        Ok(pid)
+    }
+
+    /// Append one token's K/V rows (each `[H * D]`) on behalf of `table`.
+    /// Allocates a fresh block at block boundaries; a *shared* partial
+    /// tail block is copied first (copy-on-write), so no other table ever
+    /// observes the write. Errors only when a bounded pool is exhausted.
+    pub fn append(&mut self, table: &mut BlockTable, k_row: &[f32], v_row: &[f32]) -> Result<()> {
+        let w = self.heads * self.head_dim;
+        assert_eq!(k_row.len(), w, "k row width");
+        assert_eq!(v_row.len(), w, "v row width");
+        let in_block = table.len % self.block_size;
+        if in_block == 0 {
+            let pid = self.alloc()?;
+            table.blocks.push(pid);
+        } else {
+            let tail = *table.blocks.last().expect("partial tail implies a mapped block");
+            if self.refs[tail] > 1 {
+                // copy-on-write: divergence pays for its own private tail
+                let copy = self.alloc()?;
+                let n = self.fill[tail];
+                debug_assert_eq!(n, in_block, "shared tail fill mismatch");
+                let (src, dst) = (tail * self.slot, copy * self.slot);
+                self.k.copy_within(src..src + n * w, dst);
+                self.v.copy_within(src..src + n * w, dst);
+                self.ksum.copy_within(tail * w..(tail + 1) * w, copy * w);
+                self.fill[copy] = n;
+                self.refs[tail] -= 1;
+                *table.blocks.last_mut().expect("just read") = copy;
+            }
+        }
+        let pid = *table.blocks.last().expect("tail block mapped");
+        debug_assert_eq!(self.refs[pid], 1, "writing a shared block");
+        debug_assert_eq!(self.fill[pid], in_block, "tail fill out of sync");
+        let off = pid * self.slot + in_block * w;
+        self.k[off..off + w].copy_from_slice(k_row);
+        self.v[off..off + w].copy_from_slice(v_row);
+        let soff = pid * w;
+        for (s, &x) in self.ksum[soff..soff + w].iter_mut().zip(k_row) {
+            *s += x;
+        }
+        self.fill[pid] += 1;
+        table.len += 1;
+        Ok(())
+    }
+
+    /// Bulk-append a whole `[N, H, D]` prefix (prefill path).
+    pub fn append_tensors(&mut self, table: &mut BlockTable, k: &Tensor, v: &Tensor) -> Result<()> {
+        assert_eq!(k.shape, v.shape, "k/v shape mismatch");
+        assert_eq!(k.rank(), 3, "expected [N, H, D]");
+        assert_eq!(k.shape[1], self.heads, "head count");
+        assert_eq!(k.shape[2], self.head_dim, "head dim");
+        let w = self.heads * self.head_dim;
+        for t in 0..k.shape[0] {
+            self.append(table, &k.data[t * w..(t + 1) * w], &v.data[t * w..(t + 1) * w])?;
+        }
+        Ok(())
+    }
+
+    /// Fork `table`: O(blocks) refcount bumps, zero bytes copied. Both
+    /// sides keep reading the shared physical blocks; whichever writes a
+    /// shared tail first pays the one-block copy.
+    pub fn fork(&mut self, table: &BlockTable) -> BlockTable {
+        for &pid in &table.blocks {
+            self.refs[pid] += 1;
+        }
+        BlockTable { blocks: table.blocks.clone(), len: table.len }
+    }
+
+    /// Release a table's references; blocks dropping to zero references
+    /// return to the free list for reuse.
+    pub fn release(&mut self, table: &mut BlockTable) {
+        for &pid in &table.blocks {
+            self.refs[pid] -= 1;
+            if self.refs[pid] == 0 {
+                self.free.push(pid);
+                self.used -= 1;
+            }
+        }
+        table.blocks.clear();
+        table.len = 0;
+    }
+
+    /// Tokens of logical block `b` under `table` — equals the physical
+    /// fill (shared partial blocks are immutable, so every referencing
+    /// table sees the same fill).
+    fn block_tokens(&self, table: &BlockTable, b: usize) -> usize {
+        let cnt = self.fill[table.blocks[b]];
+        debug_assert_eq!(cnt, (table.len - b * self.block_size).min(self.block_size));
+        cnt
+    }
+
+    /// Key slice `[D]` for (logical token, head) of `table`'s sequence.
+    pub fn k_at(&self, table: &BlockTable, t: usize, h: usize) -> &[f32] {
+        debug_assert!(t < table.len);
+        let pid = table.blocks[t / self.block_size];
+        let off = pid * self.slot + ((t % self.block_size) * self.heads + h) * self.head_dim;
+        &self.k[off..off + self.head_dim]
+    }
+
+    /// Value slice `[D]` for (logical token, head) of `table`'s sequence.
+    pub fn v_at(&self, table: &BlockTable, t: usize, h: usize) -> &[f32] {
+        debug_assert!(t < table.len);
+        let pid = table.blocks[t / self.block_size];
+        let off = pid * self.slot + ((t % self.block_size) * self.heads + h) * self.head_dim;
+        &self.v[off..off + self.head_dim]
+    }
+
+    /// Physical block `pid`'s K and V slabs (`[fill, H, D]`, the block's
+    /// first token at offset 0) — the indirection the paged fused decode
+    /// row streams through.
+    pub(crate) fn block_kv(&self, pid: usize) -> (&[f32], &[f32]) {
+        let off = pid * self.slot;
+        let n = self.fill[pid] * self.heads * self.head_dim;
+        (&self.k[off..off + n], &self.v[off..off + n])
+    }
+
+    /// Mean representative of `table`'s logical block `b`, head `h` —
+    /// the shared `sum * (1/count)` formula, bit-identical to
+    /// `BlockPoolCache::mean_into` / `mean_pool_blocks` on the same
+    /// token stream.
+    pub fn mean_into(&self, table: &BlockTable, b: usize, h: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.head_dim);
+        let cnt = self.block_tokens(table, b);
+        let off = table.blocks[b] * self.heads * self.head_dim + h * self.head_dim;
+        write_mean(&self.ksum[off..off + self.head_dim], cnt, out);
+    }
+
+    /// All of head `h`'s block representatives for `table`, written
+    /// contiguously into `out` (`[n_blocks, D]`) — the per-head slab the
+    /// fused gate scans.
+    pub fn means_for_head_into(&self, table: &BlockTable, h: usize, out: &mut [f32]) {
+        let d = self.head_dim;
+        debug_assert_eq!(out.len(), table.n_blocks() * d);
+        for b in 0..table.n_blocks() {
+            self.mean_into(table, b, h, &mut out[b * d..(b + 1) * d]);
+        }
+    }
+
+    /// Materialize `table`'s keys as a `[len, H, D]` tensor (recompute
+    /// baselines and parity tests).
+    pub fn k_tensor(&self, table: &BlockTable) -> Tensor {
+        self.gather(table, &self.k)
+    }
+
+    /// Materialize `table`'s values as a `[len, H, D]` tensor.
+    pub fn v_tensor(&self, table: &BlockTable) -> Tensor {
+        self.gather(table, &self.v)
+    }
+
+    fn gather(&self, table: &BlockTable, store: &[f32]) -> Tensor {
+        let w = self.heads * self.head_dim;
+        let mut data = Vec::with_capacity(table.len * w);
+        for t in 0..table.len {
+            let pid = table.blocks[t / self.block_size];
+            let off = pid * self.slot + (t % self.block_size) * w;
+            data.extend_from_slice(&store[off..off + w]);
+        }
+        Tensor::from_vec(&[table.len, self.heads, self.head_dim], data)
+            .expect("pool layout is always consistent")
+    }
+}
+
+/// Refresh a session's materialized per-head representative slabs
+/// (`[H, cap, D]`, `cap` a power of two ≥ `n_blocks`) from the pool —
+/// the paged mirror of `backend::RepsCache::sync`: a single appended
+/// token can only change the last block's mean, so steady-state decode
+/// refreshes one block per head; `full` (prefill, or a capacity grow —
+/// which a fresh fork hits on its first decode) rebuilds everything.
+fn sync_reps(
+    pool: &PagedKvPool,
+    table: &BlockTable,
+    reps: &mut Vec<f32>,
+    cap: &mut usize,
+    full: bool,
+) {
+    let (h, d) = (pool.heads(), pool.head_dim());
+    let nb = table.n_blocks();
+    if nb == 0 {
+        return;
+    }
+    if full || nb > *cap {
+        *cap = (*cap).max(nb.next_power_of_two());
+        reps.clear();
+        reps.resize(h * *cap * d, 0.0);
+        for hh in 0..h {
+            let off = hh * *cap * d;
+            pool.means_for_head_into(table, hh, &mut reps[off..off + nb * d]);
+        }
+    } else {
+        for hh in 0..h {
+            let off = (hh * *cap + (nb - 1)) * d;
+            pool.mean_into(table, nb - 1, hh, &mut reps[off..off + d]);
+        }
+    }
+}
+
+/// One fused decode row through the block table: gate against the
+/// session's representative slabs, select top-k with the NaN-safe `>=`
+/// test, stream the selected blocks via `block_kv` indirection — the
+/// same `fused_row_blocks` routine the contiguous caches use, so the
+/// output is bit-identical to `FusedMobaAttention` / recomputing
+/// `moba_attention` over the whole prefix.
+#[allow(clippy::too_many_arguments)]
+fn paged_decode_row(
+    pool: &PagedKvPool,
+    table: &BlockTable,
+    reps: &[f32],
+    reps_cap: usize,
+    topk: usize,
+    scratch: &mut FusedScratch,
+    q_row: &[f32],
+) -> Vec<f32> {
+    let (h, d) = (pool.heads(), pool.head_dim());
+    let block_size = pool.block_size();
+    let t = table.len() - 1;
+    let scale = 1.0 / (d as f32).sqrt();
+    let nb = table.n_blocks();
+    let kk = topk.min(nb);
+    let mut out = vec![0.0f32; h * d];
+    scratch.ensure_blocks(nb);
+    for hh in 0..h {
+        let qh = &q_row[hh * d..(hh + 1) * d];
+        let head = hh * reps_cap * d;
+        let reps_h = &reps[head..head + nb * d];
+        fused_row_blocks(
+            qh,
+            reps_h,
+            h,
+            hh,
+            d,
+            block_size,
+            kk,
+            t,
+            scale,
+            scratch,
+            &mut out[hh * d..(hh + 1) * d],
+            |b| pool.block_kv(table.physical(b)),
+        );
+    }
+    out
+}
+
+/// MoBA attention over a shared paged pool: fused single-pass prefill,
+/// decode through the session's [`BlockTable`]. [`fork`] shares the
+/// whole prefix copy-on-write — the shared-system-prompt serving
+/// scenario. Outputs are bit-identical to every private-cache sparse
+/// backend (`moba` / `cached-sparse` / `fused`).
+///
+/// [`fork`]: AttentionBackend::fork
+pub struct PagedMobaAttention {
+    pool: SharedKvPool,
+    table: BlockTable,
+    block_size: usize,
+    topk: usize,
+    workers: usize,
+    /// materialized per-head representative slabs, `[H, reps_cap, D]`
+    reps: Vec<f32>,
+    reps_cap: usize,
+    scratch: FusedScratch,
+}
+
+impl PagedMobaAttention {
+    /// Attach a new session to `pool` (geometry comes from the pool).
+    pub fn new(pool: SharedKvPool, topk: usize) -> PagedMobaAttention {
+        assert!(topk > 0);
+        let (block_size, head_dim) = {
+            let p = pool.read().expect("paged pool lock");
+            (p.block_size(), p.head_dim())
+        };
+        PagedMobaAttention {
+            pool,
+            table: BlockTable::new(),
+            block_size,
+            topk,
+            workers: 1,
+            reps: Vec::new(),
+            reps_cap: 0,
+            scratch: FusedScratch::new(head_dim, 0, block_size),
+        }
+    }
+
+    /// Standalone backend over its own fresh unbounded pool (benches,
+    /// conformance tests, CLI selection without a serving engine).
+    pub fn with_private_pool(
+        heads: usize,
+        head_dim: usize,
+        block_size: usize,
+        topk: usize,
+    ) -> PagedMobaAttention {
+        PagedMobaAttention::new(shared_pool(block_size, heads, head_dim, None), topk)
+    }
+
+    /// Spread batch/prefill rows over `workers` threads (bit-identical
+    /// output for any count; decode rows run inline, like the other
+    /// cached backends).
+    pub fn with_workers(mut self, workers: usize) -> PagedMobaAttention {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn topk(&self) -> usize {
+        self.topk
+    }
+
+    /// The shared pool handle this session allocates from.
+    pub fn pool(&self) -> &SharedKvPool {
+        &self.pool
+    }
+
+    /// Logical blocks this session currently maps.
+    pub fn n_blocks(&self) -> usize {
+        self.table.n_blocks()
+    }
+}
+
+impl Drop for PagedMobaAttention {
+    fn drop(&mut self) {
+        if let Ok(mut pool) = self.pool.write() {
+            pool.release(&mut self.table);
+        }
+    }
+}
+
+impl AttentionBackend for PagedMobaAttention {
+    fn name(&self) -> &'static str {
+        "paged"
+    }
+
+    fn forward(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        fused_moba_attention(q, k, v, self.block_size, self.topk, self.workers)
+    }
+
+    fn gate(&self, q: &Tensor, k: &Tensor) -> Option<Gate> {
+        Some(moba_gate(q, k, self.block_size, self.topk))
+    }
+
+    fn reset(&mut self) {
+        let mut pool = self.pool.write().expect("paged pool lock");
+        pool.release(&mut self.table);
+        self.reps.clear();
+        self.reps_cap = 0;
+    }
+
+    fn prefill(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        debug_assert!(self.table.is_empty(), "prefill on non-empty state");
+        {
+            let mut pool = self.pool.write().expect("paged pool lock");
+            pool.append_tensors(&mut self.table, k, v)
+                .expect("paged pool exhausted in prefill (admission must reserve blocks)");
+            sync_reps(&pool, &self.table, &mut self.reps, &mut self.reps_cap, true);
+        }
+        // the pool's running-sum means double as the fused pass's
+        // representatives — no second pooling pass over K
+        fused_moba_attention_with_reps(
+            q,
+            k,
+            v,
+            self.block_size,
+            self.topk,
+            self.workers,
+            &self.reps,
+            self.reps_cap,
+        )
+    }
+
+    fn decode(&mut self, q_row: &[f32], k_row: &[f32], v_row: &[f32]) -> Vec<f32> {
+        {
+            let mut pool = self.pool.write().expect("paged pool lock");
+            pool.append(&mut self.table, k_row, v_row)
+                .expect("paged pool exhausted in decode (admission must reserve blocks)");
+            sync_reps(&pool, &self.table, &mut self.reps, &mut self.reps_cap, false);
+        }
+        // the attention row streams under a shared READ lock: this
+        // session's blocks are immutable while its table references them
+        // (CoW), so decode shards run concurrently and only appends
+        // serialize
+        let pool = self.pool.read().expect("paged pool lock");
+        paged_decode_row(
+            &pool,
+            &self.table,
+            &self.reps,
+            self.reps_cap,
+            self.topk,
+            &mut self.scratch,
+            q_row,
+        )
+    }
+
+    fn seq_len(&self) -> usize {
+        self.table.len()
+    }
+
+    fn fork(&self) -> Result<Box<dyn AttentionBackend>> {
+        let (table, head_dim) = {
+            let mut pool = self.pool.write().expect("paged pool lock");
+            let table = pool.fork(&self.table);
+            (table, pool.head_dim())
+        };
+        // reps stay empty: the fork's first decode sees n_blocks >
+        // reps_cap (0) and rebuilds the slabs from the pool in full
+        Ok(Box::new(PagedMobaAttention {
+            pool: self.pool.clone(),
+            table,
+            block_size: self.block_size,
+            topk: self.topk,
+            workers: self.workers,
+            reps: Vec::new(),
+            reps_cap: 0,
+            scratch: FusedScratch::new(head_dim, 0, self.block_size),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::backend::{CachedDecodeBackend, DecodePolicy, FusedMobaAttention};
+    use crate::sparse::gate::mean_pool_blocks;
+    use crate::sparse::kv_cache::KvCache;
+    use crate::util::rng::Rng;
+
+    fn rand_t(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+    }
+
+    fn row(t: &Tensor, i: usize) -> &[f32] {
+        let w = t.shape[1] * t.shape[2];
+        &t.data[i * w..(i + 1) * w]
+    }
+
+    #[test]
+    fn pool_roundtrips_kv_rows() {
+        let k = rand_t(&[23, 2, 4], 1);
+        let v = rand_t(&[23, 2, 4], 2);
+        let mut pool = PagedKvPool::new(8, 2, 4, None);
+        let mut table = BlockTable::new();
+        pool.append_tensors(&mut table, &k, &v).unwrap();
+        assert_eq!(table.len(), 23);
+        assert_eq!(table.n_blocks(), 3);
+        assert_eq!(pool.used_blocks(), 3);
+        assert_eq!(pool.k_tensor(&table), k);
+        assert_eq!(pool.v_tensor(&table), v);
+        assert_eq!(pool.k_at(&table, 17, 1), {
+            let mut c = KvCache::new(2, 4);
+            c.append_tensors(&k, &v);
+            c.k_at(17, 1).to_vec()
+        });
+    }
+
+    #[test]
+    fn pool_means_match_batch_pooling_bitwise() {
+        for &n in &[32usize, 37, 5] {
+            let k = rand_t(&[n, 2, 8], 100 + n as u64);
+            let v = rand_t(&[n, 2, 8], 200 + n as u64);
+            let mut pool = PagedKvPool::new(16, 2, 8, None);
+            let mut table = BlockTable::new();
+            pool.append_tensors(&mut table, &k, &v).unwrap();
+            let batch = mean_pool_blocks(&k, 16);
+            let nb = table.n_blocks();
+            let mut slab = vec![0.0f32; nb * 8];
+            for h in 0..2 {
+                pool.means_for_head_into(&table, h, &mut slab);
+                for b in 0..nb {
+                    let want = &batch.data[(b * 2 + h) * 8..(b * 2 + h) * 8 + 8];
+                    assert_eq!(&slab[b * 8..(b + 1) * 8], want, "n={n} h={h} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fork_shares_blocks_and_cow_isolates_writes() {
+        let k = rand_t(&[20, 1, 4], 3);
+        let v = rand_t(&[20, 1, 4], 4);
+        let mut pool = PagedKvPool::new(8, 1, 4, None);
+        let mut a = BlockTable::new();
+        pool.append_tensors(&mut a, &k, &v).unwrap(); // 20 tokens: 2 full + 4-token tail
+        assert_eq!(pool.used_blocks(), 3);
+        let mut b = pool.fork(&a);
+        assert_eq!(pool.used_blocks(), 3, "fork copies nothing");
+        assert_eq!(b.len(), 20);
+        assert_eq!(a.physical(2), b.physical(2), "tail shared until a write");
+
+        // b writes the shared tail → CoW copy; a's bytes are untouched
+        let (kr, vr) = ([9.0f32; 4], [7.0f32; 4]);
+        pool.append(&mut b, &kr, &vr).unwrap();
+        assert_eq!(pool.used_blocks(), 4);
+        assert_ne!(a.physical(2), b.physical(2));
+        assert_eq!(pool.k_tensor(&a), k, "CoW leaked into the parent");
+        assert_eq!(pool.k_at(&b, 20, 0), &kr);
+        // a now owns its tail exclusively again → appends in place
+        pool.append(&mut a, &[1.0; 4], &[2.0; 4]).unwrap();
+        assert_eq!(pool.used_blocks(), 4);
+
+        // release returns blocks; the survivor keeps the shared prefix
+        pool.release(&mut b);
+        assert_eq!(pool.used_blocks(), 3);
+        pool.release(&mut a);
+        assert_eq!(pool.used_blocks(), 0);
+        assert_eq!(pool.payload_bytes(), 0);
+    }
+
+    #[test]
+    fn freed_blocks_are_reused_with_clean_sums() {
+        let mut pool = PagedKvPool::new(2, 1, 2, None);
+        let mut a = BlockTable::new();
+        pool.append(&mut a, &[4.0, 4.0], &[0.0, 0.0]).unwrap();
+        pool.release(&mut a);
+        let mut b = BlockTable::new();
+        pool.append(&mut b, &[2.0, 6.0], &[0.0, 0.0]).unwrap();
+        assert_eq!(pool.used_blocks(), 1);
+        let mut mean = [0.0f32; 2];
+        pool.mean_into(&b, 0, 0, &mut mean);
+        assert_eq!(mean, [2.0, 6.0], "stale sum survived block reuse");
+    }
+
+    #[test]
+    fn capacity_bounds_allocation() {
+        let mut pool = PagedKvPool::new(4, 1, 2, Some(2));
+        let mut t = BlockTable::new();
+        for i in 0..8 {
+            pool.append(&mut t, &[i as f32, 0.0], &[0.0, 0.0]).unwrap();
+        }
+        assert_eq!(pool.free_blocks(), Some(0));
+        assert!(pool.append(&mut t, &[9.0, 0.0], &[0.0, 0.0]).is_err());
+        pool.release(&mut t);
+        assert_eq!(pool.free_blocks(), Some(2));
+    }
+
+    #[test]
+    fn paged_backend_bitwise_matches_private_backends() {
+        // golden append-one-token loop: paged decode == fused/cached
+        // private decode == two-pass batch recompute, bit-for-bit
+        let n = 53;
+        let (bs, topk) = (16, 2);
+        let q = rand_t(&[n, 2, 8], 31);
+        let k = rand_t(&[n, 2, 8], 32);
+        let v = rand_t(&[n, 2, 8], 33);
+        let mut paged = PagedMobaAttention::with_private_pool(2, 8, bs, topk);
+        let mut fused = FusedMobaAttention::new(2, 8, bs, topk);
+        let mut cached = CachedDecodeBackend::new(2, 8, bs, topk, DecodePolicy::Sparse);
+        for t in 0..n {
+            let got = paged.decode(row(&q, t), row(&k, t), row(&v, t));
+            assert_eq!(got, fused.decode(row(&q, t), row(&k, t), row(&v, t)), "t={t}");
+            assert_eq!(got, cached.decode(row(&q, t), row(&k, t), row(&v, t)), "t={t}");
+        }
+        assert_eq!(paged.seq_len(), n);
+    }
+
+    #[test]
+    fn forked_backends_diverge_bitwise_identically_to_private() {
+        // shared 40-token prefix (partial tail block), two divergent
+        // continuations — each fork must match a private backend fed the
+        // same full stream, bit-for-bit, through the CoW boundary
+        let (n, split, bs, topk) = (56, 40, 16, 2);
+        let streams = [(41u64, 42u64, 43u64), (51, 52, 53)];
+        let q0 = rand_t(&[n, 2, 8], streams[0].0);
+        let k0 = rand_t(&[n, 2, 8], streams[0].1);
+        let v0 = rand_t(&[n, 2, 8], streams[0].2);
+        let mut parent = PagedMobaAttention::with_private_pool(2, 8, bs, topk);
+        for t in 0..split {
+            parent.decode(row(&q0, t), row(&k0, t), row(&v0, t));
+        }
+        let mut forks = [parent.fork().unwrap(), parent.fork().unwrap()];
+        for (f, &(sq, sk, sv)) in forks.iter_mut().zip(&streams) {
+            let q = rand_t(&[n, 2, 8], sq);
+            let k = rand_t(&[n, 2, 8], sk);
+            let v = rand_t(&[n, 2, 8], sv);
+            let mut private = FusedMobaAttention::new(2, 8, bs, topk);
+            for t in 0..split {
+                private.decode(row(&q0, t), row(&k0, t), row(&v0, t));
+            }
+            for t in split..n {
+                let a = f.decode(row(&q, t), row(&k, t), row(&v, t));
+                let b = private.decode(row(&q, t), row(&k, t), row(&v, t));
+                assert_eq!(a, b, "t={t}");
+            }
+            assert_eq!(f.seq_len(), n);
+        }
+    }
+
+    #[test]
+    fn reset_releases_and_backend_is_reusable() {
+        let q = rand_t(&[24, 1, 4], 61);
+        let k = rand_t(&[24, 1, 4], 62);
+        let v = rand_t(&[24, 1, 4], 63);
+        let mut b = PagedMobaAttention::with_private_pool(1, 4, 8, 2);
+        let first = b.prefill(&q, &k, &v);
+        assert_eq!(b.seq_len(), 24);
+        b.reset();
+        assert_eq!(b.seq_len(), 0);
+        assert_eq!(b.pool().read().unwrap().used_blocks(), 0);
+        assert_eq!(b.prefill(&q, &k, &v).data, first.data, "reuse after reset");
+    }
+
+    #[test]
+    fn shared_prefix_memory_is_prefix_plus_tails() {
+        // the acceptance-criterion accounting: S sessions over an N-token
+        // shared prefix cost ceil(N/B) + S·(own tail) blocks, not
+        // S·ceil(N/B)
+        let (bs, prefix, extra, sessions) = (16usize, 64usize, 8usize, 4usize);
+        let q = rand_t(&[prefix + extra, 2, 8], 71);
+        let k = rand_t(&[prefix + extra, 2, 8], 72);
+        let v = rand_t(&[prefix + extra, 2, 8], 73);
+        let mut parent = PagedMobaAttention::with_private_pool(2, 8, bs, 2);
+        let sub = |t: &Tensor| {
+            Tensor::from_vec(&[prefix, 2, 8], t.data[..prefix * 2 * 8].to_vec()).unwrap()
+        };
+        parent.prefill(&sub(&q), &sub(&k), &sub(&v));
+        let mut forks: Vec<_> = (0..sessions).map(|_| parent.fork().unwrap()).collect();
+        for f in forks.iter_mut() {
+            for t in prefix..prefix + extra {
+                f.decode(row(&q, t), row(&k, t), row(&v, t));
+            }
+        }
+        let used = parent.pool().read().unwrap().used_blocks();
+        // 64/16 = 4 shared prefix blocks + one 8-token tail block per fork
+        assert_eq!(used, prefix / bs + sessions, "expected O(N + S·tail) blocks");
+        let private = sessions * ((prefix + extra + bs - 1) / bs);
+        assert!(used * 2 < private, "paged pool is not sharing: {used} vs private {private}");
+    }
+}

@@ -1,0 +1,168 @@
+//! Cross-backend conformance: every `AttentionBackend` kind is driven
+//! through the same checks from ONE registry (`common::ALL_BACKENDS`):
+//!
+//! 1. the golden append-one-token loop — decode at every (ragged) length
+//!    must reproduce the batch oracle's last row bit-for-bit;
+//! 2. property invariants — prefill/decode boundary invisibility, convex
+//!    output rows, reset-then-reuse lifecycle, gate exposure;
+//! 3. workers=1 vs many bitwise equality on prefill and decode;
+//! 4. served-token agreement across backends of the same math.
+//!
+//! A future backend (per-head MoA configs, SIMD kernels, ...) inherits
+//! all of this by adding one constructor entry to `common::ALL_BACKENDS`.
+
+mod common;
+
+use common::{build, oracle, prefix, rand_t, row, ALL_BACKENDS, SPARSE_BACKENDS};
+use moba::serve::{ServeCfg, ServeEngine, ToyModel};
+use moba::sparse::BackendKind;
+use moba::tensor::Tensor;
+
+const H: usize = 2;
+const D: usize = 8;
+const BS: usize = 16;
+const TOPK: usize = 2;
+
+#[test]
+fn forward_matches_oracle_bitwise() {
+    let q = rand_t(&[48, H, D], 1);
+    let k = rand_t(&[48, H, D], 2);
+    let v = rand_t(&[48, H, D], 3);
+    for &kind in ALL_BACKENDS {
+        let b = build(kind, H, D, BS, TOPK, 1);
+        let want = oracle(kind, &q, &k, &v, BS, TOPK);
+        assert_eq!(b.forward(&q, &k, &v).data, want.data, "{}", b.name());
+    }
+}
+
+#[test]
+fn golden_append_one_token_loop() {
+    // n = 41 is deliberately ragged: mid-block lengths exercise the
+    // partial current block at every step
+    let n = 41;
+    let q = rand_t(&[n, H, D], 4);
+    let k = rand_t(&[n, H, D], 5);
+    let v = rand_t(&[n, H, D], 6);
+    for &kind in ALL_BACKENDS {
+        let mut b = build(kind, H, D, BS, TOPK, 1);
+        for t in 0..n {
+            let got = b.decode(row(&q, t), row(&k, t), row(&v, t));
+            let (qp, kp, vp) = (prefix(&q, t + 1), prefix(&k, t + 1), prefix(&v, t + 1));
+            let want = oracle(kind, &qp, &kp, &vp, BS, TOPK);
+            assert_eq!(got.as_slice(), row(&want, t), "{} t={t}", b.name());
+        }
+        assert_eq!(b.seq_len(), n, "{}", b.name());
+    }
+}
+
+#[test]
+fn prefill_decode_boundary_is_invisible() {
+    let (n, split) = (40, 25); // ragged boundary mid-block
+    let q = rand_t(&[n, H, D], 7);
+    let k = rand_t(&[n, H, D], 8);
+    let v = rand_t(&[n, H, D], 9);
+    for &kind in ALL_BACKENDS {
+        let mut a = build(kind, H, D, BS, TOPK, 1);
+        let out = a.prefill(&prefix(&q, split), &prefix(&k, split), &prefix(&v, split));
+        assert_eq!(out.shape, vec![split, H, D], "{}", a.name());
+        let mut b = build(kind, H, D, BS, TOPK, 1);
+        for t in 0..split {
+            b.decode(row(&q, t), row(&k, t), row(&v, t));
+        }
+        for t in split..n {
+            let ra = a.decode(row(&q, t), row(&k, t), row(&v, t));
+            let rb = b.decode(row(&q, t), row(&k, t), row(&v, t));
+            assert_eq!(ra, rb, "{} t={t}", a.name());
+        }
+    }
+}
+
+#[test]
+fn output_rows_are_convex_combinations() {
+    // v constant 1 → every attention output must be exactly ~1
+    let q = rand_t(&[32, H, D], 10);
+    let k = rand_t(&[32, H, D], 11);
+    let v = Tensor::ones(&[32, H, D]);
+    for &kind in ALL_BACKENDS {
+        let mut b = build(kind, H, D, BS, TOPK, 1);
+        let out = b.prefill(&q, &k, &v);
+        for &x in &out.data {
+            assert!((x - 1.0).abs() < 1e-4, "{}: not convex: {x}", b.name());
+        }
+    }
+}
+
+#[test]
+fn workers_do_not_change_prefill_or_decode() {
+    let n = 37;
+    let q = rand_t(&[n, H, D], 12);
+    let k = rand_t(&[n, H, D], 13);
+    let v = rand_t(&[n, H, D], 14);
+    let (qe, ke, ve) = (rand_t(&[1, H, D], 15), rand_t(&[1, H, D], 16), rand_t(&[1, H, D], 17));
+    for &kind in ALL_BACKENDS {
+        let mut one = build(kind, H, D, BS, TOPK, 1);
+        let mut many = build(kind, H, D, BS, TOPK, 4);
+        assert_eq!(
+            one.prefill(&q, &k, &v).data,
+            many.prefill(&q, &k, &v).data,
+            "{} prefill",
+            one.name()
+        );
+        assert_eq!(
+            one.decode(&qe.data, &ke.data, &ve.data),
+            many.decode(&qe.data, &ke.data, &ve.data),
+            "{} decode",
+            one.name()
+        );
+    }
+}
+
+#[test]
+fn reset_then_reuse_reproduces_first_run() {
+    let q = rand_t(&[24, H, D], 18);
+    let k = rand_t(&[24, H, D], 19);
+    let v = rand_t(&[24, H, D], 20);
+    for &kind in ALL_BACKENDS {
+        let mut b = build(kind, H, D, BS, TOPK, 1);
+        let first = b.prefill(&q, &k, &v);
+        assert_eq!(b.seq_len(), 24, "{}", b.name());
+        b.reset();
+        assert_eq!(b.seq_len(), 0, "{}", b.name());
+        assert_eq!(b.prefill(&q, &k, &v).data, first.data, "{} reuse", b.name());
+    }
+}
+
+#[test]
+fn gate_exposed_iff_sparse() {
+    let q = rand_t(&[32, H, D], 21);
+    let k = rand_t(&[32, H, D], 22);
+    for &kind in ALL_BACKENDS {
+        let b = build(kind, H, D, BS, TOPK, 1);
+        let sparse = SPARSE_BACKENDS.contains(&kind);
+        assert_eq!(b.gate(&q, &k).is_some(), sparse, "{}", b.name());
+        if let Some(g) = b.gate(&q, &k) {
+            assert_eq!(g.n_blocks, 2, "{}", b.name());
+        }
+    }
+}
+
+#[test]
+fn served_tokens_agree_within_each_math_family() {
+    let prompt: Vec<i32> = (0..50).map(|i| (i * 7) % 48).collect();
+    let serve = |kind: BackendKind| {
+        let cfg = ServeCfg {
+            block_size: BS,
+            topk: TOPK,
+            max_seq: 256,
+            backend: kind,
+            ..Default::default()
+        };
+        let engine = ServeEngine::new(ToyModel::new(48, H, D, 11), cfg);
+        engine.generate(&prompt, 8).unwrap().0
+    };
+    let sparse_ref = serve(BackendKind::RecomputeMoba);
+    for &kind in SPARSE_BACKENDS {
+        assert_eq!(serve(kind), sparse_ref, "{}", kind.label());
+    }
+    assert_eq!(serve(BackendKind::CachedFull), serve(BackendKind::RecomputeFull));
+}

@@ -1,0 +1,79 @@
+//! Shared helpers for the backend test suites. The point of this module
+//! is the ONE registry ([`ALL_BACKENDS`] + [`oracle`]) every
+//! conformance-style test iterates: a future backend (per-head MoA
+//! configs, SIMD variants, ...) gets golden-loop, invariant and
+//! worker-parity coverage by adding one `BackendKind` entry here.
+#![allow(dead_code)] // each test binary uses a subset of these helpers
+
+use moba::sparse::{
+    build_backend_par, full_attention, moba_attention, AttentionBackend, BackendKind,
+};
+use moba::tensor::Tensor;
+use moba::util::rng::Rng;
+
+/// Every registered backend kind, in CLI-label order.
+pub const ALL_BACKENDS: &[BackendKind] = &[
+    BackendKind::RecomputeFull,
+    BackendKind::RecomputeMoba,
+    BackendKind::CachedFull,
+    BackendKind::CachedSparse,
+    BackendKind::Fused,
+    BackendKind::Paged,
+];
+
+/// The sparse (gated) backends — all of the same MoBA math, so their
+/// outputs and served tokens must agree bit-for-bit with each other.
+pub const SPARSE_BACKENDS: &[BackendKind] = &[
+    BackendKind::RecomputeMoba,
+    BackendKind::CachedSparse,
+    BackendKind::Fused,
+    BackendKind::Paged,
+];
+
+/// The batch-kernel oracle a backend's outputs must reproduce: dense
+/// backends mirror `full_attention`, everything else the two-pass MoBA
+/// kernel.
+pub fn oracle(
+    kind: BackendKind,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    block: usize,
+    topk: usize,
+) -> Tensor {
+    match kind {
+        BackendKind::RecomputeFull | BackendKind::CachedFull => full_attention(q, k, v),
+        _ => moba_attention(q, k, v, block, topk),
+    }
+}
+
+/// Build one backend of the registry with an explicit worker count.
+pub fn build(
+    kind: BackendKind,
+    heads: usize,
+    head_dim: usize,
+    block: usize,
+    topk: usize,
+    workers: usize,
+) -> Box<dyn AttentionBackend> {
+    build_backend_par(kind, heads, head_dim, block, topk, workers)
+}
+
+/// Deterministic normal-noise tensor.
+pub fn rand_t(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(1.0)).collect()).unwrap()
+}
+
+/// Row `i` of a `[N, H, D]` tensor as a flat `[H * D]` slice.
+pub fn row(t: &Tensor, i: usize) -> &[f32] {
+    let w = t.shape[1] * t.shape[2];
+    &t.data[i * w..(i + 1) * w]
+}
+
+/// First `n` rows of a `[N, H, D]` tensor.
+pub fn prefix(t: &Tensor, n: usize) -> Tensor {
+    let w = t.shape[1] * t.shape[2];
+    Tensor::from_vec(&[n, t.shape[1], t.shape[2]], t.data[..n * w].to_vec()).unwrap()
+}

@@ -102,6 +102,7 @@ fn backend_prefill_and_decode_are_worker_count_invariant() {
         BackendKind::CachedFull,
         BackendKind::CachedSparse,
         BackendKind::Fused,
+        BackendKind::Paged,
     ] {
         let mut base = build_backend_par(kind, h, d, bs, topk, 1);
         let split = n - steps;
@@ -146,7 +147,7 @@ fn fused_backend_matches_cached_sparse_tokens() {
     let engine = |backend: BackendKind, workers: usize| {
         ServeEngine::new(
             ToyModel::new(48, 2, 8, 11),
-            ServeCfg { block_size: 16, topk: 2, max_seq: 256, backend, workers },
+            ServeCfg { block_size: 16, topk: 2, max_seq: 256, backend, workers, pool_blocks: 0 },
         )
     };
     let reference = engine(BackendKind::CachedSparse, 1).generate(&prompt, 10).unwrap().0;
@@ -167,6 +168,7 @@ fn sharded_scheduler_tokens_are_shard_count_invariant() {
                 max_seq: 512,
                 backend: BackendKind::Fused,
                 workers: 1,
+                pool_blocks: 0,
             },
         )
     };
