@@ -14,6 +14,11 @@
 //! # shared-system-prompt serving over the copy-on-write paged pool:
 //! cargo run --release --example serve_continuous -- --backend paged \
 //!     --shared-prefix 1024 --pool-blocks 512
+//! # oversubscribed pool: capacity below the working set forces LRU
+//! # eviction + re-prefill resume (tokens unchanged; the report shows
+//! # preemptions, reclaimed blocks and re-prefill overhead):
+//! cargo run --release --example serve_continuous -- --backend paged \
+//!     --requests 12 --prompt-len 256 --pool-blocks 24
 //! ```
 
 use moba::serve::{run_demo, DemoCfg};

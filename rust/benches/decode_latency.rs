@@ -8,10 +8,15 @@
 //! (`cached-full` O(N·D), `cached-sparse` O(N/B·D + k·B·D)). The paged
 //! arm forks S sessions off a shared 4096-token prefix and reports
 //! per-session decode latency and unique-KV bytes per session against
-//! the private-cache cost. Appends a trajectory entry to
-//! `BENCH_decode.json` at the repo root and asserts the acceptance
-//! floors: cached-sparse beats full recompute by ≥5× at N=8192, and the
-//! shared pool holds < 0.65× the private per-session bytes.
+//! the private-cache cost. The oversubscribed arm serves a request burst
+//! through a pool capped at ~50% of the concurrent working set and
+//! reports the eviction/re-prefill overhead the bounded pool trades for
+//! the halved residency (tokens are asserted bitwise equal to the
+//! uncapped run). Appends a trajectory entry to `BENCH_decode.json` at
+//! the repo root (quick mode too, flagged `"quick": true`) and asserts
+//! the acceptance floors: cached-sparse beats full recompute by ≥5× at
+//! N=8192, and the shared pool holds < 0.65× the private per-session
+//! bytes.
 //!
 //! ```sh
 //! cargo bench --bench decode_latency            # full run + asserts
@@ -21,6 +26,7 @@
 
 use std::time::Instant;
 
+use moba::serve::{ContinuousScheduler, Request, SchedulerCfg, ServeCfg, ServeEngine, ToyModel};
 use moba::sparse::{build_backend, shared_pool, AttentionBackend, BackendKind, PagedMobaAttention};
 use moba::tensor::Tensor;
 use moba::util::json::{arr, num, obj, s, Json};
@@ -142,6 +148,87 @@ fn paged_sharing_arm(n: usize, n_prefix: usize, sessions: usize, rng: &mut Rng) 
     PagedArm { json, ms_per_tok, pool_bytes_per_session: pool_per_session, sharing_ratio }
 }
 
+/// The oversubscribed-pool serving arm: a burst of `requests` equal
+/// prompts decoded under the continuous scheduler, once with an
+/// unbounded pool and once with capacity at ~50% of the concurrent
+/// worst-case working set. The bounded run must serve bitwise-identical
+/// tokens (asserted, quick mode included) via LRU eviction + re-prefill
+/// resume; returns the JSON row reporting the recompute overhead.
+fn oversubscribed_arm(quick: bool) -> Json {
+    let (requests, prompt_len, max_new) =
+        if quick { (6usize, 96usize, 8usize) } else { (12, 1024, 32) };
+    let max_in_flight = 4usize;
+    let mk_engine = |pool_blocks| {
+        ServeEngine::new(
+            ToyModel::new(64, HEADS, DIM, 7),
+            ServeCfg {
+                block_size: BLOCK,
+                topk: TOPK,
+                max_seq: 8192,
+                backend: BackendKind::Paged,
+                workers: 1,
+                pool_blocks,
+            },
+        )
+    };
+    let mk_reqs = || -> Vec<Request> {
+        (0..requests as u64)
+            .map(|id| Request {
+                id,
+                prompt: (0..prompt_len as i32).map(|i| (i * 5 + id as i32) % 64).collect(),
+                max_new,
+                arrival: 0.0,
+            })
+            .collect()
+    };
+    let per_need = (prompt_len + max_new + BLOCK - 1) / BLOCK;
+    let working_set = max_in_flight * per_need;
+    let pool_blocks = (working_set / 2).max(per_need + 1);
+
+    let run = |pool_blocks: usize| {
+        let mut sched = ContinuousScheduler::new(
+            mk_engine(pool_blocks),
+            SchedulerCfg { max_in_flight, decode_workers: 1 },
+        );
+        let t0 = Instant::now();
+        let mut out = sched.run_stream(mk_reqs(), 0.001).expect("oversubscribed stream");
+        out.sort_by_key(|r| r.id);
+        (out, sched.stats.clone(), t0.elapsed().as_secs_f64())
+    };
+    let (base, _, uncapped_secs) = run(0);
+    let (got, stats, capped_secs) = run(pool_blocks);
+    assert_eq!(base.len(), got.len(), "oversubscribed run lost requests");
+    for (b, g) in base.iter().zip(&got) {
+        assert_eq!(b.output, g.output, "req {}: tokens changed under oversubscription", b.id);
+    }
+    let ev = &stats.eviction;
+    assert!(ev.evictions > 0, "a pool at 50% of the working set must evict");
+    assert!(stats.peak_pool_blocks <= pool_blocks, "pool capacity violated");
+    println!(
+        "oversubscribed: pool {pool_blocks}/{working_set} working-set blocks: \
+         {} evictions ({} blocks), {} resumes, re-prefill {:.1} ms \
+         ({:.2}x wall vs uncapped)",
+        ev.evictions,
+        ev.blocks_reclaimed,
+        ev.resumes,
+        ev.reprefill_secs * 1e3,
+        capped_secs / uncapped_secs.max(1e-9)
+    );
+    obj(vec![
+        ("requests", num(requests as f64)),
+        ("prompt_len", num(prompt_len as f64)),
+        ("max_new", num(max_new as f64)),
+        ("pool_blocks", num(pool_blocks as f64)),
+        ("working_set_blocks", num(working_set as f64)),
+        ("evictions", num(ev.evictions as f64)),
+        ("blocks_reclaimed", num(ev.blocks_reclaimed as f64)),
+        ("resumes", num(ev.resumes as f64)),
+        ("reprefill_ms", num(ev.reprefill_secs * 1e3)),
+        ("uncapped_secs", num(uncapped_secs)),
+        ("capped_secs", num(capped_secs)),
+    ])
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     println!("== decode latency: cached incremental vs recompute ==");
@@ -198,17 +285,19 @@ fn main() {
         paged.sharing_ratio
     );
 
-    if quick {
-        println!("quick mode: outputs verified finite + paged parity; perf assertions skipped");
-        return;
-    }
+    // the oversubscribed-pool arm: bitwise-parity asserted in quick mode
+    // too — eviction + re-prefill must be invisible in the tokens
+    let oversub = oversubscribed_arm(quick);
 
+    // the trajectory entry is written in quick mode as well (flagged), so
+    // CI can upload BENCH_decode.json as an artifact from the smoke run
     let unix_secs = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
         .unwrap_or(0.0);
     let entry = obj(vec![
         ("bench", s("decode_latency")),
+        ("quick", Json::Bool(quick)),
         ("unix_secs", num(unix_secs)),
         ("heads", num(HEADS as f64)),
         ("head_dim", num(DIM as f64)),
@@ -216,6 +305,7 @@ fn main() {
         ("topk", num(TOPK as f64)),
         ("rows", arr(rows)),
         ("paged_sharing", paged.json),
+        ("oversubscribed", oversub),
     ]);
     // trajectory file at the REPO ROOT regardless of bench cwd
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json");
@@ -227,6 +317,11 @@ fn main() {
     trajectory.push(entry);
     std::fs::write(path, Json::Arr(trajectory).to_string()).expect("writing BENCH_decode.json");
     println!("-> {path}");
+
+    if quick {
+        println!("quick mode: finite outputs + paged/eviction parity; perf asserts skipped");
+        return;
+    }
 
     assert!(
         speedup_at_8192 >= 5.0,

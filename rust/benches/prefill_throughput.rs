@@ -115,17 +115,15 @@ fn main() {
         ]));
     }
 
-    if quick {
-        println!("quick mode: outputs verified bit-identical; perf assertions skipped");
-        return;
-    }
-
+    // the trajectory entry is written in quick mode as well (flagged), so
+    // CI can upload BENCH_prefill.json as an artifact from the smoke run
     let unix_secs = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
         .unwrap_or(0.0);
     let entry = obj(vec![
         ("bench", s("prefill_throughput")),
+        ("quick", Json::Bool(quick)),
         ("unix_secs", num(unix_secs)),
         ("heads", num(HEADS as f64)),
         ("head_dim", num(DIM as f64)),
@@ -144,6 +142,11 @@ fn main() {
     trajectory.push(entry);
     std::fs::write(path, Json::Arr(trajectory).to_string()).expect("writing BENCH_prefill.json");
     println!("-> {path}");
+
+    if quick {
+        println!("quick mode: outputs verified bit-identical; perf assertions skipped");
+        return;
+    }
 
     assert!(
         fused_speedup_at_8192 >= 1.3,

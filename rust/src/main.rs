@@ -72,7 +72,8 @@ serve options: --requests N --max-batch M --prompt-len P --max-new K
   --workers W (kernel threads, 0 = all cores)
   --decode-workers S (scheduler decode shards, 0 = all cores)
   --shared-prefix L (L-token system prompt forked per request; needs paged)
-  --pool-blocks N (paged pool capacity in blocks, 0 = unbounded)
+  --pool-blocks N (paged pool capacity in blocks, 0 = unbounded; a bounded
+    pool oversubscribes: LRU eviction + re-prefill resume, same tokens)
 common options: --steps N  --seed N  --sizes s0,s1  --artifact NAME
 ";
 

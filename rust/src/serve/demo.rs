@@ -32,8 +32,11 @@ pub struct DemoCfg {
     /// shared system-prompt tokens every request forks off copy-on-write
     /// (0 = off; requires `backend: paged`)
     pub shared_prefix: usize,
-    /// physical-block capacity of the paged pool (0 = unbounded;
-    /// admission then gates on it)
+    /// physical-block capacity of the paged pool (0 = unbounded). A
+    /// bounded pool may OVERSUBSCRIBE: when a candidate's reservation
+    /// does not fit, the scheduler evicts the least-recently-stepped
+    /// session's blocks and transparently re-prefills it later — tokens
+    /// are bit-identical either way
     pub pool_blocks: usize,
     pub seed: u64,
 }
@@ -195,6 +198,18 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
             cap,
             sched.stats.pool_deferrals
         );
+        let ev = &sched.stats.eviction;
+        if ev.evictions > 0 {
+            println!(
+                "  eviction: {} preemptions ({} blocks reclaimed), {} resumes \
+                 ({} blocked ticks), re-prefill {:.1} ms total",
+                ev.evictions,
+                ev.blocks_reclaimed,
+                ev.resumes,
+                ev.resume_deferrals,
+                ev.reprefill_secs * 1e3
+            );
+        }
         println!(
             "  peak batch: {:.1} KiB shared pool vs ~{:.1} KiB private caches ({:.1}x)",
             peak_bytes as f64 / 1024.0,
@@ -253,6 +268,22 @@ mod tests {
             shared_prefix: 96,
             pool_blocks: 64,
             decode_workers: 2,
+            ..Default::default()
+        };
+        run_demo(&cfg).unwrap();
+    }
+
+    #[test]
+    fn demo_runs_oversubscribed_pool_with_eviction() {
+        // pool far below the concurrent working set: the scheduler must
+        // preempt and re-prefill instead of wedging, and still finish
+        let cfg = DemoCfg {
+            requests: 4,
+            max_in_flight: 4,
+            prompt_len: 48,
+            max_new: 6,
+            backend: BackendKind::Paged,
+            pool_blocks: 4, // each request needs <= 2 of 32-token blocks
             ..Default::default()
         };
         run_demo(&cfg).unwrap();

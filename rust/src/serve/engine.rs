@@ -37,6 +37,10 @@ pub struct GenStats {
     pub prefill_secs: f64,
     pub decode_secs: f64,
     pub decode_steps: usize,
+    /// times this session was evicted and rebuilt via re-prefill
+    pub resumes: usize,
+    /// wall-clock seconds spent re-prefilling after evictions
+    pub reprefill_secs: f64,
 }
 
 /// Serving configuration: attention geometry + backend selection.
@@ -88,6 +92,15 @@ pub struct PoolStatus {
 pub struct DecodeSession {
     backend: Box<dyn AttentionBackend>,
     prompt_len: usize,
+    /// the tokens THIS session ingested itself (the whole prompt, or just
+    /// the continuation for a forked session) — together with `generated`
+    /// this is exactly the state a transparent re-prefill resume needs
+    own_prompt: Vec<i32>,
+    /// context length at fork time (0 = not forked): re-prefill of a
+    /// forked session re-forks its prefix parent instead of starting cold
+    fork_ctx: usize,
+    /// blocks released back to the pool; must be resumed before stepping
+    evicted: bool,
     max_seq: usize,
     max_new: usize,
     /// next token to emit (argmax of the last computed logits)
@@ -113,6 +126,12 @@ impl DecodeSession {
     /// Tokens currently resident in the backend's incremental state.
     pub fn context_len(&self) -> usize {
         self.backend.seq_len()
+    }
+
+    /// True between `ServeEngine::evict_session` and `resume_session`:
+    /// the session's pool blocks are released and it must not be stepped.
+    pub fn evicted(&self) -> bool {
+        self.evicted
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -173,10 +192,144 @@ impl<M: TokenModel> ServeEngine<M> {
     /// `ctx` can allocate while appending `tokens` more: the blocks
     /// spanning `[ctx, ctx + tokens)`. This is exact — when the session
     /// shares a partial tail, the copy-on-write duplicate *is* the first
-    /// spanned block, not an extra one.
+    /// spanned block, not an extra one. Zero tokens allocate nothing.
     pub fn block_reserve(&self, ctx: usize, tokens: usize) -> usize {
+        if tokens == 0 {
+            return 0;
+        }
         let b = self.cfg.block_size;
         (ctx % b + tokens + b - 1) / b
+    }
+
+    /// Decode steps this session will still run that APPEND a token: it
+    /// emits until budget/max_seq, and the final emission is never
+    /// appended (no successor is computed).
+    fn appends_left(&self, s: &DecodeSession) -> usize {
+        if s.finished() {
+            return 0;
+        }
+        let emitted = s.generated.len();
+        let budget = s.max_new - emitted;
+        let seq_room = s.max_seq.saturating_sub(s.prompt_len + emitted);
+        budget.min(seq_room).saturating_sub(1)
+    }
+
+    /// Pool blocks a LIVE session's remaining decode steps can still
+    /// allocate beyond what it already holds — the not-yet-materialized
+    /// delta of its admission reservation. Shrinks to 0 as the session
+    /// fills its tail / finishes, which is what lets the scheduler admit
+    /// into the freed headroom instead of holding the admission-time
+    /// worst case for the whole session lifetime.
+    pub fn remaining_reserve(&self, s: &DecodeSession) -> usize {
+        let appends = self.appends_left(s);
+        if appends == 0 {
+            return 0;
+        }
+        let ctx = s.backend.seq_len();
+        let b = self.cfg.block_size;
+        if s.fork_ctx == 0 || ctx > s.fork_ctx {
+            // the session owns its tail block: open slots absorb appends
+            // without allocating (already counted in pool used_blocks)
+            let slots = (b - ctx % b) % b;
+            (appends.saturating_sub(slots) + b - 1) / b
+        } else {
+            // still exactly the forked prefix: the first append must CoW
+            // a shared partial tail (or open a fresh block)
+            self.block_reserve(ctx, appends)
+        }
+    }
+
+    /// Worst-case pool blocks an EVICTED session needs to resume and run
+    /// to completion: re-materializing its own tokens plus the same
+    /// future appends `remaining_reserve` would cover.
+    pub fn resume_reserve(&self, s: &DecodeSession) -> usize {
+        let own = s.own_prompt.len() + s.generated.len();
+        self.block_reserve(s.fork_ctx, own + self.appends_left(s))
+    }
+
+    /// Physical blocks evicting `s` would actually reclaim: the blocks
+    /// spanning its own tokens, including its copy-on-write duplicate of
+    /// a shared partial prefix tail. Blocks fully inside the forked
+    /// prefix are shared with the prefix parent and survive; a fork that
+    /// has not yet appended anything of its own frees nothing. Exact for
+    /// serving sessions, which only ever fork off the engine's shared
+    /// prefix (never off each other) — the scheduler's eviction
+    /// feasibility check relies on this.
+    pub fn freeable_blocks(&self, s: &DecodeSession) -> usize {
+        let ctx = s.backend.seq_len();
+        if ctx <= s.fork_ctx {
+            return 0;
+        }
+        let b = self.cfg.block_size;
+        (ctx + b - 1) / b - s.fork_ctx / b
+    }
+
+    /// A fresh backend for one session — paged sessions share THE engine
+    /// pool (that is what makes cross-request prefix sharing work),
+    /// everything else builds private caches.
+    fn fresh_backend(&self) -> Box<dyn AttentionBackend> {
+        let workers = self.cfg.workers.max(1);
+        match &self.pool {
+            Some(pool) => Box::new(
+                PagedMobaAttention::new(pool.clone(), self.cfg.topk).with_workers(workers),
+            ),
+            None => build_backend_par(
+                self.cfg.backend,
+                self.model.heads(),
+                self.model.head_dim(),
+                self.cfg.block_size,
+                self.cfg.topk,
+                workers,
+            ),
+        }
+    }
+
+    /// Prefill `tokens` at positions `0..n` through `backend` and return
+    /// the pending next token. Shared by `start` and non-forked resume so
+    /// a resumed session goes through the exact same path (bit-identical
+    /// outputs) as one that was never evicted.
+    fn prefill_tokens(&self, backend: &mut dyn AttentionBackend, tokens: &[i32]) -> Result<i32> {
+        let (h, d) = (self.model.heads(), self.model.head_dim());
+        let n = tokens.len();
+        let w = h * d;
+        let (mut qs, mut ks, mut vs) =
+            (Vec::with_capacity(n * w), Vec::with_capacity(n * w), Vec::with_capacity(n * w));
+        for (pos, &tok) in tokens.iter().enumerate() {
+            let (q, k, v) = self.model.qkv(tok, pos);
+            qs.extend_from_slice(&q);
+            ks.extend_from_slice(&k);
+            vs.extend_from_slice(&v);
+        }
+        let q = Tensor::from_vec(&[n, h, d], qs)?;
+        let k = Tensor::from_vec(&[n, h, d], ks)?;
+        let v = Tensor::from_vec(&[n, h, d], vs)?;
+        let out = backend.prefill(&q, &k, &v);
+        Ok(argmax(&self.model.logits(&out.data[(n - 1) * w..n * w])))
+    }
+
+    /// Fork `parent`'s backend and ingest `tokens` one decode row at a
+    /// time (positions continue from the parent's context). Returns the
+    /// forked backend and the pending next token. Shared by
+    /// `fork_session` and forked-session resume.
+    fn fork_ingest(
+        &self,
+        parent: &DecodeSession,
+        tokens: &[i32],
+    ) -> Result<(Box<dyn AttentionBackend>, i32)> {
+        let ctx = parent.backend.seq_len();
+        let mut backend = parent.backend.fork()?;
+        let mut last_out = None;
+        for (i, &tok) in tokens.iter().enumerate() {
+            let (q, k, v) = self.model.qkv(tok, ctx + i);
+            last_out = Some(backend.decode(&q, &k, &v));
+        }
+        // only the final position's logits decide the pending token — an
+        // empty continuation is a pure clone of the parent's
+        let pending = match last_out {
+            Some(out) => argmax(&self.model.logits(&out)),
+            None => parent.pending,
+        };
+        Ok((backend, pending))
     }
 
     /// Prefill `prompt` through a fresh backend and return the live
@@ -193,45 +346,17 @@ impl<M: TokenModel> ServeEngine<M> {
                 self.cfg.max_seq
             );
         }
-        let (h, d) = (self.model.heads(), self.model.head_dim());
-        let workers = self.cfg.workers.max(1);
-        let mut backend: Box<dyn AttentionBackend> = match &self.pool {
-            // paged sessions must share THE engine pool, not build their
-            // own — that is what makes cross-request prefix sharing work
-            Some(pool) => Box::new(
-                PagedMobaAttention::new(pool.clone(), self.cfg.topk).with_workers(workers),
-            ),
-            None => build_backend_par(
-                self.cfg.backend,
-                h,
-                d,
-                self.cfg.block_size,
-                self.cfg.topk,
-                workers,
-            ),
-        };
-
+        let mut backend = self.fresh_backend();
         let t0 = Instant::now();
-        let n = prompt.len();
-        let w = h * d;
-        let (mut qs, mut ks, mut vs) =
-            (Vec::with_capacity(n * w), Vec::with_capacity(n * w), Vec::with_capacity(n * w));
-        for (pos, &tok) in prompt.iter().enumerate() {
-            let (q, k, v) = self.model.qkv(tok, pos);
-            qs.extend_from_slice(&q);
-            ks.extend_from_slice(&k);
-            vs.extend_from_slice(&v);
-        }
-        let q = Tensor::from_vec(&[n, h, d], qs)?;
-        let k = Tensor::from_vec(&[n, h, d], ks)?;
-        let v = Tensor::from_vec(&[n, h, d], vs)?;
-        let out = backend.prefill(&q, &k, &v);
-        let pending = argmax(&self.model.logits(&out.data[(n - 1) * w..n * w]));
+        let pending = self.prefill_tokens(backend.as_mut(), prompt)?;
         let stats = GenStats { prefill_secs: t0.elapsed().as_secs_f64(), ..Default::default() };
 
         Ok(DecodeSession {
             backend,
-            prompt_len: n,
+            prompt_len: prompt.len(),
+            own_prompt: prompt.to_vec(),
+            fork_ctx: 0,
+            evicted: false,
             max_seq: self.cfg.max_seq,
             max_new,
             pending,
@@ -265,22 +390,14 @@ impl<M: TokenModel> ServeEngine<M> {
             );
         }
         let t0 = Instant::now();
-        let mut backend = parent.backend.fork()?;
-        let mut last_out = None;
-        for (i, &tok) in continuation.iter().enumerate() {
-            let (q, k, v) = self.model.qkv(tok, ctx + i);
-            last_out = Some(backend.decode(&q, &k, &v));
-        }
-        // only the final position's logits decide the pending token — an
-        // empty continuation is a pure clone of the parent's
-        let pending = match last_out {
-            Some(out) => argmax(&self.model.logits(&out)),
-            None => parent.pending,
-        };
+        let (backend, pending) = self.fork_ingest(parent, continuation)?;
         let stats = GenStats { prefill_secs: t0.elapsed().as_secs_f64(), ..Default::default() };
         Ok(DecodeSession {
             backend,
             prompt_len: ctx + continuation.len(),
+            own_prompt: continuation.to_vec(),
+            fork_ctx: ctx,
+            evicted: false,
             max_seq: self.cfg.max_seq,
             max_new,
             pending,
@@ -289,10 +406,72 @@ impl<M: TokenModel> ServeEngine<M> {
         })
     }
 
+    /// Preempt `s`: release its pool blocks back to the shared paged pool
+    /// and return how many were actually reclaimed (blocks a live table
+    /// still shares — a system prefix under other sessions — survive).
+    /// The session keeps its prompt, generated tokens and pending token,
+    /// which is exactly enough for `resume_session` to rebuild it
+    /// bit-identically. Paged backend only.
+    pub fn evict_session(&self, s: &mut DecodeSession) -> Result<usize> {
+        if s.evicted {
+            bail!("session is already evicted");
+        }
+        let freed = s.backend.evict()?;
+        s.evicted = true;
+        Ok(freed)
+    }
+
+    /// Rebuild an evicted session's incremental state by re-ingesting
+    /// `own_prompt ++ generated` through the same prefill/fork-decode
+    /// path it was originally built with. A forked session re-forks
+    /// `parent` (the shared prefix whose blocks survived eviction), so
+    /// the prefix is still never duplicated. The rebuilt state — and
+    /// every token served afterwards — is bit-identical to a session
+    /// that was never evicted: the prefill/decode boundary is invisible
+    /// and both paths share the kernels' fixed accumulation orders.
+    pub fn resume_session(
+        &self,
+        s: &mut DecodeSession,
+        parent: Option<&DecodeSession>,
+    ) -> Result<()> {
+        if !s.evicted {
+            bail!("resume of a session that was never evicted");
+        }
+        let t0 = Instant::now();
+        let tokens: Vec<i32> = s.own_prompt.iter().chain(&s.generated).copied().collect();
+        let pending = if s.fork_ctx > 0 {
+            let Some(parent) = parent else {
+                bail!("resume of a forked session needs its prefix parent");
+            };
+            if parent.backend.seq_len() != s.fork_ctx {
+                bail!(
+                    "prefix parent context {} does not match fork point {}",
+                    parent.backend.seq_len(),
+                    s.fork_ctx
+                );
+            }
+            let (backend, pending) = self.fork_ingest(parent, &tokens)?;
+            s.backend = backend;
+            pending
+        } else {
+            let mut backend = self.fresh_backend();
+            let pending = self.prefill_tokens(backend.as_mut(), &tokens)?;
+            s.backend = backend;
+            pending
+        };
+        debug_assert_eq!(pending, s.pending, "re-prefill resume must be bit-identical");
+        s.pending = pending;
+        s.evicted = false;
+        s.stats.resumes += 1;
+        s.stats.reprefill_secs += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
     /// One decode step: emit the session's pending token, append it to the
     /// incremental state and compute the next. Returns the emitted token,
     /// or `None` if the session is already finished.
     pub fn step(&self, s: &mut DecodeSession) -> Option<i32> {
+        debug_assert!(!s.evicted, "stepping an evicted session (resume it first)");
         if s.finished() {
             return None;
         }
@@ -406,9 +585,117 @@ mod tests {
         assert_eq!(e.block_reserve(40, 20), 2);
         assert_eq!(e.block_reserve(0, 16), 1);
         assert_eq!(e.block_reserve(0, 17), 2);
+        // zero appends allocate zero blocks, even mid-block
+        assert_eq!(e.block_reserve(40, 0), 0);
         let status = e.pool_status().unwrap();
         assert_eq!(status.capacity_blocks, None);
         assert_eq!(status.used_blocks, 0);
+    }
+
+    #[test]
+    fn remaining_reserve_shrinks_to_the_unmaterialized_delta() {
+        let e = engine(BackendKind::Paged);
+        // prompt 4 + max_new 13: worst case 2 blocks at admission, but
+        // after prefill the private tail's 12 open slots absorb all 12
+        // future appends — nothing left to reserve
+        let prompt: Vec<i32> = (0..4).collect();
+        let mut s = e.start(&prompt, 13).unwrap();
+        assert_eq!(e.block_reserve(0, 4 + 13), 2);
+        assert_eq!(e.remaining_reserve(&s), 0, "open tail slots absorb all appends");
+        // prompt 14 + max_new 8: 7 appends, 2 open slots -> 1 new block
+        let s2 = e.start(&(0..14).collect::<Vec<i32>>(), 8).unwrap();
+        assert_eq!(e.remaining_reserve(&s2), 1);
+        // a finished session reserves nothing
+        while e.step(&mut s).is_some() {}
+        assert_eq!(e.remaining_reserve(&s), 0);
+    }
+
+    #[test]
+    fn forked_remaining_reserve_counts_the_cow_tail_once() {
+        let e = engine(BackendKind::Paged);
+        let prefix: Vec<i32> = (0..40).map(|i| i % 48).collect(); // 8-token shared tail
+        let parent = e.start(&prefix, 0).unwrap();
+        // freshly forked, no own tokens yet: first append must CoW the
+        // shared partial tail, so the spanned-block count applies
+        let f = e.fork_session(&parent, &[], 9).unwrap();
+        assert_eq!(e.remaining_reserve(&f), e.block_reserve(40, 8));
+        // after ingesting its own continuation the tail is private: open
+        // slots absorb appends (44 tokens -> 4 open slots, 5 appends)
+        let f2 = e.fork_session(&parent, &[1, 2, 3, 4], 6).unwrap();
+        assert_eq!(e.remaining_reserve(&f2), 1);
+    }
+
+    #[test]
+    fn evicted_session_resumes_bit_identically() {
+        let e = engine(BackendKind::Paged);
+        let prompt: Vec<i32> = (0..30).map(|i| (i * 7) % 48).collect();
+        let (want, _) = e.generate(&prompt, 8).unwrap();
+        let mut s = e.start(&prompt, 8).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            got.push(e.step(&mut s).unwrap());
+        }
+        let used_before = e.pool_status().unwrap().used_blocks;
+        let freed = e.evict_session(&mut s).unwrap();
+        assert!(freed > 0);
+        assert!(s.evicted());
+        assert_eq!(e.pool_status().unwrap().used_blocks, used_before - freed);
+        // the resume reservation covers re-materializing prompt+generated
+        assert_eq!(e.resume_reserve(&s), e.block_reserve(0, prompt.len() + 3 + 4));
+        assert!(e.evict_session(&mut s).is_err(), "double eviction");
+        e.resume_session(&mut s, None).unwrap();
+        assert!(!s.evicted());
+        assert_eq!(s.stats.resumes, 1);
+        assert!(s.stats.reprefill_secs > 0.0);
+        while let Some(tok) = e.step(&mut s) {
+            got.push(tok);
+        }
+        assert_eq!(got, want, "resume changed the served tokens");
+        assert!(e.resume_session(&mut s, None).is_err(), "resume of a live session");
+    }
+
+    #[test]
+    fn evicted_fork_resumes_off_its_prefix_parent() {
+        let e = engine(BackendKind::Paged);
+        let prefix: Vec<i32> = (0..40).map(|i| (i * 3) % 48).collect();
+        let parent = e.start(&prefix, 0).unwrap();
+        let cont: Vec<i32> = (0..9).map(|i| (i * 5 + 1) % 48).collect();
+        let mut twin = e.fork_session(&parent, &cont, 7).unwrap();
+        let mut victim = e.fork_session(&parent, &cont, 7).unwrap();
+        let mut want = Vec::new();
+        let mut got = Vec::new();
+        for _ in 0..2 {
+            want.push(e.step(&mut twin).unwrap());
+            got.push(e.step(&mut victim).unwrap());
+        }
+        let prefix_blocks = (prefix.len() + 15) / 16;
+        e.evict_session(&mut victim).unwrap();
+        assert!(
+            e.pool_status().unwrap().used_blocks >= prefix_blocks,
+            "shared prefix blocks must survive the forker's eviction"
+        );
+        // resume requires the parent (and the right one)
+        assert!(e.resume_session(&mut victim, None).is_err());
+        e.resume_session(&mut victim, Some(&parent)).unwrap();
+        loop {
+            match (e.step(&mut twin), e.step(&mut victim)) {
+                (Some(a), Some(b)) => {
+                    want.push(a);
+                    got.push(b);
+                }
+                (None, None) => break,
+                _ => panic!("twin and resumed fork disagree on length"),
+            }
+        }
+        assert_eq!(got, want, "resumed fork diverged from its never-evicted twin");
+    }
+
+    #[test]
+    fn eviction_rejects_private_backends() {
+        let e = engine(BackendKind::CachedSparse);
+        let mut s = e.start(&[1, 2, 3], 4).unwrap();
+        assert!(e.evict_session(&mut s).is_err());
+        assert!(!s.evicted());
     }
 
     #[test]

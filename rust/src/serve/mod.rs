@@ -11,7 +11,9 @@
 //!   with queue/prefill/decode latency accounting;
 //! - `scheduler`: [`ContinuousScheduler`] — iteration-level scheduling:
 //!   admit into the in-flight decode batch, step every session one token,
-//!   retire finished requests;
+//!   retire finished requests; on a bounded paged pool it oversubscribes
+//!   via LRU eviction + transparent re-prefill resume (bit-identical
+//!   tokens, [`EvictionStats`] accounting);
 //! - `demo`: the shared arrival-stream demo driver behind `repro serve`
 //!   and `examples/serve_continuous.rs`;
 //! - `artifact` (feature `xla`): the AOT-graph generation path through
@@ -30,7 +32,7 @@ pub use batcher::{Batcher, BatcherCfg, Request, RequestResult};
 pub use demo::{run_demo, DemoCfg};
 pub use engine::{DecodeSession, GenStats, PoolStatus, ServeCfg, ServeEngine};
 pub use model::{TokenModel, ToyModel};
-pub use scheduler::{ContinuousScheduler, SchedStats, SchedulerCfg, WorkerStats};
+pub use scheduler::{ContinuousScheduler, EvictionStats, SchedStats, SchedulerCfg, WorkerStats};
 
 #[cfg(feature = "xla")]
 pub use artifact::ArtifactServeEngine;

@@ -22,11 +22,35 @@
 //! **Paged-pool admission**: with a bounded paged KV pool
 //! (`ServeCfg::pool_blocks`), admission is against *pool capacity*, not
 //! just decode slots — a candidate is admitted only when its worst-case
-//! block reservation (`ServeEngine::block_reserve`) fits beside the
-//! reservations of every live session, so a decode step can never hit an
+//! block reservation (`ServeEngine::block_reserve`) fits beside the pool's
+//! materialized blocks plus the *not-yet-materialized* remainder of every
+//! live session's reservation (`ServeEngine::remaining_reserve` — the
+//! delta shrinks as sessions fill their tails and drops to zero when they
+//! finish, so already-allocated blocks are never counted twice and freed
+//! headroom admits immediately). A decode step can thus never hit an
 //! exhausted pool. With [`ContinuousScheduler::set_shared_prefix`], every
 //! admission *forks* one prefilled system-prompt session copy-on-write
 //! instead of prefilling from scratch; tokens are identical either way.
+//!
+//! **Eviction / oversubscription**: when a candidate's reservation does
+//! not fit, the scheduler *evicts* instead of deferring — it preempts the
+//! least-recently-stepped live session (stable tie-break: highest session
+//! id, i.e. the youngest request; sessions admitted, resumed or stepped
+//! this tick are protected), releases its pool blocks
+//! (`ServeEngine::evict_session` — blocks shared with a live table, e.g.
+//! the system prefix, survive via refcounts) and parks it on a preempted
+//! queue. A feasibility check runs before any eviction — if preempting
+//! every unprotected session still could not fit the candidate, it
+//! defers without destroying state. Preempted sessions resume *before*
+//! new admissions (strictly: arrivals wait while a resume is blocked),
+//! lowest id first, by transparent re-prefill
+//! (`ServeEngine::resume_session`):
+//! the rebuilt state and every token served afterwards are bit-identical
+//! to a never-evicted run. All eviction decisions derive from
+//! (last-stepped tick, session id) and pool counts — no map iteration
+//! order — so they are deterministic and invariant to the decode shard
+//! count. [`EvictionStats`] counts evictions, reclaimed blocks, resumes
+//! and re-prefill time.
 //!
 //! The scheduler is driven by a simulation clock (`tick(now)`), like the
 //! batcher, so arrival/queueing behavior is deterministic and testable;
@@ -65,12 +89,34 @@ pub struct SchedStats {
     pub decode_rounds: usize,
     pub decode_steps_total: usize,
     pub peak_in_flight: usize,
-    /// admissions deferred because the paged pool could not cover the
-    /// candidate's worst-case block reservation
+    /// NEW admissions deferred because the paged pool could not cover the
+    /// candidate's worst-case block reservation even after evicting every
+    /// unprotected session (blocked resumes of already-preempted sessions
+    /// count under `EvictionStats::resume_deferrals` instead)
     pub pool_deferrals: usize,
     /// peak physical blocks resident in the shared paged pool (0 for
     /// private-cache backends)
     pub peak_pool_blocks: usize,
+    /// preemption counters for the oversubscribed paged pool
+    pub eviction: EvictionStats,
+}
+
+/// Counters for LRU eviction / re-prefill resume on a bounded paged pool.
+#[derive(Clone, Debug, Default)]
+pub struct EvictionStats {
+    /// live sessions preempted to make room for a candidate
+    pub evictions: usize,
+    /// physical blocks actually reclaimed by those evictions (blocks a
+    /// live table still shares — e.g. the system prefix — not counted)
+    pub blocks_reclaimed: usize,
+    /// preempted sessions rebuilt via transparent re-prefill
+    pub resumes: usize,
+    /// ticks a blocked resume kept waiting for room (counted separately
+    /// from `SchedStats::pool_deferrals`, which covers new admissions)
+    pub resume_deferrals: usize,
+    /// wall-clock seconds spent re-prefilling resumed sessions — the
+    /// recompute cost oversubscription trades against resident KV
+    pub reprefill_secs: f64,
 }
 
 /// Per-shard counters: admission balance and decode-latency accounting
@@ -88,9 +134,15 @@ pub struct WorkerStats {
 struct Live {
     id: u64,
     queue_secs: f64,
-    /// worst-case pool blocks this session may still hold (its admission
-    /// reservation; 0 when the engine has no bounded pool)
+    /// not-yet-materialized pool blocks this session's future decode
+    /// steps may still allocate (`ServeEngine::remaining_reserve`,
+    /// refreshed every tick; 0 when the engine has no bounded pool).
+    /// Invariant: `ContinuousScheduler::reserved_total` is exactly the
+    /// sum of this field over all running sessions.
     reserve_blocks: usize,
+    /// tick this session was last stepped (or admitted/resumed) — the
+    /// LRU key; sessions touched in the current tick are never evicted
+    last_stepped: u64,
     session: DecodeSession,
 }
 
@@ -102,13 +154,14 @@ struct Shard {
 impl Shard {
     /// Step every live session one decode token; returns nothing — all
     /// accounting lands in the shard's own stats (no shared state).
-    fn step_all<M: TokenModel>(&mut self, engine: &ServeEngine<M>) {
+    fn step_all<M: TokenModel>(&mut self, engine: &ServeEngine<M>, tick: u64) {
         if self.running.is_empty() {
             return;
         }
         let t0 = Instant::now();
         let mut steps = 0;
         for live in self.running.iter_mut() {
+            live.last_stepped = tick;
             if engine.step(&mut live.session).is_some() {
                 steps += 1;
             }
@@ -127,6 +180,15 @@ pub struct ContinuousScheduler<M: TokenModel> {
     cfg: SchedulerCfg,
     queue: Batcher,
     shards: Vec<Shard>,
+    /// sessions preempted by pool-pressure eviction, awaiting re-prefill
+    /// resume; they hold no pool blocks and no decode slot while here
+    preempted: Vec<Live>,
+    /// running sum of every live session's `reserve_blocks` — the O(1)
+    /// admission-side view of future pool demand (kept in lockstep on
+    /// admit/step/evict/retire; a debug assert recounts it)
+    reserved_total: usize,
+    /// monotonic tick counter driving the LRU eviction order
+    tick_no: u64,
     /// shared-system-prompt session every admission forks from (paged
     /// backend): its physical blocks are held once for all requests
     prefix: Option<DecodeSession>,
@@ -148,6 +210,9 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
             // admission policy fields are unused in continuous mode
             queue: Batcher::new(BatcherCfg::default()),
             shards,
+            preempted: Vec::new(),
+            reserved_total: 0,
+            tick_no: 0,
             prefix: None,
             prefix_blocks: 0,
             stats: SchedStats::default(),
@@ -182,10 +247,17 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
         self.prefix.as_ref().map(|s| s.context_len()).unwrap_or(0)
     }
 
-    /// Worst-case pool blocks reserved by live sessions (their admission
-    /// reservations; each session's real usage never exceeds it).
-    fn reserved_blocks(&self) -> usize {
+    /// Recount of every live session's remaining reservation — only for
+    /// the debug assertion that the running counter never drifts (the
+    /// hot path uses `reserved_total`, not this O(shards·sessions) scan).
+    fn recount_reserved(&self) -> usize {
         self.shards.iter().flat_map(|s| s.running.iter()).map(|l| l.reserve_blocks).sum()
+    }
+
+    /// Physical blocks currently resident in the paged pool (0 without
+    /// one) — the materialized half of the admission check.
+    fn pool_used(&self) -> usize {
+        self.engine.pool_status().map(|p| p.used_blocks).unwrap_or(0)
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -200,8 +272,13 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
         self.shards.iter().map(|s| s.running.len()).sum()
     }
 
+    /// Sessions preempted by pool-pressure eviction, awaiting resume.
+    pub fn preempted(&self) -> usize {
+        self.preempted.len()
+    }
+
     pub fn idle(&self) -> bool {
-        self.in_flight() == 0 && self.queue.pending() == 0
+        self.in_flight() == 0 && self.queue.pending() == 0 && self.preempted.is_empty()
     }
 
     pub fn engine(&self) -> &ServeEngine<M> {
@@ -213,67 +290,204 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
         self.shards.iter().map(|s| s.stats.clone()).collect()
     }
 
+    /// The LRU victim: the least-recently-stepped live session, stable
+    /// tie-break on HIGHEST session id (the youngest request is preempted
+    /// first, so the oldest always makes progress — no livelock).
+    /// Sessions touched this tick (admitted, resumed or already stepped)
+    /// are protected. The key (last_stepped, id) is unique and
+    /// independent of shard layout, so the choice is deterministic and
+    /// invariant to `decode_workers`. NOTE: under the current stepping
+    /// discipline every live session is stepped every tick, so recency
+    /// always ties and the effective order is youngest-id-first; the
+    /// tick key starts differentiating the moment sessions can idle
+    /// (streaming pauses, speculative branches — ROADMAP follow-ons).
+    fn lru_victim(&self) -> Option<(usize, usize)> {
+        let mut best: Option<((u64, std::cmp::Reverse<u64>), (usize, usize))> = None;
+        for (si, shard) in self.shards.iter().enumerate() {
+            for (i, live) in shard.running.iter().enumerate() {
+                if live.last_stepped >= self.tick_no {
+                    continue; // protected: touched this tick
+                }
+                let key = (live.last_stepped, std::cmp::Reverse(live.id));
+                let better = match &best {
+                    None => true,
+                    Some((k, _)) => key < *k,
+                };
+                if better {
+                    best = Some((key, (si, i)));
+                }
+            }
+        }
+        best.map(|(_, at)| at)
+    }
+
+    /// Preempt the live session at (shard, index): release its pool
+    /// blocks (shared blocks survive via refcounts) and park it on the
+    /// preempted queue for a later re-prefill resume.
+    fn evict_live(&mut self, si: usize, idx: usize) -> Result<()> {
+        let mut live = self.shards[si].running.swap_remove(idx);
+        // finished sessions retire the same tick they finish, so a victim
+        // is always mid-decode and will be resumed before it can retire
+        debug_assert!(!live.session.finished(), "evicting a finished session");
+        self.reserved_total -= live.reserve_blocks;
+        live.reserve_blocks = 0;
+        let freed = self.engine.evict_session(&mut live.session)?;
+        self.stats.eviction.evictions += 1;
+        self.stats.eviction.blocks_reclaimed += freed;
+        self.preempted.push(live);
+        Ok(())
+    }
+
+    /// Make room for a candidate needing `need` not-yet-materialized
+    /// blocks: evict LRU victims one at a time until
+    /// `used + reserved + need` fits under `cap`, or defer. A
+    /// feasibility check runs BEFORE any eviction — preempting every
+    /// unprotected session must suffice, otherwise the candidate defers
+    /// without destroying anyone's state (each pointless eviction would
+    /// cost a full re-prefill later).
+    fn fit_or_evict(&mut self, need: usize, cap: usize) -> Result<bool> {
+        debug_assert_eq!(self.reserved_total, self.recount_reserved(), "reservation drift");
+        if self.pool_used() + self.reserved_total + need <= cap {
+            return Ok(true);
+        }
+        let (mut freeable, mut victim_reserve) = (0usize, 0usize);
+        for shard in &self.shards {
+            for live in &shard.running {
+                if live.last_stepped < self.tick_no {
+                    freeable += self.engine.freeable_blocks(&live.session);
+                    victim_reserve += live.reserve_blocks;
+                }
+            }
+        }
+        let best_used = self.pool_used().saturating_sub(freeable);
+        if best_used + (self.reserved_total - victim_reserve) + need > cap {
+            return Ok(false);
+        }
+        loop {
+            if self.pool_used() + self.reserved_total + need <= cap {
+                return Ok(true);
+            }
+            let Some((si, idx)) = self.lru_victim() else { return Ok(false) };
+            self.evict_live(si, idx)?;
+        }
+    }
+
+    /// Push a freshly admitted or resumed session onto the least-loaded
+    /// shard (lowest index on ties — deterministic), protected from
+    /// eviction for the rest of this tick. Reservations are only tracked
+    /// for a bounded pool — nothing ever reads them otherwise.
+    fn place(&mut self, mut live: Live, resumed: bool, bounded: bool) {
+        live.last_stepped = self.tick_no;
+        live.reserve_blocks =
+            if bounded { self.engine.remaining_reserve(&live.session) } else { 0 };
+        self.reserved_total += live.reserve_blocks;
+        let shard = self
+            .shards
+            .iter_mut()
+            .min_by_key(|s| s.running.len())
+            .expect("at least one shard");
+        if !resumed {
+            shard.stats.admitted += 1;
+        }
+        shard.running.push(live);
+    }
+
     /// One scheduler tick at simulation time `now`:
-    /// 1. admit arrived requests into free decode slots (prefill them, or
-    ///    fork them off the shared prefix), balancing across the
-    ///    least-loaded shards — admission is against POOL CAPACITY when
-    ///    the engine runs a bounded paged pool: a candidate enters only
-    ///    if its worst-case block reservation fits next to the
-    ///    reservations of every live session, so decode can never hit an
-    ///    exhausted pool;
+    /// 1. resume preempted sessions (lowest id first), then admit arrived
+    ///    requests into free decode slots (prefill them, or fork them off
+    ///    the shared prefix), balancing across the least-loaded shards —
+    ///    admission is against POOL CAPACITY when the engine runs a
+    ///    bounded paged pool: a candidate enters only if its worst-case
+    ///    not-yet-materialized reservation fits next to the pool's used
+    ///    blocks plus the remaining reservations of every live session,
+    ///    evicting LRU victims when it does not, so a decode step can
+    ///    never hit an exhausted pool;
     /// 2. step every live session one decode token, shards in parallel;
     /// 3. retire finished sessions as `RequestResult`s (shard order, so
-    ///    the result order is deterministic).
+    ///    the result order is deterministic), then refresh every live
+    ///    session's remaining reservation (materialized blocks and
+    ///    finished-early slack return to the admission headroom).
     pub fn tick(&mut self, now: f64) -> Result<Vec<RequestResult>> {
-        // 1. admission — new requests join the in-flight batch mid-stream,
-        // each pinned to the currently least-loaded shard
+        self.tick_no += 1;
         let pool_cap = self.engine.pool_status().and_then(|p| p.capacity_blocks);
-        let mut free = self.cfg.max_in_flight - self.in_flight();
-        while free > 0 {
-            let Some(next) = self.queue.peek(now) else { break };
-            let reserve = match pool_cap {
-                Some(cap) => {
-                    let ctx = self.shared_prefix_len();
-                    let need =
-                        self.engine.block_reserve(ctx, next.prompt.len() + next.max_new);
-                    if self.prefix_blocks + need > cap {
-                        bail!(
-                            "request {} can never be served: needs {} pool blocks beyond \
-                             the {}-block shared prefix, capacity {}",
-                            next.id,
-                            need,
-                            self.prefix_blocks,
-                            cap
-                        );
-                    }
-                    if self.prefix_blocks + self.reserved_blocks() + need > cap {
-                        // wait for retirements to hand blocks back
-                        self.stats.pool_deferrals += 1;
-                        break;
-                    }
-                    need
+
+        // 1a. resume preempted sessions — strict priority: while one
+        // still waits for room, no new arrival is admitted (a stream of
+        // small newcomers must not starve an evicted long context out of
+        // its resume)
+        let mut resume_blocked = false;
+        while self.in_flight() < self.cfg.max_in_flight && !self.preempted.is_empty() {
+            // lowest id first — deterministic, oldest request resumes first
+            let idx = self
+                .preempted
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, l)| l.id)
+                .map(|(i, _)| i)
+                .expect("non-empty preempted queue");
+            let need = self.engine.resume_reserve(&self.preempted[idx].session);
+            if let Some(cap) = pool_cap {
+                if !self.fit_or_evict(need, cap)? {
+                    self.stats.eviction.resume_deferrals += 1;
+                    resume_blocked = true;
+                    break;
                 }
-                None => 0,
+                // the fit may have parked a lower-id victim: it outranks
+                // the current candidate, so re-select before committing
+                let min_id = self.preempted.iter().map(|l| l.id).min().expect("non-empty");
+                if min_id != self.preempted[idx].id {
+                    continue;
+                }
+            }
+            let mut live = self.preempted.swap_remove(idx);
+            let t0 = Instant::now();
+            self.engine.resume_session(&mut live.session, self.prefix.as_ref())?;
+            self.stats.eviction.resumes += 1;
+            self.stats.eviction.reprefill_secs += t0.elapsed().as_secs_f64();
+            self.place(live, true, pool_cap.is_some());
+        }
+
+        // 1b. admission — new requests join the in-flight batch
+        // mid-stream, each pinned to the currently least-loaded shard
+        // (skipped while a preempted session waits for room)
+        while !resume_blocked && self.in_flight() < self.cfg.max_in_flight {
+            let (next_id, next_tokens) = match self.queue.peek(now) {
+                Some(r) => (r.id, r.prompt.len() + r.max_new),
+                None => break,
             };
+            if let Some(cap) = pool_cap {
+                let ctx = self.shared_prefix_len();
+                let need = self.engine.block_reserve(ctx, next_tokens);
+                if self.prefix_blocks + need > cap {
+                    bail!(
+                        "request {next_id} can never be served: needs {need} pool blocks \
+                         beyond the {}-block shared prefix, capacity {cap}",
+                        self.prefix_blocks,
+                    );
+                }
+                if !self.fit_or_evict(need, cap)? {
+                    // wait for retirements/evictions to hand blocks back
+                    self.stats.pool_deferrals += 1;
+                    break;
+                }
+            }
             let req = self.queue.admit(now, 1).pop().expect("peeked request");
             let session = match &self.prefix {
                 Some(parent) => self.engine.fork_session(parent, &req.prompt, req.max_new)?,
                 None => self.engine.start(&req.prompt, req.max_new)?,
             };
             self.stats.admitted += 1;
-            let shard = self
-                .shards
-                .iter_mut()
-                .min_by_key(|s| s.running.len())
-                .expect("at least one shard");
-            shard.stats.admitted += 1;
-            shard.running.push(Live {
-                id: req.id,
-                queue_secs: (now - req.arrival).max(0.0),
-                reserve_blocks: reserve,
-                session,
-            });
-            free -= 1;
+            self.place(
+                Live {
+                    id: req.id,
+                    queue_secs: (now - req.arrival).max(0.0),
+                    reserve_blocks: 0,
+                    last_stepped: self.tick_no,
+                    session,
+                },
+                false,
+                pool_cap.is_some(),
+            );
         }
         self.stats.peak_in_flight = self.stats.peak_in_flight.max(self.in_flight());
         for shard in self.shards.iter_mut() {
@@ -293,17 +507,18 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
         // real contexts, not for a handful of tiny sessions. Persistent
         // shard threads are a ROADMAP follow-on. Outputs are identical
         // either way.
+        let tick = self.tick_no;
         if self.cfg.decode_workers > 1 {
             std::thread::scope(|scope| {
                 for shard in self.shards.iter_mut() {
                     if !shard.running.is_empty() {
-                        scope.spawn(move || shard.step_all(engine));
+                        scope.spawn(move || shard.step_all(engine, tick));
                     }
                 }
             });
         } else {
             for shard in self.shards.iter_mut() {
-                shard.step_all(engine);
+                shard.step_all(engine, tick);
             }
         }
         let steps_after: usize = self.shards.iter().map(|s| s.stats.decode_steps).sum();
@@ -316,13 +531,16 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
             self.stats.peak_pool_blocks = self.stats.peak_pool_blocks.max(p.used_blocks);
         }
 
-        // 3. retirement, shard by shard
+        // 3. retirement, shard by shard — a retiring session hands its
+        // reservation (and, on drop, its pool blocks) back the same tick
+        // it finishes, so budget slack never lingers as phantom demand
         let mut finished = Vec::new();
         for shard in self.shards.iter_mut() {
             let mut i = 0;
             while i < shard.running.len() {
                 if shard.running[i].session.finished() {
                     let live = shard.running.swap_remove(i);
+                    self.reserved_total -= live.reserve_blocks;
                     self.stats.completed += 1;
                     finished.push(RequestResult {
                         id: live.id,
@@ -337,6 +555,22 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
                 }
             }
         }
+
+        // refresh every survivor's remaining reservation: blocks its
+        // decode step just materialized move from "reserved" to "used",
+        // so the next tick's admission sees them exactly once (only a
+        // bounded pool reads reservations)
+        if pool_cap.is_some() {
+            for shard in self.shards.iter_mut() {
+                for live in shard.running.iter_mut() {
+                    let fresh = self.engine.remaining_reserve(&live.session);
+                    self.reserved_total -= live.reserve_blocks;
+                    self.reserved_total += fresh;
+                    live.reserve_blocks = fresh;
+                }
+            }
+        }
+        debug_assert_eq!(self.reserved_total, self.recount_reserved(), "reservation drift");
         Ok(finished)
     }
 
@@ -590,6 +824,119 @@ mod tests {
         assert_eq!(tight.stats.peak_in_flight, 2, "capacity should cap concurrency");
         assert!(tight.stats.pool_deferrals > 0);
         assert!(tight.stats.peak_pool_blocks <= 5);
+    }
+
+    #[test]
+    fn oversubscribed_pool_evicts_resumes_and_serves_identically() {
+        // pool far below the concurrent working set: each request needs
+        // 2 blocks, capacity 5 holds ~2 sessions, but 6 run "at once" —
+        // the scheduler must preempt LRU sessions and re-prefill them,
+        // serving exactly the uncapped run's tokens
+        let stream = || -> Vec<Request> { (0..6).map(|i| req(i, 0.0, 20, 8)).collect() };
+        let mut wide =
+            ContinuousScheduler::new(engine_with(BackendKind::Paged, 0), sched_cfg(6, 1));
+        let mut base = wide.run_stream(stream(), 0.01).unwrap();
+        base.sort_by_key(|r| r.id);
+        assert_eq!(wide.stats.eviction.evictions, 0, "unbounded pool never evicts");
+        for workers in [1usize, 3] {
+            let mut tight = ContinuousScheduler::new(
+                engine_with(BackendKind::Paged, 5),
+                sched_cfg(6, workers),
+            );
+            let mut got = tight.run_stream(stream(), 0.01).unwrap();
+            got.sort_by_key(|r| r.id);
+            assert_eq!(got.len(), base.len(), "workers={workers} lost requests");
+            for (g, b) in got.iter().zip(&base) {
+                assert_eq!(g.id, b.id);
+                assert_eq!(g.output, b.output, "req {} changed under eviction", g.id);
+            }
+            let ev = &tight.stats.eviction;
+            assert!(ev.evictions > 0, "workers={workers}: oversubscription must evict");
+            assert!(ev.blocks_reclaimed > 0, "workers={workers}");
+            assert_eq!(
+                ev.resumes, ev.evictions,
+                "workers={workers}: every preempted session resumed exactly once per eviction"
+            );
+            assert!(tight.stats.peak_pool_blocks <= 5, "workers={workers}");
+            assert!(tight.idle(), "workers={workers}: no session left behind");
+        }
+    }
+
+    #[test]
+    fn admission_fills_headroom_freed_by_materialized_blocks() {
+        // the double-count regression: each request's worst case is 2
+        // blocks (prompt 4 + max_new 13), but after prefill its single
+        // materialized block has 12 open slots absorbing all 12 future
+        // appends — remaining reservation 0. Four such sessions fit a
+        // 5-block pool TOGETHER (used 4 + reservations 0), where
+        // lifetime-worst-case accounting (4 x 2 = 8 > 5) spuriously
+        // deferred half of them against a half-full pool.
+        let reqs: Vec<Request> = (0..4).map(|i| req(i, 0.0, 4, 13)).collect();
+        let solo = engine_with(BackendKind::Paged, 0);
+        let want: Vec<Vec<i32>> =
+            reqs.iter().map(|r| solo.generate(&r.prompt, r.max_new).unwrap().0).collect();
+        let mut sched =
+            ContinuousScheduler::new(engine_with(BackendKind::Paged, 5), sched_cfg(4, 1));
+        for r in reqs {
+            sched.submit(r);
+        }
+        sched.tick(0.0).unwrap();
+        assert_eq!(sched.in_flight(), 4, "all four must admit into the freed headroom");
+        assert_eq!(sched.stats.pool_deferrals, 0);
+        let mut got = Vec::new();
+        let mut now = 0.0;
+        while !sched.idle() {
+            got.extend(sched.tick(now).unwrap());
+            now += 0.1;
+        }
+        assert_eq!(sched.stats.eviction.evictions, 0, "everything fit; nothing to evict");
+        got.sort_by_key(|r| r.id);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(&g.output, w, "req {}", g.id);
+        }
+    }
+
+    #[test]
+    fn eviction_preserves_shared_prefix_and_tokens() {
+        // forked sessions get evicted under pool pressure; the shared
+        // system prefix must stay resident (the parent holds it) and the
+        // resumed forks must serve exactly the unbounded-pool tokens
+        let prefix: Vec<i32> = (0..40).map(|i| (i * 3) % 48).collect();
+        let conts: Vec<Vec<i32>> =
+            (0..4).map(|i| (0..10).map(|j| (j * 7 + i) % 48).collect()).collect();
+        let stream = |conts: &[Vec<i32>]| -> Vec<Request> {
+            conts
+                .iter()
+                .enumerate()
+                .map(|(i, c)| Request {
+                    id: i as u64,
+                    prompt: c.clone(),
+                    max_new: 6,
+                    arrival: 0.0,
+                })
+                .collect()
+        };
+        let mut wide =
+            ContinuousScheduler::new(engine_with(BackendKind::Paged, 0), sched_cfg(4, 1));
+        wide.set_shared_prefix(&prefix).unwrap();
+        let mut base = wide.run_stream(stream(&conts), 0.01).unwrap();
+        base.sort_by_key(|r| r.id);
+        // prefix = 3 blocks; each fork's tail needs ceil((8+16)/16) = 2:
+        // capacity 6 holds the prefix plus ~1.5 forks -> heavy eviction
+        let mut tight =
+            ContinuousScheduler::new(engine_with(BackendKind::Paged, 6), sched_cfg(4, 1));
+        tight.set_shared_prefix(&prefix).unwrap();
+        let mut got = tight.run_stream(stream(&conts), 0.01).unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), base.len());
+        for (g, b) in got.iter().zip(&base) {
+            assert_eq!(g.output, b.output, "req {} changed under prefix eviction", g.id);
+        }
+        assert!(tight.stats.eviction.evictions > 0, "pool pressure must evict forks");
+        // the prefix was never reclaimed: the pool always holds >= its 3
+        // blocks while sessions churn around it
+        assert!(tight.stats.peak_pool_blocks >= 3);
+        assert!(tight.stats.peak_pool_blocks <= 6);
     }
 
     #[test]

@@ -83,6 +83,22 @@ pub trait AttentionBackend: Send {
             self.name()
         )
     }
+
+    /// Drop the incremental state and hand its memory back to whatever
+    /// shared store backs it, returning the number of pool blocks
+    /// actually reclaimed — the preemption hook behind serving-layer
+    /// eviction (`serve::ServeEngine::evict_session`). Re-ingesting the
+    /// same token stream afterwards must reproduce the pre-eviction
+    /// state bit-for-bit (the re-prefill resume contract). Only backends
+    /// over a shared pool support this; private-cache backends refuse —
+    /// their memory frees with the session, there is nothing to reclaim
+    /// early.
+    fn evict(&mut self) -> Result<usize> {
+        bail!(
+            "backend '{}' holds private caches; eviction requires the 'paged' pool",
+            self.name()
+        )
+    }
 }
 
 fn last_row(out: &Tensor) -> Vec<f32> {

@@ -20,7 +20,12 @@
 //!   K/V and representative means *through the block table*
 //!   (`attention::fused_row_blocks`) — bit-identical to the
 //!   private-cache backends (same `dot`/`dot2` accumulation order, same
-//!   NaN-safe `>=` top-k selection, same `sum * (1/count)` means).
+//!   NaN-safe `>=` top-k selection, same `sum * (1/count)` means);
+//! - [`PagedKvPool::evict`] is the preemption primitive behind
+//!   oversubscribed serving: it reclaims exactly the blocks no live
+//!   table references (a shared prefix survives the eviction of any
+//!   forker), and re-ingesting the same token stream afterwards rebuilds
+//!   the session bit-identically (the scheduler's re-prefill resume).
 //!
 //! Concurrency: the pool handle is `Arc<RwLock<..>>` so whole sessions
 //! can migrate across scheduler decode shards (`serve::scheduler`).
@@ -280,6 +285,17 @@ impl PagedKvPool {
         }
         table.blocks.clear();
         table.len = 0;
+    }
+
+    /// Evict `table`: release its references and report how many physical
+    /// blocks were actually reclaimed (refcount reached zero). Blocks a
+    /// live table still references — a shared prefix under a forker —
+    /// stay resident and are NOT counted; refcounts already encode
+    /// exactly which bytes the rest of the system depends on.
+    pub fn evict(&mut self, table: &mut BlockTable) -> usize {
+        let before = self.used;
+        self.release(table);
+        before - self.used
     }
 
     /// Tokens of logical block `b` under `table` — equals the physical
@@ -547,6 +563,16 @@ impl AttentionBackend for PagedMobaAttention {
         self.reps_cap = 0;
     }
 
+    fn evict(&mut self) -> Result<usize> {
+        let freed = {
+            let mut pool = self.pool.write().expect("paged pool lock");
+            pool.evict(&mut self.table)
+        };
+        self.reps.clear();
+        self.reps_cap = 0;
+        Ok(freed)
+    }
+
     fn prefill(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
         debug_assert!(self.table.is_empty(), "prefill on non-empty state");
         {
@@ -720,6 +746,63 @@ mod tests {
         let mut mean = [0.0f32; 2];
         pool.mean_into(&b, 0, 0, &mut mean);
         assert_eq!(mean, [2.0, 6.0], "stale sum survived block reuse");
+    }
+
+    #[test]
+    fn evict_reclaims_only_unshared_blocks() {
+        // parent: 2 full blocks + 4-token tail; fork diverges through CoW
+        let k = rand_t(&[20, 1, 4], 5);
+        let v = rand_t(&[20, 1, 4], 6);
+        let mut pool = PagedKvPool::new(8, 1, 4, None);
+        let mut parent = BlockTable::new();
+        pool.append_tensors(&mut parent, &k, &v).unwrap();
+        let mut forker = pool.fork(&parent);
+        for i in 0..12 {
+            pool.append(&mut forker, &[i as f32; 4], &[0.0; 4]).unwrap();
+        }
+        // forker: 3 shared-prefix refs + CoW tail + 1 fresh = 5 phys used
+        assert_eq!(pool.used_blocks(), 5);
+        // evicting the forker frees only its private tail blocks; the
+        // shared prefix (still referenced by the parent) stays resident
+        let freed = pool.evict(&mut forker);
+        assert_eq!(freed, 2, "only the CoW tail + fresh block free");
+        assert_eq!(pool.used_blocks(), 3);
+        assert_eq!(pool.k_tensor(&parent), k, "prefix bytes survive eviction");
+        // evicting the last holder frees everything
+        assert_eq!(pool.evict(&mut parent), 3);
+        assert_eq!(pool.used_blocks(), 0);
+    }
+
+    #[test]
+    fn backend_evict_releases_and_reingest_is_bitwise_identical() {
+        let n = 37;
+        let q = rand_t(&[n, 2, 8], 81);
+        let k = rand_t(&[n, 2, 8], 82);
+        let v = rand_t(&[n, 2, 8], 83);
+        let mut twin = PagedMobaAttention::with_private_pool(2, 8, 16, 2);
+        let mut victim = PagedMobaAttention::with_private_pool(2, 8, 16, 2);
+        let split = 20;
+        for t in 0..split {
+            let a = victim.decode(row(&q, t), row(&k, t), row(&v, t));
+            let b = twin.decode(row(&q, t), row(&k, t), row(&v, t));
+            assert_eq!(a, b, "t={t}");
+        }
+        let freed = victim.evict().unwrap();
+        assert_eq!(freed, 2, "20 tokens over 16-blocks = 2 phys blocks");
+        assert_eq!(victim.seq_len(), 0);
+        assert_eq!(victim.pool().read().unwrap().used_blocks(), 0);
+        // re-prefill the same stream, then keep decoding: bit-identical
+        let (qp, kp, vp) = (
+            Tensor::from_vec(&[split, 2, 8], q.data[..split * 16].to_vec()).unwrap(),
+            Tensor::from_vec(&[split, 2, 8], k.data[..split * 16].to_vec()).unwrap(),
+            Tensor::from_vec(&[split, 2, 8], v.data[..split * 16].to_vec()).unwrap(),
+        );
+        victim.prefill(&qp, &kp, &vp);
+        for t in split..n {
+            let a = victim.decode(row(&q, t), row(&k, t), row(&v, t));
+            let b = twin.decode(row(&q, t), row(&k, t), row(&v, t));
+            assert_eq!(a, b, "post-resume t={t}");
+        }
     }
 
     #[test]

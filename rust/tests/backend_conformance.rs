@@ -13,7 +13,7 @@
 
 mod common;
 
-use common::{build, oracle, prefix, rand_t, row, ALL_BACKENDS, SPARSE_BACKENDS};
+use common::{build, oracle, prefix, rand_t, row, ALL_BACKENDS, EVICTABLE_BACKENDS, SPARSE_BACKENDS};
 use moba::serve::{ServeCfg, ServeEngine, ToyModel};
 use moba::sparse::BackendKind;
 use moba::tensor::Tensor;
@@ -142,6 +142,57 @@ fn gate_exposed_iff_sparse() {
         assert_eq!(b.gate(&q, &k).is_some(), sparse, "{}", b.name());
         if let Some(g) = b.gate(&q, &k) {
             assert_eq!(g.n_blocks, 2, "{}", b.name());
+        }
+    }
+}
+
+#[test]
+fn evict_supported_iff_registered() {
+    let q = rand_t(&[24, H, D], 23);
+    let k = rand_t(&[24, H, D], 24);
+    let v = rand_t(&[24, H, D], 25);
+    for &kind in ALL_BACKENDS {
+        let mut b = build(kind, H, D, BS, TOPK, 1);
+        b.prefill(&q, &k, &v);
+        let evictable = EVICTABLE_BACKENDS.contains(&kind);
+        match b.evict() {
+            Ok(freed) => {
+                assert!(evictable, "{} evicted but is not registered evictable", b.name());
+                assert!(freed > 0, "{}: eviction reclaimed nothing", b.name());
+                assert_eq!(b.seq_len(), 0, "{}", b.name());
+            }
+            Err(_) => {
+                assert!(!evictable, "{} is registered evictable but refused", b.name());
+                assert_eq!(b.seq_len(), 24, "{}: failed evict must not corrupt", b.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn evict_then_reingest_matches_never_evicted_twin() {
+    // the re-prefill resume contract at the backend level: evict
+    // mid-decode, re-ingest the same (ragged) stream, keep decoding —
+    // every subsequent row must equal the never-evicted twin's, bitwise
+    let (n, split) = (41, 23);
+    let q = rand_t(&[n, H, D], 26);
+    let k = rand_t(&[n, H, D], 27);
+    let v = rand_t(&[n, H, D], 28);
+    for &kind in EVICTABLE_BACKENDS {
+        let mut twin = build(kind, H, D, BS, TOPK, 1);
+        let mut victim = build(kind, H, D, BS, TOPK, 1);
+        for t in 0..split {
+            let a = victim.decode(row(&q, t), row(&k, t), row(&v, t));
+            let b = twin.decode(row(&q, t), row(&k, t), row(&v, t));
+            assert_eq!(a, b, "{} t={t}", twin.name());
+        }
+        victim.evict().unwrap();
+        victim.prefill(&prefix(&q, split), &prefix(&k, split), &prefix(&v, split));
+        assert_eq!(victim.seq_len(), split, "{}", victim.name());
+        for t in split..n {
+            let a = victim.decode(row(&q, t), row(&k, t), row(&v, t));
+            let b = twin.decode(row(&q, t), row(&k, t), row(&v, t));
+            assert_eq!(a, b, "{} post-resume t={t}", twin.name());
         }
     }
 }

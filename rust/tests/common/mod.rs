@@ -30,6 +30,14 @@ pub const SPARSE_BACKENDS: &[BackendKind] = &[
     BackendKind::Paged,
 ];
 
+/// Backends whose incremental state can be evicted (blocks handed back
+/// to a shared pool) and rebuilt bit-identically by re-ingesting the
+/// same stream — the contract behind scheduler-level preemption. The
+/// conformance harness checks that `AttentionBackend::evict` succeeds
+/// exactly for these kinds and that evict → re-ingest → decode matches a
+/// never-evicted twin bit-for-bit.
+pub const EVICTABLE_BACKENDS: &[BackendKind] = &[BackendKind::Paged];
+
 /// The batch-kernel oracle a backend's outputs must reproduce: dense
 /// backends mirror `full_attention`, everything else the two-pass MoBA
 /// kernel.

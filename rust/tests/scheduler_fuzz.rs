@@ -1,10 +1,11 @@
 //! Seeded scheduler fuzz: randomized arrival times, prompt lengths and
 //! decode budgets (driven by the repo's own `Rng` — no `rand` dep),
 //! asserting that the tokens each request is served are invariant to the
-//! scheduler's decode shard count and to paged-pool capacity — absent
-//! eviction, a bounded pool only *defers* admission, it must never change
-//! what anyone decodes — and equal to a solo single-session run of the
-//! same prompt (the scheduler's interleaving is invisible).
+//! scheduler's decode shard count and to paged-pool capacity — a bounded
+//! pool defers or *evicts* (LRU preemption + re-prefill resume when the
+//! pool oversubscribes), and neither may ever change what anyone decodes
+//! — and equal to a solo single-session run of the same prompt (the
+//! scheduler's interleaving is invisible).
 
 use moba::serve::{
     ContinuousScheduler, Request, RequestResult, SchedulerCfg, ServeCfg, ServeEngine, ToyModel,
@@ -80,6 +81,7 @@ fn fuzzed_streams_are_schedule_invariant() {
             .max()
             .unwrap();
         let tight = max_need + 2; // room for ~1-2 sessions: heavy deferral
+        let oversub = max_need + 1; // barely one session: constant eviction churn
         for (backend, pool_blocks, decode_workers) in [
             (BackendKind::Fused, 0, 1),
             (BackendKind::Fused, 0, 3),
@@ -87,6 +89,8 @@ fn fuzzed_streams_are_schedule_invariant() {
             (BackendKind::Paged, 0, 4),
             (BackendKind::Paged, tight, 1),
             (BackendKind::Paged, tight, 3),
+            (BackendKind::Paged, oversub, 1),
+            (BackendKind::Paged, oversub, 3),
         ] {
             let got = serve(backend, pool_blocks, decode_workers, reqs.clone());
             assert_eq!(got.len(), reqs.len(), "seed={seed} lost requests");
@@ -121,7 +125,18 @@ fn fuzzed_shared_prefix_streams_are_schedule_invariant() {
                 solo.generate(&full, r.max_new).unwrap().0
             })
             .collect();
-        for (pool_blocks, decode_workers) in [(0usize, 1usize), (0, 3), (64, 2)] {
+        // oversubscribed: the prefix plus barely one fork's tail — forked
+        // sessions get evicted and re-forked off the surviving prefix
+        let prefix_blocks = (prefix.len() + BS - 1) / BS;
+        let max_fork_need = reqs
+            .iter()
+            .map(|r| solo.block_reserve(prefix.len(), r.prompt.len() + r.max_new))
+            .max()
+            .unwrap();
+        let oversub = prefix_blocks + max_fork_need + 1;
+        for (pool_blocks, decode_workers) in
+            [(0usize, 1usize), (0, 3), (64, 2), (oversub, 1), (oversub, 3)]
+        {
             let mut sched = ContinuousScheduler::new(
                 engine(BackendKind::Paged, pool_blocks),
                 SchedulerCfg { max_in_flight: 3, decode_workers },
