@@ -19,17 +19,24 @@
 //! # preemptions, reclaimed blocks and re-prefill overhead):
 //! cargo run --release --example serve_continuous -- --backend paged \
 //!     --requests 12 --prompt-len 256 --pool-blocks 24
+//! # thread-per-core decode: persistent pinned workers + work stealing
+//! # (the default; compare against the legacy re-spawning tick loop):
+//! cargo run --release --example serve_continuous -- --decode-workers 0 \
+//!     --runtime persistent
+//! cargo run --release --example serve_continuous -- --decode-workers 0 \
+//!     --runtime tick
 //! ```
 
-use moba::serve::{run_demo, DemoCfg};
+use moba::serve::{run_demo, DemoCfg, RuntimeKind};
 use moba::sparse::BackendKind;
 use moba::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv, &[])?;
+    let args = Args::parse(&argv, &["no-steal", "no-pin"])?;
     // `--workers 0` / `--decode-workers 0` mean "all available cores"
     let resolve = |n: usize| if n == 0 { moba::sparse::default_workers() } else { n };
+    let d = DemoCfg::default();
     let cfg = DemoCfg {
         requests: args.get_usize("requests", 12)?,
         max_in_flight: args.get_usize("max-batch", 4)?,
@@ -40,6 +47,9 @@ fn main() -> anyhow::Result<()> {
         backend: BackendKind::parse(args.get_str("backend", "cached-sparse"))?,
         workers: resolve(args.get_usize("workers", 1)?),
         decode_workers: resolve(args.get_usize("decode-workers", 1)?),
+        runtime: RuntimeKind::parse(args.get_str("runtime", d.runtime.label()))?,
+        steal: if args.flag("no-steal") { false } else { d.steal },
+        pin: if args.flag("no-pin") { false } else { d.pin },
         shared_prefix: args.get_usize("shared-prefix", 0)?,
         pool_blocks: args.get_usize("pool-blocks", 0)?,
         seed: args.get_u64("seed", 7)?,

@@ -188,7 +188,7 @@ fn oversubscribed_arm(quick: bool) -> Json {
     let run = |pool_blocks: usize| {
         let mut sched = ContinuousScheduler::new(
             mk_engine(pool_blocks),
-            SchedulerCfg { max_in_flight, decode_workers: 1 },
+            SchedulerCfg { max_in_flight, decode_workers: 1, ..SchedulerCfg::default() },
         );
         let t0 = Instant::now();
         let mut out = sched.run_stream(mk_reqs(), 0.001).expect("oversubscribed stream");

@@ -1,0 +1,272 @@
+//! Bench: end-to-end serving throughput (tokens/s) — the persistent
+//! thread-per-core decode runtime vs the legacy per-tick scoped-thread
+//! loop, on a uniform burst and on a steal-heavy skewed-length burst.
+//!
+//! The persistent runtime spawns its named, core-pinned workers once and
+//! feeds them over bounded channels; the tick loop re-spawns scoped
+//! threads every decode round. Served tokens are bitwise identical
+//! across runtimes, worker counts and stealing schedules — every arm is
+//! asserted against the single-worker tick-loop baseline (quick mode
+//! included) before any timing is reported. The skewed arm gives every
+//! 4th request an 8× decode budget so shards drain unevenly and idle
+//! persistent workers actually steal. Appends a trajectory entry to
+//! `BENCH_serve.json` at the repo root and asserts the acceptance floor:
+//! persistent + stealing ≥ 1.2× tick-loop tokens/s on the skewed arm at
+//! the same worker count, on a 4+ core box.
+//!
+//! ```sh
+//! cargo bench --bench serve_throughput            # full run + asserts
+//! cargo bench --bench serve_throughput -- --quick # CI smoke: small run,
+//!                                                 # parity asserts only
+//! ```
+
+use std::time::Instant;
+
+use moba::serve::{
+    ContinuousScheduler, Request, RuntimeKind, SchedulerCfg, ServeCfg, ServeEngine, ToyModel,
+};
+use moba::sparse::BackendKind;
+use moba::util::json::{arr, num, obj, s, Json};
+
+const HEADS: usize = 2;
+const DIM: usize = 16;
+const BLOCK: usize = 32;
+const TOPK: usize = 2;
+const VOCAB: usize = 64;
+
+struct Arm {
+    name: &'static str,
+    requests: usize,
+    prompt_len: usize,
+    max_new: usize,
+    /// every `skew_every`-th request gets `skew_factor * max_new` decode
+    /// steps (0 = uniform)
+    skew_every: usize,
+    skew_factor: usize,
+}
+
+fn arm_requests(arm: &Arm) -> Vec<Request> {
+    (0..arm.requests as u64)
+        .map(|id| {
+            let skewed = arm.skew_every > 0 && id as usize % arm.skew_every == 0;
+            Request {
+                id,
+                prompt: (0..arm.prompt_len as i32)
+                    .map(|i| (i * 7 + 3 * id as i32) % VOCAB as i32)
+                    .collect(),
+                max_new: if skewed { arm.max_new * arm.skew_factor } else { arm.max_new },
+                // a burst: everything queued up front, pure decode
+                // throughput, no arrival-process noise
+                arrival: 0.0,
+            }
+        })
+        .collect()
+}
+
+struct RunOut {
+    outputs: Vec<Vec<i32>>,
+    tokens: usize,
+    wall_secs: f64,
+    steals: usize,
+    stolen_steps: usize,
+}
+
+fn run(arm: &Arm, runtime: RuntimeKind, decode_workers: usize, steal: bool) -> RunOut {
+    let engine = ServeEngine::new(
+        ToyModel::new(VOCAB, HEADS, DIM, 11),
+        ServeCfg {
+            block_size: BLOCK,
+            topk: TOPK,
+            max_seq: 8192,
+            backend: BackendKind::Fused,
+            workers: 1,
+            pool_blocks: 0,
+        },
+    );
+    let mut sched = ContinuousScheduler::new(
+        engine,
+        SchedulerCfg {
+            max_in_flight: 16,
+            decode_workers,
+            runtime,
+            steal,
+            ..SchedulerCfg::default()
+        },
+    );
+    let t0 = Instant::now();
+    let mut results = sched.run_stream(arm_requests(arm), 0.0).expect("serve stream");
+    let wall_secs = t0.elapsed().as_secs_f64();
+    results.sort_by_key(|r| r.id);
+    let outputs: Vec<Vec<i32>> = results.iter().map(|r| r.output.clone()).collect();
+    let tokens: usize = outputs.iter().map(|o| o.len()).sum();
+    let ws = sched.worker_stats();
+    RunOut {
+        outputs,
+        tokens,
+        wall_secs,
+        steals: ws.iter().map(|w| w.steals).sum(),
+        stolen_steps: ws.iter().map(|w| w.stolen_steps).sum(),
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // physical cores, NOT default_workers(): a MOBA_WORKERS override must
+    // not distort the comparison or fake a "4+ core box"
+    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let multi = ncpu.max(2);
+
+    let arms: Vec<Arm> = if quick {
+        vec![
+            Arm {
+                name: "uniform",
+                requests: 8,
+                prompt_len: 48,
+                max_new: 6,
+                skew_every: 0,
+                skew_factor: 1,
+            },
+            Arm {
+                name: "skewed",
+                requests: 8,
+                prompt_len: 48,
+                max_new: 4,
+                skew_every: 4,
+                skew_factor: 8,
+            },
+        ]
+    } else {
+        vec![
+            Arm {
+                name: "uniform",
+                requests: 48,
+                prompt_len: 128,
+                max_new: 48,
+                skew_every: 0,
+                skew_factor: 1,
+            },
+            Arm {
+                name: "skewed",
+                requests: 32,
+                prompt_len: 128,
+                max_new: 16,
+                skew_every: 4,
+                skew_factor: 8,
+            },
+        ]
+    };
+
+    println!("== serving throughput: persistent thread-per-core vs tick-loop ==");
+    println!(
+        "H={HEADS} D={DIM} block={BLOCK} top-{TOPK}; {multi} decode workers multi{}",
+        if quick { " (quick mode)" } else { "" }
+    );
+    println!(
+        "{:>8} {:>11} {:>8} {:>6} {:>10} {:>12} {:>8} {:>8}",
+        "arm", "runtime", "workers", "steal", "wall_s", "tok/s", "steals", "stolen"
+    );
+
+    let mut rows = Vec::new();
+    let mut skewed_speedup = f64::NAN;
+    for arm in &arms {
+        // ground truth: single-worker tick loop
+        let base = run(arm, RuntimeKind::TickLoop, 1, false);
+        let mut report = |label: &str, workers: usize, steal: bool, out: &RunOut| {
+            let tok_per_s = out.tokens as f64 / out.wall_secs.max(1e-9);
+            println!(
+                "{:>8} {:>11} {:>8} {:>6} {:>10.3} {:>12.0} {:>8} {:>8}",
+                arm.name, label, workers, steal, out.wall_secs, tok_per_s, out.steals,
+                out.stolen_steps
+            );
+            rows.push(obj(vec![
+                ("arm", s(arm.name)),
+                ("runtime", s(label)),
+                ("workers", num(workers as f64)),
+                ("steal", Json::Bool(steal)),
+                ("wall_secs", num(out.wall_secs)),
+                ("tokens", num(out.tokens as f64)),
+                ("tok_per_s", num(tok_per_s)),
+                ("steals", num(out.steals as f64)),
+                ("stolen_steps", num(out.stolen_steps as f64)),
+            ]));
+            tok_per_s
+        };
+        report("tick-loop", 1, false, &base);
+        let mut best_tick = f64::NEG_INFINITY;
+        let mut best_persistent = f64::NEG_INFINITY;
+        for (runtime, workers, steal) in [
+            (RuntimeKind::TickLoop, multi, false),
+            (RuntimeKind::Persistent, 1, false),
+            (RuntimeKind::Persistent, multi, false),
+            (RuntimeKind::Persistent, multi, true),
+        ] {
+            let out = run(arm, runtime, workers, steal);
+            assert_eq!(
+                out.outputs,
+                base.outputs,
+                "{}: {} workers={workers} steal={steal} changed served tokens",
+                arm.name,
+                runtime.label()
+            );
+            let tok_per_s = report(runtime.label(), workers, steal, &out);
+            match runtime {
+                RuntimeKind::TickLoop => best_tick = best_tick.max(tok_per_s),
+                RuntimeKind::Persistent => {
+                    if workers == multi {
+                        best_persistent = best_persistent.max(tok_per_s);
+                    }
+                }
+            }
+        }
+        if arm.skew_every > 0 {
+            skewed_speedup = best_persistent / best_tick;
+        }
+    }
+
+    // the trajectory entry is written in quick mode as well (flagged), so
+    // CI can upload BENCH_serve.json as an artifact from the smoke run
+    let unix_secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let entry = obj(vec![
+        ("bench", s("serve_throughput")),
+        ("quick", Json::Bool(quick)),
+        ("unix_secs", num(unix_secs)),
+        ("heads", num(HEADS as f64)),
+        ("head_dim", num(DIM as f64)),
+        ("block", num(BLOCK as f64)),
+        ("topk", num(TOPK as f64)),
+        ("workers_multi", num(multi as f64)),
+        ("rows", arr(rows)),
+    ]);
+    // trajectory file at the REPO ROOT regardless of bench cwd
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    let mut trajectory = match std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok())
+    {
+        Some(Json::Arr(entries)) => entries,
+        _ => Vec::new(),
+    };
+    trajectory.push(entry);
+    std::fs::write(path, Json::Arr(trajectory).to_string()).expect("writing BENCH_serve.json");
+    println!("-> {path}");
+
+    if quick {
+        println!("quick mode: token parity verified across runtimes; perf asserts skipped");
+        return;
+    }
+
+    if ncpu >= 4 {
+        assert!(
+            skewed_speedup >= 1.2,
+            "acceptance: persistent runtime must serve >=1.2x tick-loop tokens/s on the \
+             skewed arm at {multi} workers (got {skewed_speedup:.2}x)"
+        );
+        println!("acceptance OK: persistent {skewed_speedup:.2}x >= 1.2x tick-loop (skewed arm)");
+    } else {
+        println!(
+            "perf acceptance skipped: only {ncpu} cores available (needs 4+); \
+             parity was asserted on every arm"
+        );
+    }
+}

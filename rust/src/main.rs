@@ -37,7 +37,7 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["long", "full", "quiet", "help"])?;
+    let args = Args::parse(argv, &["long", "full", "quiet", "help", "no-steal", "no-pin"])?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "help" => {
@@ -71,6 +71,11 @@ serve options: --requests N --max-batch M --prompt-len P --max-new K
   --backend full|moba|cached-full|cached-sparse|fused|paged --block B --topk K
   --workers W (kernel threads, 0 = all cores)
   --decode-workers S (scheduler decode shards, 0 = all cores)
+  --runtime persistent|tick (persistent pinned thread-per-core decode
+    workers with bounded channels + work stealing, vs the legacy per-tick
+    scoped-thread loop; served tokens are bitwise identical)
+  --no-steal (keep persistent workers on their own shard; default steals)
+  --no-pin (skip core pinning of persistent workers)
   --shared-prefix L (L-token system prompt forked per request; needs paged)
   --pool-blocks N (paged pool capacity in blocks, 0 = unbounded; a bounded
     pool oversubscribes: LRU eviction + re-prefill resume, same tokens)
@@ -93,6 +98,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
         backend: BackendKind::parse(args.get_str("backend", d.backend.label()))?,
         workers: resolve(args.get_usize("workers", d.workers)?),
         decode_workers: resolve(args.get_usize("decode-workers", d.decode_workers)?),
+        runtime: moba::serve::RuntimeKind::parse(args.get_str("runtime", d.runtime.label()))?,
+        steal: if args.flag("no-steal") { false } else { d.steal },
+        pin: if args.flag("no-pin") { false } else { d.pin },
         shared_prefix: args.get_usize("shared-prefix", d.shared_prefix)?,
         pool_blocks: args.get_usize("pool-blocks", d.pool_blocks)?,
         seed: args.get_u64("seed", d.seed)?,

@@ -13,6 +13,7 @@ use crate::util::rng::Rng;
 use super::batcher::Request;
 use super::engine::{ServeCfg, ServeEngine};
 use super::model::ToyModel;
+use super::runtime::{pin_from_env, steal_from_env, RuntimeKind};
 use super::scheduler::{ContinuousScheduler, SchedulerCfg};
 
 /// Demo parameters (CLI flags map 1:1 onto these).
@@ -29,6 +30,14 @@ pub struct DemoCfg {
     pub workers: usize,
     /// scheduler decode shards stepping sessions concurrently
     pub decode_workers: usize,
+    /// decode runtime: persistent pinned thread-per-core workers, or the
+    /// legacy per-tick scoped-thread loop (tokens are bitwise identical)
+    pub runtime: RuntimeKind,
+    /// let idle persistent workers steal queued sessions from the most
+    /// loaded shard (never changes served tokens)
+    pub steal: bool,
+    /// pin persistent workers to cores (Linux; a no-op elsewhere)
+    pub pin: bool,
     /// shared system-prompt tokens every request forks off copy-on-write
     /// (0 = off; requires `backend: paged`)
     pub shared_prefix: usize,
@@ -53,6 +62,9 @@ impl Default for DemoCfg {
             backend: BackendKind::CachedSparse,
             workers: 1,
             decode_workers: 1,
+            runtime: RuntimeKind::Persistent,
+            steal: steal_from_env(),
+            pin: pin_from_env(),
             shared_prefix: 0,
             pool_blocks: 0,
             seed: 42,
@@ -81,9 +93,12 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
         cfg.max_in_flight
     );
     println!(
-        "   kernel workers={}  decode shards={}",
+        "   kernel workers={}  decode shards={}  runtime={}{}{}",
         cfg.workers.max(1),
-        cfg.decode_workers.max(1)
+        cfg.decode_workers.max(1),
+        cfg.runtime.label(),
+        if cfg.runtime == RuntimeKind::Persistent && cfg.steal { " +steal" } else { "" },
+        if cfg.runtime == RuntimeKind::Persistent && cfg.pin { " +pin" } else { "" }
     );
     let engine = ServeEngine::new(model, serve_cfg);
     let mut sched = ContinuousScheduler::new(
@@ -91,6 +106,9 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
         SchedulerCfg {
             max_in_flight: cfg.max_in_flight,
             decode_workers: cfg.decode_workers.max(1),
+            runtime: cfg.runtime,
+            steal: cfg.steal,
+            pin: cfg.pin,
         },
     );
 
@@ -168,11 +186,19 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
         total_tokens as f64 / wall.max(1e-9),
         results.len() as f64 / wall.max(1e-9)
     );
+    let persistent = sched.runtime() == RuntimeKind::Persistent;
     for (i, w) in sched.worker_stats().iter().enumerate() {
-        println!(
+        print!(
             "shard {i}: admitted {}  rounds {}  steps {}  busy {:.3}s  peak {}",
             w.admitted, w.decode_rounds, w.decode_steps, w.busy_secs, w.peak_in_flight
         );
+        if persistent {
+            print!(
+                "  steals {} ({} tok)  idle {}  queue-hwm {}",
+                w.steals, w.stolen_steps, w.idle_ticks, w.queue_depth_hwm
+            );
+        }
+        println!();
     }
     if let Some(pool) = sched.engine().pool_status() {
         // unique KV bytes at the pool's high-water mark vs what private
@@ -256,6 +282,24 @@ mod tests {
             ..Default::default()
         };
         run_demo(&cfg).unwrap();
+    }
+
+    #[test]
+    fn demo_runs_on_both_runtimes() {
+        for runtime in [RuntimeKind::TickLoop, RuntimeKind::Persistent] {
+            let cfg = DemoCfg {
+                requests: 3,
+                prompt_len: 48,
+                max_new: 4,
+                backend: BackendKind::Fused,
+                decode_workers: 2,
+                runtime,
+                steal: true,
+                pin: false,
+                ..Default::default()
+            };
+            run_demo(&cfg).unwrap();
+        }
     }
 
     #[test]

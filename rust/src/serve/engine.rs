@@ -137,6 +137,13 @@ impl DecodeSession {
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
+
+    /// Tag this session's future pool allocations with its decode
+    /// shard's arena (paged backend; a locality no-op elsewhere). Never
+    /// changes any served token — block ids are invisible to the math.
+    pub fn set_arena(&mut self, arena: usize) {
+        self.backend.set_arena(arena);
+    }
 }
 
 fn argmax(xs: &[f32]) -> i32 {

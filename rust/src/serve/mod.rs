@@ -14,6 +14,10 @@
 //!   retire finished requests; on a bounded paged pool it oversubscribes
 //!   via LRU eviction + transparent re-prefill resume (bit-identical
 //!   tokens, [`EvictionStats`] accounting);
+//! - `runtime`: the thread-per-core decode runtime — persistent named,
+//!   core-pinned workers fed by bounded channels, with work stealing
+//!   between shards ([`RuntimeKind`] selects it vs the legacy per-tick
+//!   scoped-thread loop; served tokens are bitwise identical either way);
 //! - `demo`: the shared arrival-stream demo driver behind `repro serve`
 //!   and `examples/serve_continuous.rs`;
 //! - `artifact` (feature `xla`): the AOT-graph generation path through
@@ -23,6 +27,7 @@ pub mod batcher;
 pub mod demo;
 pub mod engine;
 pub mod model;
+pub mod runtime;
 pub mod scheduler;
 
 #[cfg(feature = "xla")]
@@ -32,6 +37,7 @@ pub use batcher::{Batcher, BatcherCfg, Request, RequestResult};
 pub use demo::{run_demo, DemoCfg};
 pub use engine::{DecodeSession, GenStats, PoolStatus, ServeCfg, ServeEngine};
 pub use model::{TokenModel, ToyModel};
+pub use runtime::{pin_from_env, pin_supported, steal_from_env, RuntimeKind};
 pub use scheduler::{ContinuousScheduler, EvictionStats, SchedStats, SchedulerCfg, WorkerStats};
 
 #[cfg(feature = "xla")]

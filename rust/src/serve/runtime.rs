@@ -1,0 +1,560 @@
+//! Persistent thread-per-core decode runtime: N named, core-pinned OS
+//! workers spawned once at scheduler start, each owning a shard of live
+//! decode sessions, fed by bounded channels — replacing the tick-loop's
+//! re-spawned scoped threads, whose per-tick spawn/join cost dominated
+//! per-token latency once the O(k·B) kernels got cheap.
+//!
+//! Topology (see `serve/README.md` for the full architecture):
+//!
+//! - one bounded `sync_channel` **to** each worker carrying
+//!   [`ToWorker`] messages (admission, eviction, step commands) — the
+//!   bound is the backpressure that replaces the global lock-step tick;
+//! - one shared unbounded channel **from** all workers back to the
+//!   scheduler ([`FromWorker`]: step reports, eviction replies);
+//! - a [`StealState`] shared by the workers: one work deque + done-box
+//!   per shard, so idle workers pull sessions from the most-loaded
+//!   shard's deque while skewed request lengths drain.
+//!
+//! Determinism contract (hard): served tokens are bitwise identical to
+//! the tick-loop scheduler for every worker count and every stealing
+//! schedule. The argument: a decode step's arithmetic is entirely
+//! session-local, each session is stepped exactly once per step command
+//! (by its owner or by a thief — never both: a session is *popped* off a
+//! deque before it is stepped), and every stepped session returns to its
+//! home shard's done box, where the owner re-sorts by session id before
+//! reporting. So which thread stepped a session, and in which order, is
+//! invisible in every session's bytes and in every scheduler decision.
+//! `tests/thread_invariance.rs` and `tests/scheduler_fuzz.rs` pin this.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::engine::{DecodeSession, ServeEngine};
+use super::model::TokenModel;
+
+/// Which dispatch machinery steps the in-flight decode batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RuntimeKind {
+    /// the legacy baseline: scoped threads re-spawned every tick,
+    /// joined at a global barrier
+    TickLoop,
+    /// persistent pinned decode workers fed by bounded channels, with
+    /// work stealing between shards (the default)
+    Persistent,
+}
+
+impl RuntimeKind {
+    pub fn parse(s: &str) -> Result<RuntimeKind> {
+        match s {
+            "tick" | "tick-loop" | "tickloop" => Ok(RuntimeKind::TickLoop),
+            "persistent" | "tpc" | "worker" => Ok(RuntimeKind::Persistent),
+            other => bail!("unknown runtime '{other}' (expected 'tick' or 'persistent')"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RuntimeKind::TickLoop => "tick-loop",
+            RuntimeKind::Persistent => "persistent",
+        }
+    }
+}
+
+fn env_flag(name: &str, default: bool) -> bool {
+    match std::env::var(name) {
+        Ok(v) => !matches!(v.trim(), "0" | "false" | "off" | "no"),
+        Err(_) => default,
+    }
+}
+
+/// Work stealing between decode shards: `MOBA_STEAL` env override
+/// (`0`/`false`/`off`/`no` disable), default on.
+pub fn steal_from_env() -> bool {
+    env_flag("MOBA_STEAL", true)
+}
+
+/// Core pinning of decode workers: `MOBA_PIN` env override
+/// (`0`/`false`/`off`/`no` disable), default on.
+pub fn pin_from_env() -> bool {
+    env_flag("MOBA_PIN", true)
+}
+
+/// Pin the calling thread to `core` via raw `sched_setaffinity` (no
+/// external crate; cores ≥ 64 and non-x86_64-linux targets are left
+/// unpinned). Returns whether the pin took effect. Purely a locality
+/// hint — never affects results.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+pub fn pin_current_thread(core: usize) -> bool {
+    if core >= 64 {
+        return false;
+    }
+    let mask: u64 = 1u64 << core;
+    let ret: i64;
+    // SAFETY: sched_setaffinity(0, sizeof(mask), &mask) only reads the
+    // mask and affects scheduling of the calling thread.
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203i64 => ret, // __NR_sched_setaffinity
+            in("rdi") 0usize,               // pid 0 = calling thread
+            in("rsi") std::mem::size_of::<u64>(),
+            in("rdx") &mask as *const u64,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+pub fn pin_current_thread(_core: usize) -> bool {
+    false
+}
+
+/// Whether this target can pin threads at all.
+pub fn pin_supported() -> bool {
+    cfg!(all(target_os = "linux", target_arch = "x86_64"))
+}
+
+/// One live request: its decode session plus the scheduler-side metadata
+/// that must travel with it across worker threads.
+pub(crate) struct Live {
+    pub(crate) id: u64,
+    pub(crate) queue_secs: f64,
+    /// not-yet-materialized pool blocks this session's future decode
+    /// steps may still allocate (`ServeEngine::remaining_reserve`,
+    /// refreshed every tick; 0 when the engine has no bounded pool).
+    /// Invariant: the scheduler's `reserved_total` is exactly the sum of
+    /// this field over all running sessions.
+    pub(crate) reserve_blocks: usize,
+    /// tick this session was last stepped (or admitted/resumed) — the
+    /// LRU key; sessions touched in the current tick are never evicted
+    pub(crate) last_stepped: u64,
+    /// owning shard: stepped results always return here, stealing never
+    /// migrates ownership — that is what keeps the merge deterministic
+    pub(crate) home: usize,
+    pub(crate) session: DecodeSession,
+}
+
+/// Post-step snapshot of one surviving session, computed on the worker
+/// so the scheduler's admission/eviction logic never has to reach into
+/// worker-owned sessions. Exact until the session's next step: nothing
+/// mutates a session between steps.
+pub(crate) struct SessionMeta {
+    pub(crate) id: u64,
+    /// `ServeEngine::remaining_reserve` (0 when the pool is unbounded)
+    pub(crate) reserve: usize,
+    /// `ServeEngine::freeable_blocks` — the eviction feasibility input
+    pub(crate) freeable: usize,
+}
+
+/// One worker's answer to a step command. The buffers round-trip through
+/// the channels (scheduler → worker → scheduler) so steady-state ticks
+/// allocate nothing — the `FusedScratch` discipline applied to the
+/// scheduler.
+#[derive(Default)]
+pub(crate) struct StepReport {
+    pub(crate) metas: Vec<SessionMeta>,
+    pub(crate) finished: Vec<Live>,
+    /// decode steps this WORKER performed (own + stolen sessions)
+    pub(crate) steps: usize,
+    pub(crate) busy_secs: f64,
+    /// sessions pulled from another shard's deque
+    pub(crate) steals: usize,
+    /// decode tokens produced by those stolen sessions
+    pub(crate) stolen_steps: usize,
+    /// sessions this worker owned when the step command arrived
+    pub(crate) owned: usize,
+}
+
+impl StepReport {
+    fn clear(&mut self) {
+        self.metas.clear();
+        self.finished.clear();
+        self.steps = 0;
+        self.busy_secs = 0.0;
+        self.steals = 0;
+        self.stolen_steps = 0;
+        self.owned = 0;
+    }
+}
+
+/// Scheduler → worker commands.
+pub(crate) enum ToWorker {
+    /// take ownership of a freshly admitted or resumed session
+    Admit(Box<Live>),
+    /// release the identified session's pool blocks and hand it back
+    Evict(u64),
+    /// step every owned session one decode token (stealing from other
+    /// shards when the local deque runs dry), then report
+    Step { tick: u64, report: StepReport },
+    Shutdown,
+}
+
+/// Worker → scheduler replies (one shared channel; the scheduler's
+/// command flow guarantees replies are never interleaved across kinds:
+/// evictions are round-trips on a quiet channel, step replies are
+/// counted exactly).
+pub(crate) enum FromWorker {
+    Evicted { live: Box<Live>, freed: Result<usize> },
+    StepDone { worker: usize, report: StepReport },
+}
+
+/// Cross-shard work stealing state: a deque + done-box per shard.
+/// Per tick, each worker publishes its owned sessions into its deque,
+/// pops them front-to-back, and — once dry — pops the *back* of the
+/// most-loaded other deque. Every stepped session is pushed to its home
+/// shard's done box, whose owner blocks until all of its sessions are
+/// back, then re-sorts by id: arrival order on the done box is invisible.
+struct StealState {
+    deques: Vec<Mutex<VecDeque<Live>>>,
+    /// advisory deque lengths for victim selection (the deque lock is
+    /// the source of truth when actually popping)
+    qlen: Vec<AtomicUsize>,
+    done: Vec<(Mutex<Vec<Live>>, Condvar)>,
+}
+
+impl StealState {
+    fn new(shards: usize) -> StealState {
+        StealState {
+            deques: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            qlen: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
+            done: (0..shards).map(|_| (Mutex::new(Vec::new()), Condvar::new())).collect(),
+        }
+    }
+
+    fn shards(&self) -> usize {
+        self.deques.len()
+    }
+
+    /// Return a stepped session to its home shard's done box.
+    fn finish(&self, live: Live) {
+        let (lock, cv) = &self.done[live.home];
+        lock.lock().expect("done box").push(live);
+        cv.notify_one();
+    }
+}
+
+fn step_one<M: TokenModel>(engine: &ServeEngine<M>, live: &mut Live, tick: u64) -> bool {
+    live.last_stepped = tick;
+    engine.step(&mut live.session).is_some()
+}
+
+/// The stealing step: publish owned sessions, drain own deque front to
+/// back, then steal off the back of the most-loaded other shard (lowest
+/// index on qlen ties) until every deque this worker can see is dry,
+/// and finally wait for all owned sessions to come home.
+fn step_stealing<M: TokenModel>(
+    w: usize,
+    engine: &ServeEngine<M>,
+    shared: &StealState,
+    owned: &mut Vec<Live>,
+    report: &mut StepReport,
+    tick: u64,
+) {
+    let expected = owned.len();
+    {
+        let mut dq = shared.deques[w].lock().expect("steal deque");
+        dq.extend(owned.drain(..));
+        shared.qlen[w].store(dq.len(), Ordering::SeqCst);
+    }
+    loop {
+        // own work first
+        let mine = {
+            let mut dq = shared.deques[w].lock().expect("steal deque");
+            let live = dq.pop_front();
+            shared.qlen[w].store(dq.len(), Ordering::SeqCst);
+            live
+        };
+        if let Some(mut live) = mine {
+            if step_one(engine, &mut live, tick) {
+                report.steps += 1;
+            }
+            shared.finish(live);
+            continue;
+        }
+        // own deque dry: pick the most-loaded other shard (ties: lowest
+        // index). Opportunistic — a shard that publishes after this scan
+        // simply isn't stolen from this round.
+        let victim = shared
+            .qlen
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != w)
+            .map(|(i, n)| (n.load(Ordering::SeqCst), i))
+            .filter(|&(n, _)| n > 0)
+            .max_by_key(|&(n, i)| (n, std::cmp::Reverse(i)))
+            .map(|(_, i)| i);
+        let Some(v) = victim else { break };
+        let stolen = {
+            let mut dq = shared.deques[v].lock().expect("steal deque");
+            let live = dq.pop_back();
+            shared.qlen[v].store(dq.len(), Ordering::SeqCst);
+            live
+        };
+        if let Some(mut live) = stolen {
+            report.steals += 1;
+            if step_one(engine, &mut live, tick) {
+                report.steps += 1;
+                report.stolen_steps += 1;
+            }
+            shared.finish(live);
+        }
+        // a raced-away pop rescans: qlen was refreshed under the lock
+    }
+    // collect every owned session back (stepped here or by thieves)
+    let (lock, cv) = &shared.done[w];
+    let mut done = lock.lock().expect("done box");
+    loop {
+        owned.extend(done.drain(..));
+        if owned.len() >= expected {
+            break;
+        }
+        done = cv.wait(done).expect("done box");
+    }
+    debug_assert_eq!(owned.len(), expected, "lost or duplicated a session");
+}
+
+/// Worker thread body: own a shard of sessions, serve commands until
+/// shutdown. Sessions die here on shutdown, releasing their pool blocks
+/// through the backend's `Drop`.
+fn run_worker<M: TokenModel + Send + Sync + 'static>(
+    w: usize,
+    engine: Arc<ServeEngine<M>>,
+    rx: Receiver<ToWorker>,
+    tx: Sender<FromWorker>,
+    shared: Arc<StealState>,
+    steal: bool,
+) {
+    let bounded = engine.pool_status().is_some_and(|p| p.capacity_blocks.is_some());
+    let mut owned: Vec<Live> = Vec::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToWorker::Admit(live) => owned.push(*live),
+            ToWorker::Evict(id) => {
+                let idx = owned
+                    .iter()
+                    .position(|l| l.id == id)
+                    .expect("evict command for a session this worker does not own");
+                let mut live = owned.remove(idx);
+                let freed = engine.evict_session(&mut live.session);
+                let _ = tx.send(FromWorker::Evicted { live: Box::new(live), freed });
+            }
+            ToWorker::Step { tick, mut report } => {
+                report.clear();
+                report.owned = owned.len();
+                let t0 = Instant::now();
+                if steal && shared.shards() > 1 {
+                    step_stealing(w, engine.as_ref(), &shared, &mut owned, &mut report, tick);
+                } else {
+                    for live in owned.iter_mut() {
+                        if step_one(engine.as_ref(), live, tick) {
+                            report.steps += 1;
+                        }
+                    }
+                }
+                report.busy_secs = t0.elapsed().as_secs_f64();
+                // deterministic merge: id order, regardless of which
+                // thread stepped what or when it came home
+                owned.sort_by_key(|l| l.id);
+                let mut i = 0;
+                while i < owned.len() {
+                    if owned[i].session.finished() {
+                        report.finished.push(owned.remove(i));
+                    } else {
+                        i += 1;
+                    }
+                }
+                for live in &owned {
+                    report.metas.push(SessionMeta {
+                        id: live.id,
+                        reserve: if bounded {
+                            engine.remaining_reserve(&live.session)
+                        } else {
+                            0
+                        },
+                        freeable: engine.freeable_blocks(&live.session),
+                    });
+                }
+                if tx.send(FromWorker::StepDone { worker: w, report }).is_err() {
+                    break; // scheduler gone
+                }
+            }
+            ToWorker::Shutdown => break,
+        }
+    }
+}
+
+/// Handle to the persistent worker fleet: per-worker bounded command
+/// channels, the shared reply channel, and the recycled step-report
+/// buffers. Dropping it shuts the workers down and joins them.
+pub(crate) struct DecodeRuntime {
+    to: Vec<SyncSender<ToWorker>>,
+    from: Receiver<FromWorker>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// per-worker report buffers, round-tripped through the channels
+    spare: Vec<Option<StepReport>>,
+    /// outstanding sends per worker channel since the last barrier — an
+    /// upper bound on actual queue depth, tracked for `queue_depth_hwm`
+    depth: Vec<usize>,
+    depth_hwm: Vec<usize>,
+}
+
+impl DecodeRuntime {
+    pub(crate) fn spawn<M: TokenModel + Send + Sync + 'static>(
+        engine: Arc<ServeEngine<M>>,
+        workers: usize,
+        steal: bool,
+        pin: bool,
+        chan_cap: usize,
+    ) -> DecodeRuntime {
+        assert!(workers > 0);
+        let shared = Arc::new(StealState::new(workers));
+        let (from_tx, from_rx) = mpsc::channel();
+        let ncores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut to = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = mpsc::sync_channel(chan_cap.max(2));
+            let engine = engine.clone();
+            let from = from_tx.clone();
+            let shared = shared.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("moba-decode-{w}"))
+                .spawn(move || {
+                    if pin {
+                        pin_current_thread(w % ncores);
+                    }
+                    run_worker(w, engine, rx, from, shared, steal);
+                })
+                .expect("spawn decode worker");
+            to.push(tx);
+            handles.push(handle);
+        }
+        DecodeRuntime {
+            to,
+            from: from_rx,
+            handles,
+            spare: (0..workers).map(|_| Some(StepReport::default())).collect(),
+            depth: vec![0; workers],
+            depth_hwm: vec![0; workers],
+        }
+    }
+
+    pub(crate) fn workers(&self) -> usize {
+        self.to.len()
+    }
+
+    fn note_send(&mut self, shard: usize) {
+        self.depth[shard] += 1;
+        self.depth_hwm[shard] = self.depth_hwm[shard].max(self.depth[shard]);
+    }
+
+    /// Hand a session to its home shard.
+    pub(crate) fn admit(&mut self, shard: usize, live: Live) {
+        debug_assert_eq!(live.home, shard);
+        self.note_send(shard);
+        self.to[shard].send(ToWorker::Admit(Box::new(live))).expect("decode worker hung up");
+    }
+
+    /// Synchronous eviction round-trip: the identified session comes back
+    /// with its pool blocks released. Only called between step barriers,
+    /// so the reply channel holds nothing else.
+    pub(crate) fn evict(&mut self, shard: usize, id: u64) -> (Live, Result<usize>) {
+        self.note_send(shard);
+        self.to[shard].send(ToWorker::Evict(id)).expect("decode worker hung up");
+        match self.from.recv().expect("decode worker hung up") {
+            FromWorker::Evicted { live, freed } => {
+                self.depth[shard] = 0;
+                (*live, freed)
+            }
+            FromWorker::StepDone { .. } => {
+                unreachable!("step reply on a quiet channel during eviction")
+            }
+        }
+    }
+
+    /// Step every shard once and collect all reports — the per-tick
+    /// barrier. Reports land back in `spare` (read them via
+    /// `reports_mut`); their buffers are reused next tick.
+    pub(crate) fn step_all(&mut self, tick: u64) {
+        let n = self.to.len();
+        for w in 0..n {
+            let report = self.spare[w].take().expect("report buffer in flight");
+            self.depth[w] += 1;
+            self.depth_hwm[w] = self.depth_hwm[w].max(self.depth[w]);
+            self.to[w].send(ToWorker::Step { tick, report }).expect("decode worker hung up");
+        }
+        for _ in 0..n {
+            match self.from.recv().expect("decode worker hung up") {
+                FromWorker::StepDone { worker, report } => {
+                    self.spare[worker] = Some(report);
+                }
+                FromWorker::Evicted { .. } => unreachable!("stray eviction reply"),
+            }
+        }
+        for d in self.depth.iter_mut() {
+            *d = 0;
+        }
+    }
+
+    /// The per-worker reports from the last `step_all` (index = worker).
+    pub(crate) fn report_mut(&mut self, w: usize) -> &mut StepReport {
+        self.spare[w].as_mut().expect("report buffer in flight")
+    }
+
+    pub(crate) fn depth_hwm(&self, w: usize) -> usize {
+        self.depth_hwm[w]
+    }
+}
+
+impl Drop for DecodeRuntime {
+    fn drop(&mut self) {
+        for tx in &self.to {
+            let _ = tx.send(ToWorker::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_kind_parses_and_labels() {
+        assert_eq!(RuntimeKind::parse("tick").unwrap(), RuntimeKind::TickLoop);
+        assert_eq!(RuntimeKind::parse("tick-loop").unwrap(), RuntimeKind::TickLoop);
+        assert_eq!(RuntimeKind::parse("persistent").unwrap(), RuntimeKind::Persistent);
+        assert_eq!(RuntimeKind::parse("tpc").unwrap(), RuntimeKind::Persistent);
+        assert!(RuntimeKind::parse("bogus").is_err());
+        assert_eq!(RuntimeKind::TickLoop.label(), "tick-loop");
+        assert_eq!(RuntimeKind::Persistent.label(), "persistent");
+    }
+
+    #[test]
+    fn pin_current_thread_is_safe_to_call() {
+        // pin to core 0 (must exist); success depends on the platform,
+        // but the call must never crash or corrupt anything
+        let ok = pin_current_thread(0);
+        if pin_supported() {
+            assert!(ok, "pinning to core 0 should succeed on linux/x86_64");
+        }
+        assert!(!pin_current_thread(64), "cores >= 64 are out of mask range");
+    }
+
+    #[test]
+    fn env_flag_semantics() {
+        // defaults hold when unset (the suite does not set these vars)
+        assert!(steal_from_env() || std::env::var("MOBA_STEAL").is_ok());
+        assert!(pin_from_env() || std::env::var("MOBA_PIN").is_ok());
+    }
+}

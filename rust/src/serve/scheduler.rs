@@ -8,16 +8,29 @@
 //! a short request admitted late still finishes early, and prefill of a
 //! new request overlaps (in schedule order) with decode of older ones.
 //!
-//! **Sharded decode**: the in-flight set is partitioned across
-//! `decode_workers` shards. Admission balances across shards (least
-//! loaded wins, lowest index on ties — deterministic), and each tick
-//! steps all shards concurrently on scoped threads, one decode token per
-//! live session. Sessions are independent and a session is stepped only
-//! by its own shard's thread, so neither interleaving nor the shard
-//! count can change any request's tokens — `tests` pin the sharded
-//! scheduler's outputs against the one-request-at-a-time engine and
-//! against `decode_workers = 1`. Per-shard latency counters are exposed
-//! via [`ContinuousScheduler::worker_stats`].
+//! **Decode runtimes** ([`SchedulerCfg::runtime`]): the in-flight set is
+//! partitioned across `decode_workers` shards. Admission balances across
+//! shards (least loaded wins, lowest index on ties — deterministic), and
+//! each tick steps every shard concurrently, one decode token per live
+//! session. Two dispatch mechanisms implement that step:
+//!
+//! - [`RuntimeKind::Persistent`] (default): N named, core-pinned OS
+//!   workers spawned once (`serve::runtime`), each owning its shard's
+//!   sessions, fed by bounded channels; idle workers *steal* sessions
+//!   off the back of the most-loaded shard's deque when request lengths
+//!   skew. Per-tick cost is two channel messages per worker instead of a
+//!   thread spawn + join.
+//! - [`RuntimeKind::TickLoop`]: the legacy baseline — scoped threads
+//!   re-spawned every tick (kept as the reference the persistent runtime
+//!   is benched and parity-tested against).
+//!
+//! Sessions are independent and each is stepped exactly once per tick
+//! with the same session-local arithmetic, so neither the runtime, the
+//! worker count, nor any stealing schedule can change any request's
+//! tokens — `tests/thread_invariance.rs` and `tests/scheduler_fuzz.rs`
+//! pin the served tokens across all of them. Per-worker counters
+//! (including steal/idle/queue-depth metrics on the persistent runtime)
+//! are exposed via [`ContinuousScheduler::worker_stats`].
 //!
 //! **Paged-pool admission**: with a bounded paged KV pool
 //! (`ServeCfg::pool_blocks`), admission is against *pool capacity*, not
@@ -31,6 +44,12 @@
 //! exhausted pool. With [`ContinuousScheduler::set_shared_prefix`], every
 //! admission *forks* one prefilled system-prompt session copy-on-write
 //! instead of prefilling from scratch; tokens are identical either way.
+//! On the persistent runtime the scheduler tracks a *metadata mirror*
+//! (id, shard, reservation, freeable blocks) of the worker-owned
+//! sessions, refreshed from each step report, so every admission and
+//! eviction decision is computed from exactly the values the tick-loop
+//! would see — session state never changes between steps, so the
+//! mirrored numbers are exact, not approximations.
 //!
 //! **Eviction / oversubscription**: when a candidate's reservation does
 //! not fit, the scheduler *evicts* instead of deferring — it preempts the
@@ -39,23 +58,26 @@
 //! this tick are protected), releases its pool blocks
 //! (`ServeEngine::evict_session` — blocks shared with a live table, e.g.
 //! the system prefix, survive via refcounts) and parks it on a preempted
-//! queue. A feasibility check runs before any eviction — if preempting
-//! every unprotected session still could not fit the candidate, it
-//! defers without destroying state. Preempted sessions resume *before*
-//! new admissions (strictly: arrivals wait while a resume is blocked),
-//! lowest id first, by transparent re-prefill
-//! (`ServeEngine::resume_session`):
-//! the rebuilt state and every token served afterwards are bit-identical
-//! to a never-evicted run. All eviction decisions derive from
-//! (last-stepped tick, session id) and pool counts — no map iteration
-//! order — so they are deterministic and invariant to the decode shard
-//! count. [`EvictionStats`] counts evictions, reclaimed blocks, resumes
-//! and re-prefill time.
+//! queue. On the persistent runtime this is a synchronous round-trip to
+//! the owning worker, which hands the session back with its blocks
+//! released. A feasibility check runs before any eviction — if
+//! preempting every unprotected session still could not fit the
+//! candidate, it defers without destroying state. Preempted sessions
+//! resume *before* new admissions (strictly: arrivals wait while a
+//! resume is blocked), lowest id first, by transparent re-prefill
+//! (`ServeEngine::resume_session`): the rebuilt state and every token
+//! served afterwards are bit-identical to a never-evicted run. All
+//! eviction decisions derive from (last-stepped tick, session id) and
+//! pool counts — no map iteration order — so they are deterministic and
+//! invariant to the decode worker count and runtime.
+//! [`EvictionStats`] counts evictions, reclaimed blocks, resumes and
+//! re-prefill time.
 //!
 //! The scheduler is driven by a simulation clock (`tick(now)`), like the
 //! batcher, so arrival/queueing behavior is deterministic and testable;
 //! prefill/decode times are measured wall clock from the engine.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -63,8 +85,9 @@ use anyhow::{bail, Result};
 use super::batcher::{Batcher, BatcherCfg, Request, RequestResult};
 use super::engine::{DecodeSession, ServeEngine};
 use super::model::TokenModel;
+use super::runtime::{pin_from_env, steal_from_env, DecodeRuntime, Live, RuntimeKind};
 
-/// Scheduler limits.
+/// Scheduler limits and dispatch selection.
 #[derive(Clone, Debug)]
 pub struct SchedulerCfg {
     /// decode-batch capacity: max sessions stepped per tick (across all
@@ -73,11 +96,26 @@ pub struct SchedulerCfg {
     /// decode worker shards stepping the in-flight set concurrently;
     /// 1 = the single-threaded scheduler
     pub decode_workers: usize,
+    /// how decode work is dispatched: persistent pinned workers
+    /// (default) or the legacy per-tick scoped-thread loop
+    pub runtime: RuntimeKind,
+    /// work stealing between shards (persistent runtime only); default
+    /// from `MOBA_STEAL`, on unless disabled
+    pub steal: bool,
+    /// pin decode workers to cores (persistent runtime only); default
+    /// from `MOBA_PIN`, on unless disabled
+    pub pin: bool,
 }
 
 impl Default for SchedulerCfg {
     fn default() -> Self {
-        SchedulerCfg { max_in_flight: 8, decode_workers: 1 }
+        SchedulerCfg {
+            max_in_flight: 8,
+            decode_workers: 1,
+            runtime: RuntimeKind::Persistent,
+            steal: steal_from_env(),
+            pin: pin_from_env(),
+        }
     }
 }
 
@@ -119,31 +157,30 @@ pub struct EvictionStats {
     pub reprefill_secs: f64,
 }
 
-/// Per-shard counters: admission balance and decode-latency accounting
-/// for one decode worker.
+/// Per-worker counters: admission balance, decode-latency accounting and
+/// (persistent runtime) steal/idle/queue-depth metrics for one decode
+/// worker. Per-worker decode *tokens* equal `decode_steps` — every step
+/// emits exactly one token.
 #[derive(Clone, Debug, Default)]
 pub struct WorkerStats {
     pub admitted: usize,
     pub decode_rounds: usize,
     pub decode_steps: usize,
-    /// wall-clock seconds this shard spent stepping sessions
+    /// wall-clock seconds this worker spent stepping sessions
     pub busy_secs: f64,
     pub peak_in_flight: usize,
-}
-
-struct Live {
-    id: u64,
-    queue_secs: f64,
-    /// not-yet-materialized pool blocks this session's future decode
-    /// steps may still allocate (`ServeEngine::remaining_reserve`,
-    /// refreshed every tick; 0 when the engine has no bounded pool).
-    /// Invariant: `ContinuousScheduler::reserved_total` is exactly the
-    /// sum of this field over all running sessions.
-    reserve_blocks: usize,
-    /// tick this session was last stepped (or admitted/resumed) — the
-    /// LRU key; sessions touched in the current tick are never evicted
-    last_stepped: u64,
-    session: DecodeSession,
+    /// sessions this worker pulled from another shard's deque
+    /// (persistent runtime with stealing; 0 otherwise)
+    pub steals: usize,
+    /// decode tokens this worker produced from stolen sessions
+    pub stolen_steps: usize,
+    /// step rounds this worker entered with no owned sessions and found
+    /// nothing to steal (persistent runtime)
+    pub idle_ticks: usize,
+    /// high-water mark of outstanding commands on this worker's channel,
+    /// observed at send time — an upper bound on actual queue depth
+    /// (persistent runtime)
+    pub queue_depth_hwm: usize,
 }
 
 struct Shard {
@@ -172,14 +209,49 @@ impl Shard {
     }
 }
 
+/// Scheduler-side metadata mirror of one worker-owned session
+/// (persistent runtime). Exact between steps: nothing mutates a session
+/// while it sits on its worker, so the values reported after its last
+/// step are the values a fresh engine query would return.
+struct Remote {
+    id: u64,
+    shard: usize,
+    last_stepped: u64,
+    reserve: usize,
+    freeable: usize,
+}
+
+/// Where the in-flight sessions physically live.
+enum Dispatch {
+    /// legacy: sessions held here, scoped threads re-spawned per tick
+    Tick { shards: Vec<Shard> },
+    /// persistent workers own the sessions; the scheduler keeps the
+    /// metadata mirror and merged per-worker stats
+    Persistent {
+        rt: DecodeRuntime,
+        mirror: Vec<Remote>,
+        wstats: Vec<WorkerStats>,
+        /// per-shard occupancy scratch (placement + peak tracking),
+        /// reused every tick
+        counts: Vec<usize>,
+    },
+}
+
+/// An eviction target, addressed per dispatch mode.
+enum Victim {
+    Shard { si: usize, idx: usize },
+    Mirror { idx: usize },
+}
+
 /// Iteration-level scheduler over a `ServeEngine`, sharded across decode
-/// workers. `M: Sync` because shard threads step sessions against the
-/// shared engine concurrently.
+/// workers. `M: Send + Sync + 'static` because the persistent runtime's
+/// worker threads step sessions against the shared engine concurrently
+/// (and outlive any single borrow).
 pub struct ContinuousScheduler<M: TokenModel> {
-    engine: ServeEngine<M>,
+    engine: Arc<ServeEngine<M>>,
     cfg: SchedulerCfg,
     queue: Batcher,
-    shards: Vec<Shard>,
+    dispatch: Dispatch,
     /// sessions preempted by pool-pressure eviction, awaiting re-prefill
     /// resume; they hold no pool blocks and no decode slot while here
     preempted: Vec<Live>,
@@ -194,27 +266,47 @@ pub struct ContinuousScheduler<M: TokenModel> {
     prefix: Option<DecodeSession>,
     /// pool blocks held by the shared prefix itself
     prefix_blocks: usize,
+    /// retirement scratch, reused across ticks (no per-tick allocation)
+    finished_scratch: Vec<Live>,
     pub stats: SchedStats,
 }
 
-impl<M: TokenModel + Sync> ContinuousScheduler<M> {
+impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
     pub fn new(engine: ServeEngine<M>, cfg: SchedulerCfg) -> ContinuousScheduler<M> {
         assert!(cfg.max_in_flight > 0);
         assert!(cfg.decode_workers > 0);
-        let shards = (0..cfg.decode_workers)
-            .map(|_| Shard { running: Vec::new(), stats: WorkerStats::default() })
-            .collect();
+        let engine = Arc::new(engine);
+        let dispatch = match cfg.runtime {
+            RuntimeKind::TickLoop => Dispatch::Tick {
+                shards: (0..cfg.decode_workers)
+                    .map(|_| Shard { running: Vec::new(), stats: WorkerStats::default() })
+                    .collect(),
+            },
+            RuntimeKind::Persistent => Dispatch::Persistent {
+                rt: DecodeRuntime::spawn(
+                    engine.clone(),
+                    cfg.decode_workers,
+                    cfg.steal,
+                    cfg.pin,
+                    cfg.max_in_flight + 2,
+                ),
+                mirror: Vec::new(),
+                wstats: vec![WorkerStats::default(); cfg.decode_workers],
+                counts: vec![0; cfg.decode_workers],
+            },
+        };
         ContinuousScheduler {
             engine,
             cfg,
             // admission policy fields are unused in continuous mode
             queue: Batcher::new(BatcherCfg::default()),
-            shards,
+            dispatch,
             preempted: Vec::new(),
             reserved_total: 0,
             tick_no: 0,
             prefix: None,
             prefix_blocks: 0,
+            finished_scratch: Vec::new(),
             stats: SchedStats::default(),
         }
     }
@@ -249,9 +341,14 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
 
     /// Recount of every live session's remaining reservation — only for
     /// the debug assertion that the running counter never drifts (the
-    /// hot path uses `reserved_total`, not this O(shards·sessions) scan).
+    /// hot path uses `reserved_total`, not this scan).
     fn recount_reserved(&self) -> usize {
-        self.shards.iter().flat_map(|s| s.running.iter()).map(|l| l.reserve_blocks).sum()
+        match &self.dispatch {
+            Dispatch::Tick { shards } => {
+                shards.iter().flat_map(|s| s.running.iter()).map(|l| l.reserve_blocks).sum()
+            }
+            Dispatch::Persistent { mirror, .. } => mirror.iter().map(|r| r.reserve).sum(),
+        }
     }
 
     /// Physical blocks currently resident in the paged pool (0 without
@@ -269,7 +366,10 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
     }
 
     pub fn in_flight(&self) -> usize {
-        self.shards.iter().map(|s| s.running.len()).sum()
+        match &self.dispatch {
+            Dispatch::Tick { shards } => shards.iter().map(|s| s.running.len()).sum(),
+            Dispatch::Persistent { mirror, .. } => mirror.len(),
+        }
     }
 
     /// Sessions preempted by pool-pressure eviction, awaiting resume.
@@ -285,9 +385,26 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
         &self.engine
     }
 
-    /// Per-shard admission/latency counters, one entry per decode worker.
+    /// The configured decode runtime.
+    pub fn runtime(&self) -> RuntimeKind {
+        self.cfg.runtime
+    }
+
+    /// Per-worker admission/latency/steal counters, one entry per decode
+    /// worker.
     pub fn worker_stats(&self) -> Vec<WorkerStats> {
-        self.shards.iter().map(|s| s.stats.clone()).collect()
+        match &self.dispatch {
+            Dispatch::Tick { shards } => shards.iter().map(|s| s.stats.clone()).collect(),
+            Dispatch::Persistent { rt, wstats, .. } => wstats
+                .iter()
+                .enumerate()
+                .map(|(w, s)| {
+                    let mut s = s.clone();
+                    s.queue_depth_hwm = rt.depth_hwm(w);
+                    s
+                })
+                .collect(),
+        }
     }
 
     /// The LRU victim: the least-recently-stepped live session, stable
@@ -296,45 +413,87 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
     /// Sessions touched this tick (admitted, resumed or already stepped)
     /// are protected. The key (last_stepped, id) is unique and
     /// independent of shard layout, so the choice is deterministic and
-    /// invariant to `decode_workers`. NOTE: under the current stepping
-    /// discipline every live session is stepped every tick, so recency
-    /// always ties and the effective order is youngest-id-first; the
-    /// tick key starts differentiating the moment sessions can idle
-    /// (streaming pauses, speculative branches — ROADMAP follow-ons).
-    fn lru_victim(&self) -> Option<(usize, usize)> {
-        let mut best: Option<((u64, std::cmp::Reverse<u64>), (usize, usize))> = None;
-        for (si, shard) in self.shards.iter().enumerate() {
-            for (i, live) in shard.running.iter().enumerate() {
-                if live.last_stepped >= self.tick_no {
-                    continue; // protected: touched this tick
+    /// invariant to `decode_workers`, the runtime, and any stealing
+    /// schedule. NOTE: under the current stepping discipline every live
+    /// session is stepped every tick, so recency always ties and the
+    /// effective order is youngest-id-first; the tick key starts
+    /// differentiating the moment sessions can idle (streaming pauses,
+    /// speculative branches — ROADMAP follow-ons).
+    fn lru_victim(&self) -> Option<Victim> {
+        let mut best: Option<((u64, std::cmp::Reverse<u64>), Victim)> = None;
+        let mut offer = |key: (u64, std::cmp::Reverse<u64>), at: Victim| {
+            let better = match &best {
+                None => true,
+                Some((k, _)) => key < *k,
+            };
+            if better {
+                best = Some((key, at));
+            }
+        };
+        match &self.dispatch {
+            Dispatch::Tick { shards } => {
+                for (si, shard) in shards.iter().enumerate() {
+                    for (i, live) in shard.running.iter().enumerate() {
+                        if live.last_stepped >= self.tick_no {
+                            continue; // protected: touched this tick
+                        }
+                        offer(
+                            (live.last_stepped, std::cmp::Reverse(live.id)),
+                            Victim::Shard { si, idx: i },
+                        );
+                    }
                 }
-                let key = (live.last_stepped, std::cmp::Reverse(live.id));
-                let better = match &best {
-                    None => true,
-                    Some((k, _)) => key < *k,
-                };
-                if better {
-                    best = Some((key, (si, i)));
+            }
+            Dispatch::Persistent { mirror, .. } => {
+                for (i, r) in mirror.iter().enumerate() {
+                    if r.last_stepped >= self.tick_no {
+                        continue;
+                    }
+                    offer((r.last_stepped, std::cmp::Reverse(r.id)), Victim::Mirror { idx: i });
                 }
             }
         }
+        drop(offer);
         best.map(|(_, at)| at)
     }
 
-    /// Preempt the live session at (shard, index): release its pool
-    /// blocks (shared blocks survive via refcounts) and park it on the
-    /// preempted queue for a later re-prefill resume.
-    fn evict_live(&mut self, si: usize, idx: usize) -> Result<()> {
-        let mut live = self.shards[si].running.swap_remove(idx);
-        // finished sessions retire the same tick they finish, so a victim
-        // is always mid-decode and will be resumed before it can retire
-        debug_assert!(!live.session.finished(), "evicting a finished session");
-        self.reserved_total -= live.reserve_blocks;
-        live.reserve_blocks = 0;
-        let freed = self.engine.evict_session(&mut live.session)?;
-        self.stats.eviction.evictions += 1;
-        self.stats.eviction.blocks_reclaimed += freed;
-        self.preempted.push(live);
+    /// Preempt the addressed live session: release its pool blocks
+    /// (shared blocks survive via refcounts) and park it on the
+    /// preempted queue for a later re-prefill resume. On the persistent
+    /// runtime this is a synchronous round-trip to the owning worker.
+    fn evict_live(&mut self, victim: Victim) -> Result<()> {
+        match victim {
+            Victim::Shard { si, idx } => {
+                let Dispatch::Tick { shards } = &mut self.dispatch else {
+                    unreachable!("shard victim without tick dispatch")
+                };
+                let mut live = shards[si].running.swap_remove(idx);
+                // finished sessions retire the same tick they finish, so
+                // a victim is always mid-decode and will be resumed
+                // before it can retire
+                debug_assert!(!live.session.finished(), "evicting a finished session");
+                self.reserved_total -= live.reserve_blocks;
+                live.reserve_blocks = 0;
+                let freed = self.engine.evict_session(&mut live.session)?;
+                self.stats.eviction.evictions += 1;
+                self.stats.eviction.blocks_reclaimed += freed;
+                self.preempted.push(live);
+            }
+            Victim::Mirror { idx } => {
+                let Dispatch::Persistent { rt, mirror, .. } = &mut self.dispatch else {
+                    unreachable!("mirror victim without persistent dispatch")
+                };
+                let remote = mirror.swap_remove(idx);
+                let (mut live, freed) = rt.evict(remote.shard, remote.id);
+                let freed = freed?;
+                debug_assert!(!live.session.finished(), "evicting a finished session");
+                self.reserved_total -= remote.reserve;
+                live.reserve_blocks = 0;
+                self.stats.eviction.evictions += 1;
+                self.stats.eviction.blocks_reclaimed += freed;
+                self.preempted.push(live);
+            }
+        }
         Ok(())
     }
 
@@ -344,18 +503,32 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
     /// feasibility check runs BEFORE any eviction — preempting every
     /// unprotected session must suffice, otherwise the candidate defers
     /// without destroying anyone's state (each pointless eviction would
-    /// cost a full re-prefill later).
+    /// cost a full re-prefill later). On the persistent runtime the
+    /// freeable counts come from the metadata mirror, which is exact:
+    /// session state is static between steps.
     fn fit_or_evict(&mut self, need: usize, cap: usize) -> Result<bool> {
         debug_assert_eq!(self.reserved_total, self.recount_reserved(), "reservation drift");
         if self.pool_used() + self.reserved_total + need <= cap {
             return Ok(true);
         }
         let (mut freeable, mut victim_reserve) = (0usize, 0usize);
-        for shard in &self.shards {
-            for live in &shard.running {
-                if live.last_stepped < self.tick_no {
-                    freeable += self.engine.freeable_blocks(&live.session);
-                    victim_reserve += live.reserve_blocks;
+        match &self.dispatch {
+            Dispatch::Tick { shards } => {
+                for shard in shards {
+                    for live in &shard.running {
+                        if live.last_stepped < self.tick_no {
+                            freeable += self.engine.freeable_blocks(&live.session);
+                            victim_reserve += live.reserve_blocks;
+                        }
+                    }
+                }
+            }
+            Dispatch::Persistent { mirror, .. } => {
+                for r in mirror {
+                    if r.last_stepped < self.tick_no {
+                        freeable += r.freeable;
+                        victim_reserve += r.reserve;
+                    }
                 }
             }
         }
@@ -367,29 +540,61 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
             if self.pool_used() + self.reserved_total + need <= cap {
                 return Ok(true);
             }
-            let Some((si, idx)) = self.lru_victim() else { return Ok(false) };
-            self.evict_live(si, idx)?;
+            let Some(victim) = self.lru_victim() else { return Ok(false) };
+            self.evict_live(victim)?;
         }
     }
 
     /// Push a freshly admitted or resumed session onto the least-loaded
-    /// shard (lowest index on ties — deterministic), protected from
-    /// eviction for the rest of this tick. Reservations are only tracked
-    /// for a bounded pool — nothing ever reads them otherwise.
+    /// shard (lowest index on ties — deterministic, and identical across
+    /// runtimes: both count exactly the live sessions per shard),
+    /// protected from eviction for the rest of this tick. Reservations
+    /// are only tracked for a bounded pool — nothing ever reads them
+    /// otherwise. The session's pool allocations are tagged with its
+    /// shard's arena so its blocks stay local to its decode worker.
     fn place(&mut self, mut live: Live, resumed: bool, bounded: bool) {
         live.last_stepped = self.tick_no;
         live.reserve_blocks =
             if bounded { self.engine.remaining_reserve(&live.session) } else { 0 };
         self.reserved_total += live.reserve_blocks;
-        let shard = self
-            .shards
-            .iter_mut()
-            .min_by_key(|s| s.running.len())
-            .expect("at least one shard");
-        if !resumed {
-            shard.stats.admitted += 1;
+        match &mut self.dispatch {
+            Dispatch::Tick { shards } => {
+                let si = shards
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, s)| s.running.len())
+                    .map(|(i, _)| i)
+                    .expect("at least one shard");
+                live.home = si;
+                live.session.set_arena(si);
+                if !resumed {
+                    shards[si].stats.admitted += 1;
+                }
+                shards[si].running.push(live);
+            }
+            Dispatch::Persistent { rt, mirror, wstats, counts } => {
+                counts.fill(0);
+                for r in mirror.iter() {
+                    counts[r.shard] += 1;
+                }
+                let si = (0..counts.len())
+                    .min_by_key(|&i| counts[i])
+                    .expect("at least one shard");
+                live.home = si;
+                live.session.set_arena(si);
+                if !resumed {
+                    wstats[si].admitted += 1;
+                }
+                mirror.push(Remote {
+                    id: live.id,
+                    shard: si,
+                    last_stepped: live.last_stepped,
+                    reserve: live.reserve_blocks,
+                    freeable: self.engine.freeable_blocks(&live.session),
+                });
+                rt.admit(si, live);
+            }
         }
-        shard.running.push(live);
     }
 
     /// One scheduler tick at simulation time `now`:
@@ -402,11 +607,15 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
     ///    blocks plus the remaining reservations of every live session,
     ///    evicting LRU victims when it does not, so a decode step can
     ///    never hit an exhausted pool;
-    /// 2. step every live session one decode token, shards in parallel;
-    /// 3. retire finished sessions as `RequestResult`s (shard order, so
-    ///    the result order is deterministic), then refresh every live
+    /// 2. step every live session one decode token — persistent workers
+    ///    (with stealing) or per-tick scoped threads, per the runtime;
+    /// 3. retire finished sessions as `RequestResult`s (session-id order
+    ///    within the tick, so the result order is deterministic across
+    ///    runtimes and stealing schedules), then refresh every live
     ///    session's remaining reservation (materialized blocks and
-    ///    finished-early slack return to the admission headroom).
+    ///    finished-early slack return to the admission headroom; the
+    ///    persistent runtime gets these refreshed values directly from
+    ///    the step reports).
     pub fn tick(&mut self, now: f64) -> Result<Vec<RequestResult>> {
         self.tick_no += 1;
         let pool_cap = self.engine.pool_status().and_then(|p| p.capacity_blocks);
@@ -483,6 +692,7 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
                     queue_secs: (now - req.arrival).max(0.0),
                     reserve_blocks: 0,
                     last_stepped: self.tick_no,
+                    home: 0,
                     session,
                 },
                 false,
@@ -490,83 +700,153 @@ impl<M: TokenModel + Sync> ContinuousScheduler<M> {
             );
         }
         self.stats.peak_in_flight = self.stats.peak_in_flight.max(self.in_flight());
-        for shard in self.shards.iter_mut() {
-            shard.stats.peak_in_flight = shard.stats.peak_in_flight.max(shard.running.len());
+        match &mut self.dispatch {
+            Dispatch::Tick { shards } => {
+                for shard in shards.iter_mut() {
+                    shard.stats.peak_in_flight =
+                        shard.stats.peak_in_flight.max(shard.running.len());
+                }
+            }
+            Dispatch::Persistent { mirror, wstats, counts, .. } => {
+                counts.fill(0);
+                for r in mirror.iter() {
+                    counts[r.shard] += 1;
+                }
+                for (w, &c) in counts.iter().enumerate() {
+                    wstats[w].peak_in_flight = wstats[w].peak_in_flight.max(c);
+                }
+            }
         }
 
-        // 2. one decode step per live session — the continuous batch,
-        // shards stepped concurrently
+        // 2. one decode step per live session — the continuous batch
         if self.in_flight() > 0 {
             self.stats.decode_rounds += 1;
         }
-        let steps_before: usize = self.shards.iter().map(|s| s.stats.decode_steps).sum();
-        let engine = &self.engine;
-        // Scoped threads are re-spawned per tick (simple, no idle worker
-        // lifecycle); the spawn cost amortizes over each shard's sessions
-        // × per-token decode work, so decode_workers > 1 pays off for
-        // real contexts, not for a handful of tiny sessions. Persistent
-        // shard threads are a ROADMAP follow-on. Outputs are identical
-        // either way.
         let tick = self.tick_no;
-        if self.cfg.decode_workers > 1 {
-            std::thread::scope(|scope| {
-                for shard in self.shards.iter_mut() {
-                    if !shard.running.is_empty() {
-                        scope.spawn(move || shard.step_all(engine, tick));
+        match &mut self.dispatch {
+            Dispatch::Tick { shards } => {
+                let steps_before: usize = shards.iter().map(|s| s.stats.decode_steps).sum();
+                let engine = self.engine.as_ref();
+                // Scoped threads are re-spawned per tick — the legacy
+                // baseline the persistent runtime replaces (kept for
+                // parity tests and as the bench reference). Outputs are
+                // identical either way.
+                if self.cfg.decode_workers > 1 {
+                    std::thread::scope(|scope| {
+                        for shard in shards.iter_mut() {
+                            if !shard.running.is_empty() {
+                                scope.spawn(move || shard.step_all(engine, tick));
+                            }
+                        }
+                    });
+                } else {
+                    for shard in shards.iter_mut() {
+                        shard.step_all(engine, tick);
                     }
                 }
-            });
-        } else {
-            for shard in self.shards.iter_mut() {
-                shard.step_all(engine, tick);
+                let steps_after: usize = shards.iter().map(|s| s.stats.decode_steps).sum();
+                self.stats.decode_steps_total += steps_after - steps_before;
+            }
+            Dispatch::Persistent { rt, mirror, wstats, .. } => {
+                // one step command per worker, one report back — the
+                // per-tick barrier. Workers steal between shards while
+                // draining; every stepped session returns to its home
+                // shard, so the merge below is order-independent.
+                rt.step_all(tick);
+                mirror.clear();
+                let mut reserved = 0usize;
+                for w in 0..rt.workers() {
+                    let rep = rt.report_mut(w);
+                    let ws = &mut wstats[w];
+                    if rep.owned > 0 {
+                        ws.decode_rounds += 1;
+                    }
+                    if rep.owned == 0 && rep.steals == 0 {
+                        ws.idle_ticks += 1;
+                    } else {
+                        ws.busy_secs += rep.busy_secs;
+                    }
+                    ws.decode_steps += rep.steps;
+                    ws.steals += rep.steals;
+                    ws.stolen_steps += rep.stolen_steps;
+                    self.stats.decode_steps_total += rep.steps;
+                    for m in &rep.metas {
+                        reserved += m.reserve;
+                        mirror.push(Remote {
+                            id: m.id,
+                            shard: w,
+                            last_stepped: tick,
+                            reserve: m.reserve,
+                            freeable: m.freeable,
+                        });
+                    }
+                    for live in rep.finished.iter_mut() {
+                        // the mirror rebuild re-derives reserved_total
+                        // without retirees, so their reservations are
+                        // already released
+                        live.reserve_blocks = 0;
+                    }
+                    self.finished_scratch.append(&mut rep.finished);
+                }
+                self.reserved_total = reserved;
             }
         }
-        let steps_after: usize = self.shards.iter().map(|s| s.stats.decode_steps).sum();
-        self.stats.decode_steps_total += steps_after - steps_before;
 
         // pool high-water mark, sampled after the decode growth and
         // before retirement frees blocks (deterministic: every session
-        // appends a fixed token count per tick regardless of shard count)
+        // appends a fixed token count per tick regardless of the worker
+        // count or stealing schedule; finished sessions still hold their
+        // blocks here in both runtimes)
         if let Some(p) = self.engine.pool_status() {
             self.stats.peak_pool_blocks = self.stats.peak_pool_blocks.max(p.used_blocks);
         }
 
-        // 3. retirement, shard by shard — a retiring session hands its
-        // reservation (and, on drop, its pool blocks) back the same tick
-        // it finishes, so budget slack never lingers as phantom demand
-        let mut finished = Vec::new();
-        for shard in self.shards.iter_mut() {
-            let mut i = 0;
-            while i < shard.running.len() {
-                if shard.running[i].session.finished() {
-                    let live = shard.running.swap_remove(i);
-                    self.reserved_total -= live.reserve_blocks;
-                    self.stats.completed += 1;
-                    finished.push(RequestResult {
-                        id: live.id,
-                        output: live.session.output().to_vec(),
-                        queue_secs: live.queue_secs,
-                        prefill_secs: live.session.stats.prefill_secs,
-                        decode_secs: live.session.stats.decode_secs,
-                        decode_steps: live.session.stats.decode_steps,
-                    });
-                } else {
-                    i += 1;
+        // 3. retirement — a retiring session hands its reservation (and,
+        // on drop, its pool blocks) back the same tick it finishes, so
+        // budget slack never lingers as phantom demand. Results are
+        // emitted in session-id order within the tick: deterministic
+        // across runtimes, worker counts and stealing schedules.
+        if let Dispatch::Tick { shards } = &mut self.dispatch {
+            for shard in shards.iter_mut() {
+                let mut i = 0;
+                while i < shard.running.len() {
+                    if shard.running[i].session.finished() {
+                        self.finished_scratch.push(shard.running.swap_remove(i));
+                    } else {
+                        i += 1;
+                    }
                 }
             }
+        }
+        self.finished_scratch.sort_by_key(|l| l.id);
+        let mut finished = Vec::with_capacity(self.finished_scratch.len());
+        for live in self.finished_scratch.drain(..) {
+            self.reserved_total -= live.reserve_blocks;
+            self.stats.completed += 1;
+            finished.push(RequestResult {
+                id: live.id,
+                output: live.session.output().to_vec(),
+                queue_secs: live.queue_secs,
+                prefill_secs: live.session.stats.prefill_secs,
+                decode_secs: live.session.stats.decode_secs,
+                decode_steps: live.session.stats.decode_steps,
+            });
         }
 
         // refresh every survivor's remaining reservation: blocks its
         // decode step just materialized move from "reserved" to "used",
         // so the next tick's admission sees them exactly once (only a
-        // bounded pool reads reservations)
+        // bounded pool reads reservations; the persistent runtime's
+        // mirror was already rebuilt from post-step reports above)
         if pool_cap.is_some() {
-            for shard in self.shards.iter_mut() {
-                for live in shard.running.iter_mut() {
-                    let fresh = self.engine.remaining_reserve(&live.session);
-                    self.reserved_total -= live.reserve_blocks;
-                    self.reserved_total += fresh;
-                    live.reserve_blocks = fresh;
+            if let Dispatch::Tick { shards } = &mut self.dispatch {
+                for shard in shards.iter_mut() {
+                    for live in shard.running.iter_mut() {
+                        let fresh = self.engine.remaining_reserve(&live.session);
+                        self.reserved_total -= live.reserve_blocks;
+                        self.reserved_total += fresh;
+                        live.reserve_blocks = fresh;
+                    }
                 }
             }
         }
@@ -640,7 +920,7 @@ mod tests {
     }
 
     fn sched_cfg(max_in_flight: usize, decode_workers: usize) -> SchedulerCfg {
-        SchedulerCfg { max_in_flight, decode_workers }
+        SchedulerCfg { max_in_flight, decode_workers, ..SchedulerCfg::default() }
     }
 
     #[test]
@@ -723,8 +1003,8 @@ mod tests {
 
     #[test]
     fn sharded_outputs_match_single_worker() {
-        // the tentpole invariant at the serving layer: the shard count is
-        // invisible in every request's tokens and in the aggregate counts
+        // the tentpole invariant at the serving layer: the worker count
+        // is invisible in every request's tokens and aggregate counts
         let make_stream = || -> Vec<Request> {
             (0..9).map(|i| req(i, i as f64 * 0.07, 18 + i as usize, 3 + (i as usize % 4))).collect()
         };
@@ -746,8 +1026,46 @@ mod tests {
     }
 
     #[test]
+    fn tick_loop_and_persistent_runtimes_serve_identical_tokens() {
+        // the tentpole contract, stated directly: both runtimes, all
+        // steal settings, same tokens and same scheduler decisions
+        let make_stream = || -> Vec<Request> {
+            (0..8).map(|i| req(i, i as f64 * 0.06, 16 + i as usize, 3 + (i as usize % 4))).collect()
+        };
+        let run = |runtime: RuntimeKind, workers: usize, steal: bool| {
+            let cfg = SchedulerCfg {
+                max_in_flight: 4,
+                decode_workers: workers,
+                runtime,
+                steal,
+                ..SchedulerCfg::default()
+            };
+            let mut sched = ContinuousScheduler::new(engine(), cfg);
+            let mut out = sched.run_stream(make_stream(), 0.05).unwrap();
+            out.sort_by_key(|r| r.id);
+            let tokens: Vec<Vec<i32>> = out.iter().map(|r| r.output.clone()).collect();
+            (tokens, sched.stats.decode_steps_total, sched.stats.admitted)
+        };
+        let base = run(RuntimeKind::TickLoop, 1, false);
+        for (workers, steal) in [(1, false), (1, true), (2, false), (2, true), (3, true)] {
+            let got = run(RuntimeKind::Persistent, workers, steal);
+            assert_eq!(got, base, "persistent workers={workers} steal={steal}");
+            let got_tick = run(RuntimeKind::TickLoop, workers, steal);
+            assert_eq!(got_tick, base, "tick-loop workers={workers}");
+        }
+    }
+
+    #[test]
     fn admission_balances_across_shards() {
-        let mut sched = ContinuousScheduler::new(engine(), sched_cfg(6, 3));
+        // steal disabled: this test pins per-shard step counts, which
+        // stealing deliberately blurs (tokens stay identical either way)
+        let cfg = SchedulerCfg {
+            max_in_flight: 6,
+            decode_workers: 3,
+            steal: false,
+            ..SchedulerCfg::default()
+        };
+        let mut sched = ContinuousScheduler::new(engine(), cfg);
         for i in 0..6 {
             sched.submit(req(i, 0.0, 16, 12));
         }
@@ -760,6 +1078,41 @@ mod tests {
             assert_eq!(w.peak_in_flight, 2, "shard {i}");
             assert_eq!(w.decode_rounds, 1, "shard {i}");
             assert!(w.decode_steps > 0, "shard {i}");
+        }
+    }
+
+    #[test]
+    fn persistent_worker_metrics_cover_steals_and_queues() {
+        // skewed lengths on 2 shards with stealing on: every steal and
+        // stolen token is accounted, queue depth high-water mark is sane
+        let cfg = SchedulerCfg {
+            max_in_flight: 4,
+            decode_workers: 2,
+            runtime: RuntimeKind::Persistent,
+            steal: true,
+            ..SchedulerCfg::default()
+        };
+        let mut sched = ContinuousScheduler::new(engine(), cfg);
+        // shard 0 gets a long request, shard 1 a burst of short ones
+        sched.submit(req(0, 0.0, 24, 24));
+        sched.submit(req(1, 0.0, 16, 2));
+        sched.submit(req(2, 0.0, 16, 2));
+        sched.submit(req(3, 0.0, 16, 2));
+        let mut now = 0.0;
+        while !sched.idle() {
+            sched.tick(now).unwrap();
+            now += 0.01;
+        }
+        let workers = sched.worker_stats();
+        assert_eq!(workers.len(), 2);
+        let steps: usize = workers.iter().map(|w| w.decode_steps).sum();
+        assert_eq!(steps, sched.stats.decode_steps_total);
+        let stolen: usize = workers.iter().map(|w| w.stolen_steps).sum();
+        let steals: usize = workers.iter().map(|w| w.steals).sum();
+        assert!(stolen <= steps);
+        assert!(stolen <= steals, "a stolen step implies a steal");
+        for w in &workers {
+            assert!(w.queue_depth_hwm >= 1, "step commands must register in the hwm");
         }
     }
 
@@ -831,34 +1184,44 @@ mod tests {
         // pool far below the concurrent working set: each request needs
         // 2 blocks, capacity 5 holds ~2 sessions, but 6 run "at once" —
         // the scheduler must preempt LRU sessions and re-prefill them,
-        // serving exactly the uncapped run's tokens
+        // serving exactly the uncapped run's tokens — on both runtimes
         let stream = || -> Vec<Request> { (0..6).map(|i| req(i, 0.0, 20, 8)).collect() };
         let mut wide =
             ContinuousScheduler::new(engine_with(BackendKind::Paged, 0), sched_cfg(6, 1));
         let mut base = wide.run_stream(stream(), 0.01).unwrap();
         base.sort_by_key(|r| r.id);
         assert_eq!(wide.stats.eviction.evictions, 0, "unbounded pool never evicts");
-        for workers in [1usize, 3] {
-            let mut tight = ContinuousScheduler::new(
-                engine_with(BackendKind::Paged, 5),
-                sched_cfg(6, workers),
-            );
+        for (runtime, workers) in [
+            (RuntimeKind::Persistent, 1usize),
+            (RuntimeKind::Persistent, 3),
+            (RuntimeKind::TickLoop, 1),
+            (RuntimeKind::TickLoop, 3),
+        ] {
+            let cfg = SchedulerCfg {
+                max_in_flight: 6,
+                decode_workers: workers,
+                runtime,
+                ..SchedulerCfg::default()
+            };
+            let mut tight =
+                ContinuousScheduler::new(engine_with(BackendKind::Paged, 5), cfg);
             let mut got = tight.run_stream(stream(), 0.01).unwrap();
             got.sort_by_key(|r| r.id);
-            assert_eq!(got.len(), base.len(), "workers={workers} lost requests");
+            let tag = format!("{} workers={workers}", runtime.label());
+            assert_eq!(got.len(), base.len(), "{tag} lost requests");
             for (g, b) in got.iter().zip(&base) {
                 assert_eq!(g.id, b.id);
-                assert_eq!(g.output, b.output, "req {} changed under eviction", g.id);
+                assert_eq!(g.output, b.output, "req {} changed under eviction ({tag})", g.id);
             }
             let ev = &tight.stats.eviction;
-            assert!(ev.evictions > 0, "workers={workers}: oversubscription must evict");
-            assert!(ev.blocks_reclaimed > 0, "workers={workers}");
+            assert!(ev.evictions > 0, "{tag}: oversubscription must evict");
+            assert!(ev.blocks_reclaimed > 0, "{tag}");
             assert_eq!(
                 ev.resumes, ev.evictions,
-                "workers={workers}: every preempted session resumed exactly once per eviction"
+                "{tag}: every preempted session resumed exactly once per eviction"
             );
-            assert!(tight.stats.peak_pool_blocks <= 5, "workers={workers}");
-            assert!(tight.idle(), "workers={workers}: no session left behind");
+            assert!(tight.stats.peak_pool_blocks <= 5, "{tag}");
+            assert!(tight.idle(), "{tag}: no session left behind");
         }
     }
 

@@ -99,6 +99,13 @@ pub trait AttentionBackend: Send {
             self.name()
         )
     }
+
+    /// Tag this session's future pool allocations with an arena affinity
+    /// (e.g. the decode shard that owns it), so a shared block store can
+    /// keep a session's blocks local to its worker. Purely a locality
+    /// hint: it never changes which bytes are stored or any attention
+    /// output. Backends without a shared pool ignore it.
+    fn set_arena(&mut self, _arena: usize) {}
 }
 
 fn last_row(out: &Tensor) -> Vec<f32> {

@@ -73,11 +73,24 @@ pub fn shared_pool(
 pub struct BlockTable {
     blocks: Vec<usize>,
     len: usize,
+    /// arena affinity for future allocations (see [`PagedKvPool::alloc`])
+    arena: usize,
 }
 
 impl BlockTable {
     pub fn new() -> BlockTable {
         BlockTable::default()
+    }
+
+    /// Arena this table's future allocations prefer (e.g. its decode
+    /// worker's shard). Purely a locality hint — block ids never enter
+    /// any attention arithmetic, so the arena cannot change outputs.
+    pub fn arena(&self) -> usize {
+        self.arena
+    }
+
+    pub fn set_arena(&mut self, arena: usize) {
+        self.arena = arena;
     }
 
     /// Tokens in this session's sequence.
@@ -121,8 +134,12 @@ pub struct PagedKvPool {
     fill: Vec<usize>,
     /// tables referencing each physical block; 0 = free
     refs: Vec<usize>,
-    /// free physical ids, reused before the store grows
-    free: Vec<usize>,
+    /// free physical ids per arena, reused before the store grows — a
+    /// freed block returns to the arena that last owned it, so a decode
+    /// worker's sessions keep recycling worker-local (cache-warm) blocks
+    free_lists: Vec<Vec<usize>>,
+    /// arena each physical block currently belongs to
+    arena_of: Vec<usize>,
     capacity: Option<usize>,
     used: usize,
 }
@@ -145,7 +162,8 @@ impl PagedKvPool {
             ksum: Vec::new(),
             fill: Vec::new(),
             refs: Vec::new(),
-            free: Vec::new(),
+            free_lists: vec![Vec::new()],
+            arena_of: Vec::new(),
             capacity: capacity_blocks,
             used: 0,
         }
@@ -184,15 +202,37 @@ impl PagedKvPool {
         self.used * self.slot * 2 * std::mem::size_of::<f32>()
     }
 
-    fn alloc(&mut self) -> Result<usize> {
+    /// Allocate one physical block with `arena` affinity: prefer a block
+    /// last homed in this arena (LIFO within the arena — the warmest
+    /// candidate), else steal from the longest other free list (lowest
+    /// index on ties, migrating the block's home), else grow the store.
+    /// The arena only decides WHICH free id is handed out; the block is
+    /// zeroed identically either way, and block ids never enter any
+    /// attention arithmetic, so affinity cannot change outputs.
+    fn alloc(&mut self, arena: usize) -> Result<usize> {
         if let Some(cap) = self.capacity {
             if self.used >= cap {
                 bail!("paged pool exhausted: {} blocks in use, capacity {cap}", self.used);
             }
         }
+        if arena >= self.free_lists.len() {
+            self.free_lists.resize_with(arena + 1, Vec::new);
+        }
         let w = self.heads * self.head_dim;
         self.used += 1;
-        if let Some(pid) = self.free.pop() {
+        let donor = if !self.free_lists[arena].is_empty() {
+            Some(arena)
+        } else {
+            self.free_lists
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| !l.is_empty())
+                .max_by_key(|(i, l)| (l.len(), std::cmp::Reverse(*i)))
+                .map(|(i, _)| i)
+        };
+        if let Some(d) = donor {
+            let pid = self.free_lists[d].pop().expect("donor free list non-empty");
+            self.arena_of[pid] = arena;
             self.fill[pid] = 0;
             self.refs[pid] = 1;
             self.ksum[pid * w..(pid + 1) * w].fill(0.0);
@@ -204,6 +244,7 @@ impl PagedKvPool {
         self.ksum.resize((pid + 1) * w, 0.0);
         self.fill.push(0);
         self.refs.push(1);
+        self.arena_of.push(arena);
         Ok(pid)
     }
 
@@ -217,13 +258,13 @@ impl PagedKvPool {
         assert_eq!(v_row.len(), w, "v row width");
         let in_block = table.len % self.block_size;
         if in_block == 0 {
-            let pid = self.alloc()?;
+            let pid = self.alloc(table.arena)?;
             table.blocks.push(pid);
         } else {
             let tail = *table.blocks.last().expect("partial tail implies a mapped block");
             if self.refs[tail] > 1 {
                 // copy-on-write: divergence pays for its own private tail
-                let copy = self.alloc()?;
+                let copy = self.alloc(table.arena)?;
                 let n = self.fill[tail];
                 debug_assert_eq!(n, in_block, "shared tail fill mismatch");
                 let (src, dst) = (tail * self.slot, copy * self.slot);
@@ -270,16 +311,16 @@ impl PagedKvPool {
         for &pid in &table.blocks {
             self.refs[pid] += 1;
         }
-        BlockTable { blocks: table.blocks.clone(), len: table.len }
+        BlockTable { blocks: table.blocks.clone(), len: table.len, arena: table.arena }
     }
 
     /// Release a table's references; blocks dropping to zero references
-    /// return to the free list for reuse.
+    /// return to their arena's free list for reuse.
     pub fn release(&mut self, table: &mut BlockTable) {
         for &pid in &table.blocks {
             self.refs[pid] -= 1;
             if self.refs[pid] == 0 {
-                self.free.push(pid);
+                self.free_lists[self.arena_of[pid]].push(pid);
                 self.used -= 1;
             }
         }
@@ -622,6 +663,10 @@ impl AttentionBackend for PagedMobaAttention {
         self.table.len()
     }
 
+    fn set_arena(&mut self, arena: usize) {
+        self.table.set_arena(arena);
+    }
+
     fn fork(&self) -> Result<Box<dyn AttentionBackend>> {
         let (table, head_dim) = {
             let mut pool = self.pool.write().expect("paged pool lock");
@@ -746,6 +791,41 @@ mod tests {
         let mut mean = [0.0f32; 2];
         pool.mean_into(&b, 0, 0, &mut mean);
         assert_eq!(mean, [2.0, 6.0], "stale sum survived block reuse");
+    }
+
+    #[test]
+    fn arena_affine_alloc_prefers_local_free_blocks_and_steals_across() {
+        // two sessions homed in different arenas fill and free blocks;
+        // a new same-arena session recycles its own arena's blocks
+        // first, and only steals cross-arena once local ones run out
+        let mut pool = PagedKvPool::new(2, 1, 2, None);
+        let (mut a, mut b) = (BlockTable::new(), BlockTable::new());
+        a.set_arena(0);
+        b.set_arena(1);
+        for i in 0..4 {
+            pool.append(&mut a, &[i as f32, 0.0], &[0.0, 0.0]).unwrap();
+            pool.append(&mut b, &[i as f32, 1.0], &[0.0, 0.0]).unwrap();
+        }
+        let a_blocks: Vec<usize> = (0..2).map(|i| a.physical(i)).collect();
+        let b_blocks: Vec<usize> = (0..2).map(|i| b.physical(i)).collect();
+        pool.release(&mut a);
+        pool.release(&mut b);
+        // a fresh arena-1 session: its first two blocks come from
+        // arena 1's free list, the next two are stolen from arena 0
+        let mut c = BlockTable::new();
+        c.set_arena(1);
+        for i in 0..8 {
+            pool.append(&mut c, &[i as f32, 2.0], &[0.0, 0.0]).unwrap();
+        }
+        assert!(b_blocks.contains(&c.physical(0)), "first alloc not arena-local");
+        assert!(b_blocks.contains(&c.physical(1)), "second alloc not arena-local");
+        assert!(a_blocks.contains(&c.physical(2)), "exhausted arena must steal");
+        assert!(a_blocks.contains(&c.physical(3)), "exhausted arena must steal");
+        assert_eq!(pool.used_blocks(), 4, "recycled, not grown");
+        // recycled blocks carry clean sums regardless of arena hops
+        let mut mean = [0.0f32; 2];
+        pool.mean_into(&c, 0, 0, &mut mean);
+        assert_eq!(mean, [0.5, 2.0], "stale sum survived cross-arena reuse");
     }
 
     #[test]

@@ -1,19 +1,36 @@
 //! Multi-core execution for the attention stack: a head×query-tile work
-//! partitioner over scoped threads (no external thread-pool dependency).
+//! partitioner over a persistent kernel thread pool (no external
+//! thread-pool dependency).
 //!
 //! Determinism contract: parallelism NEVER changes results. Work is
 //! partitioned at (head, query)-row granularity — each output row is
-//! computed by exactly one thread with exactly the arithmetic the
+//! computed by exactly one task with exactly the arithmetic the
 //! single-threaded kernel uses, so outputs are bit-identical for every
-//! worker count (`tests/thread_invariance.rs` pins this). Threads write
-//! disjoint contiguous output ranges; no locks, no atomics, no sharing.
+//! worker count (`tests/thread_invariance.rs` pins this). Tasks write
+//! disjoint contiguous output ranges; the only synchronization is the
+//! completion latch at the end of each call.
+//!
+//! Execution model: a process-wide pool of named `moba-kernel-{i}`
+//! threads is spawned lazily on first use and reused for every
+//! subsequent prefill/batch call — the per-call cost is pushing closures
+//! onto a queue instead of `thread::scope` spawn+join churn. The caller
+//! participates too (it drains the same queue while waiting), so a call
+//! with `workers = W` gets up to `W` lanes even when the pool is busy or
+//! smaller. The PARTITIONING is chosen by `workers` alone — never by
+//! pool occupancy — so which thread runs a task can vary, but what each
+//! task computes cannot.
 //!
 //! Worker counts resolve through [`default_workers`]: the `MOBA_WORKERS`
 //! environment variable if set, else `std::thread::available_parallelism`.
 //! Passing `workers <= 1` (or having fewer slots than workers would
-//! justify) runs inline on the calling thread with zero spawn overhead.
+//! justify) runs inline on the calling thread with zero dispatch
+//! overhead.
 
+use std::collections::VecDeque;
 use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
 
 /// Resolved default worker count: `MOBA_WORKERS` env override if set and
 /// positive, else the machine's available parallelism, else 1.
@@ -48,12 +65,139 @@ pub fn split_ranges(total: usize, parts: usize) -> Vec<Range<usize>> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// persistent kernel pool
+// ---------------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+}
+
+struct KernelPool {
+    shared: &'static PoolShared,
+}
+
+/// Completion latch for one `run_scoped` call: counts outstanding tasks
+/// down to zero and remembers whether any of them panicked (the panic is
+/// re-raised on the caller, preserving the scoped-thread behavior).
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: Mutex::new(n), cv: Condvar::new(), panicked: AtomicBool::new(false) }
+    }
+
+    fn task_done(&self) {
+        let mut left = self.remaining.lock().expect("latch lock");
+        *left -= 1;
+        if *left == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = self.remaining.lock().expect("latch lock");
+        while *left > 0 {
+            left = self.cv.wait(left).expect("latch lock");
+        }
+    }
+}
+
+fn kernel_pool() -> &'static KernelPool {
+    static POOL: OnceLock<KernelPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let shared: &'static PoolShared = Box::leak(Box::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+        }));
+        // enough lanes that caller + pool cover a typical `workers`
+        // request even on small machines; the caller always helps, so
+        // the pool can be one short of the largest worker count
+        let threads =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).max(4) - 1;
+        for i in 0..threads {
+            std::thread::Builder::new()
+                .name(format!("moba-kernel-{i}"))
+                .spawn(move || loop {
+                    let job = {
+                        let mut q = shared.queue.lock().expect("kernel pool lock");
+                        loop {
+                            if let Some(job) = q.pop_front() {
+                                break job;
+                            }
+                            q = shared.cv.wait(q).expect("kernel pool lock");
+                        }
+                    };
+                    job();
+                })
+                .expect("spawn kernel pool thread");
+        }
+        KernelPool { shared }
+    })
+}
+
+/// Run `tasks` to completion across the kernel pool plus the calling
+/// thread. Blocks until every task has finished; if any task panicked,
+/// panics on the caller.
+///
+/// SAFETY of the lifetime erasure: tasks may borrow from the caller's
+/// stack (`'a`), and pool threads are `'static` — sound because this
+/// function does not return until the latch counts every task done, so
+/// no borrow outlives the frame it points into. The panic flag (rather
+/// than unwinding across the pool) keeps a panicking task from poisoning
+/// the queue for unrelated callers.
+fn run_scoped<'a>(tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+    if tasks.is_empty() {
+        return;
+    }
+    let pool = kernel_pool();
+    let latch = Latch::new(tasks.len());
+    let latch_ref: &Latch = &latch;
+    {
+        let mut q = pool.shared.queue.lock().expect("kernel pool lock");
+        for task in tasks {
+            // erase 'a -> 'static; see SAFETY above
+            let task: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(task)
+            };
+            let latch: &'static Latch = unsafe { std::mem::transmute(latch_ref) };
+            q.push_back(Box::new(move || {
+                if catch_unwind(AssertUnwindSafe(task)).is_err() {
+                    latch.panicked.store(true, Ordering::SeqCst);
+                }
+                latch.task_done();
+            }));
+        }
+        pool.shared.cv.notify_all();
+    }
+    // caller helps: drain whatever is queued (ours or another caller's)
+    // until the queue is dry, then wait out our stragglers
+    loop {
+        let job = pool.shared.queue.lock().expect("kernel pool lock").pop_front();
+        match job {
+            Some(job) => job(),
+            None => break,
+        }
+    }
+    latch.wait();
+    if latch.panicked.load(Ordering::SeqCst) {
+        panic!("kernel pool task panicked");
+    }
+}
+
 /// Partition `out` into `out.len() / slot_width` fixed-width slots and
 /// apply `work(scratch, slot_index, slot)` to every slot, spreading
-/// contiguous slot ranges over `workers` scoped threads. `init` builds
-/// one scratch value per worker, so kernels can reuse accumulators and
-/// score buffers across the queries of their tile instead of allocating
-/// per row.
+/// contiguous slot ranges over `workers` kernel-pool lanes. `init`
+/// builds one scratch value per lane, so kernels can reuse accumulators
+/// and score buffers across the queries of their tile instead of
+/// allocating per row.
 ///
 /// For a `[N, H, D]` attention output, `slot_width = D` makes slot `i`
 /// the (head, query) row `(t, hh) = (i / H, i % H)` — range boundaries
@@ -78,25 +222,25 @@ where
         return;
     }
     let ranges = split_ranges(total, workers);
-    std::thread::scope(|scope| {
-        let mut rest = out;
-        for range in ranges {
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(range.len() * slot_width);
-            rest = tail;
-            let (init, work) = (&init, &work);
-            scope.spawn(move || {
-                let mut scratch = init();
-                for (j, slot) in chunk.chunks_exact_mut(slot_width).enumerate() {
-                    work(&mut scratch, range.start + j, slot);
-                }
-            });
-        }
-    });
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+    let mut rest = out;
+    for range in ranges {
+        let (chunk, tail) = rest.split_at_mut(range.len() * slot_width);
+        rest = tail;
+        let (init, work) = (&init, &work);
+        tasks.push(Box::new(move || {
+            let mut scratch = init();
+            for (j, slot) in chunk.chunks_exact_mut(slot_width).enumerate() {
+                work(&mut scratch, range.start + j, slot);
+            }
+        }));
+    }
+    run_scoped(tasks);
 }
 
-/// `(0..n).map(f)` with the index range spread over `workers` scoped
-/// threads. Results come back in index order regardless of which thread
-/// produced them or when it finished.
+/// `(0..n).map(f)` with the index range spread over `workers`
+/// kernel-pool lanes. Results come back in index order regardless of
+/// which lane produced them or when it finished.
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -109,20 +253,23 @@ where
         return (0..n).map(f).collect();
     }
     let ranges = split_ranges(n, workers);
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = ranges
-            .into_iter()
-            .map(|range| {
-                let f = &f;
-                scope.spawn(move || range.map(f).collect::<Vec<T>>())
-            })
-            .collect();
-        let mut out = Vec::with_capacity(n);
-        for h in handles {
-            out.extend(h.join().expect("parallel_map worker panicked"));
+    let mut parts: Vec<Vec<T>> = Vec::new();
+    parts.resize_with(ranges.len(), Vec::new);
+    {
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+        for (range, slot) in ranges.into_iter().zip(parts.iter_mut()) {
+            let f = &f;
+            tasks.push(Box::new(move || {
+                *slot = range.map(f).collect();
+            }));
         }
-        out
-    })
+        run_scoped(tasks);
+    }
+    let mut out = Vec::with_capacity(n);
+    for part in parts {
+        out.extend(part);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -163,7 +310,7 @@ mod tests {
                 &mut out,
                 width,
                 workers,
-                || 0usize, // scratch: per-worker call counter
+                || 0usize, // scratch: per-lane call counter
                 |calls, i, slot| {
                     *calls += 1;
                     for (d, x) in slot.iter_mut().enumerate() {
@@ -192,6 +339,43 @@ mod tests {
             assert_eq!(parallel_map(23, workers, |i| i * i), serial, "workers={workers}");
         }
         assert!(parallel_map(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn pool_survives_repeated_and_nested_style_calls() {
+        // the persistent pool must be reusable back-to-back (no one-shot
+        // scope state) and from several caller threads at once
+        for round in 0..50 {
+            let got = parallel_map(17, 4, |i| i + round);
+            let want: Vec<usize> = (0..17).map(|i| i + round).collect();
+            assert_eq!(got, want, "round={round}");
+        }
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                scope.spawn(move || {
+                    for round in 0..20 {
+                        let got = parallel_map(11, 3, |i| i * t + round);
+                        let want: Vec<usize> = (0..11).map(|i| i * t + round).collect();
+                        assert_eq!(got, want, "t={t} round={round}");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn pool_task_panic_propagates_to_caller() {
+        let result = std::panic::catch_unwind(|| {
+            parallel_map(8, 4, |i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+                i
+            })
+        });
+        assert!(result.is_err(), "task panic must reach the caller");
+        // and the pool still works afterwards
+        assert_eq!(parallel_map(6, 3, |i| i * 2), vec![0, 2, 4, 6, 8, 10]);
     }
 
     #[test]

@@ -1,14 +1,17 @@
 //! Seeded scheduler fuzz: randomized arrival times, prompt lengths and
 //! decode budgets (driven by the repo's own `Rng` — no `rand` dep),
 //! asserting that the tokens each request is served are invariant to the
-//! scheduler's decode shard count and to paged-pool capacity — a bounded
+//! scheduler's decode shard count, to the decode runtime (legacy
+//! tick-loop scoped threads vs the persistent thread-per-core workers,
+//! with work stealing on or off) and to paged-pool capacity — a bounded
 //! pool defers or *evicts* (LRU preemption + re-prefill resume when the
-//! pool oversubscribes), and neither may ever change what anyone decodes
-//! — and equal to a solo single-session run of the same prompt (the
-//! scheduler's interleaving is invisible).
+//! pool oversubscribes), and none of it may ever change what anyone
+//! decodes — and equal to a solo single-session run of the same prompt
+//! (the scheduler's interleaving is invisible).
 
 use moba::serve::{
-    ContinuousScheduler, Request, RequestResult, SchedulerCfg, ServeCfg, ServeEngine, ToyModel,
+    ContinuousScheduler, Request, RequestResult, RuntimeKind, SchedulerCfg, ServeCfg, ServeEngine,
+    ToyModel,
 };
 use moba::sparse::BackendKind;
 use moba::util::rng::Rng;
@@ -51,11 +54,19 @@ fn serve(
     backend: BackendKind,
     pool_blocks: usize,
     decode_workers: usize,
+    runtime: RuntimeKind,
+    steal: bool,
     reqs: Vec<Request>,
 ) -> Vec<RequestResult> {
     let mut sched = ContinuousScheduler::new(
         engine(backend, pool_blocks),
-        SchedulerCfg { max_in_flight: 4, decode_workers },
+        SchedulerCfg {
+            max_in_flight: 4,
+            decode_workers,
+            runtime,
+            steal,
+            ..SchedulerCfg::default()
+        },
     );
     let mut out = sched.run_stream(reqs, 0.005).unwrap();
     out.sort_by_key(|r| r.id);
@@ -82,24 +93,31 @@ fn fuzzed_streams_are_schedule_invariant() {
             .unwrap();
         let tight = max_need + 2; // room for ~1-2 sessions: heavy deferral
         let oversub = max_need + 1; // barely one session: constant eviction churn
-        for (backend, pool_blocks, decode_workers) in [
-            (BackendKind::Fused, 0, 1),
-            (BackendKind::Fused, 0, 3),
-            (BackendKind::Paged, 0, 1),
-            (BackendKind::Paged, 0, 4),
-            (BackendKind::Paged, tight, 1),
-            (BackendKind::Paged, tight, 3),
-            (BackendKind::Paged, oversub, 1),
-            (BackendKind::Paged, oversub, 3),
+        use RuntimeKind::{Persistent, TickLoop};
+        for (backend, pool_blocks, decode_workers, runtime, steal) in [
+            (BackendKind::Fused, 0, 1, TickLoop, false),
+            (BackendKind::Fused, 0, 3, TickLoop, false),
+            (BackendKind::Fused, 0, 3, Persistent, true),
+            (BackendKind::Paged, 0, 1, Persistent, false),
+            (BackendKind::Paged, 0, 4, TickLoop, false),
+            (BackendKind::Paged, 0, 4, Persistent, true),
+            (BackendKind::Paged, tight, 1, TickLoop, false),
+            (BackendKind::Paged, tight, 3, Persistent, true),
+            (BackendKind::Paged, oversub, 1, TickLoop, false),
+            (BackendKind::Paged, oversub, 1, Persistent, true),
+            (BackendKind::Paged, oversub, 3, Persistent, false),
+            (BackendKind::Paged, oversub, 3, Persistent, true),
         ] {
-            let got = serve(backend, pool_blocks, decode_workers, reqs.clone());
+            let got = serve(backend, pool_blocks, decode_workers, runtime, steal, reqs.clone());
             assert_eq!(got.len(), reqs.len(), "seed={seed} lost requests");
             for (g, w) in got.iter().zip(&want) {
                 assert_eq!(
                     &g.output,
                     w,
-                    "seed={seed} backend={} pool={pool_blocks} shards={decode_workers} req={}",
+                    "seed={seed} backend={} pool={pool_blocks} shards={decode_workers} \
+                     runtime={} steal={steal} req={}",
                     backend.label(),
+                    runtime.label(),
                     g.id
                 );
             }
@@ -134,12 +152,26 @@ fn fuzzed_shared_prefix_streams_are_schedule_invariant() {
             .max()
             .unwrap();
         let oversub = prefix_blocks + max_fork_need + 1;
-        for (pool_blocks, decode_workers) in
-            [(0usize, 1usize), (0, 3), (64, 2), (oversub, 1), (oversub, 3)]
-        {
+        use RuntimeKind::{Persistent, TickLoop};
+        for (pool_blocks, decode_workers, runtime, steal) in [
+            (0usize, 1usize, TickLoop, false),
+            (0, 3, TickLoop, false),
+            (0, 3, Persistent, true),
+            (64, 2, Persistent, true),
+            (oversub, 1, TickLoop, false),
+            (oversub, 1, Persistent, true),
+            (oversub, 3, TickLoop, false),
+            (oversub, 3, Persistent, true),
+        ] {
             let mut sched = ContinuousScheduler::new(
                 engine(BackendKind::Paged, pool_blocks),
-                SchedulerCfg { max_in_flight: 3, decode_workers },
+                SchedulerCfg {
+                    max_in_flight: 3,
+                    decode_workers,
+                    runtime,
+                    steal,
+                    ..SchedulerCfg::default()
+                },
             );
             sched.set_shared_prefix(&prefix).unwrap();
             let mut got = sched.run_stream(reqs.clone(), 0.005).unwrap();
@@ -148,7 +180,9 @@ fn fuzzed_shared_prefix_streams_are_schedule_invariant() {
                 assert_eq!(
                     &g.output,
                     w,
-                    "seed={seed} pool={pool_blocks} shards={decode_workers} req={}",
+                    "seed={seed} pool={pool_blocks} shards={decode_workers} runtime={} \
+                     steal={steal} req={}",
+                    runtime.label(),
                     g.id
                 );
             }

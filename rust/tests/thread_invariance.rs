@@ -9,7 +9,9 @@
 //! additionally pinned bit-for-bit against the two-pass gate+attend path
 //! it replaces on the hot path.
 
-use moba::serve::{ContinuousScheduler, Request, SchedulerCfg, ServeCfg, ServeEngine, ToyModel};
+use moba::serve::{
+    ContinuousScheduler, Request, RuntimeKind, SchedulerCfg, ServeCfg, ServeEngine, ToyModel,
+};
 use moba::sparse::{
     self, build_backend_par, default_workers, fused_moba_attention, moba_attention_par,
     BackendKind,
@@ -183,7 +185,12 @@ fn sharded_scheduler_tokens_are_shard_count_invariant() {
             .collect()
     };
     let run = |decode_workers: usize| {
-        let cfg = SchedulerCfg { max_in_flight: 4, decode_workers };
+        let cfg = SchedulerCfg {
+            max_in_flight: 4,
+            decode_workers,
+            runtime: RuntimeKind::TickLoop,
+            ..SchedulerCfg::default()
+        };
         let mut sched = ContinuousScheduler::new(engine(), cfg);
         let mut results = sched.run_stream(stream(), 0.05).unwrap();
         results.sort_by_key(|r| r.id);
@@ -198,5 +205,92 @@ fn sharded_scheduler_tokens_are_shard_count_invariant() {
         assert_eq!(workers.len(), decode_workers);
         let stepped: usize = workers.iter().map(|w| w.decode_steps).sum();
         assert_eq!(stepped, steps, "per-shard steps must sum to the total");
+    }
+}
+
+#[test]
+fn persistent_runtime_tokens_match_tick_loop_bitwise() {
+    // The serving-runtime determinism contract: the persistent
+    // thread-per-core runtime (pre-spawned pinned workers, bounded
+    // channels, work stealing) serves exactly the tokens of the legacy
+    // per-tick scoped-thread loop, for every worker count and stealing
+    // schedule — including while a bounded paged pool is evicting and
+    // re-prefill-resuming sessions mid-stream.
+    let stream = || -> Vec<Request> {
+        (0..10)
+            .map(|i| Request {
+                id: i,
+                // skewed decode budgets: every 4th request runs ~4x
+                // longer, so multi-worker runs actually steal
+                prompt: (0..20 + 3 * i as i32).map(|j| (j * 5 + i as i32) % 48).collect(),
+                max_new: if i % 4 == 0 { 12 } else { 3 },
+                arrival: i as f64 * 0.03,
+            })
+            .collect()
+    };
+    let engine = |backend: BackendKind, pool_blocks: usize| {
+        ServeEngine::new(
+            ToyModel::new(48, 2, 8, 7),
+            ServeCfg { block_size: 16, topk: 2, max_seq: 512, backend, workers: 1, pool_blocks },
+        )
+    };
+    // paged arm: barely one session's worth of blocks, so the pool
+    // oversubscribes and the eviction/resume machinery churns constantly
+    let max_need = {
+        let solo = engine(BackendKind::Fused, 0);
+        stream().iter().map(|r| solo.block_reserve(0, r.prompt.len() + r.max_new)).max().unwrap()
+    };
+    for (backend, pool_blocks) in [(BackendKind::Fused, 0usize), (BackendKind::Paged, max_need + 1)]
+    {
+        let run = |decode_workers: usize, runtime: RuntimeKind, steal: bool| {
+            let cfg = SchedulerCfg {
+                max_in_flight: 4,
+                decode_workers,
+                runtime,
+                steal,
+                ..SchedulerCfg::default()
+            };
+            let mut sched = ContinuousScheduler::new(engine(backend, pool_blocks), cfg);
+            let mut results = sched.run_stream(stream(), 0.02).unwrap();
+            results.sort_by_key(|r| r.id);
+            let outputs: Vec<Vec<i32>> = results.iter().map(|r| r.output.clone()).collect();
+            (outputs, sched.stats.decode_steps_total)
+        };
+        let (base_outputs, base_steps) = run(1, RuntimeKind::TickLoop, false);
+        let mut counts = vec![1usize, 2];
+        let ncpu = default_workers();
+        if !counts.contains(&ncpu) {
+            counts.push(ncpu);
+        }
+        for &decode_workers in &counts {
+            for steal in [false, true] {
+                let (outputs, steps) = run(decode_workers, RuntimeKind::Persistent, steal);
+                assert_eq!(
+                    outputs,
+                    base_outputs,
+                    "{} pool={pool_blocks} persistent workers={decode_workers} steal={steal}",
+                    backend.label()
+                );
+                assert_eq!(
+                    steps,
+                    base_steps,
+                    "{} pool={pool_blocks} persistent workers={decode_workers} steal={steal}",
+                    backend.label()
+                );
+            }
+            let (outputs, steps) = run(decode_workers, RuntimeKind::TickLoop, false);
+            assert_eq!(
+                outputs,
+                base_outputs,
+                "{} pool={pool_blocks} tick-loop workers={decode_workers}",
+                backend.label()
+            );
+            assert_eq!(
+                steps,
+                base_steps,
+                "{} pool={pool_blocks} tick-loop workers={decode_workers}",
+                backend.label()
+            );
+        }
     }
 }
