@@ -315,7 +315,9 @@ fn main() {
         _ => Vec::new(),
     };
     trajectory.push(entry);
-    std::fs::write(path, Json::Arr(trajectory).to_string()).expect("writing BENCH_decode.json");
+    // temp-file + rename: a crash mid-write cannot truncate the trajectory
+    moba::metrics::atomic_write(std::path::Path::new(path), &Json::Arr(trajectory).to_string())
+        .expect("writing BENCH_decode.json");
     println!("-> {path}");
 
     if quick {

@@ -140,7 +140,9 @@ fn main() {
         _ => Vec::new(),
     };
     trajectory.push(entry);
-    std::fs::write(path, Json::Arr(trajectory).to_string()).expect("writing BENCH_prefill.json");
+    // temp-file + rename: a crash mid-write cannot truncate the trajectory
+    moba::metrics::atomic_write(std::path::Path::new(path), &Json::Arr(trajectory).to_string())
+        .expect("writing BENCH_prefill.json");
     println!("-> {path}");
 
     if quick {

@@ -79,6 +79,12 @@ serve options: --requests N --max-batch M --prompt-len P --max-new K
   --shared-prefix L (L-token system prompt forked per request; needs paged)
   --pool-blocks N (paged pool capacity in blocks, 0 = unbounded; a bounded
     pool oversubscribes: LRU eviction + re-prefill resume, same tokens)
+  --chaos-seed N (seeded fault injection into persistent decode workers —
+    panics, stalls, alloc failures; the supervisor re-homes the dead
+    shard's sessions and served tokens stay bitwise identical; also
+    settable via MOBA_CHAOS_SEED)
+  --barrier-deadline S (seconds before a silent worker is declared dead
+    and recovered; 0/unset waits forever, chaos runs default to 5s)
 common options: --steps N  --seed N  --sizes s0,s1  --artifact NAME
 ";
 
@@ -86,8 +92,18 @@ common options: --steps N  --seed N  --sizes s0,s1  --artifact NAME
 /// driver: `serve::demo`).
 fn serve_cmd(args: &Args) -> Result<()> {
     let d = DemoCfg::default();
+    // strict env validation: a typo'd MOBA_WORKERS fails loudly here
+    // instead of silently running on all cores (the library default
+    // stays lenient)
+    let env_workers = moba::sparse::workers_from_env().map_err(|e| anyhow::anyhow!(e))?;
     // `--workers 0` / `--decode-workers 0` mean "all available cores"
-    let resolve = |n: usize| if n == 0 { moba::sparse::default_workers() } else { n };
+    let resolve = move |n: usize| {
+        if n == 0 {
+            env_workers.unwrap_or_else(moba::sparse::default_workers)
+        } else {
+            n
+        }
+    };
     let cfg = DemoCfg {
         requests: args.get_usize("requests", d.requests)?,
         max_in_flight: args.get_usize("max-batch", d.max_in_flight)?,
@@ -104,6 +120,18 @@ fn serve_cmd(args: &Args) -> Result<()> {
         shared_prefix: args.get_usize("shared-prefix", d.shared_prefix)?,
         pool_blocks: args.get_usize("pool-blocks", d.pool_blocks)?,
         seed: args.get_u64("seed", d.seed)?,
+        chaos_seed: match args.get("chaos-seed") {
+            Some(_) => Some(args.get_u64("chaos-seed", 0)?),
+            None => d.chaos_seed, // MOBA_CHAOS_SEED, if set
+        },
+        barrier_deadline_secs: {
+            let s = args.get_f64("barrier-deadline", 0.0)?;
+            if s > 0.0 {
+                Some(s)
+            } else {
+                d.barrier_deadline_secs
+            }
+        },
     };
     run_demo(&cfg)
 }

@@ -6,7 +6,7 @@ pub mod fit;
 pub mod writer;
 
 pub use fit::{fit_power_law, PowerLaw};
-pub use writer::{CsvWriter, RunDir};
+pub use writer::{atomic_write, CsvWriter, RunDir};
 
 /// Mean of a slice.
 pub fn mean(xs: &[f64]) -> f64 {

@@ -12,6 +12,21 @@ use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
+/// Write `contents` to `path` atomically: write a sibling temp file,
+/// then rename it into place. A crash (or a chaos-killed process)
+/// mid-write can never leave a truncated file, and a concurrent reader
+/// (CI artifact upload, a dashboard tailing `BENCH_*.json`) sees either
+/// the old complete file or the new complete file — nothing in between.
+pub fn atomic_write(path: &Path, contents: &str) -> Result<()> {
+    // pid-suffixed temp name: two processes racing on the same target
+    // each rename a complete file; last writer wins whole
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, contents).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
 /// A run output directory, `runs/<name>` by default.
 pub struct RunDir {
     pub path: PathBuf,
@@ -31,13 +46,11 @@ impl RunDir {
     }
 
     pub fn write_json(&self, name: &str, value: &Json) -> Result<()> {
-        std::fs::write(self.path.join(name), value.to_string())?;
-        Ok(())
+        atomic_write(&self.path.join(name), &value.to_string())
     }
 
     pub fn write_text(&self, name: &str, text: &str) -> Result<()> {
-        std::fs::write(self.path.join(name), text)?;
-        Ok(())
+        atomic_write(&self.path.join(name), text)
     }
 }
 
@@ -91,6 +104,25 @@ mod tests {
         }
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text, "step,loss\n1,2.5\n2,2.25\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn atomic_write_replaces_whole_file_and_cleans_temp() {
+        let dir = std::env::temp_dir().join("moba_atomic_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("out.json");
+        atomic_write(&p, "[1,2,3]").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "[1,2,3]");
+        atomic_write(&p, "[4]").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "[4]");
+        // no temp droppings left next to the target
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n.contains("tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "stray temp files: {leftovers:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

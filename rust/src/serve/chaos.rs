@@ -1,0 +1,193 @@
+//! Deterministic chaos injection for the persistent decode runtime.
+//!
+//! A `FaultPlan` is a seeded, pre-computed schedule of faults — "panic
+//! worker 2 at tick 7", "stall worker 0's step for 40ms at tick 3",
+//! "fail worker 1's next pool allocation at tick 5" — injected into the
+//! worker step loop through `SchedulerCfg::chaos`. Faults fire at a
+//! *safe point* (the top of `Step` command handling, before the steal
+//! protocol publishes any session), so an injected panic exercises the
+//! real supervision path: the worker's backstop `catch_unwind` ships its
+//! owned sessions back in the final `StepReport` and the scheduler
+//! re-homes them through eviction/resume.
+//!
+//! Plans are plain data (`Clone + Debug`), independent of wall-clock and
+//! thread scheduling, so a chaos run is reproducible from
+//! `(MOBA_CHAOS_SEED, worker count, horizon)` alone. The tick-loop
+//! runtime ignores chaos entirely — it is the fault-free oracle the
+//! chaos tests compare served tokens against.
+
+use crate::util::rng::Rng;
+
+/// What a fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic the worker's step loop (caught by the backstop handler;
+    /// the worker reports the panic, ships its sessions home and
+    /// exits).
+    Panic,
+    /// Simulate a failed pool allocation: the worker panics with the
+    /// paged pool's exhaustion message, exercising the same death path
+    /// as a real allocator bug.
+    AllocFail,
+    /// Stall the worker for `millis` before it processes the step. With
+    /// a stall longer than `SchedulerCfg::barrier_deadline_secs` the
+    /// supervisor declares the worker dead and the zombie later drains
+    /// and exits on its own.
+    Stall { millis: u64 },
+}
+
+/// One scheduled fault: `kind` fires on worker `worker` at tick `tick`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    pub worker: usize,
+    pub tick: u64,
+    pub kind: FaultKind,
+}
+
+impl Fault {
+    /// Fatal faults permanently remove the worker (Panic/AllocFail, and
+    /// Stall once the supervisor gives up on the barrier).
+    pub fn is_fatal(&self) -> bool {
+        !matches!(self.kind, FaultKind::Stall { .. })
+    }
+}
+
+/// A deterministic schedule of faults for one serving run.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// An explicit plan (tests name exact faults).
+    pub fn new(faults: Vec<Fault>) -> Self {
+        FaultPlan { faults }
+    }
+
+    /// A seeded random plan over `workers` workers and `horizon` ticks.
+    /// At most `workers - 1` distinct workers receive a *fatal* fault,
+    /// so the scheduler always keeps at least one live shard and every
+    /// request still finishes; stalls may hit any worker. Fault count
+    /// scales gently with the grid so small runs see 1-3 faults.
+    pub fn seeded(seed: u64, workers: usize, horizon: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xC4A0_5CA0_DEAD_BEEF);
+        let mut faults = Vec::new();
+        if workers == 0 || horizon == 0 {
+            return FaultPlan { faults };
+        }
+        let n = 1 + rng.range(0, 3);
+        let mut fatal_workers: Vec<usize> = Vec::new();
+        for _ in 0..n {
+            let tick = rng.below(horizon);
+            let kind = match rng.range(0, 4) {
+                0 => FaultKind::Panic,
+                1 => FaultKind::AllocFail,
+                _ => FaultKind::Stall { millis: 5 + rng.below(40) },
+            };
+            let worker = rng.range(0, workers);
+            let fatal = !matches!(kind, FaultKind::Stall { .. });
+            if fatal {
+                // keep at least one worker alive across the whole plan
+                if !fatal_workers.contains(&worker) && fatal_workers.len() + 1 >= workers {
+                    continue;
+                }
+                if !fatal_workers.contains(&worker) {
+                    fatal_workers.push(worker);
+                }
+            }
+            faults.push(Fault { worker, tick, kind });
+        }
+        FaultPlan { faults }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// The first fault scheduled for `(worker, tick)`, if any.
+    pub fn fault_for(&self, worker: usize, tick: u64) -> Option<Fault> {
+        self.faults.iter().copied().find(|f| f.worker == worker && f.tick == tick)
+    }
+
+    /// How many distinct workers this plan kills outright.
+    pub fn fatal_workers(&self) -> usize {
+        let mut seen: Vec<usize> = Vec::new();
+        for f in &self.faults {
+            if f.is_fatal() && !seen.contains(&f.worker) {
+                seen.push(f.worker);
+            }
+        }
+        seen.len()
+    }
+}
+
+/// The panic message an injected fault raises — tests and the demo can
+/// recognize injected faults in `ServeError::WorkerPanicked::message`.
+pub fn panic_message(kind: FaultKind, worker: usize, tick: u64) -> String {
+    match kind {
+        FaultKind::Panic => format!("chaos: injected panic on worker {worker} at tick {tick}"),
+        FaultKind::AllocFail => {
+            format!("chaos: injected pool allocation failure on worker {worker} at tick {tick}")
+        }
+        FaultKind::Stall { millis } => {
+            format!("chaos: injected {millis}ms stall on worker {worker} at tick {tick}")
+        }
+    }
+}
+
+/// Chaos seed from `MOBA_CHAOS_SEED` (unset or unparsable → no chaos).
+pub fn seed_from_env() -> Option<u64> {
+    std::env::var("MOBA_CHAOS_SEED").ok().and_then(|v| v.trim().parse().ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        let a = FaultPlan::seeded(42, 4, 50);
+        let b = FaultPlan::seeded(42, 4, 50);
+        assert_eq!(a.faults(), b.faults());
+        assert!(
+            !(FaultPlan::seeded(42, 4, 50).is_empty() && FaultPlan::seeded(43, 4, 50).is_empty()),
+            "two seeds should not both be empty"
+        );
+    }
+
+    #[test]
+    fn seeded_plans_spare_one_worker() {
+        for seed in 0..200u64 {
+            for workers in 1..5usize {
+                let plan = FaultPlan::seeded(seed, workers, 40);
+                assert!(
+                    plan.fatal_workers() < workers.max(1),
+                    "seed={seed} workers={workers} kills everyone: {:?}",
+                    plan.faults()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fault_lookup_matches_worker_and_tick() {
+        let f = Fault { worker: 1, tick: 3, kind: FaultKind::Panic };
+        let plan = FaultPlan::new(vec![f]);
+        assert_eq!(plan.fault_for(1, 3), Some(f));
+        assert_eq!(plan.fault_for(1, 4), None);
+        assert_eq!(plan.fault_for(0, 3), None);
+        assert!(f.is_fatal());
+        assert!(!Fault { worker: 0, tick: 0, kind: FaultKind::Stall { millis: 5 } }.is_fatal());
+    }
+
+    #[test]
+    fn panic_messages_are_recognizable() {
+        assert!(panic_message(FaultKind::Panic, 2, 9).contains("chaos"));
+        assert!(panic_message(FaultKind::AllocFail, 0, 1).contains("allocation"));
+        assert!(panic_message(FaultKind::Stall { millis: 7 }, 1, 2).contains("7ms"));
+    }
+}

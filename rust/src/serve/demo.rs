@@ -11,6 +11,7 @@ use crate::sparse::BackendKind;
 use crate::util::rng::Rng;
 
 use super::batcher::Request;
+use super::chaos::{self, FaultPlan};
 use super::engine::{ServeCfg, ServeEngine};
 use super::model::ToyModel;
 use super::runtime::{pin_from_env, steal_from_env, RuntimeKind};
@@ -48,6 +49,13 @@ pub struct DemoCfg {
     /// are bit-identical either way
     pub pool_blocks: usize,
     pub seed: u64,
+    /// seeded chaos injection: kill/stall persistent decode workers
+    /// mid-run and prove the supervisor recovers (None = no chaos;
+    /// defaults from `MOBA_CHAOS_SEED`; the tick-loop runtime ignores it)
+    pub chaos_seed: Option<u64>,
+    /// declare a persistent worker dead if a step barrier exceeds this
+    /// many seconds (None = wait forever; chaos runs default to 5s)
+    pub barrier_deadline_secs: Option<f64>,
 }
 
 impl Default for DemoCfg {
@@ -68,6 +76,8 @@ impl Default for DemoCfg {
             shared_prefix: 0,
             pool_blocks: 0,
             seed: 42,
+            chaos_seed: chaos::seed_from_env(),
+            barrier_deadline_secs: None,
         }
     }
 }
@@ -100,6 +110,26 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
         if cfg.runtime == RuntimeKind::Persistent && cfg.steal { " +steal" } else { "" },
         if cfg.runtime == RuntimeKind::Persistent && cfg.pin { " +pin" } else { "" }
     );
+    // seeded chaos: only the persistent runtime has workers to kill, and
+    // a seeded plan always spares at least one shard so the run finishes
+    let chaos: Option<FaultPlan> = match cfg.chaos_seed {
+        Some(seed) if cfg.runtime == RuntimeKind::Persistent => {
+            let horizon = ((cfg.requests * cfg.max_new) as u64
+                / cfg.max_in_flight.max(1) as u64)
+                .max(8);
+            let plan = FaultPlan::seeded(seed, cfg.decode_workers.max(1), horizon);
+            println!(
+                "   chaos: seed {seed} -> {} fault(s), {} worker(s) killed outright",
+                plan.faults().len(),
+                plan.fatal_workers()
+            );
+            Some(plan)
+        }
+        _ => None,
+    };
+    let barrier_deadline_secs = cfg
+        .barrier_deadline_secs
+        .or(if chaos.is_some() { Some(5.0) } else { None });
     let engine = ServeEngine::new(model, serve_cfg);
     let mut sched = ContinuousScheduler::new(
         engine,
@@ -109,6 +139,8 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
             runtime: cfg.runtime,
             steal: cfg.steal,
             pin: cfg.pin,
+            chaos,
+            barrier_deadline_secs,
         },
     );
 
@@ -181,6 +213,17 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
         sched.stats.decode_steps_total,
         sched.stats.peak_in_flight
     );
+    let fs = &sched.stats.fault;
+    if fs.worker_deaths > 0 || fs.barrier_timeouts > 0 {
+        println!(
+            "faults: {} worker death(s) ({} via barrier deadline), {} session(s) re-homed, \
+             recovery re-prefill {:.1} ms",
+            fs.worker_deaths,
+            fs.barrier_timeouts,
+            fs.rehomed_sessions,
+            fs.recovery_reprefill_secs * 1e3
+        );
+    }
     println!(
         "throughput: {:.1} tok/s ({:.1} req/s)",
         total_tokens as f64 / wall.max(1e-9),
@@ -328,6 +371,24 @@ mod tests {
             max_new: 6,
             backend: BackendKind::Paged,
             pool_blocks: 4, // each request needs <= 2 of 32-token blocks
+            ..Default::default()
+        };
+        run_demo(&cfg).unwrap();
+    }
+
+    #[test]
+    fn demo_survives_seeded_chaos() {
+        // explicit seed (independent of MOBA_CHAOS_SEED): workers may be
+        // killed mid-run; the demo must still retire every request
+        let cfg = DemoCfg {
+            requests: 4,
+            prompt_len: 48,
+            max_new: 6,
+            backend: BackendKind::Fused,
+            decode_workers: 2,
+            runtime: RuntimeKind::Persistent,
+            chaos_seed: Some(7),
+            barrier_deadline_secs: Some(2.0),
             ..Default::default()
         };
         run_demo(&cfg).unwrap();

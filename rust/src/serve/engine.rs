@@ -28,8 +28,18 @@ use crate::sparse::{
     SharedKvPool,
 };
 use crate::tensor::Tensor;
+use crate::util::sync;
 
 use super::model::TokenModel;
+
+/// Sentinel for a session whose pending token is unknown — an adopted or
+/// quarantined session rebuilt after a worker fault, where the
+/// last-computed logits died with the worker. `resume_session` recomputes
+/// the real pending token from the transcript; the bit-identity
+/// `debug_assert` is skipped (there is nothing to compare against), but
+/// the recomputed value IS the value a fault-free run would hold, because
+/// it is a pure function of the re-ingested tokens.
+pub const PENDING_UNKNOWN: i32 = i32::MIN;
 
 /// Per-request serving statistics.
 #[derive(Clone, Debug, Default)]
@@ -138,6 +148,22 @@ impl DecodeSession {
         self.backend.name()
     }
 
+    /// The tokens this session ingested itself (whole prompt, or the
+    /// post-fork continuation) — what a recovery ledger must mirror to
+    /// rebuild the session if its worker dies with the struct.
+    pub fn own_prompt(&self) -> &[i32] {
+        &self.own_prompt
+    }
+
+    /// Context length at fork time (0 = not forked).
+    pub fn fork_ctx(&self) -> usize {
+        self.fork_ctx
+    }
+
+    pub fn max_new(&self) -> usize {
+        self.max_new
+    }
+
     /// Tag this session's future pool allocations with its decode
     /// shard's arena (paged backend; a locality no-op elsewhere). Never
     /// changes any served token — block ids are invisible to the math.
@@ -186,7 +212,9 @@ impl<M: TokenModel> ServeEngine<M> {
     /// backends) — what the continuous scheduler admits against.
     pub fn pool_status(&self) -> Option<PoolStatus> {
         self.pool.as_ref().map(|pool| {
-            let p = pool.read().expect("paged pool lock");
+            // poison-resistant: a worker panicking mid-allocation must not
+            // take the whole scheduler's pool accounting down with it
+            let p = sync::read(pool);
             PoolStatus {
                 used_blocks: p.used_blocks(),
                 capacity_blocks: p.capacity_blocks(),
@@ -428,6 +456,54 @@ impl<M: TokenModel> ServeEngine<M> {
         Ok(freed)
     }
 
+    /// Force-preempt a session recovered from a faulted worker: release
+    /// whatever pool blocks its backend can still release (best-effort —
+    /// a private-cache backend frees nothing here; its caches are
+    /// replaced wholesale at resume) and mark it evicted so the only way
+    /// forward is `resume_session`'s re-prefill. With
+    /// `pending_valid == false` (the session's own step panicked, so its
+    /// in-memory pending token may be mid-mutation garbage) the pending
+    /// token is reset to [`PENDING_UNKNOWN`] and recomputed at resume
+    /// from the transcript, which a panic cannot corrupt: tokens are
+    /// appended only after a fully completed step.
+    pub fn quarantine_session(&self, s: &mut DecodeSession, pending_valid: bool) -> usize {
+        let freed = s.backend.evict().unwrap_or(0);
+        s.evicted = true;
+        if !pending_valid {
+            s.pending = PENDING_UNKNOWN;
+        }
+        freed
+    }
+
+    /// Rebuild a session lost with a dead worker from its ledger
+    /// transcript: the identity (own prompt, fork point, budget) plus the
+    /// tokens generated so far. The result is evicted-with-no-blocks
+    /// (placeholder backend, pending unknown); `resume_session` turns it
+    /// back into a live session bit-identical to one that never died —
+    /// same argument as any other re-prefill resume, the transcript is
+    /// the whole state. Per-session latency stats die with the worker;
+    /// `queue_secs` survives on the scheduler side.
+    pub fn adopt_session(
+        &self,
+        own_prompt: Vec<i32>,
+        fork_ctx: usize,
+        generated: Vec<i32>,
+        max_new: usize,
+    ) -> DecodeSession {
+        DecodeSession {
+            backend: self.fresh_backend(),
+            prompt_len: fork_ctx + own_prompt.len(),
+            own_prompt,
+            fork_ctx,
+            evicted: true,
+            max_seq: self.cfg.max_seq,
+            max_new,
+            pending: PENDING_UNKNOWN,
+            generated,
+            stats: GenStats::default(),
+        }
+    }
+
     /// Rebuild an evicted session's incremental state by re-ingesting
     /// `own_prompt ++ generated` through the same prefill/fork-decode
     /// path it was originally built with. A forked session re-forks
@@ -466,7 +542,9 @@ impl<M: TokenModel> ServeEngine<M> {
             s.backend = backend;
             pending
         };
-        debug_assert_eq!(pending, s.pending, "re-prefill resume must be bit-identical");
+        if s.pending != PENDING_UNKNOWN {
+            debug_assert_eq!(pending, s.pending, "re-prefill resume must be bit-identical");
+        }
         s.pending = pending;
         s.evicted = false;
         s.stats.resumes += 1;
@@ -695,6 +773,60 @@ mod tests {
             }
         }
         assert_eq!(got, want, "resumed fork diverged from its never-evicted twin");
+    }
+
+    #[test]
+    fn quarantined_session_resumes_bit_identically() {
+        let e = engine(BackendKind::Paged);
+        let prompt: Vec<i32> = (0..30).map(|i| (i * 7) % 48).collect();
+        let (want, _) = e.generate(&prompt, 8).unwrap();
+        let mut s = e.start(&prompt, 8).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            got.push(e.step(&mut s).unwrap());
+        }
+        // pending treated as mid-mutation garbage: quarantine wipes it and
+        // resume recomputes it from the transcript
+        let freed = e.quarantine_session(&mut s, false);
+        assert!(freed > 0);
+        assert!(s.evicted());
+        e.resume_session(&mut s, None).unwrap();
+        while let Some(t) = e.step(&mut s) {
+            got.push(t);
+        }
+        assert_eq!(got, want, "quarantine + resume changed the served tokens");
+    }
+
+    #[test]
+    fn quarantine_works_on_private_backends() {
+        let e = engine(BackendKind::CachedSparse);
+        let prompt: Vec<i32> = (0..20).collect();
+        let (want, _) = e.generate(&prompt, 6).unwrap();
+        let mut s = e.start(&prompt, 6).unwrap();
+        let mut got = vec![e.step(&mut s).unwrap()];
+        assert_eq!(e.quarantine_session(&mut s, false), 0, "private caches free no pool blocks");
+        e.resume_session(&mut s, None).unwrap();
+        while let Some(t) = e.step(&mut s) {
+            got.push(t);
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn adopted_session_resumes_from_transcript_alone() {
+        let e = engine(BackendKind::Paged);
+        let prompt: Vec<i32> = (0..25).map(|i| (i * 5) % 48).collect();
+        let (want, _) = e.generate(&prompt, 7).unwrap();
+        // a fault-free twin ran 4 steps before its worker died with the
+        // struct, leaving only the ledger transcript
+        let mut adopted = e.adopt_session(prompt.clone(), 0, want[..4].to_vec(), 7);
+        assert!(adopted.evicted());
+        e.resume_session(&mut adopted, None).unwrap();
+        let mut got = want[..4].to_vec();
+        while let Some(t) = e.step(&mut adopted) {
+            got.push(t);
+        }
+        assert_eq!(got, want, "adoption lost or corrupted transcript state");
     }
 
     #[test]

@@ -1,0 +1,88 @@
+//! Typed serving-runtime errors and fault accounting.
+//!
+//! `ServeError` replaces the `.expect("decode worker hung up")`-style
+//! abort paths in `serve::runtime`: a worker fault becomes a value the
+//! scheduler can match on and recover from (re-homing the dead shard's
+//! sessions through the eviction/resume machinery) instead of a
+//! process-wide panic. `FaultStats` surfaces what recovery did inside
+//! `SchedStats`.
+
+use std::fmt;
+
+/// A fault in the persistent decode runtime, reported to the caller so
+/// it can initiate recovery instead of aborting.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// A worker's step loop panicked; the panic payload (if it was a
+    /// string) is preserved in `message`.
+    WorkerPanicked { worker: usize, message: String },
+    /// A worker's channel disconnected without a panic report — the
+    /// thread died in a way that skipped the backstop handler.
+    WorkerDisconnected { worker: usize },
+    /// A worker missed the per-tick barrier deadline
+    /// (`SchedulerCfg::barrier_deadline_secs`): stalled, livelocked, or
+    /// wedged on a lock.
+    BarrierTimeout { worker: usize, tick: u64, deadline_secs: f64 },
+    /// Every decode worker is dead; the scheduler cannot make progress.
+    AllWorkersDead,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::WorkerPanicked { worker, message } => {
+                write!(f, "decode worker {worker} panicked: {message}")
+            }
+            ServeError::WorkerDisconnected { worker } => {
+                write!(f, "decode worker {worker} disconnected without a panic report")
+            }
+            ServeError::BarrierTimeout { worker, tick, deadline_secs } => write!(
+                f,
+                "decode worker {worker} missed the tick-{tick} barrier deadline ({deadline_secs}s)"
+            ),
+            ServeError::AllWorkersDead => write!(f, "all decode workers are dead"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Fault/recovery counters, surfaced in `SchedStats::fault`.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct FaultStats {
+    /// Workers declared dead (panic report, disconnect, or barrier
+    /// timeout).
+    pub worker_deaths: usize,
+    /// Sessions that lost their home shard and were re-homed to a
+    /// surviving worker via the eviction/resume path.
+    pub rehomed_sessions: usize,
+    /// Barrier deadlines missed (each also counts one worker death).
+    pub barrier_timeouts: usize,
+    /// Re-prefill seconds spent resuming re-homed sessions (a subset of
+    /// `EvictionStats::reprefill_secs`).
+    pub recovery_reprefill_secs: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_worker() {
+        let e = ServeError::WorkerPanicked { worker: 3, message: "chaos".into() };
+        let s = e.to_string();
+        assert!(s.contains("worker 3") && s.contains("chaos"), "{s}");
+        assert!(ServeError::AllWorkersDead.to_string().contains("all decode workers"));
+        let t = ServeError::BarrierTimeout { worker: 1, tick: 9, deadline_secs: 0.5 }.to_string();
+        assert!(t.contains("worker 1") && t.contains("tick-9"), "{t}");
+    }
+
+    #[test]
+    fn errors_convert_to_anyhow() {
+        fn fails() -> anyhow::Result<()> {
+            Err(ServeError::WorkerDisconnected { worker: 0 })?;
+            Ok(())
+        }
+        assert!(fails().unwrap_err().to_string().contains("worker 0"));
+    }
+}

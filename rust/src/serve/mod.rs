@@ -18,14 +18,20 @@
 //!   core-pinned workers fed by bounded channels, with work stealing
 //!   between shards ([`RuntimeKind`] selects it vs the legacy per-tick
 //!   scoped-thread loop; served tokens are bitwise identical either way);
+//! - `error` / `chaos`: typed [`ServeError`] worker faults +
+//!   [`FaultStats`] recovery accounting, and the seeded [`FaultPlan`]
+//!   chaos-injection harness that proves a dead decode worker degrades
+//!   into the eviction/resume path bit-identically;
 //! - `demo`: the shared arrival-stream demo driver behind `repro serve`
 //!   and `examples/serve_continuous.rs`;
 //! - `artifact` (feature `xla`): the AOT-graph generation path through
 //!   PJRT (MoBA-prefill / full-decode logits artifacts).
 
 pub mod batcher;
+pub mod chaos;
 pub mod demo;
 pub mod engine;
+pub mod error;
 pub mod model;
 pub mod runtime;
 pub mod scheduler;
@@ -34,8 +40,10 @@ pub mod scheduler;
 pub mod artifact;
 
 pub use batcher::{Batcher, BatcherCfg, Request, RequestResult};
+pub use chaos::{Fault, FaultKind, FaultPlan};
 pub use demo::{run_demo, DemoCfg};
 pub use engine::{DecodeSession, GenStats, PoolStatus, ServeCfg, ServeEngine};
+pub use error::{FaultStats, ServeError};
 pub use model::{TokenModel, ToyModel};
 pub use runtime::{pin_from_env, pin_supported, steal_from_env, RuntimeKind};
 pub use scheduler::{ContinuousScheduler, EvictionStats, SchedStats, SchedulerCfg, WorkerStats};

@@ -25,17 +25,44 @@
 //! reporting. So which thread stepped a session, and in which order, is
 //! invisible in every session's bytes and in every scheduler decision.
 //! `tests/thread_invariance.rs` and `tests/scheduler_fuzz.rs` pin this.
+//!
+//! **Supervision / fault isolation** (see `serve/README.md` § Failure
+//! model & recovery): a worker fault must degrade, never abort. Two
+//! `catch_unwind` layers enforce that:
+//!
+//! - a *narrow* catch around each `ServeEngine::step` keeps the steal
+//!   protocol alive through a panicking decode — the session is flagged
+//!   [`Live::poisoned`], still returns to its home done-box (no condvar
+//!   deadlock across workers), and is shipped back in
+//!   [`StepReport::orphans`] for the scheduler to quarantine and resume;
+//! - a *backstop* catch around the whole command loop turns any other
+//!   panic into one final [`StepReport`] carrying the panic message and
+//!   every session the worker still held, then lets the thread die.
+//!
+//! The scheduler-side [`DecodeRuntime`] detects deaths three ways — a
+//! panic report, a closed channel, or a missed `recv_timeout` barrier
+//! deadline — marks the shard dead (the shared flag makes a stalled
+//! zombie exit instead of re-entering the steal protocol), scavenges any
+//! intact sessions stranded in the dead shard's deque/done-box, and
+//! hands a [`WorkerDeath`] to the scheduler, which re-homes the sessions
+//! through the eviction/resume machinery. Injected faults
+//! (`serve::chaos`) fire at the top of `Step` handling — before any
+//! session is published — so chaos runs exercise exactly these paths.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender, SyncSender};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use super::chaos::{self, FaultKind, FaultPlan};
 use super::engine::{DecodeSession, ServeEngine};
+use super::error::ServeError;
 use super::model::TokenModel;
+use crate::util::sync;
 
 /// Which dispatch machinery steps the in-flight decode batch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -139,6 +166,14 @@ pub(crate) struct Live {
     /// owning shard: stepped results always return here, stealing never
     /// migrates ownership — that is what keeps the merge deterministic
     pub(crate) home: usize,
+    /// a decode step on this session panicked (caught by the narrow
+    /// per-step handler): its in-memory state may be mid-mutation, so it
+    /// must be quarantined + resumed via re-prefill before stepping again
+    pub(crate) poisoned: bool,
+    /// this session lost its home shard to a worker death and is being
+    /// re-homed; its next resume is charged to
+    /// `FaultStats::recovery_reprefill_secs`
+    pub(crate) rehomed: bool,
     pub(crate) session: DecodeSession,
 }
 
@@ -152,6 +187,11 @@ pub(crate) struct SessionMeta {
     pub(crate) reserve: usize,
     /// `ServeEngine::freeable_blocks` — the eviction feasibility input
     pub(crate) freeable: usize,
+    /// generated-token count after this step — with `last_token`, what
+    /// the scheduler's recovery ledger needs to mirror the transcript
+    pub(crate) out_len: usize,
+    /// the most recent generated token (0 when none yet)
+    pub(crate) last_token: i32,
 }
 
 /// One worker's answer to a step command. The buffers round-trip through
@@ -171,6 +211,13 @@ pub(crate) struct StepReport {
     pub(crate) stolen_steps: usize,
     /// sessions this worker owned when the step command arrived
     pub(crate) owned: usize,
+    /// set by the backstop handler when the worker's loop panicked —
+    /// the worker is dead after a report carrying this
+    pub(crate) panic: Option<String>,
+    /// sessions that need a new home: every survivor of a dying worker,
+    /// plus any session whose own step panicked (poisoned) on a healthy
+    /// worker
+    pub(crate) orphans: Vec<Live>,
 }
 
 impl StepReport {
@@ -182,6 +229,8 @@ impl StepReport {
         self.steals = 0;
         self.stolen_steps = 0;
         self.owned = 0;
+        self.panic = None;
+        self.orphans.clear();
     }
 }
 
@@ -197,13 +246,24 @@ pub(crate) enum ToWorker {
     Shutdown,
 }
 
-/// Worker → scheduler replies (one shared channel; the scheduler's
-/// command flow guarantees replies are never interleaved across kinds:
-/// evictions are round-trips on a quiet channel, step replies are
-/// counted exactly).
+/// Worker → scheduler replies (one shared channel). Every variant names
+/// its sender so replies from a worker already declared dead — a zombie
+/// waking from a stall, a straggler finishing after a barrier timeout —
+/// are recognized and dropped instead of corrupting the protocol.
 pub(crate) enum FromWorker {
-    Evicted { live: Box<Live>, freed: Result<usize> },
+    Evicted { worker: usize, live: Box<Live>, freed: Result<usize> },
     StepDone { worker: usize, report: StepReport },
+}
+
+/// A worker death observed by the runtime, handed to the scheduler for
+/// recovery. `orphans` holds every session whose struct survived (shipped
+/// by the backstop handler, or scavenged from the dead shard's steal
+/// state); sessions lost with the thread must be rebuilt from the
+/// scheduler's recovery ledger.
+pub(crate) struct WorkerDeath {
+    pub(crate) worker: usize,
+    pub(crate) error: ServeError,
+    pub(crate) orphans: Vec<Live>,
 }
 
 /// Cross-shard work stealing state: a deque + done-box per shard.
@@ -218,6 +278,10 @@ struct StealState {
     /// the source of truth when actually popping)
     qlen: Vec<AtomicUsize>,
     done: Vec<(Mutex<Vec<Live>>, Condvar)>,
+    /// set by the scheduler when it declares a worker dead: the worker
+    /// must exit at its next checkpoint instead of touching shared
+    /// state, and no one steals from its deque anymore
+    dead: Vec<AtomicBool>,
 }
 
 impl StealState {
@@ -226,6 +290,7 @@ impl StealState {
             deques: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
             qlen: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
             done: (0..shards).map(|_| (Mutex::new(Vec::new()), Condvar::new())).collect(),
+            dead: (0..shards).map(|_| AtomicBool::new(false)).collect(),
         }
     }
 
@@ -233,23 +298,37 @@ impl StealState {
         self.deques.len()
     }
 
+    fn is_dead(&self, w: usize) -> bool {
+        self.dead[w].load(Ordering::SeqCst)
+    }
+
     /// Return a stepped session to its home shard's done box.
     fn finish(&self, live: Live) {
         let (lock, cv) = &self.done[live.home];
-        lock.lock().expect("done box").push(live);
+        sync::lock(lock).push(live);
         cv.notify_one();
     }
 }
 
+/// One supervised decode step. A panic inside the engine is caught HERE
+/// — narrowly — so the steal protocol always completes: the session
+/// still returns home (no cross-worker done-box deadlock) flagged
+/// poisoned, and the scheduler quarantines + re-prefills it.
 fn step_one<M: TokenModel>(engine: &ServeEngine<M>, live: &mut Live, tick: u64) -> bool {
     live.last_stepped = tick;
-    engine.step(&mut live.session).is_some()
+    match catch_unwind(AssertUnwindSafe(|| engine.step(&mut live.session))) {
+        Ok(emitted) => emitted.is_some(),
+        Err(_) => {
+            live.poisoned = true;
+            false
+        }
+    }
 }
 
 /// The stealing step: publish owned sessions, drain own deque front to
-/// back, then steal off the back of the most-loaded other shard (lowest
-/// index on qlen ties) until every deque this worker can see is dry,
-/// and finally wait for all owned sessions to come home.
+/// back, then steal off the back of the most-loaded other live shard
+/// (lowest index on qlen ties) until every deque this worker can see is
+/// dry, and finally wait for all owned sessions to come home.
 fn step_stealing<M: TokenModel>(
     w: usize,
     engine: &ServeEngine<M>,
@@ -260,14 +339,14 @@ fn step_stealing<M: TokenModel>(
 ) {
     let expected = owned.len();
     {
-        let mut dq = shared.deques[w].lock().expect("steal deque");
+        let mut dq = sync::lock(&shared.deques[w]);
         dq.extend(owned.drain(..));
         shared.qlen[w].store(dq.len(), Ordering::SeqCst);
     }
     loop {
         // own work first
         let mine = {
-            let mut dq = shared.deques[w].lock().expect("steal deque");
+            let mut dq = sync::lock(&shared.deques[w]);
             let live = dq.pop_front();
             shared.qlen[w].store(dq.len(), Ordering::SeqCst);
             live
@@ -279,21 +358,23 @@ fn step_stealing<M: TokenModel>(
             shared.finish(live);
             continue;
         }
-        // own deque dry: pick the most-loaded other shard (ties: lowest
-        // index). Opportunistic — a shard that publishes after this scan
-        // simply isn't stolen from this round.
+        // own deque dry: pick the most-loaded other live shard (ties:
+        // lowest index). Opportunistic — a shard that publishes after
+        // this scan simply isn't stolen from this round; a dead shard's
+        // stranded sessions belong to the scheduler's recovery, not to
+        // thieves.
         let victim = shared
             .qlen
             .iter()
             .enumerate()
-            .filter(|&(i, _)| i != w)
+            .filter(|&(i, _)| i != w && !shared.is_dead(i))
             .map(|(i, n)| (n.load(Ordering::SeqCst), i))
             .filter(|&(n, _)| n > 0)
             .max_by_key(|&(n, i)| (n, std::cmp::Reverse(i)))
             .map(|(_, i)| i);
         let Some(v) = victim else { break };
         let stolen = {
-            let mut dq = shared.deques[v].lock().expect("steal deque");
+            let mut dq = sync::lock(&shared.deques[v]);
             let live = dq.pop_back();
             shared.qlen[v].store(dq.len(), Ordering::SeqCst);
             live
@@ -308,33 +389,64 @@ fn step_stealing<M: TokenModel>(
         }
         // a raced-away pop rescans: qlen was refreshed under the lock
     }
-    // collect every owned session back (stepped here or by thieves)
+    // collect every owned session back (stepped here or by thieves). The
+    // wait wakes periodically to check the dead flag: if the scheduler
+    // gave up on this worker (or on a thief holding one of its sessions)
+    // it panics out to the backstop instead of blocking forever — that
+    // is what keeps `Drop`'s join from hanging on a wedged barrier.
     let (lock, cv) = &shared.done[w];
-    let mut done = lock.lock().expect("done box");
+    let mut done = sync::lock(lock);
     loop {
         owned.extend(done.drain(..));
         if owned.len() >= expected {
             break;
         }
-        done = cv.wait(done).expect("done box");
+        if shared.is_dead(w) {
+            drop(done);
+            panic!("worker {w} declared dead while waiting on its done box (tick {tick})");
+        }
+        done = cv
+            .wait_timeout(done, Duration::from_millis(50))
+            .unwrap_or_else(|e| e.into_inner())
+            .0;
     }
     debug_assert_eq!(owned.len(), expected, "lost or duplicated a session");
 }
 
-/// Worker thread body: own a shard of sessions, serve commands until
-/// shutdown. Sessions die here on shutdown, releasing their pool blocks
-/// through the backend's `Drop`.
-fn run_worker<M: TokenModel + Send + Sync + 'static>(
+/// Stringify a panic payload for the death report.
+fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
+    match payload.downcast_ref::<&str>() {
+        Some(s) => (*s).to_string(),
+        None => match payload.downcast_ref::<String>() {
+            Some(s) => s.clone(),
+            None => "non-string panic payload".to_string(),
+        },
+    }
+}
+
+/// The worker's command loop. Panics unwind to the backstop in
+/// [`run_worker`], which ships `owned` home — which is why `owned` lives
+/// outside this function.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop<M: TokenModel>(
     w: usize,
-    engine: Arc<ServeEngine<M>>,
-    rx: Receiver<ToWorker>,
-    tx: Sender<FromWorker>,
-    shared: Arc<StealState>,
+    engine: &ServeEngine<M>,
+    rx: &Receiver<ToWorker>,
+    tx: &Sender<FromWorker>,
+    shared: &StealState,
     steal: bool,
+    chaos: Option<&FaultPlan>,
+    owned: &mut Vec<Live>,
 ) {
     let bounded = engine.pool_status().is_some_and(|p| p.capacity_blocks.is_some());
-    let mut owned: Vec<Live> = Vec::new();
     while let Ok(msg) = rx.recv() {
+        if shared.is_dead(w) {
+            // declared dead while this command sat in the queue (e.g. a
+            // stall outlived the barrier deadline): exit without touching
+            // the steal state — our sessions were already rebuilt
+            owned.clear();
+            return;
+        }
         match msg {
             ToWorker::Admit(live) => owned.push(*live),
             ToWorker::Evict(id) => {
@@ -342,19 +454,38 @@ fn run_worker<M: TokenModel + Send + Sync + 'static>(
                     .iter()
                     .position(|l| l.id == id)
                     .expect("evict command for a session this worker does not own");
-                let mut live = owned.remove(idx);
-                let freed = engine.evict_session(&mut live.session);
-                let _ = tx.send(FromWorker::Evicted { live: Box::new(live), freed });
+                // evict in place so a panicking eviction still leaves the
+                // session in `owned` for the backstop to ship home
+                let freed = engine.evict_session(&mut owned[idx].session);
+                let live = owned.remove(idx);
+                let _ =
+                    tx.send(FromWorker::Evicted { worker: w, live: Box::new(live), freed });
             }
             ToWorker::Step { tick, mut report } => {
+                // chaos fires HERE — the safe point: nothing published to
+                // the steal deques yet, every owned session intact, so an
+                // injected panic exercises the real backstop + recovery
+                // path without wedging other workers
+                if let Some(fault) = chaos.and_then(|p| p.fault_for(w, tick)) {
+                    match fault.kind {
+                        FaultKind::Stall { millis } => {
+                            std::thread::sleep(Duration::from_millis(millis));
+                            if shared.is_dead(w) {
+                                owned.clear();
+                                return;
+                            }
+                        }
+                        kind => panic!("{}", chaos::panic_message(kind, w, tick)),
+                    }
+                }
                 report.clear();
                 report.owned = owned.len();
                 let t0 = Instant::now();
                 if steal && shared.shards() > 1 {
-                    step_stealing(w, engine.as_ref(), &shared, &mut owned, &mut report, tick);
+                    step_stealing(w, engine, shared, owned, &mut report, tick);
                 } else {
                     for live in owned.iter_mut() {
-                        if step_one(engine.as_ref(), live, tick) {
+                        if step_one(engine, live, tick) {
                             report.steps += 1;
                         }
                     }
@@ -365,13 +496,16 @@ fn run_worker<M: TokenModel + Send + Sync + 'static>(
                 owned.sort_by_key(|l| l.id);
                 let mut i = 0;
                 while i < owned.len() {
-                    if owned[i].session.finished() {
+                    if owned[i].poisoned {
+                        // its step panicked: hand it back for quarantine
+                        report.orphans.push(owned.remove(i));
+                    } else if owned[i].session.finished() {
                         report.finished.push(owned.remove(i));
                     } else {
                         i += 1;
                     }
                 }
-                for live in &owned {
+                for live in owned.iter() {
                     report.metas.push(SessionMeta {
                         id: live.id,
                         reserve: if bounded {
@@ -380,30 +514,76 @@ fn run_worker<M: TokenModel + Send + Sync + 'static>(
                             0
                         },
                         freeable: engine.freeable_blocks(&live.session),
+                        out_len: live.session.output().len(),
+                        last_token: live.session.output().last().copied().unwrap_or(0),
                     });
                 }
                 if tx.send(FromWorker::StepDone { worker: w, report }).is_err() {
-                    break; // scheduler gone
+                    return; // scheduler gone
                 }
             }
-            ToWorker::Shutdown => break,
+            ToWorker::Shutdown => return,
         }
+    }
+}
+
+/// Worker thread body: the command loop wrapped in the backstop
+/// `catch_unwind`. On a panic, one final report ships the panic message
+/// and every still-held session back to the scheduler; on a clean exit,
+/// sessions die here, releasing their pool blocks through the backend's
+/// `Drop`.
+fn run_worker<M: TokenModel + Send + Sync + 'static>(
+    w: usize,
+    engine: Arc<ServeEngine<M>>,
+    rx: Receiver<ToWorker>,
+    tx: Sender<FromWorker>,
+    shared: Arc<StealState>,
+    steal: bool,
+    chaos: Option<FaultPlan>,
+) {
+    let mut owned: Vec<Live> = Vec::new();
+    let res = catch_unwind(AssertUnwindSafe(|| {
+        worker_loop(w, engine.as_ref(), &rx, &tx, shared.as_ref(), steal, chaos.as_ref(), &mut owned)
+    }));
+    if let Err(payload) = res {
+        let report = StepReport {
+            panic: Some(panic_text(payload)),
+            orphans: std::mem::take(&mut owned),
+            ..Default::default()
+        };
+        let _ = tx.send(FromWorker::StepDone { worker: w, report });
     }
 }
 
 /// Handle to the persistent worker fleet: per-worker bounded command
 /// channels, the shared reply channel, and the recycled step-report
-/// buffers. Dropping it shuts the workers down and joins them.
+/// buffers. Worker faults surface as [`WorkerDeath`]s (drained via
+/// `take_deaths`) instead of aborting; dead shards keep their slots but
+/// accept no further commands. Dropping the handle closes every channel
+/// and joins the workers.
 pub(crate) struct DecodeRuntime {
-    to: Vec<SyncSender<ToWorker>>,
+    /// command senders; `None` = worker declared dead (closing the
+    /// channel is what makes a stalled zombie drain and exit)
+    to: Vec<Option<SyncSender<ToWorker>>>,
     from: Receiver<FromWorker>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    shared: Arc<StealState>,
     /// per-worker report buffers, round-tripped through the channels
     spare: Vec<Option<StepReport>>,
     /// outstanding sends per worker channel since the last barrier — an
     /// upper bound on actual queue depth, tracked for `queue_depth_hwm`
     depth: Vec<usize>,
     depth_hwm: Vec<usize>,
+    /// scheduler-side view of `StealState::dead`
+    dead: Vec<bool>,
+    /// step-barrier reply bookkeeping, reused every tick
+    awaiting: Vec<bool>,
+    /// deaths observed but not yet handed to the scheduler
+    deaths: Vec<WorkerDeath>,
+    /// how long `step_all` waits for a worker's reply before declaring
+    /// it dead (`None` = wait forever; panics still report immediately
+    /// through the backstop — the deadline only catches stalls)
+    deadline: Option<Duration>,
 }
 
 impl DecodeRuntime {
@@ -413,6 +593,8 @@ impl DecodeRuntime {
         steal: bool,
         pin: bool,
         chan_cap: usize,
+        chaos: Option<FaultPlan>,
+        barrier_deadline: Option<Duration>,
     ) -> DecodeRuntime {
         assert!(workers > 0);
         let shared = Arc::new(StealState::new(workers));
@@ -425,25 +607,31 @@ impl DecodeRuntime {
             let engine = engine.clone();
             let from = from_tx.clone();
             let shared = shared.clone();
+            let chaos = chaos.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("moba-decode-{w}"))
                 .spawn(move || {
                     if pin {
                         pin_current_thread(w % ncores);
                     }
-                    run_worker(w, engine, rx, from, shared, steal);
+                    run_worker(w, engine, rx, from, shared, steal, chaos);
                 })
                 .expect("spawn decode worker");
-            to.push(tx);
+            to.push(Some(tx));
             handles.push(handle);
         }
         DecodeRuntime {
             to,
             from: from_rx,
             handles,
+            shared,
             spare: (0..workers).map(|_| Some(StepReport::default())).collect(),
             depth: vec![0; workers],
             depth_hwm: vec![0; workers],
+            dead: vec![false; workers],
+            awaiting: vec![false; workers],
+            deaths: Vec::new(),
+            deadline: barrier_deadline,
         }
     }
 
@@ -451,52 +639,220 @@ impl DecodeRuntime {
         self.to.len()
     }
 
+    /// Whether worker `w` is still serving commands.
+    pub(crate) fn alive(&self, w: usize) -> bool {
+        !self.dead[w]
+    }
+
+    pub(crate) fn alive_count(&self) -> usize {
+        self.dead.iter().filter(|&&d| !d).count()
+    }
+
+    /// Deaths observed since the last call — the scheduler's recovery
+    /// input. Orphans carry every session struct the runtime could save.
+    pub(crate) fn take_deaths(&mut self) -> Vec<WorkerDeath> {
+        std::mem::take(&mut self.deaths)
+    }
+
+    /// Declare `worker` dead: close its channel (so a zombie drains and
+    /// exits), raise the shared flag (so it exits at its next checkpoint
+    /// and no one steals from it), scavenge intact sessions stranded in
+    /// its steal state, and queue the death for the scheduler.
+    fn mark_dead(&mut self, worker: usize, error: ServeError, mut orphans: Vec<Live>) {
+        if std::mem::replace(&mut self.dead[worker], true) {
+            // already dead — keep any late-surfacing structs for recovery
+            if !orphans.is_empty() {
+                match self.deaths.iter_mut().find(|d| d.worker == worker) {
+                    Some(d) => d.orphans.append(&mut orphans),
+                    None => self.deaths.push(WorkerDeath { worker, error, orphans }),
+                }
+            }
+            return;
+        }
+        self.shared.dead[worker].store(true, Ordering::SeqCst);
+        self.to[worker] = None;
+        {
+            let mut dq = sync::lock(&self.shared.deques[worker]);
+            orphans.extend(dq.drain(..));
+            self.shared.qlen[worker].store(0, Ordering::SeqCst);
+        }
+        orphans.extend(sync::lock(&self.shared.done[worker].0).drain(..));
+        self.deaths.push(WorkerDeath { worker, error, orphans });
+    }
+
     fn note_send(&mut self, shard: usize) {
         self.depth[shard] += 1;
         self.depth_hwm[shard] = self.depth_hwm[shard].max(self.depth[shard]);
     }
 
-    /// Hand a session to its home shard.
-    pub(crate) fn admit(&mut self, shard: usize, live: Live) {
+    /// Hand a session to its home shard. On failure (the worker died
+    /// without the runtime noticing yet) the session comes back with the
+    /// error so the caller can re-place it.
+    pub(crate) fn admit(
+        &mut self,
+        shard: usize,
+        live: Live,
+    ) -> std::result::Result<(), Box<(Live, ServeError)>> {
         debug_assert_eq!(live.home, shard);
-        self.note_send(shard);
-        self.to[shard].send(ToWorker::Admit(Box::new(live))).expect("decode worker hung up");
+        let Some(tx) = &self.to[shard] else {
+            return Err(Box::new((live, ServeError::WorkerDisconnected { worker: shard })));
+        };
+        let sent = tx.send(ToWorker::Admit(Box::new(live)));
+        match sent {
+            Ok(()) => {
+                self.note_send(shard);
+                Ok(())
+            }
+            Err(mpsc::SendError(msg)) => {
+                let err = ServeError::WorkerDisconnected { worker: shard };
+                self.mark_dead(shard, err.clone(), Vec::new());
+                let ToWorker::Admit(live) = msg else {
+                    unreachable!("admit send bounced a different message")
+                };
+                Err(Box::new((*live, err)))
+            }
+        }
     }
 
     /// Synchronous eviction round-trip: the identified session comes back
     /// with its pool blocks released. Only called between step barriers,
-    /// so the reply channel holds nothing else.
-    pub(crate) fn evict(&mut self, shard: usize, id: u64) -> (Live, Result<usize>) {
+    /// so the only other traffic possible on the reply channel is a
+    /// death report or a zombie's stale reply — both handled here.
+    pub(crate) fn evict(
+        &mut self,
+        shard: usize,
+        id: u64,
+    ) -> std::result::Result<(Live, Result<usize>), Box<ServeError>> {
+        let Some(tx) = &self.to[shard] else {
+            return Err(Box::new(ServeError::WorkerDisconnected { worker: shard }));
+        };
+        let sent = tx.send(ToWorker::Evict(id));
+        if sent.is_err() {
+            let err = ServeError::WorkerDisconnected { worker: shard };
+            self.mark_dead(shard, err.clone(), Vec::new());
+            return Err(Box::new(err));
+        }
         self.note_send(shard);
-        self.to[shard].send(ToWorker::Evict(id)).expect("decode worker hung up");
-        match self.from.recv().expect("decode worker hung up") {
-            FromWorker::Evicted { live, freed } => {
-                self.depth[shard] = 0;
-                (*live, freed)
-            }
-            FromWorker::StepDone { .. } => {
-                unreachable!("step reply on a quiet channel during eviction")
+        loop {
+            match self.from.recv() {
+                Ok(FromWorker::Evicted { worker, live, freed }) => {
+                    if self.dead[worker] {
+                        continue; // zombie answering an old command: drop
+                    }
+                    debug_assert_eq!(worker, shard, "eviction reply from the wrong worker");
+                    self.depth[shard] = 0;
+                    return Ok((*live, freed));
+                }
+                Ok(FromWorker::StepDone { worker, mut report }) => {
+                    if self.dead[worker] {
+                        continue; // straggler finishing a timed-out barrier
+                    }
+                    if let Some(message) = report.panic.take() {
+                        // a worker dying outside a barrier still sends one
+                        // final report through its backstop
+                        let orphans = std::mem::take(&mut report.orphans);
+                        let err = ServeError::WorkerPanicked { worker, message };
+                        self.mark_dead(worker, err.clone(), orphans);
+                        self.spare[worker] = Some(report);
+                        if worker == shard {
+                            return Err(Box::new(err));
+                        }
+                        continue;
+                    }
+                    unreachable!("step reply on a quiet channel during eviction");
+                }
+                Err(_) => {
+                    let err = ServeError::WorkerDisconnected { worker: shard };
+                    self.mark_dead(shard, err.clone(), Vec::new());
+                    return Err(Box::new(err));
+                }
             }
         }
     }
 
-    /// Step every shard once and collect all reports — the per-tick
+    /// Step every live shard once and collect all reports — the per-tick
     /// barrier. Reports land back in `spare` (read them via
-    /// `reports_mut`); their buffers are reused next tick.
+    /// `report_mut`); their buffers are reused next tick. Workers that
+    /// report a panic, close their channel, or (with a configured
+    /// deadline) fail to reply in time are declared dead; the deaths are
+    /// queued for `take_deaths`, and the barrier completes with the
+    /// survivors.
     pub(crate) fn step_all(&mut self, tick: u64) {
         let n = self.to.len();
+        self.awaiting.fill(false);
+        let mut expected = 0usize;
         for w in 0..n {
-            let report = self.spare[w].take().expect("report buffer in flight");
+            if self.to[w].is_none() {
+                continue;
+            }
+            let report = self.spare[w].take().unwrap_or_default();
             self.depth[w] += 1;
             self.depth_hwm[w] = self.depth_hwm[w].max(self.depth[w]);
-            self.to[w].send(ToWorker::Step { tick, report }).expect("decode worker hung up");
+            let sent = match &self.to[w] {
+                Some(tx) => tx.send(ToWorker::Step { tick, report }).is_ok(),
+                None => false,
+            };
+            if sent {
+                self.awaiting[w] = true;
+                expected += 1;
+            } else {
+                self.mark_dead(w, ServeError::WorkerDisconnected { worker: w }, Vec::new());
+            }
         }
-        for _ in 0..n {
-            match self.from.recv().expect("decode worker hung up") {
-                FromWorker::StepDone { worker, report } => {
-                    self.spare[worker] = Some(report);
+        let deadline = self.deadline.map(|d| Instant::now() + d);
+        let mut received = 0usize;
+        while received < expected {
+            let msg = match deadline {
+                Some(dl) => {
+                    match self.from.recv_timeout(dl.saturating_duration_since(Instant::now())) {
+                        Ok(m) => m,
+                        Err(_) => break, // deadline passed (or all gone)
+                    }
                 }
-                FromWorker::Evicted { .. } => unreachable!("stray eviction reply"),
+                None => match self.from.recv() {
+                    Ok(m) => m,
+                    Err(_) => break, // every worker is gone
+                },
+            };
+            match msg {
+                FromWorker::StepDone { worker, mut report } => {
+                    if self.dead[worker] || !self.awaiting[worker] {
+                        continue; // zombie's late reply: drop it
+                    }
+                    self.awaiting[worker] = false;
+                    received += 1;
+                    if let Some(message) = report.panic.take() {
+                        let orphans = std::mem::take(&mut report.orphans);
+                        self.spare[worker] = Some(report);
+                        self.mark_dead(
+                            worker,
+                            ServeError::WorkerPanicked { worker, message },
+                            orphans,
+                        );
+                    } else {
+                        self.spare[worker] = Some(report);
+                    }
+                }
+                FromWorker::Evicted { worker, .. } => {
+                    // only a zombie can reply to an eviction here; its
+                    // session was already rebuilt from the ledger
+                    debug_assert!(self.dead[worker], "stray eviction reply at the barrier");
+                }
+            }
+        }
+        if received < expected {
+            // stragglers missed the barrier: stalled, wedged, or silently
+            // gone. Their sessions are rebuilt from the scheduler ledger.
+            let secs = self.deadline.map(|d| d.as_secs_f64()).unwrap_or(0.0);
+            for w in 0..n {
+                if std::mem::replace(&mut self.awaiting[w], false) && !self.dead[w] {
+                    let error = if self.deadline.is_some() {
+                        ServeError::BarrierTimeout { worker: w, tick, deadline_secs: secs }
+                    } else {
+                        ServeError::WorkerDisconnected { worker: w }
+                    };
+                    self.mark_dead(w, error, Vec::new());
+                }
             }
         }
         for d in self.depth.iter_mut() {
@@ -504,9 +860,13 @@ impl DecodeRuntime {
         }
     }
 
-    /// The per-worker reports from the last `step_all` (index = worker).
-    pub(crate) fn report_mut(&mut self, w: usize) -> &mut StepReport {
-        self.spare[w].as_mut().expect("report buffer in flight")
+    /// The report from the last `step_all` for worker `w` (`None` for a
+    /// dead worker, whose final report was consumed by its death).
+    pub(crate) fn report_mut(&mut self, w: usize) -> Option<&mut StepReport> {
+        if self.dead[w] {
+            return None;
+        }
+        self.spare[w].as_mut()
     }
 
     pub(crate) fn depth_hwm(&self, w: usize) -> usize {
@@ -516,9 +876,13 @@ impl DecodeRuntime {
 
 impl Drop for DecodeRuntime {
     fn drop(&mut self) {
-        for tx in &self.to {
-            let _ = tx.send(ToWorker::Shutdown);
+        // try_send: never block on a full channel to a stalled worker —
+        // closing the channels below is what guarantees every worker
+        // (including zombies) drains and exits
+        for tx in self.to.iter().flatten() {
+            let _ = tx.try_send(ToWorker::Shutdown);
         }
+        self.to.clear();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -556,5 +920,15 @@ mod tests {
         // defaults hold when unset (the suite does not set these vars)
         assert!(steal_from_env() || std::env::var("MOBA_STEAL").is_ok());
         assert!(pin_from_env() || std::env::var("MOBA_PIN").is_ok());
+    }
+
+    #[test]
+    fn panic_text_handles_all_payload_shapes() {
+        let s = catch_unwind(|| panic!("static message")).unwrap_err();
+        assert_eq!(panic_text(s), "static message");
+        let owned = catch_unwind(|| panic!("formatted {}", 7)).unwrap_err();
+        assert_eq!(panic_text(owned), "formatted 7");
+        let odd = catch_unwind(|| std::panic::panic_any(42i32)).unwrap_err();
+        assert_eq!(panic_text(odd), "non-string panic payload");
     }
 }

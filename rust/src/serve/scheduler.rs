@@ -73,17 +73,37 @@
 //! [`EvictionStats`] counts evictions, reclaimed blocks, resumes and
 //! re-prefill time.
 //!
+//! **Fault tolerance** (persistent runtime): a decode-worker fault —
+//! panic report, closed channel, or a missed
+//! [`SchedulerCfg::barrier_deadline_secs`] barrier — degrades into the
+//! eviction/resume machinery instead of aborting. The scheduler keeps a
+//! *recovery ledger* (per worker-owned session: request identity + the
+//! token transcript so far, advanced from each step report); on a death
+//! it quarantines every session struct the runtime saved, rebuilds the
+//! rest from the ledger (`ServeEngine::adopt_session`), and parks them
+//! all on the preempted queue, where the ordinary re-prefill resume
+//! re-homes them onto surviving shards. Served tokens stay bitwise
+//! identical to a fault-free run — greedy decode is a pure function of
+//! (prompt, generated-so-far), and the transcript is the whole state.
+//! [`FaultStats`] (in `SchedStats::fault`) counts deaths, re-homed
+//! sessions, barrier timeouts and recovery re-prefill time; the seeded
+//! chaos harness (`SchedulerCfg::chaos`, `serve::chaos`) injects
+//! deterministic faults to prove all of this under test.
+//!
 //! The scheduler is driven by a simulation clock (`tick(now)`), like the
 //! batcher, so arrival/queueing behavior is deterministic and testable;
 //! prefill/decode times are measured wall clock from the engine.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use super::batcher::{Batcher, BatcherCfg, Request, RequestResult};
+use super::chaos::FaultPlan;
 use super::engine::{DecodeSession, ServeEngine};
+use super::error::{FaultStats, ServeError};
 use super::model::TokenModel;
 use super::runtime::{pin_from_env, steal_from_env, DecodeRuntime, Live, RuntimeKind};
 
@@ -105,6 +125,15 @@ pub struct SchedulerCfg {
     /// pin decode workers to cores (persistent runtime only); default
     /// from `MOBA_PIN`, on unless disabled
     pub pin: bool,
+    /// deterministic fault-injection schedule (persistent runtime only;
+    /// the tick-loop ignores it — it is the fault-free oracle chaos runs
+    /// are compared against). `None` = no injected faults.
+    pub chaos: Option<FaultPlan>,
+    /// how long the per-tick step barrier waits for a worker's reply
+    /// before declaring it dead and recovering its sessions (persistent
+    /// runtime only). `None` = wait forever (panics and disconnects are
+    /// still detected immediately; the deadline only catches stalls).
+    pub barrier_deadline_secs: Option<f64>,
 }
 
 impl Default for SchedulerCfg {
@@ -115,6 +144,8 @@ impl Default for SchedulerCfg {
             runtime: RuntimeKind::Persistent,
             steal: steal_from_env(),
             pin: pin_from_env(),
+            chaos: None,
+            barrier_deadline_secs: None,
         }
     }
 }
@@ -137,6 +168,8 @@ pub struct SchedStats {
     pub peak_pool_blocks: usize,
     /// preemption counters for the oversubscribed paged pool
     pub eviction: EvictionStats,
+    /// worker-fault and recovery counters (persistent runtime)
+    pub fault: FaultStats,
 }
 
 /// Counters for LRU eviction / re-prefill resume on a bounded paged pool.
@@ -221,6 +254,20 @@ struct Remote {
     freeable: usize,
 }
 
+/// Everything needed to rebuild a worker-owned session if its worker
+/// dies with the struct: the request identity plus the transcript of
+/// tokens generated so far, kept in lockstep with the step reports'
+/// `(out_len, last_token)`. Recovery via `ServeEngine::adopt_session` +
+/// re-prefill resume is then bit-identical to a fault-free run — greedy
+/// tokens are a pure function of (prompt, generated-so-far).
+struct LedgerEntry {
+    own_prompt: Vec<i32>,
+    fork_ctx: usize,
+    max_new: usize,
+    queue_secs: f64,
+    generated: Vec<i32>,
+}
+
 /// Where the in-flight sessions physically live.
 enum Dispatch {
     /// legacy: sessions held here, scoped threads re-spawned per tick
@@ -234,6 +281,10 @@ enum Dispatch {
         /// per-shard occupancy scratch (placement + peak tracking),
         /// reused every tick
         counts: Vec<usize>,
+        /// recovery ledger: one transcript per worker-owned session
+        /// (inserted at placement, advanced from step reports, removed
+        /// at eviction/retirement/recovery)
+        ledger: BTreeMap<u64, LedgerEntry>,
     },
 }
 
@@ -289,10 +340,13 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                     cfg.steal,
                     cfg.pin,
                     cfg.max_in_flight + 2,
+                    cfg.chaos.clone(),
+                    cfg.barrier_deadline_secs.map(Duration::from_secs_f64),
                 ),
                 mirror: Vec::new(),
                 wstats: vec![WorkerStats::default(); cfg.decode_workers],
                 counts: vec![0; cfg.decode_workers],
+                ledger: BTreeMap::new(),
             },
         };
         ContinuousScheduler {
@@ -480,21 +534,120 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                 self.preempted.push(live);
             }
             Victim::Mirror { idx } => {
-                let Dispatch::Persistent { rt, mirror, .. } = &mut self.dispatch else {
-                    unreachable!("mirror victim without persistent dispatch")
-                };
-                let remote = mirror.swap_remove(idx);
-                let (mut live, freed) = rt.evict(remote.shard, remote.id);
-                let freed = freed?;
-                debug_assert!(!live.session.finished(), "evicting a finished session");
-                self.reserved_total -= remote.reserve;
-                live.reserve_blocks = 0;
-                self.stats.eviction.evictions += 1;
-                self.stats.eviction.blocks_reclaimed += freed;
-                self.preempted.push(live);
+                let owner_died;
+                {
+                    let Dispatch::Persistent { rt, mirror, ledger, .. } = &mut self.dispatch
+                    else {
+                        unreachable!("mirror victim without persistent dispatch")
+                    };
+                    match rt.evict(mirror[idx].shard, mirror[idx].id) {
+                        Ok((mut live, freed)) => {
+                            let freed = freed?;
+                            let remote = mirror.swap_remove(idx);
+                            ledger.remove(&remote.id);
+                            debug_assert!(
+                                !live.session.finished(),
+                                "evicting a finished session"
+                            );
+                            self.reserved_total -= remote.reserve;
+                            live.reserve_blocks = 0;
+                            self.stats.eviction.evictions += 1;
+                            self.stats.eviction.blocks_reclaimed += freed;
+                            self.preempted.push(live);
+                            owner_died = false;
+                        }
+                        // the owning worker died before answering: no
+                        // eviction happened — recover the whole dead
+                        // shard (including this victim) below, and let
+                        // the caller re-check fit / re-pick a victim
+                        Err(_) => owner_died = true,
+                    }
+                }
+                if owner_died {
+                    let recovered = self.recover_deaths()?;
+                    debug_assert!(recovered > 0, "evict failed but no death was recorded");
+                }
             }
         }
         Ok(())
+    }
+
+    /// Process every worker death the runtime has observed: quarantine
+    /// the intact session structs it saved (orphans), rebuild the rest
+    /// from the recovery ledger, park all of them on the preempted queue
+    /// (resume re-prefills them bit-identically — the transcript is the
+    /// whole state), and strip the dead shard from the mirror. Must run
+    /// while the mirror still describes the dead worker's ownership —
+    /// i.e. any time EXCEPT between the post-step `mirror.clear()` and
+    /// its rebuild. Returns how many deaths were processed.
+    fn recover_deaths(&mut self) -> Result<usize> {
+        let Dispatch::Persistent { rt, mirror, ledger, .. } = &mut self.dispatch else {
+            return Ok(0);
+        };
+        let deaths = rt.take_deaths();
+        let n = deaths.len();
+        for death in deaths {
+            self.stats.fault.worker_deaths += 1;
+            if matches!(death.error, ServeError::BarrierTimeout { .. }) {
+                self.stats.fault.barrier_timeouts += 1;
+            }
+            // intact structs first: quarantine (release whatever blocks
+            // they still hold) and park for resume. A session whose own
+            // step panicked gets its pending token wiped — resume
+            // recomputes it from the transcript, which a mid-step panic
+            // cannot corrupt.
+            let mut orphan_ids: Vec<u64> = Vec::with_capacity(death.orphans.len());
+            for mut live in death.orphans {
+                orphan_ids.push(live.id);
+                ledger.remove(&live.id);
+                live.reserve_blocks = 0;
+                if !live.poisoned && live.session.finished() {
+                    // stepped to completion by a thief before the owner
+                    // died: nothing to recover, just retire it
+                    self.finished_scratch.push(live);
+                    continue;
+                }
+                self.engine.quarantine_session(&mut live.session, !live.poisoned);
+                live.poisoned = false;
+                live.rehomed = true;
+                self.stats.fault.rehomed_sessions += 1;
+                self.preempted.push(live);
+            }
+            // sessions lost with the thread: rebuild from the ledger
+            // transcript (recovery-as-eviction — the adopted session is
+            // evicted-with-no-blocks and resumes like any preemptee)
+            for i in (0..mirror.len()).rev() {
+                if mirror[i].shard != death.worker {
+                    continue;
+                }
+                let remote = mirror.swap_remove(i);
+                self.reserved_total -= remote.reserve;
+                if orphan_ids.contains(&remote.id) {
+                    continue; // recovered via its struct above
+                }
+                let entry = ledger
+                    .remove(&remote.id)
+                    .expect("recovery ledger entry for a session lost with its worker");
+                let session = self.engine.adopt_session(
+                    entry.own_prompt,
+                    entry.fork_ctx,
+                    entry.generated,
+                    entry.max_new,
+                );
+                self.preempted.push(Live {
+                    id: remote.id,
+                    queue_secs: entry.queue_secs,
+                    reserve_blocks: 0,
+                    last_stepped: 0,
+                    home: 0,
+                    poisoned: false,
+                    rehomed: true,
+                    session,
+                });
+                self.stats.fault.rehomed_sessions += 1;
+            }
+        }
+        Ok(n)
     }
 
     /// Make room for a candidate needing `need` not-yet-materialized
@@ -552,7 +705,7 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
     /// are only tracked for a bounded pool — nothing ever reads them
     /// otherwise. The session's pool allocations are tagged with its
     /// shard's arena so its blocks stay local to its decode worker.
-    fn place(&mut self, mut live: Live, resumed: bool, bounded: bool) {
+    fn place(&mut self, mut live: Live, resumed: bool, bounded: bool) -> Result<()> {
         live.last_stepped = self.tick_no;
         live.reserve_blocks =
             if bounded { self.engine.remaining_reserve(&live.session) } else { 0 };
@@ -572,29 +725,52 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                 }
                 shards[si].running.push(live);
             }
-            Dispatch::Persistent { rt, mirror, wstats, counts } => {
-                counts.fill(0);
-                for r in mirror.iter() {
-                    counts[r.shard] += 1;
+            Dispatch::Persistent { rt, mirror, wstats, counts, ledger } => {
+                // placement retries if the chosen worker turns out to be
+                // dead at the handoff: its other sessions recover at the
+                // next death-processing point, but THIS session just
+                // bounces to the next-least-loaded live shard
+                loop {
+                    counts.fill(0);
+                    for r in mirror.iter() {
+                        counts[r.shard] += 1;
+                    }
+                    let Some(si) =
+                        (0..counts.len()).filter(|&i| rt.alive(i)).min_by_key(|&i| counts[i])
+                    else {
+                        bail!(ServeError::AllWorkersDead);
+                    };
+                    live.home = si;
+                    live.session.set_arena(si);
+                    let remote = Remote {
+                        id: live.id,
+                        shard: si,
+                        last_stepped: live.last_stepped,
+                        reserve: live.reserve_blocks,
+                        freeable: self.engine.freeable_blocks(&live.session),
+                    };
+                    let entry = LedgerEntry {
+                        own_prompt: live.session.own_prompt().to_vec(),
+                        fork_ctx: live.session.fork_ctx(),
+                        max_new: live.session.max_new(),
+                        queue_secs: live.queue_secs,
+                        generated: live.session.output().to_vec(),
+                    };
+                    match rt.admit(si, live) {
+                        Ok(()) => {
+                            if !resumed {
+                                wstats[si].admitted += 1;
+                            }
+                            ledger.insert(remote.id, entry);
+                            mirror.push(remote);
+                            break;
+                        }
+                        Err(bounced) => live = bounced.0,
+                    }
                 }
-                let si = (0..counts.len())
-                    .min_by_key(|&i| counts[i])
-                    .expect("at least one shard");
-                live.home = si;
-                live.session.set_arena(si);
-                if !resumed {
-                    wstats[si].admitted += 1;
-                }
-                mirror.push(Remote {
-                    id: live.id,
-                    shard: si,
-                    last_stepped: live.last_stepped,
-                    reserve: live.reserve_blocks,
-                    freeable: self.engine.freeable_blocks(&live.session),
-                });
-                rt.admit(si, live);
             }
         }
+        Ok(())
     }
 
     /// One scheduler tick at simulation time `now`:
@@ -651,9 +827,15 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
             let mut live = self.preempted.swap_remove(idx);
             let t0 = Instant::now();
             self.engine.resume_session(&mut live.session, self.prefix.as_ref())?;
+            let dt = t0.elapsed().as_secs_f64();
             self.stats.eviction.resumes += 1;
-            self.stats.eviction.reprefill_secs += t0.elapsed().as_secs_f64();
-            self.place(live, true, pool_cap.is_some());
+            self.stats.eviction.reprefill_secs += dt;
+            if live.rehomed {
+                // this re-prefill is recovery work, not pool pressure
+                live.rehomed = false;
+                self.stats.fault.recovery_reprefill_secs += dt;
+            }
+            self.place(live, true, pool_cap.is_some())?;
         }
 
         // 1b. admission — new requests join the in-flight batch
@@ -693,11 +875,13 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                     reserve_blocks: 0,
                     last_stepped: self.tick_no,
                     home: 0,
+                    poisoned: false,
+                    rehomed: false,
                     session,
                 },
                 false,
                 pool_cap.is_some(),
-            );
+            )?;
         }
         self.stats.peak_in_flight = self.stats.peak_in_flight.max(self.in_flight());
         match &mut self.dispatch {
@@ -723,73 +907,114 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
             self.stats.decode_rounds += 1;
         }
         let tick = self.tick_no;
-        match &mut self.dispatch {
-            Dispatch::Tick { shards } => {
-                let steps_before: usize = shards.iter().map(|s| s.stats.decode_steps).sum();
-                let engine = self.engine.as_ref();
-                // Scoped threads are re-spawned per tick — the legacy
-                // baseline the persistent runtime replaces (kept for
-                // parity tests and as the bench reference). Outputs are
-                // identical either way.
-                if self.cfg.decode_workers > 1 {
-                    std::thread::scope(|scope| {
-                        for shard in shards.iter_mut() {
-                            if !shard.running.is_empty() {
-                                scope.spawn(move || shard.step_all(engine, tick));
-                            }
-                        }
-                    });
-                } else {
+        if let Dispatch::Tick { shards } = &mut self.dispatch {
+            let steps_before: usize = shards.iter().map(|s| s.stats.decode_steps).sum();
+            let engine = self.engine.as_ref();
+            // Scoped threads are re-spawned per tick — the legacy
+            // baseline the persistent runtime replaces (kept for
+            // parity tests and as the bench reference). Outputs are
+            // identical either way.
+            if self.cfg.decode_workers > 1 {
+                std::thread::scope(|scope| {
                     for shard in shards.iter_mut() {
-                        shard.step_all(engine, tick);
+                        if !shard.running.is_empty() {
+                            scope.spawn(move || shard.step_all(engine, tick));
+                        }
                     }
+                });
+            } else {
+                for shard in shards.iter_mut() {
+                    shard.step_all(engine, tick);
                 }
-                let steps_after: usize = shards.iter().map(|s| s.stats.decode_steps).sum();
-                self.stats.decode_steps_total += steps_after - steps_before;
             }
-            Dispatch::Persistent { rt, mirror, wstats, .. } => {
-                // one step command per worker, one report back — the
-                // per-tick barrier. Workers steal between shards while
-                // draining; every stepped session returns to its home
-                // shard, so the merge below is order-independent.
+            let steps_after: usize = shards.iter().map(|s| s.stats.decode_steps).sum();
+            self.stats.decode_steps_total += steps_after - steps_before;
+        } else {
+            // one step command per worker, one report back — the
+            // per-tick barrier. Workers steal between shards while
+            // draining; every stepped session returns to its home
+            // shard, so the merge below is order-independent.
+            {
+                let Dispatch::Persistent { rt, .. } = &mut self.dispatch else { unreachable!() };
                 rt.step_all(tick);
-                mirror.clear();
-                let mut reserved = 0usize;
-                for w in 0..rt.workers() {
-                    let rep = rt.report_mut(w);
-                    let ws = &mut wstats[w];
-                    if rep.owned > 0 {
-                        ws.decode_rounds += 1;
-                    }
-                    if rep.owned == 0 && rep.steals == 0 {
-                        ws.idle_ticks += 1;
-                    } else {
-                        ws.busy_secs += rep.busy_secs;
-                    }
-                    ws.decode_steps += rep.steps;
-                    ws.steals += rep.steals;
-                    ws.stolen_steps += rep.stolen_steps;
-                    self.stats.decode_steps_total += rep.steps;
-                    for m in &rep.metas {
-                        reserved += m.reserve;
-                        mirror.push(Remote {
-                            id: m.id,
-                            shard: w,
-                            last_stepped: tick,
-                            reserve: m.reserve,
-                            freeable: m.freeable,
-                        });
-                    }
-                    for live in rep.finished.iter_mut() {
-                        // the mirror rebuild re-derives reserved_total
-                        // without retirees, so their reservations are
-                        // already released
-                        live.reserve_blocks = 0;
-                    }
-                    self.finished_scratch.append(&mut rep.finished);
-                }
-                self.reserved_total = reserved;
             }
+            // deaths recover BEFORE the mirror rebuild: the pre-rebuild
+            // mirror (last tick's survivors + this tick's placements) is
+            // the complete ownership map of every dead shard
+            self.recover_deaths()?;
+            let Dispatch::Persistent { rt, mirror, wstats, ledger, .. } = &mut self.dispatch
+            else {
+                unreachable!()
+            };
+            mirror.clear();
+            let mut reserved = 0usize;
+            for w in 0..rt.workers() {
+                let Some(rep) = rt.report_mut(w) else {
+                    continue; // dead worker: stats frozen at death values
+                };
+                let ws = &mut wstats[w];
+                if rep.owned > 0 {
+                    ws.decode_rounds += 1;
+                }
+                if rep.owned == 0 && rep.steals == 0 {
+                    ws.idle_ticks += 1;
+                } else {
+                    ws.busy_secs += rep.busy_secs;
+                }
+                ws.decode_steps += rep.steps;
+                ws.steals += rep.steals;
+                ws.stolen_steps += rep.stolen_steps;
+                self.stats.decode_steps_total += rep.steps;
+                for m in &rep.metas {
+                    reserved += m.reserve;
+                    mirror.push(Remote {
+                        id: m.id,
+                        shard: w,
+                        last_stepped: tick,
+                        reserve: m.reserve,
+                        freeable: m.freeable,
+                    });
+                    // advance the recovery transcript: every live
+                    // session appends exactly one token per step
+                    if let Some(entry) = ledger.get_mut(&m.id) {
+                        if m.out_len == entry.generated.len() + 1 {
+                            entry.generated.push(m.last_token);
+                        } else {
+                            debug_assert_eq!(
+                                m.out_len,
+                                entry.generated.len(),
+                                "recovery ledger transcript drift"
+                            );
+                        }
+                    }
+                }
+                for live in rep.finished.iter_mut() {
+                    // the mirror rebuild re-derives reserved_total
+                    // without retirees, so their reservations are
+                    // already released
+                    live.reserve_blocks = 0;
+                    ledger.remove(&live.id);
+                }
+                self.finished_scratch.append(&mut rep.finished);
+                // a session whose own decode step panicked on a healthy
+                // worker: quarantine + re-prefill it like a dead shard's
+                // survivor (its transcript is intact; its pending token
+                // may not be)
+                for mut live in rep.orphans.drain(..) {
+                    ledger.remove(&live.id);
+                    live.reserve_blocks = 0;
+                    if !live.poisoned && live.session.finished() {
+                        self.finished_scratch.push(live);
+                        continue;
+                    }
+                    self.engine.quarantine_session(&mut live.session, !live.poisoned);
+                    live.poisoned = false;
+                    live.rehomed = true;
+                    self.stats.fault.rehomed_sessions += 1;
+                    self.preempted.push(live);
+                }
+            }
+            self.reserved_total = reserved;
         }
 
         // pool high-water mark, sampled after the decode growth and
@@ -880,6 +1105,22 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
             } else {
                 now += tick_secs;
             }
+        }
+        Ok(results)
+    }
+
+    /// Graceful drain-and-shutdown: run ticks until every in-flight,
+    /// preempted and queued request has completed, and return their
+    /// results. The clock starts at `now` and advances by `tick_secs`
+    /// per tick (must be > 0 if queued arrivals lie in the future).
+    /// Dropping the scheduler afterwards joins every decode worker —
+    /// all runtime blocking points are bounded, so shutdown cannot hang
+    /// on a dead or stalled worker.
+    pub fn drain(&mut self, mut now: f64, tick_secs: f64) -> Result<Vec<RequestResult>> {
+        let mut results = Vec::new();
+        while !self.idle() {
+            results.extend(self.tick(now)?);
+            now += tick_secs;
         }
         Ok(results)
     }
@@ -1314,6 +1555,121 @@ mod tests {
     fn shared_prefix_requires_paged_backend() {
         let mut sched = ContinuousScheduler::new(engine(), sched_cfg(2, 1));
         assert!(sched.set_shared_prefix(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn worker_death_recovers_and_serves_identical_tokens() {
+        use crate::serve::chaos::{Fault, FaultKind};
+        // the acceptance test: kill one of two decode workers mid-run;
+        // every session re-homes to the survivor and the served tokens
+        // are bitwise identical to the fault-free tick-loop oracle
+        let make_stream = || -> Vec<Request> {
+            (0..6).map(|i| req(i, i as f64 * 0.05, 16 + i as usize, 4 + (i as usize % 3))).collect()
+        };
+        for backend in [BackendKind::CachedSparse, BackendKind::Paged] {
+            let mut oracle = ContinuousScheduler::new(
+                engine_with(backend, 0),
+                SchedulerCfg {
+                    max_in_flight: 4,
+                    decode_workers: 2,
+                    runtime: RuntimeKind::TickLoop,
+                    ..SchedulerCfg::default()
+                },
+            );
+            let mut base = oracle.run_stream(make_stream(), 0.05).unwrap();
+            base.sort_by_key(|r| r.id);
+            let cfg = SchedulerCfg {
+                max_in_flight: 4,
+                decode_workers: 2,
+                runtime: RuntimeKind::Persistent,
+                chaos: Some(FaultPlan::new(vec![Fault {
+                    worker: 1,
+                    tick: 3,
+                    kind: FaultKind::Panic,
+                }])),
+                ..SchedulerCfg::default()
+            };
+            let mut sched = ContinuousScheduler::new(engine_with(backend, 0), cfg);
+            let mut got = sched.run_stream(make_stream(), 0.05).unwrap();
+            got.sort_by_key(|r| r.id);
+            assert_eq!(got.len(), base.len(), "{backend:?}: lost requests to the fault");
+            for (g, b) in got.iter().zip(&base) {
+                assert_eq!(g.id, b.id);
+                assert_eq!(g.output, b.output, "req {} changed after recovery ({backend:?})", g.id);
+            }
+            assert_eq!(sched.stats.fault.worker_deaths, 1, "{backend:?}");
+            assert!(sched.stats.fault.rehomed_sessions >= 1, "{backend:?}");
+            assert_eq!(sched.stats.fault.barrier_timeouts, 0, "{backend:?}");
+            assert!(sched.idle(), "{backend:?}: no session left behind");
+        }
+    }
+
+    #[test]
+    fn barrier_deadline_converts_a_stall_into_recovery() {
+        use crate::serve::chaos::{Fault, FaultKind};
+        // a stalled worker never reports: the barrier deadline declares
+        // it dead and its sessions — whose structs die with the zombie —
+        // are rebuilt from the recovery ledger alone
+        let cfg = SchedulerCfg {
+            max_in_flight: 4,
+            decode_workers: 2,
+            runtime: RuntimeKind::Persistent,
+            chaos: Some(FaultPlan::new(vec![Fault {
+                worker: 1,
+                tick: 2,
+                kind: FaultKind::Stall { millis: 1500 },
+            }])),
+            barrier_deadline_secs: Some(0.3),
+            ..SchedulerCfg::default()
+        };
+        let mut sched = ContinuousScheduler::new(engine(), cfg);
+        let stream: Vec<Request> = (0..4).map(|i| req(i, 0.0, 16, 5)).collect();
+        let solo = engine();
+        let want: Vec<Vec<i32>> =
+            stream.iter().map(|r| solo.generate(&r.prompt, r.max_new).unwrap().0).collect();
+        let mut got = sched.run_stream(stream, 0.01).unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 4);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(&g.output, w, "req {} changed after timeout recovery", g.id);
+        }
+        assert_eq!(sched.stats.fault.worker_deaths, 1);
+        assert_eq!(sched.stats.fault.barrier_timeouts, 1);
+        assert!(sched.stats.fault.rehomed_sessions >= 1);
+        assert!(sched.stats.fault.recovery_reprefill_secs > 0.0);
+    }
+
+    #[test]
+    fn killing_every_worker_errors_with_all_workers_dead() {
+        use crate::serve::chaos::{Fault, FaultKind};
+        let cfg = SchedulerCfg {
+            max_in_flight: 4,
+            decode_workers: 2,
+            runtime: RuntimeKind::Persistent,
+            chaos: Some(FaultPlan::new(vec![
+                Fault { worker: 0, tick: 2, kind: FaultKind::Panic },
+                Fault { worker: 1, tick: 2, kind: FaultKind::AllocFail },
+            ])),
+            ..SchedulerCfg::default()
+        };
+        let mut sched = ContinuousScheduler::new(engine(), cfg);
+        for i in 0..4 {
+            sched.submit(req(i, 0.0, 16, 8));
+        }
+        let mut found = None;
+        for _ in 0..5 {
+            if let Err(e) = sched.tick(0.0) {
+                found = Some(e);
+                break;
+            }
+        }
+        let err = found.expect("a run with every worker dead must error, not hang");
+        assert_eq!(
+            err.downcast_ref::<ServeError>(),
+            Some(&ServeError::AllWorkersDead),
+            "typed error must survive the anyhow boundary: {err}"
+        );
+        assert_eq!(sched.stats.fault.worker_deaths, 2);
     }
 
     #[test]

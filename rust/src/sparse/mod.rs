@@ -32,4 +32,4 @@ pub use backend::{
 pub use gate::{affinity_scores, mean_pool_blocks, moba_gate, Gate};
 pub use kv_cache::{BlockPoolCache, KvCache};
 pub use paged::{shared_pool, BlockTable, PagedKvPool, PagedMobaAttention, SharedKvPool};
-pub use parallel::default_workers;
+pub use parallel::{default_workers, workers_from_env};

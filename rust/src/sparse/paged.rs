@@ -42,6 +42,7 @@ use std::sync::{Arc, RwLock};
 use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
+use crate::util::sync;
 
 use super::attention::{
     fused_moba_attention, fused_moba_attention_with_reps, fused_row_blocks, FusedScratch,
@@ -523,7 +524,7 @@ impl PagedMobaAttention {
     pub fn new(pool: SharedKvPool, topk: usize) -> PagedMobaAttention {
         assert!(topk > 0);
         let (block_size, head_dim) = {
-            let p = pool.read().expect("paged pool lock");
+            let p = sync::read(&pool);
             (p.block_size(), p.head_dim())
         };
         PagedMobaAttention {
@@ -578,9 +579,9 @@ impl PagedMobaAttention {
 
 impl Drop for PagedMobaAttention {
     fn drop(&mut self) {
-        if let Ok(mut pool) = self.pool.write() {
-            pool.release(&mut self.table);
-        }
+        // release even through a poisoned lock: a panicking decode worker
+        // must not strand this session's refcounts in the shared pool
+        sync::write(&self.pool).release(&mut self.table);
     }
 }
 
@@ -598,7 +599,7 @@ impl AttentionBackend for PagedMobaAttention {
     }
 
     fn reset(&mut self) {
-        let mut pool = self.pool.write().expect("paged pool lock");
+        let mut pool = sync::write(&self.pool);
         pool.release(&mut self.table);
         self.reps.clear();
         self.reps_cap = 0;
@@ -606,7 +607,7 @@ impl AttentionBackend for PagedMobaAttention {
 
     fn evict(&mut self) -> Result<usize> {
         let freed = {
-            let mut pool = self.pool.write().expect("paged pool lock");
+            let mut pool = sync::write(&self.pool);
             pool.evict(&mut self.table)
         };
         self.reps.clear();
@@ -617,7 +618,7 @@ impl AttentionBackend for PagedMobaAttention {
     fn prefill(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
         debug_assert!(self.table.is_empty(), "prefill on non-empty state");
         {
-            let mut pool = self.pool.write().expect("paged pool lock");
+            let mut pool = sync::write(&self.pool);
             pool.append_tensors(&mut self.table, k, v)
                 .expect("paged pool exhausted in prefill (admission must reserve blocks)");
             sync_reps(&pool, &self.table, &mut self.reps, &mut self.reps_cap, true);
@@ -638,7 +639,7 @@ impl AttentionBackend for PagedMobaAttention {
 
     fn decode(&mut self, q_row: &[f32], k_row: &[f32], v_row: &[f32]) -> Vec<f32> {
         {
-            let mut pool = self.pool.write().expect("paged pool lock");
+            let mut pool = sync::write(&self.pool);
             pool.append(&mut self.table, k_row, v_row)
                 .expect("paged pool exhausted in decode (admission must reserve blocks)");
             sync_reps(&pool, &self.table, &mut self.reps, &mut self.reps_cap, false);
@@ -647,7 +648,7 @@ impl AttentionBackend for PagedMobaAttention {
         // session's blocks are immutable while its table references them
         // (CoW), so decode shards run concurrently and only appends
         // serialize
-        let pool = self.pool.read().expect("paged pool lock");
+        let pool = sync::read(&self.pool);
         paged_decode_row(
             &pool,
             &self.table,
@@ -669,7 +670,7 @@ impl AttentionBackend for PagedMobaAttention {
 
     fn fork(&self) -> Result<Box<dyn AttentionBackend>> {
         let (table, head_dim) = {
-            let mut pool = self.pool.write().expect("paged pool lock");
+            let mut pool = sync::write(&self.pool);
             let table = pool.fork(&self.table);
             (table, pool.head_dim())
         };

@@ -32,17 +32,36 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 
+use crate::util::sync;
+
 /// Resolved default worker count: `MOBA_WORKERS` env override if set and
-/// positive, else the machine's available parallelism, else 1.
+/// positive, else the machine's available parallelism, else 1. Lenient
+/// by design (library callers always get a usable count); binaries that
+/// want a loud failure on a typo'd override call [`workers_from_env`]
+/// first.
 pub fn default_workers() -> usize {
-    if let Ok(v) = std::env::var("MOBA_WORKERS") {
-        if let Ok(n) = v.trim().parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
+    if let Ok(Some(n)) = workers_from_env() {
+        return n;
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Strict `MOBA_WORKERS` parse: `Ok(None)` when unset, `Ok(Some(n))` for
+/// a positive integer, `Err` (carrying the offending text) otherwise —
+/// so `repro serve` and the demo can reject `MOBA_WORKERS=lots` with a
+/// friendly error instead of silently falling back to all cores.
+pub fn workers_from_env() -> Result<Option<usize>, String> {
+    match std::env::var("MOBA_WORKERS") {
+        Err(_) => Ok(None),
+        Ok(v) => parse_workers(&v).map(Some),
+    }
+}
+
+fn parse_workers(v: &str) -> Result<usize, String> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err(format!("MOBA_WORKERS must be a positive integer, got {v:?}")),
+    }
 }
 
 /// Split `0..total` into at most `parts` contiguous, near-equal,
@@ -95,7 +114,9 @@ impl Latch {
     }
 
     fn task_done(&self) {
-        let mut left = self.remaining.lock().expect("latch lock");
+        // poison-resistant: the count must reach zero even if some task
+        // panicked between lock acquisitions, or `wait` deadlocks
+        let mut left = sync::lock(&self.remaining);
         *left -= 1;
         if *left == 0 {
             self.cv.notify_all();
@@ -103,9 +124,9 @@ impl Latch {
     }
 
     fn wait(&self) {
-        let mut left = self.remaining.lock().expect("latch lock");
+        let mut left = sync::lock(&self.remaining);
         while *left > 0 {
-            left = self.cv.wait(left).expect("latch lock");
+            left = sync::wait(&self.cv, left);
         }
     }
 }
@@ -127,12 +148,12 @@ fn kernel_pool() -> &'static KernelPool {
                 .name(format!("moba-kernel-{i}"))
                 .spawn(move || loop {
                     let job = {
-                        let mut q = shared.queue.lock().expect("kernel pool lock");
+                        let mut q = sync::lock(&shared.queue);
                         loop {
                             if let Some(job) = q.pop_front() {
                                 break job;
                             }
-                            q = shared.cv.wait(q).expect("kernel pool lock");
+                            q = sync::wait(&shared.cv, q);
                         }
                     };
                     job();
@@ -161,7 +182,7 @@ fn run_scoped<'a>(tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
     let latch = Latch::new(tasks.len());
     let latch_ref: &Latch = &latch;
     {
-        let mut q = pool.shared.queue.lock().expect("kernel pool lock");
+        let mut q = sync::lock(&pool.shared.queue);
         for task in tasks {
             // erase 'a -> 'static; see SAFETY above
             let task: Job = unsafe {
@@ -180,7 +201,7 @@ fn run_scoped<'a>(tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
     // caller helps: drain whatever is queued (ours or another caller's)
     // until the queue is dry, then wait out our stragglers
     loop {
-        let job = pool.shared.queue.lock().expect("kernel pool lock").pop_front();
+        let job = sync::lock(&pool.shared.queue).pop_front();
         match job {
             Some(job) => job(),
             None => break,
@@ -379,7 +400,75 @@ mod tests {
     }
 
     #[test]
+    fn panic_recovery_leaves_no_poisoned_state() {
+        // repeated panicking calls interleaved with healthy ones: each
+        // panic must re-raise exactly once on its own caller, and the
+        // shared queue/latch machinery must stay usable (no poison
+        // cascade into unrelated calls)
+        for round in 0..3usize {
+            let result = std::panic::catch_unwind(|| {
+                let mut out = vec![0.0f32; 24];
+                for_each_slot(&mut out, 2, 4, || (), |_, i, slot| {
+                    if i % 3 == round % 3 {
+                        panic!("chaos slot {i}");
+                    }
+                    slot[0] = i as f32;
+                });
+            });
+            assert!(result.is_err(), "round={round}: panic must reach the caller");
+            let want: Vec<usize> = (0..5).map(|i| i + round).collect();
+            assert_eq!(parallel_map(5, 4, |i| i + round), want, "round={round}");
+        }
+    }
+
+    #[test]
+    fn multiple_panicking_tasks_raise_a_single_panic() {
+        // every task panics; the caller still sees exactly one panic
+        // (flag-based re-raise, not unwind-per-task) and the pool keeps
+        // serving afterwards
+        let result = std::panic::catch_unwind(|| {
+            parallel_map(16, 8, |i| -> usize { panic!("task {i}") })
+        });
+        assert!(result.is_err());
+        assert_eq!(parallel_map(4, 2, |i| i), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn concurrent_caller_unaffected_by_anothers_panic() {
+        std::thread::scope(|scope| {
+            let chaos = scope.spawn(|| {
+                for _ in 0..10 {
+                    let r = std::panic::catch_unwind(|| {
+                        parallel_map(8, 4, |i| -> usize { panic!("boom {i}") })
+                    });
+                    assert!(r.is_err());
+                }
+            });
+            let healthy = scope.spawn(|| {
+                let want: Vec<usize> = (0..13).map(|i| i * 2).collect();
+                for _ in 0..10 {
+                    assert_eq!(parallel_map(13, 4, |i| i * 2), want);
+                }
+            });
+            chaos.join().expect("chaos caller itself must not die");
+            healthy.join().expect("healthy caller poisoned by a neighbor's panic");
+        });
+    }
+
+    #[test]
     fn default_workers_positive() {
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn parse_workers_accepts_positive_integers_only() {
+        assert_eq!(parse_workers("4"), Ok(4));
+        assert_eq!(parse_workers(" 2 "), Ok(2));
+        assert!(parse_workers("0").is_err());
+        assert!(parse_workers("-3").is_err());
+        assert!(parse_workers("lots").is_err());
+        assert!(parse_workers("").is_err());
+        let msg = parse_workers("lots").unwrap_err();
+        assert!(msg.contains("MOBA_WORKERS") && msg.contains("lots"), "unhelpful: {msg}");
     }
 }

@@ -52,21 +52,27 @@ impl Args {
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => Ok(v.parse()?),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a non-negative integer, got {v:?}")),
         }
     }
 
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => Ok(v.parse()?),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a non-negative integer, got {v:?}")),
         }
     }
 
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => Ok(v.parse()?),
+            Some(v) => {
+                v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}"))
+            }
         }
     }
 
@@ -120,5 +126,17 @@ mod tests {
     fn list_parsing() {
         let a = Args::parse(&sv(&["--sizes", "s0, s1,s2"]), &[]).unwrap();
         assert_eq!(a.get_list("sizes", &[]), vec!["s0", "s1", "s2"]);
+    }
+
+    #[test]
+    fn parse_errors_name_the_flag_and_value() {
+        let a = Args::parse(&sv(&["--requests", "lots", "--seed", "-1", "--rate", "fast"]), &[])
+            .unwrap();
+        let e = a.get_usize("requests", 1).unwrap_err().to_string();
+        assert!(e.contains("--requests") && e.contains("lots"), "unhelpful: {e}");
+        let e = a.get_u64("seed", 1).unwrap_err().to_string();
+        assert!(e.contains("--seed") && e.contains("-1"), "unhelpful: {e}");
+        let e = a.get_f64("rate", 1.0).unwrap_err().to_string();
+        assert!(e.contains("--rate") && e.contains("fast"), "unhelpful: {e}");
     }
 }

@@ -1,0 +1,69 @@
+//! Poison-resistant synchronization helpers.
+//!
+//! A panic while holding a `Mutex`/`RwLock` poisons it; the default
+//! `.lock().unwrap()` idiom then propagates that panic to every other
+//! thread that touches the lock, turning one worker fault into a
+//! process-wide cascade. For the data these locks guard (steal deques,
+//! done-boxes, the paged block pool, the kernel-pool queue) the
+//! invariant is maintained *across* critical sections, not within them
+//! — every mutation is complete before a panic can occur or is
+//! idempotent on retry — so the right recovery is to take the lock
+//! anyway and let the supervision layer deal with the fault that caused
+//! the poisoning.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Acquire a read guard, recovering from poisoning.
+pub fn read<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Acquire a write guard, recovering from poisoning.
+pub fn write<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Block on a condvar, recovering the guard if the lock was poisoned
+/// while we slept.
+pub fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock(&m), 7);
+        *lock(&m) = 9;
+        assert_eq!(*lock(&m), 9);
+    }
+
+    #[test]
+    fn rwlock_recovers_from_poison() {
+        let l = Arc::new(RwLock::new(1i32));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        *write(&l) += 1;
+        assert_eq!(*read(&l), 2);
+    }
+}

@@ -1,0 +1,203 @@
+//! Chaos integration tests: kill, stall and alloc-fail persistent decode
+//! workers mid-run (seeded `FaultPlan` injection) and assert the
+//! supervisor's recovery-as-eviction path serves every request the
+//! *bitwise identical* tokens of a fault-free run on the legacy tick-loop
+//! runtime — the oracle that never sees chaos. Covers the plain stream,
+//! an oversubscribed paged pool (recovery composes with LRU eviction
+//! churn), copy-on-write shared-prefix forks, and an env-seeded arm the
+//! CI chaos matrix drives through `MOBA_CHAOS_SEED` × `MOBA_WORKERS`.
+
+use moba::serve::{
+    ContinuousScheduler, Fault, FaultKind, FaultPlan, Request, RequestResult, RuntimeKind,
+    SchedulerCfg, ServeCfg, ServeEngine, ToyModel,
+};
+use moba::sparse::BackendKind;
+use moba::util::rng::Rng;
+
+const VOCAB: usize = 48;
+const H: usize = 2;
+const D: usize = 8;
+const BS: usize = 16;
+
+fn engine(backend: BackendKind, pool_blocks: usize) -> ServeEngine<ToyModel> {
+    ServeEngine::new(
+        ToyModel::new(VOCAB, H, D, 9),
+        ServeCfg { block_size: BS, topk: 2, max_seq: 512, backend, workers: 1, pool_blocks },
+    )
+}
+
+fn stream(seed: u64, n: usize) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..n as u64)
+        .map(|id| {
+            t += rng.f64() * 0.03;
+            let len = 6 + rng.range(0, 40);
+            Request {
+                id,
+                prompt: (0..len).map(|_| rng.range(0, VOCAB) as i32).collect(),
+                max_new: 2 + rng.range(0, 7),
+                arrival: t,
+            }
+        })
+        .collect()
+}
+
+/// Same shape but everything arrives at t=0: the batch fills to
+/// `max_in_flight` on the first tick, so an early kill is guaranteed to
+/// hit a worker that owns live sessions.
+fn burst(seed: u64, n: usize) -> Vec<Request> {
+    let mut reqs = stream(seed, n);
+    for r in &mut reqs {
+        r.arrival = 0.0;
+    }
+    reqs
+}
+
+/// Fault-free ground truth: the same stream on the tick-loop runtime
+/// (which ignores chaos by construction).
+fn oracle(backend: BackendKind, pool_blocks: usize, reqs: Vec<Request>) -> Vec<RequestResult> {
+    let mut sched = ContinuousScheduler::new(
+        engine(backend, pool_blocks),
+        SchedulerCfg {
+            max_in_flight: 4,
+            runtime: RuntimeKind::TickLoop,
+            ..SchedulerCfg::default()
+        },
+    );
+    let mut out = sched.run_stream(reqs, 0.005).unwrap();
+    out.sort_by_key(|r| r.id);
+    out
+}
+
+fn chaos_sched(
+    backend: BackendKind,
+    pool_blocks: usize,
+    decode_workers: usize,
+    steal: bool,
+    plan: FaultPlan,
+) -> ContinuousScheduler<ToyModel> {
+    ContinuousScheduler::new(
+        engine(backend, pool_blocks),
+        SchedulerCfg {
+            max_in_flight: 4,
+            decode_workers,
+            runtime: RuntimeKind::Persistent,
+            steal,
+            chaos: Some(plan),
+            // generous: seeded stalls are tens of ms and must stay
+            // benign; only a truly wedged worker trips the deadline
+            barrier_deadline_secs: Some(5.0),
+            ..SchedulerCfg::default()
+        },
+    )
+}
+
+fn assert_parity(got: &[RequestResult], want: &[RequestResult], label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: lost requests");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.id, w.id, "{label}: id order");
+        assert_eq!(g.output, w.output, "{label}: req {} tokens diverged", g.id);
+    }
+}
+
+#[test]
+fn killing_one_worker_matches_the_fault_free_oracle() {
+    let reqs = burst(0xFA11, 8);
+    let want = oracle(BackendKind::Fused, 0, reqs.clone());
+    for steal in [false, true] {
+        // tick 2: the first admission wave (tick 1, balanced 2/2 across
+        // shards) is still decoding, so shard 1 dies owning sessions
+        let plan =
+            FaultPlan::new(vec![Fault { worker: 1, tick: 2, kind: FaultKind::Panic }]);
+        let mut sched = chaos_sched(BackendKind::Fused, 0, 2, steal, plan);
+        let mut got = sched.run_stream(reqs.clone(), 0.005).unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_parity(&got, &want, &format!("steal={steal}"));
+        let fs = sched.stats.fault;
+        assert_eq!(fs.worker_deaths, 1, "steal={steal}: exactly one worker dies");
+        assert!(fs.rehomed_sessions >= 1, "steal={steal}: dead shard had sessions to re-home");
+        assert!(sched.idle(), "steal={steal}: every request retired");
+    }
+}
+
+#[test]
+fn worker_death_composes_with_pool_oversubscription() {
+    let reqs = stream(0x0B5C, 8);
+    let solo = engine(BackendKind::Fused, 0);
+    let max_need = reqs
+        .iter()
+        .map(|r| solo.block_reserve(0, r.prompt.len() + r.max_new))
+        .max()
+        .unwrap();
+    // barely one session fits: constant eviction churn even fault-free,
+    // and recovery's quarantined sessions join the same preempted queue
+    let oversub = max_need + 1;
+    let want = oracle(BackendKind::Paged, oversub, reqs.clone());
+    let plan = FaultPlan::new(vec![
+        Fault { worker: 0, tick: 3, kind: FaultKind::AllocFail },
+        Fault { worker: 2, tick: 9, kind: FaultKind::Panic },
+    ]);
+    let mut sched = chaos_sched(BackendKind::Paged, oversub, 3, true, plan);
+    let mut got = sched.run_stream(reqs.clone(), 0.005).unwrap();
+    got.sort_by_key(|r| r.id);
+    assert_parity(&got, &want, "oversubscribed");
+    let fs = sched.stats.fault;
+    assert!(fs.worker_deaths >= 1, "at least the tick-3 fault must land");
+    assert!(sched.idle());
+}
+
+#[test]
+fn shared_prefix_forks_survive_worker_death() {
+    let mut rng = Rng::new(0x5AFE);
+    let prefix: Vec<i32> = (0..40).map(|_| rng.range(0, VOCAB) as i32).collect();
+    let reqs = burst(0x5AFE, 6);
+
+    let mut tick = ContinuousScheduler::new(
+        engine(BackendKind::Paged, 0),
+        SchedulerCfg {
+            max_in_flight: 4,
+            runtime: RuntimeKind::TickLoop,
+            ..SchedulerCfg::default()
+        },
+    );
+    tick.set_shared_prefix(&prefix).unwrap();
+    let mut want = tick.run_stream(reqs.clone(), 0.005).unwrap();
+    want.sort_by_key(|r| r.id);
+
+    let plan = FaultPlan::new(vec![Fault { worker: 1, tick: 2, kind: FaultKind::Panic }]);
+    let mut sched = chaos_sched(BackendKind::Paged, 0, 2, true, plan);
+    sched.set_shared_prefix(&prefix).unwrap();
+    let mut got = sched.run_stream(reqs, 0.005).unwrap();
+    got.sort_by_key(|r| r.id);
+    assert_parity(&got, &want, "shared-prefix");
+    assert_eq!(sched.stats.fault.worker_deaths, 1);
+}
+
+#[test]
+fn env_seeded_chaos_is_survivable_and_reproducible() {
+    // the CI chaos matrix drives this arm: MOBA_CHAOS_SEED picks the
+    // fault schedule, MOBA_WORKERS (via default_workers) the shard count
+    let seed = moba::serve::chaos::seed_from_env().unwrap_or(0xC0FFEE);
+    let workers = moba::sparse::default_workers().clamp(2, 8);
+    let reqs = stream(seed ^ 0xEC0, 8);
+    let want = oracle(BackendKind::Fused, 0, reqs.clone());
+    let plan = FaultPlan::seeded(seed, workers, 40);
+    let deaths: Vec<usize> = (0..2)
+        .map(|_| {
+            let mut sched = chaos_sched(BackendKind::Fused, 0, workers, true, plan.clone());
+            let mut got = sched.run_stream(reqs.clone(), 0.005).unwrap();
+            got.sort_by_key(|r| r.id);
+            assert_parity(&got, &want, &format!("seed={seed} workers={workers}"));
+            assert!(sched.idle());
+            sched.stats.fault.worker_deaths
+        })
+        .collect();
+    assert!(
+        deaths[0] <= plan.fatal_workers(),
+        "seed={seed}: more deaths than the plan schedules"
+    );
+    // fatal faults fire at a deterministic tick: two identical runs see
+    // the same death count
+    assert_eq!(deaths[0], deaths[1], "seed={seed}: chaos not reproducible");
+}

@@ -10,8 +10,8 @@
 //! (the scheduler's interleaving is invisible).
 
 use moba::serve::{
-    ContinuousScheduler, Request, RequestResult, RuntimeKind, SchedulerCfg, ServeCfg, ServeEngine,
-    ToyModel,
+    ContinuousScheduler, FaultPlan, Request, RequestResult, RuntimeKind, SchedulerCfg, ServeCfg,
+    ServeEngine, ToyModel,
 };
 use moba::sparse::BackendKind;
 use moba::util::rng::Rng;
@@ -118,6 +118,129 @@ fn fuzzed_streams_are_schedule_invariant() {
                      runtime={} steal={steal} req={}",
                     backend.label(),
                     runtime.label(),
+                    g.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzzed_streams_are_fault_schedule_invariant() {
+    // randomized fault schedules (seeded worker kills, stalls, alloc
+    // failures) on top of the same fuzz grid: supervision re-homes the
+    // dead shard's sessions through eviction/resume, and served tokens
+    // must STILL be bitwise identical to the solo ground truth — across
+    // steal on/off and pool oversubscription
+    for seed in [13u64, 59, 97] {
+        let reqs = stream(seed, 8);
+        let solo = engine(BackendKind::Fused, 0);
+        let want: Vec<Vec<i32>> = reqs
+            .iter()
+            .map(|r| solo.generate(&r.prompt, r.max_new).unwrap().0)
+            .collect();
+        let max_need = reqs
+            .iter()
+            .map(|r| solo.block_reserve(0, r.prompt.len() + r.max_new))
+            .max()
+            .unwrap();
+        let oversub = max_need + 1;
+        for (backend, pool_blocks, decode_workers, steal) in [
+            (BackendKind::Fused, 0, 2, false),
+            (BackendKind::Fused, 0, 3, true),
+            (BackendKind::Paged, 0, 3, true),
+            (BackendKind::Paged, oversub, 2, false),
+            (BackendKind::Paged, oversub, 3, true),
+        ] {
+            // vary the plan per arm so each grid point sees different
+            // faults; seeded plans always spare one worker
+            let plan = FaultPlan::seeded(
+                seed.wrapping_mul(31) ^ decode_workers as u64,
+                decode_workers,
+                48,
+            );
+            let mut sched = ContinuousScheduler::new(
+                engine(backend, pool_blocks),
+                SchedulerCfg {
+                    max_in_flight: 4,
+                    decode_workers,
+                    runtime: RuntimeKind::Persistent,
+                    steal,
+                    chaos: Some(plan.clone()),
+                    // generous: seeded stalls (tens of ms) must stay
+                    // benign; only a wedged worker would trip this
+                    barrier_deadline_secs: Some(5.0),
+                    ..SchedulerCfg::default()
+                },
+            );
+            let mut got = sched.run_stream(reqs.clone(), 0.005).unwrap();
+            got.sort_by_key(|r| r.id);
+            assert_eq!(got.len(), reqs.len(), "seed={seed} lost requests under chaos");
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(
+                    &g.output,
+                    w,
+                    "seed={seed} backend={} pool={pool_blocks} shards={decode_workers} \
+                     steal={steal} faults={:?} req={}",
+                    backend.label(),
+                    plan.faults(),
+                    g.id
+                );
+            }
+            assert!(
+                sched.stats.fault.worker_deaths <= plan.fatal_workers(),
+                "seed={seed}: more deaths than scheduled faults"
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzzed_shared_prefix_streams_survive_chaos() {
+    // copy-on-write forks + oversubscribed pool + a seeded worker kill:
+    // recovery must re-fork the prefix and replay each orphan's own
+    // tokens, bit-identical to the fault-free private-session truth
+    for seed in [29u64, 83] {
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        let n_prefix = 24 + rng.range(0, 24);
+        let prefix: Vec<i32> = (0..n_prefix).map(|_| rng.range(0, VOCAB) as i32).collect();
+        let reqs = stream(seed, 6);
+        let solo = engine(BackendKind::Fused, 0);
+        let want: Vec<Vec<i32>> = reqs
+            .iter()
+            .map(|r| {
+                let full: Vec<i32> = prefix.iter().chain(&r.prompt).copied().collect();
+                solo.generate(&full, r.max_new).unwrap().0
+            })
+            .collect();
+        let prefix_blocks = (prefix.len() + BS - 1) / BS;
+        let max_fork_need = reqs
+            .iter()
+            .map(|r| solo.block_reserve(prefix.len(), r.prompt.len() + r.max_new))
+            .max()
+            .unwrap();
+        let oversub = prefix_blocks + max_fork_need + 1;
+        for pool_blocks in [0usize, oversub] {
+            let mut sched = ContinuousScheduler::new(
+                engine(BackendKind::Paged, pool_blocks),
+                SchedulerCfg {
+                    max_in_flight: 3,
+                    decode_workers: 3,
+                    runtime: RuntimeKind::Persistent,
+                    steal: true,
+                    chaos: Some(FaultPlan::seeded(seed, 3, 48)),
+                    barrier_deadline_secs: Some(5.0),
+                    ..SchedulerCfg::default()
+                },
+            );
+            sched.set_shared_prefix(&prefix).unwrap();
+            let mut got = sched.run_stream(reqs.clone(), 0.005).unwrap();
+            got.sort_by_key(|r| r.id);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(
+                    &g.output,
+                    w,
+                    "seed={seed} pool={pool_blocks} req={} diverged under chaos",
                     g.id
                 );
             }
