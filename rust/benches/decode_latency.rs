@@ -173,11 +173,9 @@ fn oversubscribed_arm(quick: bool) -> Json {
     };
     let mk_reqs = || -> Vec<Request> {
         (0..requests as u64)
-            .map(|id| Request {
-                id,
-                prompt: (0..prompt_len as i32).map(|i| (i * 5 + id as i32) % 64).collect(),
-                max_new,
-                arrival: 0.0,
+            .map(|id| {
+                let prompt = (0..prompt_len as i32).map(|i| (i * 5 + id as i32) % 64).collect();
+                Request::new(id, prompt, max_new, 0.0)
             })
             .collect()
     };

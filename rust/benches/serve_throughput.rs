@@ -14,6 +14,16 @@
 //! persistent + stealing ≥ 1.2× tick-loop tokens/s on the skewed arm at
 //! the same worker count, on a 4+ core box.
 //!
+//! The **overload storm** arm feeds a seeded bursty multi-tenant trace
+//! (`serve::load::storm` — long-tail prompts, priority mix, deadlines,
+//! conversation resumes, plus one whale that can never fit the pool)
+//! through a paged pool at roughly 4× oversubscription. Acceptance: the
+//! run never aborts, sheds are nonzero (typed `ServeError::Shed`), every
+//! non-shed request finishes, and with the degradation dial off the shed
+//! id set and served tokens are bitwise identical to the tick-loop
+//! oracle. p50/p99 queue/prefill/decode latency, shed counts and SLA
+//! violations land in `BENCH_serve.json` alongside the throughput rows.
+//!
 //! ```sh
 //! cargo bench --bench serve_throughput            # full run + asserts
 //! cargo bench --bench serve_throughput -- --quick # CI smoke: small run,
@@ -23,7 +33,8 @@
 use std::time::Instant;
 
 use moba::serve::{
-    ContinuousScheduler, Request, RuntimeKind, SchedulerCfg, ServeCfg, ServeEngine, ToyModel,
+    storm, summarize, ContinuousScheduler, DegradeCfg, Request, RuntimeKind, SchedulerCfg,
+    ServeCfg, ServeEngine, StormCfg, ToyModel,
 };
 use moba::sparse::BackendKind;
 use moba::util::json::{arr, num, obj, s, Json};
@@ -49,16 +60,13 @@ fn arm_requests(arm: &Arm) -> Vec<Request> {
     (0..arm.requests as u64)
         .map(|id| {
             let skewed = arm.skew_every > 0 && id as usize % arm.skew_every == 0;
-            Request {
-                id,
-                prompt: (0..arm.prompt_len as i32)
-                    .map(|i| (i * 7 + 3 * id as i32) % VOCAB as i32)
-                    .collect(),
-                max_new: if skewed { arm.max_new * arm.skew_factor } else { arm.max_new },
-                // a burst: everything queued up front, pure decode
-                // throughput, no arrival-process noise
-                arrival: 0.0,
-            }
+            let prompt: Vec<i32> = (0..arm.prompt_len as i32)
+                .map(|i| (i * 7 + 3 * id as i32) % VOCAB as i32)
+                .collect();
+            let max_new = if skewed { arm.max_new * arm.skew_factor } else { arm.max_new };
+            // a burst: everything queued up front, pure decode
+            // throughput, no arrival-process noise
+            Request::new(id, prompt, max_new, 0.0)
         })
         .collect()
 }
@@ -106,6 +114,84 @@ fn run(arm: &Arm, runtime: RuntimeKind, decode_workers: usize, steal: bool) -> R
         wall_secs,
         steals: ws.iter().map(|w| w.steals).sum(),
         stolen_steps: ws.iter().map(|w| w.stolen_steps).sum(),
+    }
+}
+
+/// The overload trace: a seeded storm sized to roughly 4× pool
+/// oversubscription (`max_in_flight` sessions wanting ~4× the blocks the
+/// pool holds), plus one whale whose reservation exceeds the whole pool —
+/// it can never fit and must be shed with a typed error. Returns
+/// `(trace, pool_blocks)`.
+fn storm_trace(quick: bool) -> (Vec<Request>, usize) {
+    let pool_blocks = 12;
+    let cfg = StormCfg {
+        requests: if quick { 24 } else { 1000 },
+        seed: 20260808,
+        vocab: VOCAB,
+        prompt_len: 40,
+        max_new: 10,
+        deadline_secs: 0.5,
+        ..StormCfg::default()
+    };
+    let mut reqs = storm(&cfg);
+    let whale = (pool_blocks + 2) * BLOCK;
+    reqs.push(Request::new(reqs.len() as u64, vec![1; whale], 4, 0.0));
+    (reqs, pool_blocks)
+}
+
+struct StormRun {
+    outputs: Vec<(u64, Vec<i32>)>,
+    shed_ids: Vec<u64>,
+    wall_secs: f64,
+    summary: moba::serve::StormSummary,
+    evictions: usize,
+    degraded: usize,
+}
+
+fn run_storm(
+    trace: &[Request],
+    pool_blocks: usize,
+    runtime: RuntimeKind,
+    workers: usize,
+    steal: bool,
+    degrade: Option<DegradeCfg>,
+) -> StormRun {
+    let engine = ServeEngine::new(
+        ToyModel::new(VOCAB, HEADS, DIM, 11),
+        ServeCfg {
+            block_size: BLOCK,
+            topk: TOPK,
+            max_seq: 8192,
+            backend: BackendKind::Paged,
+            workers: 1,
+            pool_blocks,
+        },
+    );
+    let mut sched = ContinuousScheduler::new(
+        engine,
+        SchedulerCfg {
+            max_in_flight: 16,
+            decode_workers: workers,
+            runtime,
+            steal,
+            degrade,
+            ..SchedulerCfg::default()
+        },
+    );
+    let t0 = Instant::now();
+    let mut results = sched.run_stream(trace.to_vec(), 0.002).expect("storm stream");
+    let wall_secs = t0.elapsed().as_secs_f64();
+    results.sort_by_key(|r| r.id);
+    let summary = summarize(trace, &results, sched.sheds().len());
+    let mut shed_ids: Vec<u64> = sched.sheds().iter().map(|(id, _)| *id).collect();
+    shed_ids.sort_unstable();
+    StormRun {
+        outputs: results.iter().map(|r| (r.id, r.output.clone())).collect(),
+        shed_ids,
+        wall_secs,
+        summary,
+        evictions: sched.stats.eviction.evictions,
+        degraded: sched.stats.overload.degraded_sessions,
     }
 }
 
@@ -221,6 +307,86 @@ fn main() {
         if arm.skew_every > 0 {
             skewed_speedup = best_persistent / best_tick;
         }
+    }
+
+    // == overload storm: bursty multi-tenant trace vs a small paged pool ==
+    let (trace, pool_blocks) = storm_trace(quick);
+    println!(
+        "== overload storm: {} requests vs a {pool_blocks}-block paged pool ==",
+        trace.len()
+    );
+    println!(
+        "{:>11} {:>8} {:>6} {:>10} {:>6} {:>5} {:>5} {:>6} {:>10} {:>10}",
+        "runtime", "workers", "steal", "wall_s", "done", "shed", "sla", "evict", "q_p50", "q_p99"
+    );
+    let mut storm_report = |label: &str, workers: usize, steal: bool, out: &StormRun| {
+        let sm = &out.summary;
+        println!(
+            "{:>11} {:>8} {:>6} {:>10.3} {:>6} {:>5} {:>5} {:>6} {:>10.4} {:>10.4}",
+            label, workers, steal, out.wall_secs, sm.completed, sm.shed, sm.sla_violations,
+            out.evictions, sm.queue_p50, sm.queue_p99
+        );
+        rows.push(obj(vec![
+            ("arm", s("storm")),
+            ("runtime", s(label)),
+            ("workers", num(workers as f64)),
+            ("steal", Json::Bool(steal)),
+            ("degraded", num(out.degraded as f64)),
+            ("wall_secs", num(out.wall_secs)),
+            ("completed", num(sm.completed as f64)),
+            ("shed", num(sm.shed as f64)),
+            ("sla_violations", num(sm.sla_violations as f64)),
+            ("evictions", num(out.evictions as f64)),
+            ("queue_p50", num(sm.queue_p50)),
+            ("queue_p99", num(sm.queue_p99)),
+            ("prefill_p50", num(sm.prefill_p50)),
+            ("prefill_p99", num(sm.prefill_p99)),
+            ("decode_p50", num(sm.decode_p50)),
+            ("decode_p99", num(sm.decode_p99)),
+        ]));
+    };
+    // ground truth: the fault-free single-worker tick loop on the same
+    // trace — overload decisions are simulation-clock arithmetic, so the
+    // shed set and all served tokens must be bitwise identical under
+    // every runtime/worker/steal combination
+    let storm_base = run_storm(&trace, pool_blocks, RuntimeKind::TickLoop, 1, false, None);
+    assert!(
+        !storm_base.shed_ids.is_empty(),
+        "the storm must shed: the whale's reservation can never fit the pool"
+    );
+    assert_eq!(
+        storm_base.outputs.len() + storm_base.shed_ids.len(),
+        trace.len(),
+        "overload control must account for every request: finished or shed, never lost"
+    );
+    storm_report("tick-loop", 1, false, &storm_base);
+    for (runtime, workers, steal) in
+        [(RuntimeKind::Persistent, 1, false), (RuntimeKind::Persistent, multi, true)]
+    {
+        let out = run_storm(&trace, pool_blocks, runtime, workers, steal, None);
+        assert_eq!(
+            out.shed_ids,
+            storm_base.shed_ids,
+            "storm: {} workers={workers} steal={steal} changed the shed set",
+            runtime.label()
+        );
+        assert_eq!(
+            out.outputs,
+            storm_base.outputs,
+            "storm: {} workers={workers} steal={steal} changed served tokens",
+            runtime.label()
+        );
+        storm_report(runtime.label(), workers, steal, &out);
+    }
+    if !quick {
+        // the pressure dial downshifts low-priority sessions' top-k under
+        // occupancy pressure: tokens legitimately differ, but the run must
+        // still account for every request and actually degrade someone
+        let dial = Some(DegradeCfg { occupancy: 0.5, topk: 1 });
+        let out = run_storm(&trace, pool_blocks, RuntimeKind::Persistent, multi, true, dial);
+        assert_eq!(out.outputs.len() + out.shed_ids.len(), trace.len());
+        assert!(out.degraded > 0, "a 4x-oversubscribed storm must trip the 0.5-occupancy dial");
+        storm_report("degraded", multi, true, &out);
     }
 
     // the trajectory entry is written in quick mode as well (flagged), so

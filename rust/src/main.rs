@@ -74,8 +74,9 @@ serve options: --requests N --max-batch M --prompt-len P --max-new K
   --runtime persistent|tick (persistent pinned thread-per-core decode
     workers with bounded channels + work stealing, vs the legacy per-tick
     scoped-thread loop; served tokens are bitwise identical)
-  --no-steal (keep persistent workers on their own shard; default steals)
-  --no-pin (skip core pinning of persistent workers)
+  --no-steal (keep persistent workers on their own shard; default steals;
+    MOBA_STEAL=0 also disables)
+  --no-pin (skip core pinning of persistent workers; MOBA_PIN=0 too)
   --shared-prefix L (L-token system prompt forked per request; needs paged)
   --pool-blocks N (paged pool capacity in blocks, 0 = unbounded; a bounded
     pool oversubscribes: LRU eviction + re-prefill resume, same tokens)
@@ -92,10 +93,14 @@ common options: --steps N  --seed N  --sizes s0,s1  --artifact NAME
 /// driver: `serve::demo`).
 fn serve_cmd(args: &Args) -> Result<()> {
     let d = DemoCfg::default();
-    // strict env validation: a typo'd MOBA_WORKERS fails loudly here
-    // instead of silently running on all cores (the library default
-    // stays lenient)
+    // strict env validation: a typo'd MOBA_WORKERS / MOBA_STEAL /
+    // MOBA_PIN / MOBA_CHAOS_SEED fails loudly here with the name and
+    // offending value instead of being silently coerced to a default
+    // (the library-level readers stay lenient)
     let env_workers = moba::sparse::workers_from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let env_steal = moba::serve::runtime::steal_from_env_strict().map_err(|e| anyhow::anyhow!(e))?;
+    let env_pin = moba::serve::runtime::pin_from_env_strict().map_err(|e| anyhow::anyhow!(e))?;
+    let env_chaos = moba::serve::chaos::seed_from_env_strict().map_err(|e| anyhow::anyhow!(e))?;
     // `--workers 0` / `--decode-workers 0` mean "all available cores"
     let resolve = move |n: usize| {
         if n == 0 {
@@ -115,14 +120,14 @@ fn serve_cmd(args: &Args) -> Result<()> {
         workers: resolve(args.get_usize("workers", d.workers)?),
         decode_workers: resolve(args.get_usize("decode-workers", d.decode_workers)?),
         runtime: moba::serve::RuntimeKind::parse(args.get_str("runtime", d.runtime.label()))?,
-        steal: if args.flag("no-steal") { false } else { d.steal },
-        pin: if args.flag("no-pin") { false } else { d.pin },
+        steal: if args.flag("no-steal") { false } else { env_steal.unwrap_or(true) },
+        pin: if args.flag("no-pin") { false } else { env_pin.unwrap_or(true) },
         shared_prefix: args.get_usize("shared-prefix", d.shared_prefix)?,
         pool_blocks: args.get_usize("pool-blocks", d.pool_blocks)?,
         seed: args.get_u64("seed", d.seed)?,
         chaos_seed: match args.get("chaos-seed") {
             Some(_) => Some(args.get_u64("chaos-seed", 0)?),
-            None => d.chaos_seed, // MOBA_CHAOS_SEED, if set
+            None => env_chaos, // strictly parsed MOBA_CHAOS_SEED, if set
         },
         barrier_deadline_secs: {
             let s = args.get_f64("barrier-deadline", 0.0)?;

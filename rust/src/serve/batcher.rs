@@ -10,8 +10,52 @@
 //!   requests immediately, used by `serve::scheduler` to refill in-flight
 //!   decode batches every tick without waiting for a batch boundary.
 //!
+//! Continuous admission is **priority-aware**: among arrived requests,
+//! higher [`Priority`] classes are handed over first; within a class the
+//! order is (arrival, id) — so a single-class stream degenerates exactly
+//! to the original FIFO discipline. Requests may also carry a deadline
+//! budget; [`Batcher::shed_expired`] drains the ones whose deadline
+//! passed while they were still queued so the scheduler can shed them
+//! explicitly instead of serving them uselessly late.
+//!
 //! Per-request latency is split into queue / prefill / decode components
 //! in [`RequestResult`].
+
+/// Multi-tenant priority class. Ordering is by urgency: `Batch <
+/// Standard < Interactive`, so `Ord`/`max` pick the most urgent class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Throughput traffic: evicted first, degraded first, admitted last.
+    Batch,
+    /// The default class.
+    #[default]
+    Standard,
+    /// Latency-sensitive traffic: admitted first, evicted last, never
+    /// degraded by the pressure dial.
+    Interactive,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] = [Priority::Batch, Priority::Standard, Priority::Interactive];
+
+    /// Stable numeric rank (0 = least urgent) — the index into
+    /// per-class stats arrays like `EvictionStats::evictions_by_class`.
+    pub fn rank(self) -> usize {
+        match self {
+            Priority::Batch => 0,
+            Priority::Standard => 1,
+            Priority::Interactive => 2,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Batch => "batch",
+            Priority::Standard => "standard",
+            Priority::Interactive => "interactive",
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -20,6 +64,52 @@ pub struct Request {
     pub max_new: usize,
     /// arrival time, seconds (simulation clock)
     pub arrival: f64,
+    pub priority: Priority,
+    /// Admission deadline budget, seconds after `arrival` (simulation
+    /// clock): if the request is still queued past `arrival + deadline`
+    /// it is shed with `ServeError::Shed` instead of served uselessly
+    /// late. `None` = wait forever.
+    pub deadline: Option<f64>,
+    /// Streaming-pause cadence: a session skips one decode tick each
+    /// time its output length reaches a multiple of `pause_every` (a
+    /// client draining its stream). 0 = never pauses.
+    pub pause_every: usize,
+}
+
+impl Request {
+    /// A `Standard`-priority request with no deadline and no streaming
+    /// pauses — the shape every pre-overload call site used.
+    pub fn new(id: u64, prompt: Vec<i32>, max_new: usize, arrival: f64) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new,
+            arrival,
+            priority: Priority::default(),
+            deadline: None,
+            pause_every: 0,
+        }
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> Request {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline_secs: f64) -> Request {
+        self.deadline = Some(deadline_secs);
+        self
+    }
+
+    pub fn with_pause_every(mut self, pause_every: usize) -> Request {
+        self.pause_every = pause_every;
+        self
+    }
+
+    /// Queued past its deadline budget at simulation time `now`?
+    pub fn expired(&self, now: f64) -> bool {
+        self.deadline.is_some_and(|d| now > self.arrival + d)
+    }
 }
 
 /// Completed request with its latency breakdown.
@@ -55,7 +145,8 @@ impl Default for BatcherCfg {
     }
 }
 
-/// Deterministic FIFO admission queue over a timestamped request stream.
+/// Deterministic priority-then-FIFO admission queue over a timestamped
+/// request stream.
 pub struct Batcher {
     cfg: BatcherCfg,
     queue: Vec<Request>,
@@ -74,26 +165,58 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Index of the request continuous admission hands over next: the
+    /// highest-priority arrived request, ties broken by (arrival, id) —
+    /// exact FIFO within a class.
+    fn best(&self, now: f64) -> Option<usize> {
+        self.queue
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.arrival <= now)
+            .min_by(|(_, a), (_, b)| {
+                b.priority
+                    .cmp(&a.priority)
+                    .then(a.arrival.total_cmp(&b.arrival))
+                    .then(a.id.cmp(&b.id))
+            })
+            .map(|(i, _)| i)
+    }
+
     /// The request `admit(now, 1)` would hand over, without taking it —
     /// the probe a capacity-aware scheduler uses to check whether the
     /// next admission fits (pool blocks, decode slots) before committing.
     pub fn peek(&self, now: f64) -> Option<&Request> {
-        self.queue.first().filter(|r| r.arrival <= now)
+        self.best(now).map(|i| &self.queue[i])
     }
 
-    /// Continuous admission: pop up to `free_slots` FIFO requests that
-    /// have arrived by `now`. Never waits — a continuous scheduler calls
-    /// this every tick to top up the in-flight batch. O(queue) total: the
-    /// ready requests form a prefix (FIFO arrival order), so they are
-    /// counted and drained in one pass.
+    /// Continuous admission: pop up to `free_slots` arrived requests in
+    /// (priority desc, arrival, id) order. Never waits — a continuous
+    /// scheduler calls this every tick to top up the in-flight batch.
     pub fn admit(&mut self, now: f64, free_slots: usize) -> Vec<Request> {
-        let ready = self
-            .queue
-            .iter()
-            .take(free_slots)
-            .take_while(|r| r.arrival <= now)
-            .count();
-        self.queue.drain(..ready).collect()
+        let mut out = Vec::new();
+        while out.len() < free_slots {
+            match self.best(now) {
+                Some(i) => out.push(self.queue.remove(i)),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Remove and return every queued request whose deadline budget has
+    /// expired at `now` — the scheduler sheds these with a typed error
+    /// instead of ever admitting them.
+    pub fn shed_expired(&mut self, now: f64) -> Vec<Request> {
+        let mut shed = Vec::new();
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].expired(now) {
+                shed.push(self.queue.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        shed
     }
 
     /// Batch mode: given the current clock, pop the next batch if either
@@ -127,7 +250,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64, arrival: f64) -> Request {
-        Request { id, prompt: vec![1, 2, 3], max_new: 4, arrival }
+        Request::new(id, vec![1, 2, 3], 4, arrival)
     }
 
     #[test]
@@ -203,6 +326,57 @@ mod tests {
         assert_eq!(b.peek(1.5).unwrap().id, 7);
         assert_eq!(b.pending(), 1, "peek must not consume");
         assert_eq!(b.admit(1.5, 1)[0].id, 7);
+    }
+
+    #[test]
+    fn higher_priority_jumps_the_arrived_queue() {
+        let mut b = Batcher::new(BatcherCfg::default());
+        b.push(req(0, 0.0).with_priority(Priority::Batch));
+        b.push(req(1, 0.1).with_priority(Priority::Interactive));
+        b.push(req(2, 0.2)); // Standard
+        b.push(req(3, 5.0).with_priority(Priority::Interactive)); // not arrived
+        // arrived set {0,1,2}: interactive 1 first, then standard 2,
+        // then batch 0; the unarrived interactive 3 cannot jump
+        assert_eq!(b.peek(1.0).unwrap().id, 1);
+        let ids: Vec<u64> = b.admit(1.0, 8).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2, 0]);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn same_class_admission_stays_fifo() {
+        let mut b = Batcher::new(BatcherCfg::default());
+        // exact-tie arrivals: id breaks the tie, i.e. submission order
+        for i in 0..4 {
+            b.push(req(i, 0.0).with_priority(Priority::Batch));
+        }
+        let ids: Vec<u64> = b.admit(0.0, 8).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn shed_expired_drains_only_deadline_misses() {
+        let mut b = Batcher::new(BatcherCfg::default());
+        b.push(req(0, 0.0).with_deadline(0.5));
+        b.push(req(1, 0.0).with_deadline(5.0));
+        b.push(req(2, 0.0)); // no deadline: waits forever
+        assert!(b.shed_expired(0.4).is_empty(), "nothing expired yet");
+        let shed = b.shed_expired(1.0);
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 0);
+        assert_eq!(b.pending(), 2);
+        assert!(b.shed_expired(100.0).iter().map(|r| r.id).eq([1]));
+        assert_eq!(b.pending(), 1, "deadline-free requests are never shed");
+    }
+
+    #[test]
+    fn priority_orders_by_urgency() {
+        assert!(Priority::Interactive > Priority::Standard);
+        assert!(Priority::Standard > Priority::Batch);
+        assert_eq!(Priority::default(), Priority::Standard);
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.rank(), i);
+        }
     }
 
     #[test]

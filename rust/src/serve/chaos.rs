@@ -34,6 +34,17 @@ pub enum FaultKind {
     /// supervisor declares the worker dead and the zombie later drains
     /// and exits on its own.
     Stall { millis: u64 },
+    /// A slow-but-alive worker: sleep `millis` (intended to stay well
+    /// under `barrier_deadline_secs`), then step normally. The lag
+    /// interleaves with work stealing — other workers drain the slow
+    /// shard's deque — and must never trip spurious death detection.
+    Slow { millis: u64 },
+    /// Poison the shared paged pool's `RwLock` (a throwaway thread
+    /// panics while holding the write guard). Every later pool access
+    /// goes through `util::sync`'s poison-recovering helpers, so serving
+    /// must continue as if nothing happened. No-op for unpooled
+    /// backends.
+    PoisonPool,
 }
 
 /// One scheduled fault: `kind` fires on worker `worker` at tick `tick`.
@@ -46,9 +57,10 @@ pub struct Fault {
 
 impl Fault {
     /// Fatal faults permanently remove the worker (Panic/AllocFail, and
-    /// Stall once the supervisor gives up on the barrier).
+    /// Stall once the supervisor gives up on the barrier). Slow and
+    /// PoisonPool are survivable by design and never count as fatal.
     pub fn is_fatal(&self) -> bool {
-        !matches!(self.kind, FaultKind::Stall { .. })
+        matches!(self.kind, FaultKind::Panic | FaultKind::AllocFail)
     }
 }
 
@@ -79,13 +91,15 @@ impl FaultPlan {
         let mut fatal_workers: Vec<usize> = Vec::new();
         for _ in 0..n {
             let tick = rng.below(horizon);
-            let kind = match rng.range(0, 4) {
+            let kind = match rng.range(0, 6) {
                 0 => FaultKind::Panic,
                 1 => FaultKind::AllocFail,
-                _ => FaultKind::Stall { millis: 5 + rng.below(40) },
+                2 | 3 => FaultKind::Stall { millis: 5 + rng.below(40) },
+                4 => FaultKind::Slow { millis: 1 + rng.below(10) },
+                _ => FaultKind::PoisonPool,
             };
             let worker = rng.range(0, workers);
-            let fatal = !matches!(kind, FaultKind::Stall { .. });
+            let fatal = matches!(kind, FaultKind::Panic | FaultKind::AllocFail);
             if fatal {
                 // keep at least one worker alive across the whole plan
                 if !fatal_workers.contains(&worker) && fatal_workers.len() + 1 >= workers {
@@ -136,12 +150,38 @@ pub fn panic_message(kind: FaultKind, worker: usize, tick: u64) -> String {
         FaultKind::Stall { millis } => {
             format!("chaos: injected {millis}ms stall on worker {worker} at tick {tick}")
         }
+        FaultKind::Slow { millis } => {
+            format!("chaos: injected {millis}ms slowdown on worker {worker} at tick {tick}")
+        }
+        FaultKind::PoisonPool => {
+            format!("chaos: injected pool-lock poisoning on worker {worker} at tick {tick}")
+        }
     }
 }
 
 /// Chaos seed from `MOBA_CHAOS_SEED` (unset or unparsable → no chaos).
+/// Library default stays lenient; the CLI boundary validates through
+/// [`parse_seed`] so a typo fails loudly instead.
 pub fn seed_from_env() -> Option<u64> {
     std::env::var("MOBA_CHAOS_SEED").ok().and_then(|v| v.trim().parse().ok())
+}
+
+/// Strict `MOBA_CHAOS_SEED` parser (the `parse_workers` pattern): unset
+/// is fine, but a set-and-unparsable value is a contextful error rather
+/// than silently running without chaos.
+pub fn parse_seed(raw: Option<String>) -> Result<Option<u64>, String> {
+    match raw {
+        None => Ok(None),
+        Some(v) => match v.trim().parse::<u64>() {
+            Ok(seed) => Ok(Some(seed)),
+            Err(_) => Err(format!("MOBA_CHAOS_SEED must be a non-negative integer, got {v:?}")),
+        },
+    }
+}
+
+/// Strict env read for the CLI boundary.
+pub fn seed_from_env_strict() -> Result<Option<u64>, String> {
+    parse_seed(std::env::var("MOBA_CHAOS_SEED").ok())
 }
 
 #[cfg(test)]
@@ -182,6 +222,8 @@ mod tests {
         assert_eq!(plan.fault_for(0, 3), None);
         assert!(f.is_fatal());
         assert!(!Fault { worker: 0, tick: 0, kind: FaultKind::Stall { millis: 5 } }.is_fatal());
+        assert!(!Fault { worker: 0, tick: 0, kind: FaultKind::Slow { millis: 5 } }.is_fatal());
+        assert!(!Fault { worker: 0, tick: 0, kind: FaultKind::PoisonPool }.is_fatal());
     }
 
     #[test]
@@ -189,5 +231,15 @@ mod tests {
         assert!(panic_message(FaultKind::Panic, 2, 9).contains("chaos"));
         assert!(panic_message(FaultKind::AllocFail, 0, 1).contains("allocation"));
         assert!(panic_message(FaultKind::Stall { millis: 7 }, 1, 2).contains("7ms"));
+        assert!(panic_message(FaultKind::Slow { millis: 3 }, 1, 2).contains("slowdown"));
+        assert!(panic_message(FaultKind::PoisonPool, 1, 2).contains("poison"));
+    }
+
+    #[test]
+    fn strict_seed_parsing_rejects_typos_with_context() {
+        assert_eq!(parse_seed(None), Ok(None));
+        assert_eq!(parse_seed(Some(" 42 ".into())), Ok(Some(42)));
+        let err = parse_seed(Some("4o4".into())).unwrap_err();
+        assert!(err.contains("MOBA_CHAOS_SEED") && err.contains("4o4"), "{err}");
     }
 }

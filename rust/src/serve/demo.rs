@@ -141,6 +141,8 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
             pin: cfg.pin,
             chaos,
             barrier_deadline_secs,
+            // the demo's uniform-priority stream never trips the dial
+            degrade: None,
         },
     );
 
@@ -165,7 +167,7 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
         let len = cfg.prompt_len / 2 + rng.range(0, cfg.prompt_len / 2 + 1);
         let prompt: Vec<i32> = (0..len).map(|_| rng.range(0, 64) as i32).collect();
         prompt_tokens += len;
-        arrivals.push(Request { id, prompt, max_new: cfg.max_new, arrival: t });
+        arrivals.push(Request::new(id, prompt, cfg.max_new, t));
     }
 
     let t0 = std::time::Instant::now();
@@ -222,6 +224,16 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
             fs.barrier_timeouts,
             fs.rehomed_sessions,
             fs.recovery_reprefill_secs * 1e3
+        );
+    }
+    let ov = &sched.stats.overload;
+    if ov.shed_infeasible + ov.shed_deadline > 0 {
+        println!(
+            "overload: {} request(s) shed ({} infeasible, {} past deadline), {} resume retries",
+            ov.shed_infeasible + ov.shed_deadline,
+            ov.shed_infeasible,
+            ov.shed_deadline,
+            ov.resume_retries
         );
     }
     println!(

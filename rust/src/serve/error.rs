@@ -25,6 +25,10 @@ pub enum ServeError {
     BarrierTimeout { worker: usize, tick: u64, deadline_secs: f64 },
     /// Every decode worker is dead; the scheduler cannot make progress.
     AllWorkersDead,
+    /// Overload control rejected the request instead of queueing it
+    /// unboundedly: its deadline budget expired while queued, or its
+    /// pool reservation can never fit the configured capacity.
+    Shed { id: u64, reason: String },
 }
 
 impl fmt::Display for ServeError {
@@ -41,6 +45,9 @@ impl fmt::Display for ServeError {
                 "decode worker {worker} missed the tick-{tick} barrier deadline ({deadline_secs}s)"
             ),
             ServeError::AllWorkersDead => write!(f, "all decode workers are dead"),
+            ServeError::Shed { id, reason } => {
+                write!(f, "request {id} shed by overload control: {reason}")
+            }
         }
     }
 }
@@ -75,6 +82,8 @@ mod tests {
         assert!(ServeError::AllWorkersDead.to_string().contains("all decode workers"));
         let t = ServeError::BarrierTimeout { worker: 1, tick: 9, deadline_secs: 0.5 }.to_string();
         assert!(t.contains("worker 1") && t.contains("tick-9"), "{t}");
+        let s = ServeError::Shed { id: 42, reason: "deadline 0.1s missed".into() }.to_string();
+        assert!(s.contains("request 42") && s.contains("deadline"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! Trace-driven storm workloads: seeded overload traffic for the
+//! serving scheduler.
+//!
+//! A "storm" is a deterministic request trace with the failure-inducing
+//! shapes real serving fleets see all at once: bursty arrivals (whole
+//! groups land at one instant), long-tail prompt lengths (Pareto — most
+//! prompts are short, a few are whales), a multi-tenant priority mix,
+//! interactive deadline budgets, streaming pauses, and
+//! conversation-resume patterns (a later request re-submits an earlier
+//! prompt plus a continuation, so its KV re-prefill overlaps a prior
+//! session's blocks). Everything derives from [`StormCfg::seed`] through
+//! `util::rng` — two calls with the same config produce bit-identical
+//! traces, so an overload run is reproducible from the config alone and
+//! the persistent runtime can be diffed against the tick-loop oracle on
+//! the exact same traffic.
+//!
+//! [`summarize`] folds scheduler results back into the SLA view:
+//! p50/p99 queue/prefill/decode latency, per-class completion counts,
+//! shed totals, and deadline violations among requests that *did*
+//! complete (shed requests are accounted separately — a shed is overload
+//! control working, a violation is it failing).
+
+use super::batcher::{Priority, Request, RequestResult};
+use crate::metrics::quantile;
+use crate::util::rng::Rng;
+
+/// Shape of a storm trace. All randomness flows from `seed`.
+#[derive(Clone, Copy, Debug)]
+pub struct StormCfg {
+    /// total requests in the trace
+    pub requests: usize,
+    pub seed: u64,
+    /// token-id vocabulary for generated prompts
+    pub vocab: usize,
+    /// long-run mean arrival rate, requests per simulated second
+    /// (<= 0 = everything arrives at t=0)
+    pub rate: f64,
+    /// burst ceiling: arrivals land in groups of 1..=burst at a single
+    /// instant, with exponential gaps between groups sized so the
+    /// long-run rate stays `rate`
+    pub burst: usize,
+    /// base (median-ish) prompt length
+    pub prompt_len: usize,
+    /// Pareto tail index for prompt lengths; smaller = heavier tail.
+    /// Lengths are capped at `8 * prompt_len`.
+    pub tail_alpha: f64,
+    /// decode budget ceiling: each request decodes 1..=max_new tokens
+    pub max_new: usize,
+    /// priority mix weights, indexed by `Priority::rank()`
+    /// (batch, standard, interactive)
+    pub mix: [f64; 3],
+    /// fraction of requests that resume an earlier conversation: their
+    /// prompt is an earlier request's prompt plus a fresh continuation
+    pub resume_frac: f64,
+    /// fraction of requests that pause their output stream every
+    /// `pause_every` tokens (0 disables)
+    pub pause_frac: f64,
+    pub pause_every: usize,
+    /// deadline budget ceiling for interactive requests, seconds; each
+    /// interactive request gets a budget in [deadline_secs/2,
+    /// 3*deadline_secs/2] (<= 0 = no deadlines)
+    pub deadline_secs: f64,
+}
+
+impl Default for StormCfg {
+    fn default() -> Self {
+        StormCfg {
+            requests: 64,
+            seed: 0,
+            vocab: 64,
+            rate: 40.0,
+            burst: 6,
+            prompt_len: 48,
+            tail_alpha: 2.0,
+            max_new: 12,
+            mix: [0.3, 0.5, 0.2],
+            resume_frac: 0.2,
+            pause_frac: 0.15,
+            pause_every: 3,
+            deadline_secs: 0.0,
+        }
+    }
+}
+
+/// Generate the deterministic request trace for `cfg`. Arrivals are
+/// nondecreasing and ids are dense `0..requests`, so the trace can be
+/// fed straight to `ContinuousScheduler::run_stream`.
+pub fn storm(cfg: &StormCfg) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed ^ 0x5708_4A11_0AD5_0081);
+    let mut reqs: Vec<Request> = Vec::with_capacity(cfg.requests);
+    let cap = cfg.prompt_len.max(1) * 8;
+    let mut now = 0.0f64;
+    while reqs.len() < cfg.requests {
+        // one burst: `size` requests at the same instant, then an
+        // exponential gap scaled by the burst size so the long-run
+        // arrival rate stays `cfg.rate`
+        let size = 1 + rng.below(cfg.burst.max(1) as u64) as usize;
+        if cfg.rate > 0.0 && !reqs.is_empty() {
+            now += -(1.0 - rng.f64()).ln() * size as f64 / cfg.rate;
+        }
+        for _ in 0..size {
+            if reqs.len() >= cfg.requests {
+                break;
+            }
+            let id = reqs.len() as u64;
+            let resume = !reqs.is_empty() && rng.f64() < cfg.resume_frac;
+            let prompt: Vec<i32> = if resume {
+                // conversation resume: an earlier prompt plus a fresh
+                // continuation — re-prefill overlaps the parent's blocks
+                let parent = &reqs[rng.below(id) as usize];
+                let extra = 1 + rng.below((cfg.prompt_len / 2 + 1) as u64) as usize;
+                let mut p = parent.prompt.clone();
+                p.extend((0..extra).map(|_| rng.below(cfg.vocab.max(2) as u64) as i32));
+                p.truncate(cap);
+                p
+            } else {
+                // Pareto long tail: mostly near prompt_len, rare whales
+                let u = rng.f64();
+                let len = (cfg.prompt_len.max(1) as f64 * (1.0 - u).powf(-1.0 / cfg.tail_alpha))
+                    .min(cap as f64) as usize;
+                (0..len.max(1)).map(|_| rng.below(cfg.vocab.max(2) as u64) as i32).collect()
+            };
+            let priority = Priority::ALL[rng.weighted(&cfg.mix)];
+            let max_new = 1 + rng.below(cfg.max_new.max(1) as u64) as usize;
+            let mut req = Request::new(id, prompt, max_new, now).with_priority(priority);
+            if priority == Priority::Interactive && cfg.deadline_secs > 0.0 {
+                req = req.with_deadline(cfg.deadline_secs * (0.5 + rng.f64()));
+            }
+            if cfg.pause_every > 0 && rng.f64() < cfg.pause_frac {
+                req = req.with_pause_every(cfg.pause_every);
+            }
+            reqs.push(req);
+        }
+    }
+    reqs
+}
+
+/// SLA-oriented digest of one storm run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StormSummary {
+    pub completed: usize,
+    /// requests rejected by overload control (deadline or infeasible)
+    pub shed: usize,
+    pub queue_p50: f64,
+    pub queue_p99: f64,
+    pub prefill_p50: f64,
+    pub prefill_p99: f64,
+    pub decode_p50: f64,
+    pub decode_p99: f64,
+    /// completed requests whose queue+prefill+decode exceeded their
+    /// deadline budget — overload control failing, unlike a shed
+    pub sla_violations: usize,
+    /// completions indexed by `Priority::rank()`
+    pub completed_by_class: [usize; 3],
+}
+
+/// Fold scheduler results back against the trace they came from.
+/// `shed` is the scheduler's total overload rejections for the run.
+pub fn summarize(trace: &[Request], results: &[RequestResult], shed: usize) -> StormSummary {
+    let queue: Vec<f64> = results.iter().map(|r| r.queue_secs).collect();
+    let prefill: Vec<f64> = results.iter().map(|r| r.prefill_secs).collect();
+    let decode: Vec<f64> = results.iter().map(|r| r.decode_secs).collect();
+    let mut summary = StormSummary {
+        completed: results.len(),
+        shed,
+        queue_p50: quantile(&queue, 0.5),
+        queue_p99: quantile(&queue, 0.99),
+        prefill_p50: quantile(&prefill, 0.5),
+        prefill_p99: quantile(&prefill, 0.99),
+        decode_p50: quantile(&decode, 0.5),
+        decode_p99: quantile(&decode, 0.99),
+        ..StormSummary::default()
+    };
+    for r in results {
+        let Some(req) = trace.iter().find(|q| q.id == r.id) else { continue };
+        summary.completed_by_class[req.priority.rank()] += 1;
+        if let Some(budget) = req.deadline {
+            if r.queue_secs + r.prefill_secs + r.decode_secs > budget {
+                summary.sla_violations += 1;
+            }
+        }
+    }
+    summary
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fingerprint(reqs: &[Request]) -> Vec<(u64, u64, Vec<i32>, usize, usize, u64, usize)> {
+        reqs.iter()
+            .map(|r| {
+                (
+                    r.id,
+                    r.arrival.to_bits(),
+                    r.prompt.clone(),
+                    r.max_new,
+                    r.priority.rank(),
+                    r.deadline.unwrap_or(-1.0).to_bits(),
+                    r.pause_every,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn storms_are_deterministic_and_seed_sensitive() {
+        let cfg = StormCfg { requests: 80, deadline_secs: 0.5, ..StormCfg::default() };
+        assert_eq!(fingerprint(&storm(&cfg)), fingerprint(&storm(&cfg)));
+        let other = StormCfg { seed: 1, ..cfg };
+        assert_ne!(fingerprint(&storm(&cfg)), fingerprint(&storm(&other)));
+    }
+
+    #[test]
+    fn storms_have_dense_ids_and_sorted_arrivals() {
+        let reqs = storm(&StormCfg { requests: 100, ..StormCfg::default() });
+        assert_eq!(reqs.len(), 100);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(!r.prompt.is_empty() && r.max_new >= 1);
+            if i > 0 {
+                assert!(r.arrival >= reqs[i - 1].arrival, "arrivals must be nondecreasing");
+            }
+        }
+        assert!(reqs.last().unwrap().arrival > 0.0, "a 100-request storm spans time");
+    }
+
+    #[test]
+    fn storms_burst_and_long_tail() {
+        let cfg = StormCfg { requests: 200, ..StormCfg::default() };
+        let reqs = storm(&cfg);
+        let same_instant = reqs.windows(2).filter(|w| w[0].arrival == w[1].arrival).count();
+        assert!(same_instant > 0, "bursts must put several arrivals at one instant");
+        let longest = reqs.iter().map(|r| r.prompt.len()).max().unwrap();
+        let shortest = reqs.iter().map(|r| r.prompt.len()).min().unwrap();
+        assert!(longest >= 2 * cfg.prompt_len, "the tail must produce whales, got {longest}");
+        assert!(longest <= 8 * cfg.prompt_len, "whales are capped");
+        assert!(shortest <= cfg.prompt_len, "most prompts stay near the base length");
+    }
+
+    #[test]
+    fn storms_mix_tenants_resumes_and_deadlines() {
+        let cfg = StormCfg { requests: 200, deadline_secs: 0.4, ..StormCfg::default() };
+        let reqs = storm(&cfg);
+        for p in Priority::ALL {
+            assert!(
+                reqs.iter().any(|r| r.priority == p),
+                "class {} missing from the mix",
+                p.label()
+            );
+        }
+        for r in &reqs {
+            match r.priority {
+                Priority::Interactive => {
+                    let d = r.deadline.expect("interactive requests carry deadlines");
+                    assert!((0.2..=0.6).contains(&d), "budget {d} outside [1/2, 3/2] x base");
+                }
+                _ => assert!(r.deadline.is_none()),
+            }
+        }
+        assert!(reqs.iter().any(|r| r.pause_every > 0), "some streams pause");
+        let resumes = reqs
+            .iter()
+            .enumerate()
+            .filter(|(i, r)| {
+                reqs[..*i].iter().any(|p| {
+                    r.prompt.len() > p.prompt.len() && r.prompt[..p.prompt.len()] == p.prompt[..]
+                })
+            })
+            .count();
+        assert!(resumes > 0, "conversation resumes must extend earlier prompts");
+    }
+
+    #[test]
+    fn summarize_splits_sheds_from_sla_violations() {
+        let trace = vec![
+            Request::new(0, vec![1, 2], 4, 0.0)
+                .with_priority(Priority::Interactive)
+                .with_deadline(0.5),
+            Request::new(1, vec![3], 4, 0.0)
+                .with_priority(Priority::Interactive)
+                .with_deadline(10.0),
+            Request::new(2, vec![4], 4, 0.0).with_priority(Priority::Batch),
+        ];
+        let res = |id: u64, queue: f64| RequestResult {
+            id,
+            output: vec![0; 4],
+            queue_secs: queue,
+            prefill_secs: 0.1,
+            decode_secs: 0.2,
+            decode_steps: 4,
+        };
+        // request 2 was shed, request 0 finished but blew its budget
+        let s = summarize(&trace, &[res(0, 1.0), res(1, 0.0)], 1);
+        assert_eq!((s.completed, s.shed, s.sla_violations), (2, 1, 1));
+        assert_eq!(s.completed_by_class, [0, 0, 2]);
+        assert!(s.queue_p99 >= s.queue_p50 && s.queue_p50 >= 0.0);
+        assert!((s.decode_p50 - 0.2).abs() < 1e-12);
+    }
+}

@@ -22,6 +22,11 @@
 //!   [`FaultStats`] recovery accounting, and the seeded [`FaultPlan`]
 //!   chaos-injection harness that proves a dead decode worker degrades
 //!   into the eviction/resume path bit-identically;
+//! - `load`: trace-driven storm workloads — seeded bursty multi-tenant
+//!   request traces ([`StormCfg`]/[`storm`]) plus the SLA digest
+//!   ([`summarize`]) behind the overload bench arm; pairs with the
+//!   scheduler's overload controls (priority classes, deadline shedding,
+//!   SLA-aware eviction, the [`DegradeCfg`] pressure dial);
 //! - `demo`: the shared arrival-stream demo driver behind `repro serve`
 //!   and `examples/serve_continuous.rs`;
 //! - `artifact` (feature `xla`): the AOT-graph generation path through
@@ -32,6 +37,7 @@ pub mod chaos;
 pub mod demo;
 pub mod engine;
 pub mod error;
+pub mod load;
 pub mod model;
 pub mod runtime;
 pub mod scheduler;
@@ -39,14 +45,18 @@ pub mod scheduler;
 #[cfg(feature = "xla")]
 pub mod artifact;
 
-pub use batcher::{Batcher, BatcherCfg, Request, RequestResult};
+pub use batcher::{Batcher, BatcherCfg, Priority, Request, RequestResult};
 pub use chaos::{Fault, FaultKind, FaultPlan};
 pub use demo::{run_demo, DemoCfg};
 pub use engine::{DecodeSession, GenStats, PoolStatus, ServeCfg, ServeEngine};
 pub use error::{FaultStats, ServeError};
+pub use load::{storm, summarize, StormCfg, StormSummary};
 pub use model::{TokenModel, ToyModel};
 pub use runtime::{pin_from_env, pin_supported, steal_from_env, RuntimeKind};
-pub use scheduler::{ContinuousScheduler, EvictionStats, SchedStats, SchedulerCfg, WorkerStats};
+pub use scheduler::{
+    ContinuousScheduler, DegradeCfg, EvictionStats, OverloadStats, SchedStats, SchedulerCfg,
+    WorkerStats,
+};
 
 #[cfg(feature = "xla")]
 pub use artifact::ArtifactServeEngine;

@@ -58,6 +58,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use super::batcher::Priority;
 use super::chaos::{self, FaultKind, FaultPlan};
 use super::engine::{DecodeSession, ServeEngine};
 use super::error::ServeError;
@@ -109,6 +110,34 @@ pub fn steal_from_env() -> bool {
 /// (`0`/`false`/`off`/`no` disable), default on.
 pub fn pin_from_env() -> bool {
     env_flag("MOBA_PIN", true)
+}
+
+/// Strict boolean env parser for the CLI boundary (the `parse_workers`
+/// pattern): the lenient `env_flag` default above treats any unknown
+/// value as "on", which silently masks typos; `repro serve` routes
+/// `MOBA_STEAL`/`MOBA_PIN` through this instead so a typo fails loudly
+/// with the name and offending value.
+pub fn parse_flag(name: &str, raw: Option<String>) -> Result<Option<bool>, String> {
+    match raw {
+        None => Ok(None),
+        Some(v) => match v.trim() {
+            "1" | "true" | "on" | "yes" => Ok(Some(true)),
+            "0" | "false" | "off" | "no" => Ok(Some(false)),
+            _ => Err(format!(
+                "{name} must be one of 1/0/true/false/on/off/yes/no, got {v:?}"
+            )),
+        },
+    }
+}
+
+/// Strict `MOBA_STEAL` read for the CLI boundary.
+pub fn steal_from_env_strict() -> Result<Option<bool>, String> {
+    parse_flag("MOBA_STEAL", std::env::var("MOBA_STEAL").ok())
+}
+
+/// Strict `MOBA_PIN` read for the CLI boundary.
+pub fn pin_from_env_strict() -> Result<Option<bool>, String> {
+    parse_flag("MOBA_PIN", std::env::var("MOBA_PIN").ok())
 }
 
 /// Pin the calling thread to `core` via raw `sched_setaffinity` (no
@@ -174,7 +203,47 @@ pub(crate) struct Live {
     /// re-homed; its next resume is charged to
     /// `FaultStats::recovery_reprefill_secs`
     pub(crate) rehomed: bool,
+    /// SLA class: the primary eviction/resume ordering key — a burst of
+    /// low-priority arrivals cannot thrash a high-priority session's KV
+    pub(crate) priority: Priority,
+    /// admission deadline budget carried from the request (seconds after
+    /// arrival, simulation clock); used only for SLA-violation stats
+    /// once the session is admitted
+    pub(crate) deadline: Option<f64>,
+    /// streaming-pause cadence (`Request::pause_every`): skip one decode
+    /// tick each time `out_len` reaches a multiple of this. 0 = never.
+    pub(crate) pause_every: usize,
+    /// the session skipped its previous step attempt at the current
+    /// `out_len` (so the next attempt proceeds instead of pausing again)
+    pub(crate) paused: bool,
+    /// earliest tick a deferred resume may be retried (backoff gate —
+    /// while in the future, the stuck resume stops blocking arrivals)
+    pub(crate) retry_at: u64,
+    /// current resume backoff in ticks (doubles per deferral, capped)
+    pub(crate) backoff: u64,
     pub(crate) session: DecodeSession,
+}
+
+impl Live {
+    /// Streaming-pause rule, shared by both runtimes and the steal path:
+    /// a session with `pause_every = p > 0` skips exactly one decode
+    /// tick each time its output length reaches a multiple of p (a
+    /// client draining its stream before accepting more tokens). A pure
+    /// function of `out_len` + the one-shot `paused` latch — never of
+    /// wall-clock or thread schedule — so the skip pattern is identical
+    /// across runtimes, worker counts, and steal schedules, and the
+    /// served tokens never change (a skipped step is just deferred).
+    pub(crate) fn pause_this_tick(&mut self) -> bool {
+        if self.pause_every > 0 && !self.paused && !self.session.finished() {
+            let out = self.session.output().len();
+            if out > 0 && out % self.pause_every == 0 {
+                self.paused = true;
+                return true;
+            }
+        }
+        self.paused = false;
+        false
+    }
 }
 
 /// Post-step snapshot of one surviving session, computed on the worker
@@ -192,6 +261,12 @@ pub(crate) struct SessionMeta {
     pub(crate) out_len: usize,
     /// the most recent generated token (0 when none yet)
     pub(crate) last_token: i32,
+    /// tick the session last actually stepped — a paused (idle) session
+    /// keeps its old value, which is what makes the LRU/SLA eviction key
+    /// differentiate sessions under the persistent mirror
+    pub(crate) last_stepped: u64,
+    /// SLA class, mirrored so main-side victim selection ranks it
+    pub(crate) priority: Priority,
 }
 
 /// One worker's answer to a step command. The buffers round-trip through
@@ -313,8 +388,13 @@ impl StealState {
 /// One supervised decode step. A panic inside the engine is caught HERE
 /// — narrowly — so the steal protocol always completes: the session
 /// still returns home (no cross-worker done-box deadlock) flagged
-/// poisoned, and the scheduler quarantines + re-prefills it.
+/// poisoned, and the scheduler quarantines + re-prefills it. A
+/// streaming-paused session skips the step and keeps its old
+/// `last_stepped`, so idle sessions age toward eviction.
 fn step_one<M: TokenModel>(engine: &ServeEngine<M>, live: &mut Live, tick: u64) -> bool {
+    if live.pause_this_tick() {
+        return false;
+    }
     live.last_stepped = tick;
     match catch_unwind(AssertUnwindSafe(|| engine.step(&mut live.session))) {
         Ok(emitted) => emitted.is_some(),
@@ -475,6 +555,17 @@ fn worker_loop<M: TokenModel>(
                                 return;
                             }
                         }
+                        // slow-but-alive: lag (short of the barrier
+                        // deadline), then step normally — thieves drain
+                        // this shard's deque meanwhile, and no death may
+                        // be declared
+                        FaultKind::Slow { millis } => {
+                            std::thread::sleep(Duration::from_millis(millis));
+                        }
+                        // poison the pool's RwLock mid-serve: every
+                        // later access recovers through util::sync, so
+                        // this must be a non-event
+                        FaultKind::PoisonPool => engine.poison_pool_for_chaos(),
                         kind => panic!("{}", chaos::panic_message(kind, w, tick)),
                     }
                 }
@@ -516,6 +607,8 @@ fn worker_loop<M: TokenModel>(
                         freeable: engine.freeable_blocks(&live.session),
                         out_len: live.session.output().len(),
                         last_token: live.session.output().last().copied().unwrap_or(0),
+                        last_stepped: live.last_stepped,
+                        priority: live.priority,
                     });
                 }
                 if tx.send(FromWorker::StepDone { worker: w, report }).is_err() {
@@ -920,6 +1013,20 @@ mod tests {
         // defaults hold when unset (the suite does not set these vars)
         assert!(steal_from_env() || std::env::var("MOBA_STEAL").is_ok());
         assert!(pin_from_env() || std::env::var("MOBA_PIN").is_ok());
+    }
+
+    #[test]
+    fn strict_flag_parsing_rejects_typos_with_context() {
+        assert_eq!(parse_flag("MOBA_STEAL", None), Ok(None));
+        for on in ["1", "true", "on", "yes", " on "] {
+            assert_eq!(parse_flag("MOBA_STEAL", Some(on.into())), Ok(Some(true)), "{on}");
+        }
+        for off in ["0", "false", "off", "no"] {
+            assert_eq!(parse_flag("MOBA_PIN", Some(off.into())), Ok(Some(false)), "{off}");
+        }
+        // the lenient env_flag would read "offf" as ON; strict refuses
+        let err = parse_flag("MOBA_STEAL", Some("offf".into())).unwrap_err();
+        assert!(err.contains("MOBA_STEAL") && err.contains("offf"), "{err}");
     }
 
     #[test]

@@ -53,25 +53,45 @@
 //!
 //! **Eviction / oversubscription**: when a candidate's reservation does
 //! not fit, the scheduler *evicts* instead of deferring — it preempts the
-//! least-recently-stepped live session (stable tie-break: highest session
-//! id, i.e. the youngest request; sessions admitted, resumed or stepped
-//! this tick are protected), releases its pool blocks
-//! (`ServeEngine::evict_session` — blocks shared with a live table, e.g.
-//! the system prefix, survive via refcounts) and parks it on a preempted
-//! queue. On the persistent runtime this is a synchronous round-trip to
-//! the owning worker, which hands the session back with its blocks
-//! released. A feasibility check runs before any eviction — if
-//! preempting every unprotected session still could not fit the
-//! candidate, it defers without destroying state. Preempted sessions
-//! resume *before* new admissions (strictly: arrivals wait while a
-//! resume is blocked), lowest id first, by transparent re-prefill
-//! (`ServeEngine::resume_session`): the rebuilt state and every token
-//! served afterwards are bit-identical to a never-evicted run. All
-//! eviction decisions derive from (last-stepped tick, session id) and
-//! pool counts — no map iteration order — so they are deterministic and
-//! invariant to the decode worker count and runtime.
-//! [`EvictionStats`] counts evictions, reclaimed blocks, resumes and
-//! re-prefill time.
+//! SLA-ranked victim (lowest priority class first, then
+//! least-recently-stepped, then cheapest to re-prefill; see
+//! `sla_victim`; sessions admitted, resumed or stepped this tick are
+//! protected, and a candidate never evicts a victim of a strictly
+//! higher class), releases its pool blocks (`ServeEngine::evict_session`
+//! — blocks shared with a live table, e.g. the system prefix, survive
+//! via refcounts) and parks it on a preempted queue. On the persistent
+//! runtime this is a synchronous round-trip to the owning worker, which
+//! hands the session back with its blocks released. A feasibility check
+//! runs before any eviction — if preempting every eligible session
+//! still could not fit the candidate, it defers without destroying
+//! state. Preempted sessions resume *before* same-or-lower-class
+//! admissions, most urgent class first and lowest id within a class, by
+//! transparent re-prefill (`ServeEngine::resume_session`): the rebuilt
+//! state and every token served afterwards are bit-identical to a
+//! never-evicted run. All eviction decisions derive from (priority
+//! class, last-stepped tick, freeable blocks, session id) and pool
+//! counts — no map iteration order, no wall clock — so they are
+//! deterministic and invariant to the decode worker count and runtime.
+//! [`EvictionStats`] counts evictions (per class), reclaimed blocks,
+//! resumes and re-prefill time.
+//!
+//! **Overload control**: every request carries a [`Priority`] class and
+//! an optional deadline budget ([`Request::deadline`]). Admission is
+//! urgency-ordered (class first, FIFO within a class); a queued request
+//! whose budget expires — or whose reservation can *never* fit the pool
+//! — is **shed** with a typed [`ServeError::Shed`] (collected via
+//! [`ContinuousScheduler::sheds`]) instead of waiting forever or
+//! aborting the scheduler. A preempted session whose resume cannot fit
+//! backs off exponentially (deterministic tick arithmetic) instead of
+//! head-of-line-blocking arrivals: while it waits, strictly
+//! higher-class arrivals are still admitted (with uniform priorities
+//! this degenerates to the old strict resumes-before-arrivals rule).
+//! The optional pressure dial ([`SchedulerCfg::degrade`]) downshifts
+//! MoBA top-k for non-interactive admissions once deterministic pool
+//! occupancy crosses a threshold — off by default, preserving bitwise
+//! parity with previous releases. Completed requests that overran their
+//! budget count as SLA violations in [`OverloadStats`] (stats only —
+//! wall-clock never drives a decision).
 //!
 //! **Fault tolerance** (persistent runtime): a decode-worker fault —
 //! panic report, closed channel, or a missed
@@ -100,7 +120,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use super::batcher::{Batcher, BatcherCfg, Request, RequestResult};
+use super::batcher::{Batcher, BatcherCfg, Priority, Request, RequestResult};
 use super::chaos::FaultPlan;
 use super::engine::{DecodeSession, ServeEngine};
 use super::error::{FaultStats, ServeError};
@@ -134,6 +154,11 @@ pub struct SchedulerCfg {
     /// runtime only). `None` = wait forever (panics and disconnects are
     /// still detected immediately; the deadline only catches stalls).
     pub barrier_deadline_secs: Option<f64>,
+    /// pressure-tiered degradation dial: downshift MoBA top-k for
+    /// non-interactive admissions once deterministic pool occupancy
+    /// crosses a threshold. `None` (default) = off — served tokens stay
+    /// bitwise identical to a scheduler without the dial.
+    pub degrade: Option<DegradeCfg>,
 }
 
 impl Default for SchedulerCfg {
@@ -146,8 +171,25 @@ impl Default for SchedulerCfg {
             pin: pin_from_env(),
             chaos: None,
             barrier_deadline_secs: None,
+            degrade: None,
         }
     }
+}
+
+/// Pressure-tiered degradation dial (`SchedulerCfg::degrade`). The
+/// trigger is `used + reserved >= occupancy * capacity` on the bounded
+/// paged pool — deterministic block arithmetic, never wall-clock — so a
+/// degraded run is reproducible tick for tick. Interactive requests are
+/// never degraded, and forked (shared-prefix) sessions inherit their
+/// parent's sparsity, so the dial only touches private non-interactive
+/// admissions.
+#[derive(Clone, Copy, Debug)]
+pub struct DegradeCfg {
+    /// occupancy fraction of the bounded pool at/above which new
+    /// non-interactive admissions decode with the downshifted top-k
+    pub occupancy: f64,
+    /// the downshifted MoBA top-k (clamped to `[1, ServeCfg::topk]`)
+    pub topk: usize,
 }
 
 /// Aggregate counters over the scheduler's lifetime.
@@ -170,6 +212,26 @@ pub struct SchedStats {
     pub eviction: EvictionStats,
     /// worker-fault and recovery counters (persistent runtime)
     pub fault: FaultStats,
+    /// overload-control counters: sheds, SLA violations, degradations
+    pub overload: OverloadStats,
+}
+
+/// Overload-control counters (`SchedStats::overload`).
+#[derive(Clone, Debug, Default)]
+pub struct OverloadStats {
+    /// requests shed at admission because their worst-case reservation
+    /// can never fit the pool (deferral would hang forever)
+    pub shed_infeasible: usize,
+    /// requests shed from the queue after their deadline budget expired
+    pub shed_deadline: usize,
+    /// completed requests whose queue + prefill + decode latency
+    /// overran their deadline budget (accounting only — wall-clock
+    /// latencies never drive a scheduling decision)
+    pub sla_violations: usize,
+    /// sessions admitted with a downshifted MoBA top-k (pressure dial)
+    pub degraded_sessions: usize,
+    /// deferred resumes re-attempted after an exponential-backoff window
+    pub resume_retries: usize,
 }
 
 /// Counters for LRU eviction / re-prefill resume on a bounded paged pool.
@@ -188,6 +250,10 @@ pub struct EvictionStats {
     /// wall-clock seconds spent re-prefilling resumed sessions — the
     /// recompute cost oversubscription trades against resident KV
     pub reprefill_secs: f64,
+    /// evictions per priority class, indexed by `Priority::rank()` —
+    /// the SLA-aware victim policy's observable: under mixed-priority
+    /// thrash, high classes must take strictly fewer hits than low ones
+    pub evictions_by_class: [usize; 3],
 }
 
 /// Per-worker counters: admission balance, decode-latency accounting and
@@ -231,6 +297,12 @@ impl Shard {
         let t0 = Instant::now();
         let mut steps = 0;
         for live in self.running.iter_mut() {
+            // a pausing session keeps its stale `last_stepped`, which is
+            // what lets the SLA victim key tell an idle stream from an
+            // active one (same rule as the persistent runtime's step_one)
+            if live.pause_this_tick() {
+                continue;
+            }
             live.last_stepped = tick;
             if engine.step(&mut live.session).is_some() {
                 steps += 1;
@@ -252,6 +324,8 @@ struct Remote {
     last_stepped: u64,
     reserve: usize,
     freeable: usize,
+    /// SLA class, mirrored for victim ranking without a worker round-trip
+    priority: Priority,
 }
 
 /// Everything needed to rebuild a worker-owned session if its worker
@@ -266,6 +340,12 @@ struct LedgerEntry {
     max_new: usize,
     queue_secs: f64,
     generated: Vec<i32>,
+    /// overload-control identity, so a rebuilt session keeps its SLA
+    /// class, deadline budget, pause cadence and (degraded) sparsity
+    priority: Priority,
+    deadline: Option<f64>,
+    pause_every: usize,
+    topk: usize,
 }
 
 /// Where the in-flight sessions physically live.
@@ -310,7 +390,8 @@ pub struct ContinuousScheduler<M: TokenModel> {
     /// admission-side view of future pool demand (kept in lockstep on
     /// admit/step/evict/retire; a debug assert recounts it)
     reserved_total: usize,
-    /// monotonic tick counter driving the LRU eviction order
+    /// monotonic tick counter driving the recency half of the SLA
+    /// eviction key (and the resume-backoff arithmetic)
     tick_no: u64,
     /// shared-system-prompt session every admission forks from (paged
     /// backend): its physical blocks are held once for all requests
@@ -319,6 +400,9 @@ pub struct ContinuousScheduler<M: TokenModel> {
     prefix_blocks: usize,
     /// retirement scratch, reused across ticks (no per-tick allocation)
     finished_scratch: Vec<Live>,
+    /// overload-control rejections `(id, ServeError::Shed)`, in shed
+    /// order — callers account for every request as result OR shed
+    sheds: Vec<(u64, ServeError)>,
     pub stats: SchedStats,
 }
 
@@ -361,6 +445,7 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
             prefix: None,
             prefix_blocks: 0,
             finished_scratch: Vec::new(),
+            sheds: Vec::new(),
             stats: SchedStats::default(),
         }
     }
@@ -431,6 +516,14 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
         self.preempted.len()
     }
 
+    /// Requests rejected by overload control — deadline expiry or a
+    /// can-never-fit reservation — each with its typed
+    /// [`ServeError::Shed`]. Every submitted request ends up exactly
+    /// once as a tick result or an entry here.
+    pub fn sheds(&self) -> &[(u64, ServeError)] {
+        &self.sheds
+    }
+
     pub fn idle(&self) -> bool {
         self.in_flight() == 0 && self.queue.pending() == 0 && self.preempted.is_empty()
     }
@@ -461,21 +554,29 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
         }
     }
 
-    /// The LRU victim: the least-recently-stepped live session, stable
-    /// tie-break on HIGHEST session id (the youngest request is preempted
-    /// first, so the oldest always makes progress — no livelock).
-    /// Sessions touched this tick (admitted, resumed or already stepped)
-    /// are protected. The key (last_stepped, id) is unique and
-    /// independent of shard layout, so the choice is deterministic and
-    /// invariant to `decode_workers`, the runtime, and any stealing
-    /// schedule. NOTE: under the current stepping discipline every live
-    /// session is stepped every tick, so recency always ties and the
-    /// effective order is youngest-id-first; the tick key starts
-    /// differentiating the moment sessions can idle (streaming pauses,
-    /// speculative branches — ROADMAP follow-ons).
-    fn lru_victim(&self) -> Option<Victim> {
-        let mut best: Option<((u64, std::cmp::Reverse<u64>), Victim)> = None;
-        let mut offer = |key: (u64, std::cmp::Reverse<u64>), at: Victim| {
+    /// The SLA-aware eviction victim for a candidate of rank
+    /// `max_rank`: lowest priority class first (batch absorbs pressure
+    /// before standard, standard before interactive), then
+    /// least-recently-stepped (a paused/idle stream is staler than an
+    /// active one), then fewest freeable blocks — the deterministic
+    /// re-prefill-cost proxy: a session's freeable blocks are exactly
+    /// the tokens a resume must re-ingest, and the measured per-block
+    /// re-prefill rate (`EvictionStats::reprefill_secs /
+    /// blocks_reclaimed`) scales every candidate equally, so ranking by
+    /// the block count IS ranking by measured cost without consulting
+    /// wall-clock — with a stable tie-break on HIGHEST session id (the
+    /// youngest request is preempted first, so the oldest always makes
+    /// progress — no livelock). Sessions touched this tick (admitted,
+    /// resumed or already stepped) are protected, and a victim of a
+    /// class strictly above `max_rank` is never offered — a batch
+    /// arrival cannot thrash an interactive session's KV. The key is
+    /// unique and independent of shard layout, so the choice is
+    /// deterministic and invariant to `decode_workers`, the runtime,
+    /// and any stealing schedule.
+    fn sla_victim(&self, max_rank: usize) -> Option<Victim> {
+        type Key = (usize, u64, usize, std::cmp::Reverse<u64>);
+        let mut best: Option<(Key, Victim)> = None;
+        let mut offer = |key: Key, at: Victim| {
             let better = match &best {
                 None => true,
                 Some((k, _)) => key < *k,
@@ -488,11 +589,16 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
             Dispatch::Tick { shards } => {
                 for (si, shard) in shards.iter().enumerate() {
                     for (i, live) in shard.running.iter().enumerate() {
-                        if live.last_stepped >= self.tick_no {
-                            continue; // protected: touched this tick
+                        if live.last_stepped >= self.tick_no || live.priority.rank() > max_rank {
+                            continue; // protected, or outranks the candidate
                         }
                         offer(
-                            (live.last_stepped, std::cmp::Reverse(live.id)),
+                            (
+                                live.priority.rank(),
+                                live.last_stepped,
+                                self.engine.freeable_blocks(&live.session),
+                                std::cmp::Reverse(live.id),
+                            ),
                             Victim::Shard { si, idx: i },
                         );
                     }
@@ -500,10 +606,13 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
             }
             Dispatch::Persistent { mirror, .. } => {
                 for (i, r) in mirror.iter().enumerate() {
-                    if r.last_stepped >= self.tick_no {
+                    if r.last_stepped >= self.tick_no || r.priority.rank() > max_rank {
                         continue;
                     }
-                    offer((r.last_stepped, std::cmp::Reverse(r.id)), Victim::Mirror { idx: i });
+                    offer(
+                        (r.priority.rank(), r.last_stepped, r.freeable, std::cmp::Reverse(r.id)),
+                        Victim::Mirror { idx: i },
+                    );
                 }
             }
         }
@@ -530,6 +639,7 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                 live.reserve_blocks = 0;
                 let freed = self.engine.evict_session(&mut live.session)?;
                 self.stats.eviction.evictions += 1;
+                self.stats.eviction.evictions_by_class[live.priority.rank()] += 1;
                 self.stats.eviction.blocks_reclaimed += freed;
                 self.preempted.push(live);
             }
@@ -552,6 +662,7 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                             self.reserved_total -= remote.reserve;
                             live.reserve_blocks = 0;
                             self.stats.eviction.evictions += 1;
+                            self.stats.eviction.evictions_by_class[remote.priority.rank()] += 1;
                             self.stats.eviction.blocks_reclaimed += freed;
                             self.preempted.push(live);
                             owner_died = false;
@@ -633,6 +744,7 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                     entry.fork_ctx,
                     entry.generated,
                     entry.max_new,
+                    entry.topk,
                 );
                 self.preempted.push(Live {
                     id: remote.id,
@@ -642,6 +754,12 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                     home: 0,
                     poisoned: false,
                     rehomed: true,
+                    priority: entry.priority,
+                    deadline: entry.deadline,
+                    pause_every: entry.pause_every,
+                    paused: false,
+                    retry_at: 0,
+                    backoff: 1,
                     session,
                 });
                 self.stats.fault.rehomed_sessions += 1;
@@ -650,16 +768,17 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
         Ok(n)
     }
 
-    /// Make room for a candidate needing `need` not-yet-materialized
-    /// blocks: evict LRU victims one at a time until
-    /// `used + reserved + need` fits under `cap`, or defer. A
-    /// feasibility check runs BEFORE any eviction — preempting every
-    /// unprotected session must suffice, otherwise the candidate defers
-    /// without destroying anyone's state (each pointless eviction would
-    /// cost a full re-prefill later). On the persistent runtime the
-    /// freeable counts come from the metadata mirror, which is exact:
-    /// session state is static between steps.
-    fn fit_or_evict(&mut self, need: usize, cap: usize) -> Result<bool> {
+    /// Make room for a candidate of rank `max_rank` needing `need`
+    /// not-yet-materialized blocks: evict SLA-ranked victims one at a
+    /// time until `used + reserved + need` fits under `cap`, or defer.
+    /// A feasibility check runs BEFORE any eviction — preempting every
+    /// eligible (unprotected, not-outranking) session must suffice,
+    /// otherwise the candidate defers without destroying anyone's state
+    /// (each pointless eviction would cost a full re-prefill later). On
+    /// the persistent runtime the freeable counts come from the
+    /// metadata mirror, which is exact: session state is static between
+    /// steps.
+    fn fit_or_evict(&mut self, need: usize, cap: usize, max_rank: usize) -> Result<bool> {
         debug_assert_eq!(self.reserved_total, self.recount_reserved(), "reservation drift");
         if self.pool_used() + self.reserved_total + need <= cap {
             return Ok(true);
@@ -669,7 +788,7 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
             Dispatch::Tick { shards } => {
                 for shard in shards {
                     for live in &shard.running {
-                        if live.last_stepped < self.tick_no {
+                        if live.last_stepped < self.tick_no && live.priority.rank() <= max_rank {
                             freeable += self.engine.freeable_blocks(&live.session);
                             victim_reserve += live.reserve_blocks;
                         }
@@ -678,7 +797,7 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
             }
             Dispatch::Persistent { mirror, .. } => {
                 for r in mirror {
-                    if r.last_stepped < self.tick_no {
+                    if r.last_stepped < self.tick_no && r.priority.rank() <= max_rank {
                         freeable += r.freeable;
                         victim_reserve += r.reserve;
                     }
@@ -693,7 +812,7 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
             if self.pool_used() + self.reserved_total + need <= cap {
                 return Ok(true);
             }
-            let Some(victim) = self.lru_victim() else { return Ok(false) };
+            let Some(victim) = self.sla_victim(max_rank) else { return Ok(false) };
             self.evict_live(victim)?;
         }
     }
@@ -748,6 +867,7 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                         last_stepped: live.last_stepped,
                         reserve: live.reserve_blocks,
                         freeable: self.engine.freeable_blocks(&live.session),
+                        priority: live.priority,
                     };
                     let entry = LedgerEntry {
                         own_prompt: live.session.own_prompt().to_vec(),
@@ -755,6 +875,10 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                         max_new: live.session.max_new(),
                         queue_secs: live.queue_secs,
                         generated: live.session.output().to_vec(),
+                        priority: live.priority,
+                        deadline: live.deadline,
+                        pause_every: live.pause_every,
+                        topk: live.session.topk(),
                     };
                     match rt.admit(si, live) {
                         Ok(()) => {
@@ -796,35 +920,72 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
         self.tick_no += 1;
         let pool_cap = self.engine.pool_status().and_then(|p| p.capacity_blocks);
 
-        // 1a. resume preempted sessions — strict priority: while one
-        // still waits for room, no new arrival is admitted (a stream of
-        // small newcomers must not starve an evicted long context out of
-        // its resume)
-        let mut resume_blocked = false;
-        while self.in_flight() < self.cfg.max_in_flight && !self.preempted.is_empty() {
-            // lowest id first — deterministic, oldest request resumes first
-            let idx = self
+        // 0. deadline shedding: queued requests whose budget expired are
+        // rejected with a typed error instead of being served uselessly
+        // late (or clogging the queue forever)
+        for req in self.queue.shed_expired(now) {
+            self.stats.overload.shed_deadline += 1;
+            let reason = format!(
+                "deadline {:.3}s expired after {:.3}s queued",
+                req.deadline.unwrap_or(0.0),
+                (now - req.arrival).max(0.0)
+            );
+            self.sheds.push((req.id, ServeError::Shed { id: req.id, reason }));
+        }
+
+        // 1a. resume preempted sessions — most urgent class first,
+        // lowest id within a class. A resume that cannot fit backs off
+        // exponentially (`retry_at`, pure tick arithmetic) instead of
+        // holding the door shut: while it waits, STRICTLY higher classes
+        // may still be admitted in 1b, so a stuck low-priority resume
+        // cannot head-of-line-block interactive traffic. With uniform
+        // priorities this degenerates to the old strict
+        // resumes-before-arrivals rule.
+        let mut blocked_rank: Option<usize> = None;
+        while self.in_flight() < self.cfg.max_in_flight {
+            let Some(idx) = self
                 .preempted
                 .iter()
                 .enumerate()
-                .min_by_key(|(_, l)| l.id)
+                .filter(|(_, l)| l.retry_at <= self.tick_no)
+                .min_by_key(|(_, l)| (std::cmp::Reverse(l.priority), l.id))
                 .map(|(i, _)| i)
-                .expect("non-empty preempted queue");
+            else {
+                break; // nothing resumable: empty, or all backing off
+            };
+            if self.preempted[idx].retry_at > 0 {
+                self.stats.overload.resume_retries += 1;
+            }
             let need = self.engine.resume_reserve(&self.preempted[idx].session);
+            let rank = self.preempted[idx].priority.rank();
             if let Some(cap) = pool_cap {
-                if !self.fit_or_evict(need, cap)? {
+                if !self.fit_or_evict(need, cap, rank)? {
                     self.stats.eviction.resume_deferrals += 1;
-                    resume_blocked = true;
+                    let l = &mut self.preempted[idx];
+                    l.retry_at = self.tick_no + l.backoff;
+                    l.backoff = (l.backoff * 2).min(32);
+                    blocked_rank = Some(l.priority.rank());
                     break;
                 }
-                // the fit may have parked a lower-id victim: it outranks
-                // the current candidate, so re-select before committing
-                let min_id = self.preempted.iter().map(|l| l.id).min().expect("non-empty");
-                if min_id != self.preempted[idx].id {
+                // the fit may have parked a more urgent victim: it
+                // outranks the current candidate, so re-select before
+                // committing
+                let key =
+                    (std::cmp::Reverse(self.preempted[idx].priority), self.preempted[idx].id);
+                let best = self
+                    .preempted
+                    .iter()
+                    .filter(|l| l.retry_at <= self.tick_no)
+                    .map(|l| (std::cmp::Reverse(l.priority), l.id))
+                    .min()
+                    .expect("non-empty preempted queue");
+                if best != key {
                     continue;
                 }
             }
             let mut live = self.preempted.swap_remove(idx);
+            live.retry_at = 0;
+            live.backoff = 1;
             let t0 = Instant::now();
             self.engine.resume_session(&mut live.session, self.prefix.as_ref())?;
             let dt = t0.elapsed().as_secs_f64();
@@ -839,33 +1000,63 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
         }
 
         // 1b. admission — new requests join the in-flight batch
-        // mid-stream, each pinned to the currently least-loaded shard
-        // (skipped while a preempted session waits for room)
-        while !resume_blocked && self.in_flight() < self.cfg.max_in_flight {
-            let (next_id, next_tokens) = match self.queue.peek(now) {
-                Some(r) => (r.id, r.prompt.len() + r.max_new),
+        // mid-stream, most urgent class first, each pinned to the
+        // currently least-loaded shard. While a deferred resume backs
+        // off, only strictly more urgent classes slip past it
+        // (`blocked_rank`); a request whose reservation can NEVER fit is
+        // shed with a typed error instead of aborting the scheduler.
+        while self.in_flight() < self.cfg.max_in_flight {
+            let (next_id, next_rank, next_tokens) = match self.queue.peek(now) {
+                Some(r) => (r.id, r.priority.rank(), r.prompt.len() + r.max_new),
                 None => break,
             };
+            if blocked_rank.is_some_and(|r| next_rank <= r) {
+                // the blocked resume outranks (or ties) every arrival
+                // left — peek() already returned the most urgent one
+                break;
+            }
             if let Some(cap) = pool_cap {
                 let ctx = self.shared_prefix_len();
                 let need = self.engine.block_reserve(ctx, next_tokens);
                 if self.prefix_blocks + need > cap {
-                    bail!(
-                        "request {next_id} can never be served: needs {need} pool blocks \
-                         beyond the {}-block shared prefix, capacity {cap}",
-                        self.prefix_blocks,
+                    let req = self.queue.admit(now, 1).pop().expect("peeked request");
+                    debug_assert_eq!(req.id, next_id);
+                    self.stats.overload.shed_infeasible += 1;
+                    let reason = format!(
+                        "needs {need} pool blocks beyond the {}-block shared prefix, \
+                         capacity {cap}",
+                        self.prefix_blocks
                     );
+                    self.sheds.push((req.id, ServeError::Shed { id: req.id, reason }));
+                    continue;
                 }
-                if !self.fit_or_evict(need, cap)? {
+                if !self.fit_or_evict(need, cap, next_rank)? {
                     // wait for retirements/evictions to hand blocks back
                     self.stats.pool_deferrals += 1;
                     break;
                 }
             }
             let req = self.queue.admit(now, 1).pop().expect("peeked request");
+            // pressure-tiered degradation: at/above the occupancy
+            // threshold, non-interactive private admissions decode with
+            // a downshifted top-k. Forks inherit their prefix parent's
+            // sparsity and are never degraded; the trigger is pure block
+            // arithmetic, so degraded runs stay deterministic.
+            let topk = match (self.cfg.degrade, pool_cap) {
+                (Some(d), Some(cap))
+                    if req.priority != Priority::Interactive
+                        && self.prefix.is_none()
+                        && (self.pool_used() + self.reserved_total) as f64
+                            >= d.occupancy * cap as f64 =>
+                {
+                    self.stats.overload.degraded_sessions += 1;
+                    d.topk.clamp(1, self.engine.cfg().topk)
+                }
+                _ => self.engine.cfg().topk,
+            };
             let session = match &self.prefix {
                 Some(parent) => self.engine.fork_session(parent, &req.prompt, req.max_new)?,
-                None => self.engine.start(&req.prompt, req.max_new)?,
+                None => self.engine.start_with_topk(&req.prompt, req.max_new, topk)?,
             };
             self.stats.admitted += 1;
             self.place(
@@ -877,6 +1068,12 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                     home: 0,
                     poisoned: false,
                     rehomed: false,
+                    priority: req.priority,
+                    deadline: req.deadline,
+                    pause_every: req.pause_every,
+                    paused: false,
+                    retry_at: 0,
+                    backoff: 1,
                     session,
                 },
                 false,
@@ -970,9 +1167,13 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                     mirror.push(Remote {
                         id: m.id,
                         shard: w,
-                        last_stepped: tick,
+                        // the worker reports the tick the session REALLY
+                        // last stepped — a paused session keeps its stale
+                        // value, so the SLA victim key sees it as idle
+                        last_stepped: m.last_stepped,
                         reserve: m.reserve,
                         freeable: m.freeable,
+                        priority: m.priority,
                     });
                     // advance the recovery transcript: every live
                     // session appends exactly one token per step
@@ -1048,14 +1249,22 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
         for live in self.finished_scratch.drain(..) {
             self.reserved_total -= live.reserve_blocks;
             self.stats.completed += 1;
-            finished.push(RequestResult {
+            let result = RequestResult {
                 id: live.id,
                 output: live.session.output().to_vec(),
                 queue_secs: live.queue_secs,
                 prefill_secs: live.session.stats.prefill_secs,
                 decode_secs: live.session.stats.decode_secs,
                 decode_steps: live.session.stats.decode_steps,
-            });
+            };
+            // SLA accounting only — wall-clock latencies never feed back
+            // into a scheduling decision, so determinism is untouched
+            if let Some(budget) = live.deadline {
+                if result.queue_secs + result.prefill_secs + result.decode_secs > budget {
+                    self.stats.overload.sla_violations += 1;
+                }
+            }
+            finished.push(result);
         }
 
         // refresh every survivor's remaining reservation: blocks its
@@ -1082,16 +1291,19 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
     /// Drive a whole arrival stream to completion. `requests` must be
     /// sorted by arrival; the clock advances by `tick_secs` per tick and
     /// jumps forward to the next arrival when the system goes idle.
+    /// Every request is accounted exactly once: as a returned result or
+    /// as an overload-control rejection in [`Self::sheds`].
     pub fn run_stream(
         &mut self,
         requests: Vec<Request>,
         tick_secs: f64,
     ) -> Result<Vec<RequestResult>> {
         let total = requests.len();
+        let shed0 = self.sheds.len();
         let mut results = Vec::with_capacity(total);
         let mut pending = requests.into_iter().peekable();
         let mut now = 0.0f64;
-        while results.len() < total {
+        while results.len() + (self.sheds.len() - shed0) < total {
             while pending.peek().is_some_and(|r| r.arrival <= now) {
                 let req = pending.next().expect("peeked");
                 self.submit(req);
@@ -1152,12 +1364,12 @@ mod tests {
     }
 
     fn req(id: u64, arrival: f64, prompt_len: usize, max_new: usize) -> Request {
-        Request {
+        Request::new(
             id,
-            prompt: (0..prompt_len as i32).map(|i| (i * 5 + id as i32) % 48).collect(),
+            (0..prompt_len as i32).map(|i| (i * 5 + id as i32) % 48).collect(),
             max_new,
             arrival,
-        }
+        )
     }
 
     fn sched_cfg(max_in_flight: usize, decode_workers: usize) -> SchedulerCfg {
@@ -1371,12 +1583,7 @@ mod tests {
         let stream: Vec<Request> = conts
             .iter()
             .enumerate()
-            .map(|(i, c)| Request {
-                id: i as u64,
-                prompt: c.clone(),
-                max_new: 4 + i % 3,
-                arrival: i as f64 * 0.05,
-            })
+            .map(|(i, c)| Request::new(i as u64, c.clone(), 4 + i % 3, i as f64 * 0.05))
             .collect();
         let mut results = sched.run_stream(stream, 0.02).unwrap();
         results.sort_by_key(|r| r.id);
@@ -1512,12 +1719,7 @@ mod tests {
             conts
                 .iter()
                 .enumerate()
-                .map(|(i, c)| Request {
-                    id: i as u64,
-                    prompt: c.clone(),
-                    max_new: 6,
-                    arrival: 0.0,
-                })
+                .map(|(i, c)| Request::new(i as u64, c.clone(), 6, 0.0))
                 .collect()
         };
         let mut wide =
@@ -1544,11 +1746,196 @@ mod tests {
     }
 
     #[test]
-    fn impossible_pool_request_errors_instead_of_hanging() {
+    fn impossible_pool_request_is_shed_with_a_typed_error() {
         let mut sched =
             ContinuousScheduler::new(engine_with(BackendKind::Paged, 2), sched_cfg(2, 1));
-        sched.submit(req(0, 0.0, 40, 8)); // needs 3 blocks, capacity 2
-        assert!(sched.tick(0.0).is_err());
+        let reqs = vec![
+            req(0, 0.0, 40, 8), // needs 3 blocks, capacity 2: can NEVER fit
+            req(1, 0.0, 16, 4), // feasible: must still be served
+        ];
+        let results = sched.run_stream(reqs, 0.01).unwrap();
+        assert_eq!(results.len(), 1, "the feasible request must complete");
+        assert_eq!(results[0].id, 1);
+        assert_eq!(sched.stats.overload.shed_infeasible, 1);
+        let sheds = sched.sheds();
+        assert_eq!(sheds.len(), 1);
+        assert!(matches!(&sheds[0].1, ServeError::Shed { id: 0, .. }), "{:?}", sheds[0].1);
+        assert!(sheds[0].1.to_string().contains("shed by overload control"));
+        assert!(sched.idle(), "a shed request must not linger anywhere");
+    }
+
+    #[test]
+    fn deadline_doomed_request_is_shed_not_deferred() {
+        // max_in_flight 1: request 1's deadline expires while it queues
+        // behind request 0 — it must come back as a typed shed, not sit
+        // in the queue forever (and run_stream must still terminate)
+        let mut sched = ContinuousScheduler::new(engine(), sched_cfg(1, 1));
+        let reqs = vec![req(0, 0.0, 16, 24), req(1, 0.0, 16, 4).with_deadline(0.25)];
+        let results = sched.run_stream(reqs, 0.1).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].id, 0);
+        assert_eq!(sched.stats.overload.shed_deadline, 1);
+        assert!(matches!(&sched.sheds()[0].1, ServeError::Shed { id: 1, .. }));
+        let msg = sched.sheds()[0].1.to_string();
+        assert!(msg.contains("deadline"), "{msg}");
+        // a generous deadline on a COMPLETED request is an SLA stat, not a shed
+        let mut ok = ContinuousScheduler::new(engine(), sched_cfg(1, 1));
+        let done = ok.run_stream(vec![req(0, 0.0, 16, 3).with_deadline(1e6)], 0.01).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(ok.stats.overload.shed_deadline, 0);
+        assert_eq!(ok.stats.overload.sla_violations, 0);
+    }
+
+    #[test]
+    fn interactive_arrivals_jump_the_admission_queue() {
+        // one decode slot, same arrival instant: the interactive request
+        // is admitted first even though the standard one has a lower id
+        let mut sched = ContinuousScheduler::new(engine(), sched_cfg(1, 1));
+        let reqs = vec![
+            req(0, 0.0, 16, 3),
+            req(1, 0.0, 16, 3).with_priority(Priority::Interactive),
+        ];
+        let mut all = sched.run_stream(reqs, 0.5).unwrap();
+        all.sort_by_key(|r| r.id);
+        assert_eq!(all.len(), 2);
+        assert!(
+            all[0].queue_secs > all[1].queue_secs,
+            "standard queued {}s, interactive {}s — urgency order violated",
+            all[0].queue_secs,
+            all[1].queue_secs
+        );
+    }
+
+    #[test]
+    fn sla_eviction_prefers_low_priority_victims() {
+        // mixed-priority thrash: two interactive sessions fit the pool
+        // outright; four batch requests churn through what is left. The
+        // SLA victim policy must aim every eviction at the batch class —
+        // a batch candidate is never allowed to thrash interactive KV —
+        // while serving everyone the exact solo-run tokens.
+        let stream = || -> Vec<Request> {
+            (0..6)
+                .map(|i| {
+                    let p = if i < 2 { Priority::Interactive } else { Priority::Batch };
+                    req(i, 0.0, 20, 8).with_priority(p)
+                })
+                .collect()
+        };
+        let solo = engine_with(BackendKind::Paged, 0);
+        let want: Vec<Vec<i32>> =
+            stream().iter().map(|r| solo.generate(&r.prompt, r.max_new).unwrap().0).collect();
+        let mut sched =
+            ContinuousScheduler::new(engine_with(BackendKind::Paged, 5), sched_cfg(6, 1));
+        let mut got = sched.run_stream(stream(), 0.01).unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 6, "nothing may be lost to eviction churn");
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(&g.output, w, "req {} changed under SLA eviction", g.id);
+        }
+        let by_class = sched.stats.eviction.evictions_by_class;
+        assert_eq!(by_class.iter().sum::<usize>(), sched.stats.eviction.evictions);
+        assert!(sched.stats.eviction.evictions > 0, "oversubscription must evict");
+        assert!(
+            by_class[Priority::Interactive.rank()] < by_class[Priority::Batch.rank()],
+            "interactive took {} evictions vs batch {} — SLA policy inverted",
+            by_class[Priority::Interactive.rank()],
+            by_class[Priority::Batch.rank()]
+        );
+        assert_eq!(
+            by_class[Priority::Interactive.rank()],
+            0,
+            "the interactive working set fits: no interactive session may be evicted"
+        );
+    }
+
+    #[test]
+    fn idle_pauses_steer_eviction_to_the_stale_session() {
+        // regression for the mirror's last_stepped: session 0 pauses on
+        // tick 3 (stale recency), session 1 streams on. The arrival on
+        // tick 4 must evict the PAUSED session — one eviction, done. The
+        // old mirror hardcoded last_stepped to the current tick, which
+        // tied recency and (via the freeable/id tie-breaks) evicted the
+        // streaming session first, then needed a second eviction anyway.
+        let mut sched =
+            ContinuousScheduler::new(engine_with(BackendKind::Paged, 4), sched_cfg(4, 1));
+        let pauser = req(0, 0.0, 40, 6).with_pause_every(2); // 3 blocks resident
+        let streamer = req(1, 0.0, 8, 6); // 1 block resident
+        let solo = engine_with(BackendKind::Paged, 0);
+        let want: Vec<Vec<i32>> = [&pauser, &streamer, &req(2, 0.0, 24, 4)]
+            .iter()
+            .map(|r| solo.generate(&r.prompt, r.max_new).unwrap().0)
+            .collect();
+        sched.submit(pauser);
+        sched.submit(streamer);
+        let mut done = Vec::new();
+        for t in 0..3 {
+            done.extend(sched.tick(t as f64 * 0.1).unwrap()); // pauser skips tick 3
+        }
+        sched.submit(req(2, 0.0, 24, 4)); // needs 2 blocks: forces eviction
+        done.extend(sched.tick(0.3).unwrap());
+        assert_eq!(
+            sched.stats.eviction.evictions,
+            1,
+            "evicting the stale 3-block pauser alone must make room"
+        );
+        assert_eq!(sched.in_flight(), 2, "streamer + newcomer stay live");
+        assert_eq!(sched.preempted(), 1, "the pauser sits parked");
+        let mut now = 0.4;
+        while !sched.idle() {
+            done.extend(sched.tick(now).unwrap());
+            now += 0.1;
+        }
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), 3);
+        for (d, w) in done.iter().zip(&want) {
+            assert_eq!(&d.output, w, "req {} changed under pause-aware eviction", d.id);
+        }
+    }
+
+    #[test]
+    fn pressure_dial_degrades_low_priority_but_never_interactive() {
+        // occupancy threshold 0.0 = always degrade eligible admissions:
+        // the standard request must serve a topk=1 engine's tokens, the
+        // interactive one the full topk=2 tokens
+        let degraded_engine = || {
+            ServeEngine::new(
+                ToyModel::new(48, 2, 8, 5),
+                ServeCfg {
+                    block_size: 16,
+                    topk: 1,
+                    max_seq: 512,
+                    backend: BackendKind::Paged,
+                    workers: 1,
+                    pool_blocks: 0,
+                },
+            )
+        };
+        let reqs = || {
+            vec![req(0, 0.0, 50, 8), req(1, 0.0, 50, 8).with_priority(Priority::Interactive)]
+        };
+        let want_degraded = degraded_engine().generate(&reqs()[0].prompt, 8).unwrap().0;
+        let want_full =
+            engine_with(BackendKind::Paged, 0).generate(&reqs()[1].prompt, 8).unwrap().0;
+        let cfg = SchedulerCfg {
+            max_in_flight: 2,
+            decode_workers: 1,
+            degrade: Some(DegradeCfg { occupancy: 0.0, topk: 1 }),
+            ..SchedulerCfg::default()
+        };
+        let mut sched = ContinuousScheduler::new(engine_with(BackendKind::Paged, 16), cfg);
+        let mut got = sched.run_stream(reqs(), 0.01).unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].output, want_degraded, "standard request must run at topk=1");
+        assert_eq!(got[1].output, want_full, "interactive request must never degrade");
+        assert_eq!(sched.stats.overload.degraded_sessions, 1);
+        // dial off: bitwise parity with the undialed scheduler
+        let mut plain =
+            ContinuousScheduler::new(engine_with(BackendKind::Paged, 16), sched_cfg(2, 1));
+        let mut base = plain.run_stream(reqs(), 0.01).unwrap();
+        base.sort_by_key(|r| r.id);
+        assert_eq!(base[0].output, want_full);
+        assert_eq!(plain.stats.overload.degraded_sessions, 0);
     }
 
     #[test]

@@ -1,11 +1,13 @@
-//! Chaos integration tests: kill, stall and alloc-fail persistent decode
-//! workers mid-run (seeded `FaultPlan` injection) and assert the
-//! supervisor's recovery-as-eviction path serves every request the
-//! *bitwise identical* tokens of a fault-free run on the legacy tick-loop
-//! runtime — the oracle that never sees chaos. Covers the plain stream,
-//! an oversubscribed paged pool (recovery composes with LRU eviction
-//! churn), copy-on-write shared-prefix forks, and an env-seeded arm the
-//! CI chaos matrix drives through `MOBA_CHAOS_SEED` × `MOBA_WORKERS`.
+//! Chaos integration tests: kill, stall, slow and alloc-fail persistent
+//! decode workers mid-run (seeded `FaultPlan` injection), poison the
+//! shared pool lock, and assert the supervisor's recovery-as-eviction
+//! path serves every request the *bitwise identical* tokens of a
+//! fault-free run on the legacy tick-loop runtime — the oracle that
+//! never sees chaos. Covers the plain stream, an oversubscribed paged
+//! pool (recovery composes with eviction churn), copy-on-write
+//! shared-prefix forks, survivable-by-design faults (`Slow` lag under
+//! stealing, `PoisonPool` lock poisoning), and an env-seeded arm the CI
+//! chaos matrix drives through `MOBA_CHAOS_SEED` × `MOBA_WORKERS`.
 
 use moba::serve::{
     ContinuousScheduler, Fault, FaultKind, FaultPlan, Request, RequestResult, RuntimeKind,
@@ -33,12 +35,8 @@ fn stream(seed: u64, n: usize) -> Vec<Request> {
         .map(|id| {
             t += rng.f64() * 0.03;
             let len = 6 + rng.range(0, 40);
-            Request {
-                id,
-                prompt: (0..len).map(|_| rng.range(0, VOCAB) as i32).collect(),
-                max_new: 2 + rng.range(0, 7),
-                arrival: t,
-            }
+            let prompt = (0..len).map(|_| rng.range(0, VOCAB) as i32).collect();
+            Request::new(id, prompt, 2 + rng.range(0, 7), t)
         })
         .collect()
 }
@@ -172,6 +170,48 @@ fn shared_prefix_forks_survive_worker_death() {
     got.sort_by_key(|r| r.id);
     assert_parity(&got, &want, "shared-prefix");
     assert_eq!(sched.stats.fault.worker_deaths, 1);
+}
+
+#[test]
+fn slow_workers_interleave_with_steals_without_spurious_deaths() {
+    // survivable-by-design faults: repeated sub-deadline slowdowns on one
+    // shard while stealing drains its deque. No worker may be declared
+    // dead, no barrier may time out, and tokens must match the oracle.
+    let reqs = burst(0x510, 8);
+    let want = oracle(BackendKind::Fused, 0, reqs.clone());
+    let plan = FaultPlan::new(vec![
+        Fault { worker: 0, tick: 1, kind: FaultKind::Slow { millis: 8 } },
+        Fault { worker: 0, tick: 2, kind: FaultKind::Slow { millis: 8 } },
+        Fault { worker: 1, tick: 3, kind: FaultKind::Slow { millis: 4 } },
+        Fault { worker: 0, tick: 4, kind: FaultKind::Slow { millis: 8 } },
+    ]);
+    let mut sched = chaos_sched(BackendKind::Fused, 0, 2, true, plan);
+    let mut got = sched.run_stream(reqs, 0.005).unwrap();
+    got.sort_by_key(|r| r.id);
+    assert_parity(&got, &want, "slow");
+    let fs = sched.stats.fault;
+    assert_eq!(fs.worker_deaths, 0, "a slow worker is alive, not dead");
+    assert_eq!(fs.barrier_timeouts, 0, "sub-deadline lag must not trip the barrier");
+    assert!(sched.idle());
+}
+
+#[test]
+fn poisoned_pool_lock_is_survivable() {
+    // a chaos thread panics while holding the paged pool's write guard;
+    // every later pool access must recover through util::sync's
+    // poison-tolerant helpers and serve bitwise-identical tokens
+    let reqs = burst(0xB01, 8);
+    let want = oracle(BackendKind::Paged, 0, reqs.clone());
+    let plan = FaultPlan::new(vec![
+        Fault { worker: 1, tick: 2, kind: FaultKind::PoisonPool },
+        Fault { worker: 0, tick: 5, kind: FaultKind::PoisonPool },
+    ]);
+    let mut sched = chaos_sched(BackendKind::Paged, 0, 2, true, plan);
+    let mut got = sched.run_stream(reqs, 0.005).unwrap();
+    got.sort_by_key(|r| r.id);
+    assert_parity(&got, &want, "poisoned-pool");
+    assert_eq!(sched.stats.fault.worker_deaths, 0, "poisoning is survivable by design");
+    assert!(sched.idle());
 }
 
 #[test]

@@ -7,7 +7,10 @@
 //! pool defers or *evicts* (LRU preemption + re-prefill resume when the
 //! pool oversubscribes), and none of it may ever change what anyone
 //! decodes — and equal to a solo single-session run of the same prompt
-//! (the scheduler's interleaving is invisible).
+//! (the scheduler's interleaving is invisible). The overload arm layers
+//! multi-tenant priority classes, deadline budgets and streaming pauses
+//! over chaos + oversubscription: requests may be shed with a typed
+//! error, but whatever completes still decodes the solo truth.
 
 use moba::serve::{
     ContinuousScheduler, FaultPlan, Request, RequestResult, RuntimeKind, SchedulerCfg, ServeCfg,
@@ -40,12 +43,8 @@ fn stream(seed: u64, n: usize) -> Vec<Request> {
                 t += rng.f64() * 0.04;
             }
             let len = 4 + rng.range(0, 44);
-            Request {
-                id,
-                prompt: (0..len).map(|_| rng.range(0, VOCAB) as i32).collect(),
-                max_new: 1 + rng.range(0, 8),
-                arrival: t,
-            }
+            let prompt = (0..len).map(|_| rng.range(0, VOCAB) as i32).collect();
+            Request::new(id, prompt, 1 + rng.range(0, 8), t)
         })
         .collect()
 }
@@ -183,6 +182,86 @@ fn fuzzed_streams_are_fault_schedule_invariant() {
                     "seed={seed} backend={} pool={pool_blocks} shards={decode_workers} \
                      steal={steal} faults={:?} req={}",
                     backend.label(),
+                    plan.faults(),
+                    g.id
+                );
+            }
+            assert!(
+                sched.stats.fault.worker_deaths <= plan.fatal_workers(),
+                "seed={seed}: more deaths than scheduled faults"
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzzed_priority_storms_survive_chaos_and_oversubscription() {
+    // the overload composition: multi-tenant priority classes, deadline
+    // budgets and streaming pauses on a barely-fits pool, with seeded
+    // worker faults on top. Accounting must be exact — every request
+    // either finishes or is shed with a typed error, nothing is lost —
+    // every non-shed request must serve the solo ground truth bitwise,
+    // and only scheduled fatal faults may kill workers.
+    use moba::serve::Priority;
+    for seed in [17u64, 101] {
+        let mut rng = Rng::new(seed ^ 0x5702);
+        let reqs: Vec<Request> = stream(seed, 10)
+            .into_iter()
+            .map(|r| {
+                let pr = Priority::ALL[rng.weighted(&[0.4, 0.4, 0.2])];
+                let mut r = r.with_priority(pr);
+                if pr == Priority::Interactive && rng.f64() < 0.5 {
+                    r = r.with_deadline(0.4 + rng.f64());
+                }
+                if rng.f64() < 0.3 {
+                    r = r.with_pause_every(2 + rng.range(0, 3));
+                }
+                r
+            })
+            .collect();
+        let solo = engine(BackendKind::Fused, 0);
+        let want: Vec<Vec<i32>> = reqs
+            .iter()
+            .map(|r| solo.generate(&r.prompt, r.max_new).unwrap().0)
+            .collect();
+        let max_need = reqs
+            .iter()
+            .map(|r| solo.block_reserve(0, r.prompt.len() + r.max_new))
+            .max()
+            .unwrap();
+        let oversub = max_need + 1; // barely one session resident at a time
+        for (decode_workers, steal) in [(2usize, false), (3, true)] {
+            let plan = FaultPlan::seeded(seed ^ decode_workers as u64, decode_workers, 48);
+            let mut sched = ContinuousScheduler::new(
+                engine(BackendKind::Paged, oversub),
+                SchedulerCfg {
+                    max_in_flight: 4,
+                    decode_workers,
+                    runtime: RuntimeKind::Persistent,
+                    steal,
+                    chaos: Some(plan.clone()),
+                    barrier_deadline_secs: Some(5.0),
+                    ..SchedulerCfg::default()
+                },
+            );
+            let mut got = sched.run_stream(reqs.clone(), 0.005).unwrap();
+            got.sort_by_key(|r| r.id);
+            let shed: Vec<u64> = sched.sheds().iter().map(|(id, _)| *id).collect();
+            assert_eq!(
+                got.len() + shed.len(),
+                reqs.len(),
+                "seed={seed} shards={decode_workers}: requests lost (sheds {shed:?})"
+            );
+            for g in &got {
+                assert!(
+                    !shed.contains(&g.id),
+                    "seed={seed}: request {} both finished and shed",
+                    g.id
+                );
+                assert_eq!(
+                    &g.output,
+                    &want[g.id as usize],
+                    "seed={seed} shards={decode_workers} steal={steal} faults={:?} req={}",
                     plan.faults(),
                     g.id
                 );

@@ -176,11 +176,9 @@ fn sharded_scheduler_tokens_are_shard_count_invariant() {
     };
     let stream = || -> Vec<Request> {
         (0..8)
-            .map(|i| Request {
-                id: i,
-                prompt: (0..24 + i as i32).map(|j| (j * 3 + i as i32) % 48).collect(),
-                max_new: 3 + (i as usize % 4),
-                arrival: i as f64 * 0.08,
+            .map(|i| {
+                let prompt = (0..24 + i as i32).map(|j| (j * 3 + i as i32) % 48).collect();
+                Request::new(i, prompt, 3 + (i as usize % 4), i as f64 * 0.08)
             })
             .collect()
     };
@@ -218,13 +216,12 @@ fn persistent_runtime_tokens_match_tick_loop_bitwise() {
     // re-prefill-resuming sessions mid-stream.
     let stream = || -> Vec<Request> {
         (0..10)
-            .map(|i| Request {
-                id: i,
+            .map(|i| {
                 // skewed decode budgets: every 4th request runs ~4x
                 // longer, so multi-worker runs actually steal
-                prompt: (0..20 + 3 * i as i32).map(|j| (j * 5 + i as i32) % 48).collect(),
-                max_new: if i % 4 == 0 { 12 } else { 3 },
-                arrival: i as f64 * 0.03,
+                let prompt = (0..20 + 3 * i as i32).map(|j| (j * 5 + i as i32) % 48).collect();
+                let max_new = if i % 4 == 0 { 12 } else { 3 };
+                Request::new(i, prompt, max_new, i as f64 * 0.03)
             })
             .collect()
     };
