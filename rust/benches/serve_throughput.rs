@@ -24,6 +24,14 @@
 //! oracle. p50/p99 queue/prefill/decode latency, shed counts and SLA
 //! violations land in `BENCH_serve.json` alongside the throughput rows.
 //!
+//! The **storm-swap** arm replays the same trace with the host swap tier
+//! on (`SchedulerCfg::swap_blocks`): evictions snapshot victims to host
+//! memory and resumes restore the bytes instead of re-prefilling. Shed
+//! ids and tokens must stay bitwise identical to the swap-free oracle on
+//! both runtimes, and (full mode) the mean swap-in resume must cost less
+//! wall-clock than the mean re-prefill resume — the trade the tier
+//! exists to win. Both resume costs are reported to `BENCH_serve.json`.
+//!
 //! ```sh
 //! cargo bench --bench serve_throughput            # full run + asserts
 //! cargo bench --bench serve_throughput -- --quick # CI smoke: small run,
@@ -146,6 +154,11 @@ struct StormRun {
     summary: moba::serve::StormSummary,
     evictions: usize,
     degraded: usize,
+    /// re-prefill resumes and their wall-clock cost (the recompute path)
+    resumes: usize,
+    reprefill_secs: f64,
+    /// host swap-tier counters (all zero when `swap_blocks == 0`)
+    swap: moba::serve::SwapStats,
 }
 
 fn run_storm(
@@ -155,6 +168,7 @@ fn run_storm(
     workers: usize,
     steal: bool,
     degrade: Option<DegradeCfg>,
+    swap_blocks: usize,
 ) -> StormRun {
     let engine = ServeEngine::new(
         ToyModel::new(VOCAB, HEADS, DIM, 11),
@@ -175,6 +189,7 @@ fn run_storm(
             runtime,
             steal,
             degrade,
+            swap_blocks,
             ..SchedulerCfg::default()
         },
     );
@@ -192,6 +207,9 @@ fn run_storm(
         summary,
         evictions: sched.stats.eviction.evictions,
         degraded: sched.stats.overload.degraded_sessions,
+        resumes: sched.stats.eviction.resumes,
+        reprefill_secs: sched.stats.eviction.reprefill_secs,
+        swap: sched.stats.swap.clone(),
     }
 }
 
@@ -319,7 +337,7 @@ fn main() {
         "{:>11} {:>8} {:>6} {:>10} {:>6} {:>5} {:>5} {:>6} {:>10} {:>10}",
         "runtime", "workers", "steal", "wall_s", "done", "shed", "sla", "evict", "q_p50", "q_p99"
     );
-    let mut storm_report = |label: &str, workers: usize, steal: bool, out: &StormRun| {
+    let mut storm_report = |arm: &str, label: &str, workers: usize, steal: bool, out: &StormRun| {
         let sm = &out.summary;
         println!(
             "{:>11} {:>8} {:>6} {:>10.3} {:>6} {:>5} {:>5} {:>6} {:>10.4} {:>10.4}",
@@ -327,7 +345,7 @@ fn main() {
             out.evictions, sm.queue_p50, sm.queue_p99
         );
         rows.push(obj(vec![
-            ("arm", s("storm")),
+            ("arm", s(arm)),
             ("runtime", s(label)),
             ("workers", num(workers as f64)),
             ("steal", Json::Bool(steal)),
@@ -343,13 +361,22 @@ fn main() {
             ("prefill_p99", num(sm.prefill_p99)),
             ("decode_p50", num(sm.decode_p50)),
             ("decode_p99", num(sm.decode_p99)),
+            // resume-cost accounting: re-prefill recompute vs swap-in
+            // restore, both in wall seconds (reporting-only)
+            ("resumes", num(out.resumes as f64)),
+            ("reprefill_secs", num(out.reprefill_secs)),
+            ("swap_outs", num(out.swap.swap_outs as f64)),
+            ("swap_ins", num(out.swap.swap_ins as f64)),
+            ("swap_bytes", num(out.swap.bytes as f64)),
+            ("swap_fallbacks", num(out.swap.fallbacks as f64)),
+            ("swapin_secs", num(out.swap.swapin_secs)),
         ]));
     };
     // ground truth: the fault-free single-worker tick loop on the same
     // trace — overload decisions are simulation-clock arithmetic, so the
     // shed set and all served tokens must be bitwise identical under
     // every runtime/worker/steal combination
-    let storm_base = run_storm(&trace, pool_blocks, RuntimeKind::TickLoop, 1, false, None);
+    let storm_base = run_storm(&trace, pool_blocks, RuntimeKind::TickLoop, 1, false, None, 0);
     assert!(
         !storm_base.shed_ids.is_empty(),
         "the storm must shed: the whale's reservation can never fit the pool"
@@ -359,11 +386,11 @@ fn main() {
         trace.len(),
         "overload control must account for every request: finished or shed, never lost"
     );
-    storm_report("tick-loop", 1, false, &storm_base);
+    storm_report("storm", "tick-loop", 1, false, &storm_base);
     for (runtime, workers, steal) in
         [(RuntimeKind::Persistent, 1, false), (RuntimeKind::Persistent, multi, true)]
     {
-        let out = run_storm(&trace, pool_blocks, runtime, workers, steal, None);
+        let out = run_storm(&trace, pool_blocks, runtime, workers, steal, None, 0);
         assert_eq!(
             out.shed_ids,
             storm_base.shed_ids,
@@ -376,17 +403,71 @@ fn main() {
             "storm: {} workers={workers} steal={steal} changed served tokens",
             runtime.label()
         );
-        storm_report(runtime.label(), workers, steal, &out);
+        storm_report("storm", runtime.label(), workers, steal, &out);
     }
+
+    // == tiered KV swap: the same storm with a host swap tier on ==
+    // Acceptance: the tier changes HOW preempted state survives, never
+    // WHAT is served — shed ids and tokens stay bitwise identical to the
+    // swap-free oracle on both runtimes — and a swap-in resume (block
+    // memcpy) costs less wall-clock than a re-prefill resume (recompute).
+    let swap_tier = 4 * pool_blocks;
+    let mut swapin_mean = f64::NAN;
+    for (runtime, workers, steal) in
+        [(RuntimeKind::TickLoop, 1, false), (RuntimeKind::Persistent, multi, true)]
+    {
+        let out = run_storm(&trace, pool_blocks, runtime, workers, steal, None, swap_tier);
+        assert_eq!(
+            out.shed_ids,
+            storm_base.shed_ids,
+            "storm-swap: {} workers={workers} changed the shed set",
+            runtime.label()
+        );
+        assert_eq!(
+            out.outputs,
+            storm_base.outputs,
+            "storm-swap: {} workers={workers} changed served tokens",
+            runtime.label()
+        );
+        assert!(
+            out.swap.swap_outs > 0 && out.swap.swap_ins > 0,
+            "storm-swap: {} an oversubscribed storm must exercise the tier",
+            runtime.label()
+        );
+        if runtime == RuntimeKind::TickLoop {
+            swapin_mean = out.swap.swapin_secs / out.swap.swap_ins.max(1) as f64;
+        }
+        storm_report("storm-swap", runtime.label(), workers, steal, &out);
+    }
+    let reprefill_mean = storm_base.reprefill_secs / storm_base.resumes.max(1) as f64;
+    println!(
+        "resume cost: re-prefill {:.1}us/resume ({} resumes) vs swap-in {:.1}us/resume",
+        reprefill_mean * 1e6,
+        storm_base.resumes,
+        swapin_mean * 1e6
+    );
+    if !quick {
+        assert!(storm_base.resumes > 0, "the swap-free storm must re-prefill");
+        assert!(
+            swapin_mean < reprefill_mean,
+            "acceptance: swap-in restore ({swapin_mean:.2e}s) must resume cheaper than \
+             re-prefill recompute ({reprefill_mean:.2e}s)"
+        );
+        println!(
+            "acceptance OK: swap-in resumes {:.1}x cheaper than re-prefill",
+            reprefill_mean / swapin_mean.max(1e-12)
+        );
+    }
+
     if !quick {
         // the pressure dial downshifts low-priority sessions' top-k under
         // occupancy pressure: tokens legitimately differ, but the run must
         // still account for every request and actually degrade someone
         let dial = Some(DegradeCfg { occupancy: 0.5, topk: 1 });
-        let out = run_storm(&trace, pool_blocks, RuntimeKind::Persistent, multi, true, dial);
+        let out = run_storm(&trace, pool_blocks, RuntimeKind::Persistent, multi, true, dial, 0);
         assert_eq!(out.outputs.len() + out.shed_ids.len(), trace.len());
         assert!(out.degraded > 0, "a 4x-oversubscribed storm must trip the 0.5-occupancy dial");
-        storm_report("degraded", multi, true, &out);
+        storm_report("storm", "degraded", multi, true, &out);
     }
 
     // the trajectory entry is written in quick mode as well (flagged), so

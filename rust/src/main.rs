@@ -80,6 +80,10 @@ serve options: --requests N --max-batch M --prompt-len P --max-new K
   --shared-prefix L (L-token system prompt forked per request; needs paged)
   --pool-blocks N (paged pool capacity in blocks, 0 = unbounded; a bounded
     pool oversubscribes: LRU eviction + re-prefill resume, same tokens)
+  --swap-blocks N (host swap-tier capacity in pool blocks, 0 = off:
+    evictions snapshot victims byte-exact to host memory and resumes
+    restore them instead of re-prefilling — same tokens, cheaper resume;
+    also settable via MOBA_SWAP_BLOCKS)
   --chaos-seed N (seeded fault injection into persistent decode workers —
     panics, stalls, alloc failures; the supervisor re-homes the dead
     shard's sessions and served tokens stay bitwise identical; also
@@ -94,13 +98,15 @@ common options: --steps N  --seed N  --sizes s0,s1  --artifact NAME
 fn serve_cmd(args: &Args) -> Result<()> {
     let d = DemoCfg::default();
     // strict env validation: a typo'd MOBA_WORKERS / MOBA_STEAL /
-    // MOBA_PIN / MOBA_CHAOS_SEED fails loudly here with the name and
-    // offending value instead of being silently coerced to a default
-    // (the library-level readers stay lenient)
+    // MOBA_PIN / MOBA_CHAOS_SEED / MOBA_SWAP_BLOCKS fails loudly here
+    // with the name and offending value instead of being silently
+    // coerced to a default (the library-level readers stay lenient)
     let env_workers = moba::sparse::workers_from_env().map_err(|e| anyhow::anyhow!(e))?;
     let env_steal = moba::serve::runtime::steal_from_env_strict().map_err(|e| anyhow::anyhow!(e))?;
     let env_pin = moba::serve::runtime::pin_from_env_strict().map_err(|e| anyhow::anyhow!(e))?;
     let env_chaos = moba::serve::chaos::seed_from_env_strict().map_err(|e| anyhow::anyhow!(e))?;
+    let env_swap =
+        moba::serve::scheduler::swap_blocks_from_env_strict().map_err(|e| anyhow::anyhow!(e))?;
     // `--workers 0` / `--decode-workers 0` mean "all available cores"
     let resolve = move |n: usize| {
         if n == 0 {
@@ -124,6 +130,10 @@ fn serve_cmd(args: &Args) -> Result<()> {
         pin: if args.flag("no-pin") { false } else { env_pin.unwrap_or(true) },
         shared_prefix: args.get_usize("shared-prefix", d.shared_prefix)?,
         pool_blocks: args.get_usize("pool-blocks", d.pool_blocks)?,
+        swap_blocks: match args.get("swap-blocks") {
+            Some(_) => args.get_usize("swap-blocks", 0)?,
+            None => env_swap.unwrap_or(0), // strictly parsed MOBA_SWAP_BLOCKS
+        },
         seed: args.get_u64("seed", d.seed)?,
         chaos_seed: match args.get("chaos-seed") {
             Some(_) => Some(args.get_u64("chaos-seed", 0)?),

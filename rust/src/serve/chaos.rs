@@ -45,6 +45,14 @@ pub enum FaultKind {
     /// must continue as if nothing happened. No-op for unpooled
     /// backends.
     PoisonPool,
+    /// Corrupt a preempted session's host-tier swap image (flip its
+    /// checksum), as if the cold copy rotted while offloaded. The next
+    /// swap-in fails its checksum verification and the scheduler falls
+    /// back to a re-prefill resume transparently — served tokens must
+    /// still match the fault-free oracle. Applied scheduler-side (the
+    /// images live on preempted sessions, not on workers); a no-op when
+    /// nothing is swapped out. Survivable by design.
+    SwapCorrupt,
 }
 
 /// One scheduled fault: `kind` fires on worker `worker` at tick `tick`.
@@ -91,11 +99,12 @@ impl FaultPlan {
         let mut fatal_workers: Vec<usize> = Vec::new();
         for _ in 0..n {
             let tick = rng.below(horizon);
-            let kind = match rng.range(0, 6) {
+            let kind = match rng.range(0, 7) {
                 0 => FaultKind::Panic,
                 1 => FaultKind::AllocFail,
                 2 | 3 => FaultKind::Stall { millis: 5 + rng.below(40) },
                 4 => FaultKind::Slow { millis: 1 + rng.below(10) },
+                5 => FaultKind::SwapCorrupt,
                 _ => FaultKind::PoisonPool,
             };
             let worker = rng.range(0, workers);
@@ -155,6 +164,9 @@ pub fn panic_message(kind: FaultKind, worker: usize, tick: u64) -> String {
         }
         FaultKind::PoisonPool => {
             format!("chaos: injected pool-lock poisoning on worker {worker} at tick {tick}")
+        }
+        FaultKind::SwapCorrupt => {
+            format!("chaos: injected swap-image corruption on worker {worker} at tick {tick}")
         }
     }
 }
@@ -224,6 +236,7 @@ mod tests {
         assert!(!Fault { worker: 0, tick: 0, kind: FaultKind::Stall { millis: 5 } }.is_fatal());
         assert!(!Fault { worker: 0, tick: 0, kind: FaultKind::Slow { millis: 5 } }.is_fatal());
         assert!(!Fault { worker: 0, tick: 0, kind: FaultKind::PoisonPool }.is_fatal());
+        assert!(!Fault { worker: 0, tick: 0, kind: FaultKind::SwapCorrupt }.is_fatal());
     }
 
     #[test]
@@ -233,6 +246,7 @@ mod tests {
         assert!(panic_message(FaultKind::Stall { millis: 7 }, 1, 2).contains("7ms"));
         assert!(panic_message(FaultKind::Slow { millis: 3 }, 1, 2).contains("slowdown"));
         assert!(panic_message(FaultKind::PoisonPool, 1, 2).contains("poison"));
+        assert!(panic_message(FaultKind::SwapCorrupt, 1, 2).contains("swap-image"));
     }
 
     #[test]

@@ -15,7 +15,7 @@ use super::chaos::{self, FaultPlan};
 use super::engine::{ServeCfg, ServeEngine};
 use super::model::ToyModel;
 use super::runtime::{pin_from_env, steal_from_env, RuntimeKind};
-use super::scheduler::{ContinuousScheduler, SchedulerCfg};
+use super::scheduler::{self, ContinuousScheduler, SchedulerCfg};
 
 /// Demo parameters (CLI flags map 1:1 onto these).
 #[derive(Clone, Debug)]
@@ -48,6 +48,10 @@ pub struct DemoCfg {
     /// session's blocks and transparently re-prefills it later — tokens
     /// are bit-identical either way
     pub pool_blocks: usize,
+    /// host swap-tier capacity in pool blocks (0 = off): evictions
+    /// snapshot victims byte-exact to host memory and resumes restore
+    /// them instead of re-prefilling (defaults from `MOBA_SWAP_BLOCKS`)
+    pub swap_blocks: usize,
     pub seed: u64,
     /// seeded chaos injection: kill/stall persistent decode workers
     /// mid-run and prove the supervisor recovers (None = no chaos;
@@ -75,6 +79,7 @@ impl Default for DemoCfg {
             pin: pin_from_env(),
             shared_prefix: 0,
             pool_blocks: 0,
+            swap_blocks: scheduler::swap_blocks_from_env(),
             seed: 42,
             chaos_seed: chaos::seed_from_env(),
             barrier_deadline_secs: None,
@@ -143,6 +148,7 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
             barrier_deadline_secs,
             // the demo's uniform-priority stream never trips the dial
             degrade: None,
+            swap_blocks: cfg.swap_blocks,
         },
     );
 
@@ -291,6 +297,18 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
                 ev.reprefill_secs * 1e3
             );
         }
+        let sw = &sched.stats.swap;
+        if sw.swap_outs > 0 || sw.fallbacks > 0 {
+            println!(
+                "  swap tier: {} swap-outs ({:.1} KiB), {} swap-ins ({:.1} ms), \
+                 {} fallback(s) to re-prefill",
+                sw.swap_outs,
+                sw.bytes as f64 / 1024.0,
+                sw.swap_ins,
+                sw.swapin_secs * 1e3,
+                sw.fallbacks
+            );
+        }
         println!(
             "  peak batch: {:.1} KiB shared pool vs ~{:.1} KiB private caches ({:.1}x)",
             peak_bytes as f64 / 1024.0,
@@ -383,6 +401,22 @@ mod tests {
             max_new: 6,
             backend: BackendKind::Paged,
             pool_blocks: 4, // each request needs <= 2 of 32-token blocks
+            swap_blocks: 0, // independent of MOBA_SWAP_BLOCKS
+            ..Default::default()
+        };
+        run_demo(&cfg).unwrap();
+    }
+
+    #[test]
+    fn demo_runs_oversubscribed_pool_with_swap_tier() {
+        let cfg = DemoCfg {
+            requests: 4,
+            max_in_flight: 4,
+            prompt_len: 48,
+            max_new: 6,
+            backend: BackendKind::Paged,
+            pool_blocks: 4,
+            swap_blocks: 64,
             ..Default::default()
         };
         run_demo(&cfg).unwrap();

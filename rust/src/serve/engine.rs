@@ -25,21 +25,13 @@ use anyhow::{bail, Result};
 
 use crate::sparse::{
     build_backend_par, shared_pool, AttentionBackend, BackendKind, PagedMobaAttention,
-    SharedKvPool,
+    SharedKvPool, SwapImage,
 };
 use crate::tensor::Tensor;
 use crate::util::sync;
 
+use super::error::ServeError;
 use super::model::TokenModel;
-
-/// Sentinel for a session whose pending token is unknown — an adopted or
-/// quarantined session rebuilt after a worker fault, where the
-/// last-computed logits died with the worker. `resume_session` recomputes
-/// the real pending token from the transcript; the bit-identity
-/// `debug_assert` is skipped (there is nothing to compare against), but
-/// the recomputed value IS the value a fault-free run would hold, because
-/// it is a pure function of the re-ingested tokens.
-pub const PENDING_UNKNOWN: i32 = i32::MIN;
 
 /// Per-request serving statistics.
 #[derive(Clone, Debug, Default)]
@@ -113,8 +105,15 @@ pub struct DecodeSession {
     evicted: bool,
     max_seq: usize,
     max_new: usize,
-    /// next token to emit (argmax of the last computed logits)
-    pending: i32,
+    /// next token to emit (argmax of the last computed logits). `None`
+    /// for an adopted or quarantined session rebuilt after a worker
+    /// fault, where the last-computed logits died with the worker:
+    /// `resume_session` recomputes the real value from the transcript
+    /// (there is nothing to compare against, but the recomputed token IS
+    /// the one a fault-free run would hold — it is a pure function of
+    /// the re-ingested tokens). An `Option` instead of a sentinel value,
+    /// so unknown-ness can never be confused with a real token.
+    pending: Option<i32>,
     generated: Vec<i32>,
     /// MoBA top-k this session's backend gates with — normally
     /// `ServeCfg::topk`, downshifted by the scheduler's pressure dial
@@ -173,6 +172,14 @@ impl DecodeSession {
     /// The MoBA top-k this session gates with (see the `topk` field).
     pub fn topk(&self) -> usize {
         self.topk
+    }
+
+    /// False after a fault wiped the pending token (quarantine with
+    /// `pending_valid == false`, or adoption from a ledger transcript):
+    /// only a re-prefill resume can recompute it, so a swap-in — which
+    /// restores cached state but computes no logits — must not be used.
+    pub fn pending_known(&self) -> bool {
+        self.pending.is_some()
     }
 
     /// Tag this session's future pool allocations with its decode
@@ -392,7 +399,10 @@ impl<M: TokenModel> ServeEngine<M> {
         // empty continuation is a pure clone of the parent's
         let pending = match last_out {
             Some(out) => argmax(&self.model.logits(&out)),
-            None => parent.pending,
+            None => match parent.pending {
+                Some(p) => p,
+                None => bail!("empty-continuation fork of a session with no pending token"),
+            },
         };
         Ok((backend, pending))
     }
@@ -436,7 +446,7 @@ impl<M: TokenModel> ServeEngine<M> {
             evicted: false,
             max_seq: self.cfg.max_seq,
             max_new,
-            pending,
+            pending: Some(pending),
             generated: Vec::with_capacity(max_new),
             topk,
             stats,
@@ -478,7 +488,7 @@ impl<M: TokenModel> ServeEngine<M> {
             evicted: false,
             max_seq: self.cfg.max_seq,
             max_new,
-            pending,
+            pending: Some(pending),
             generated: Vec::with_capacity(max_new),
             // the forked backend IS a fork of the parent's gating state, so
             // the fork inherits the parent's sparsity, not `cfg.topk`
@@ -502,6 +512,92 @@ impl<M: TokenModel> ServeEngine<M> {
         Ok(freed)
     }
 
+    /// Preempt `s` into the host swap tier: snapshot its private tail —
+    /// every block from the fork point on (for an unforked session, the
+    /// whole context) — into a byte-exact, checksummed [`SwapImage`],
+    /// then release its pool blocks exactly like `evict_session`. The
+    /// refcounted shared prefix is NOT captured: it stays resident under
+    /// the prefix parent, so a swapped fork resumes via `fork_prefix` +
+    /// block restore with no `fork_ingest` recompute. Returns
+    /// `(blocks freed, image)`. Paged backend only; the caller owns the
+    /// image (the engine is stateless across requests).
+    pub fn swap_out_session(&self, s: &mut DecodeSession) -> Result<(usize, SwapImage)> {
+        if s.evicted {
+            bail!("swap-out of a session that is already evicted");
+        }
+        if s.pending.is_none() {
+            bail!("swap-out of a session with no pending token");
+        }
+        let from_block = s.fork_ctx / self.cfg.block_size;
+        let image = s.backend.swap_out(from_block)?;
+        let freed = s.backend.evict()?;
+        s.evicted = true;
+        Ok((freed, image))
+    }
+
+    /// Resume a swapped-out session by restoring its [`SwapImage`] bytes
+    /// into freshly allocated pool blocks instead of re-prefilling — the
+    /// restored state is byte-identical to the pre-swap state, so every
+    /// token served afterwards is bit-identical to a session that was
+    /// never preempted. A forked session re-forks `parent`'s resident
+    /// full-block prefix (`fork_prefix`); the restore then allocates
+    /// exactly the blocks a re-prefill resume would, so pool occupancy —
+    /// and every downstream scheduling decision — is identical between
+    /// the two resume paths. On ANY failure (checksum mismatch, prefix
+    /// mismatch, allocation failure) the session is left evicted with
+    /// its transcript intact, so the caller can fall back to
+    /// `resume_session` transparently.
+    pub fn swap_in_session(
+        &self,
+        s: &mut DecodeSession,
+        parent: Option<&DecodeSession>,
+        image: &SwapImage,
+    ) -> Result<()> {
+        if !s.evicted {
+            bail!("swap-in of a session that was never evicted");
+        }
+        if s.pending.is_none() {
+            // restore rebuilds cached state but computes no logits: a
+            // session whose pending token died with its worker can only
+            // come back through the re-prefill path
+            bail!("swap-in of a session with no pending token");
+        }
+        let mut backend = if s.fork_ctx > 0 {
+            let Some(parent) = parent else {
+                bail!("swap-in of a forked session needs its prefix parent");
+            };
+            if parent.backend.seq_len() != s.fork_ctx {
+                bail!(
+                    "prefix parent context {} does not match fork point {}",
+                    parent.backend.seq_len(),
+                    s.fork_ctx
+                );
+            }
+            parent.backend.fork_prefix(s.fork_ctx / self.cfg.block_size)?
+        } else {
+            self.fresh_backend_with(s.topk)
+        };
+        backend.swap_in(image)?;
+        let want = s.prompt_len + s.generated.len();
+        let got = backend.seq_len();
+        if got != want {
+            // dropping the local backend releases whatever it allocated;
+            // `s` stays evicted so the re-prefill fallback still works
+            return Err(ServeError::ResumeDiverged {
+                what: "restored context length",
+                expected: want as i64,
+                got: got as i64,
+            }
+            .into());
+        }
+        s.backend = backend;
+        s.evicted = false;
+        s.stats.resumes += 1;
+        // reprefill_secs intentionally untouched: it prices re-prefill
+        // work specifically, and the bench compares the two resume paths
+        Ok(())
+    }
+
     /// Force-preempt a session recovered from a faulted worker: release
     /// whatever pool blocks its backend can still release (best-effort —
     /// a private-cache backend frees nothing here; its caches are
@@ -509,14 +605,14 @@ impl<M: TokenModel> ServeEngine<M> {
     /// forward is `resume_session`'s re-prefill. With
     /// `pending_valid == false` (the session's own step panicked, so its
     /// in-memory pending token may be mid-mutation garbage) the pending
-    /// token is reset to [`PENDING_UNKNOWN`] and recomputed at resume
-    /// from the transcript, which a panic cannot corrupt: tokens are
-    /// appended only after a fully completed step.
+    /// token is cleared to `None` and recomputed at resume from the
+    /// transcript, which a panic cannot corrupt: tokens are appended
+    /// only after a fully completed step.
     pub fn quarantine_session(&self, s: &mut DecodeSession, pending_valid: bool) -> usize {
         let freed = s.backend.evict().unwrap_or(0);
         s.evicted = true;
         if !pending_valid {
-            s.pending = PENDING_UNKNOWN;
+            s.pending = None;
         }
         freed
     }
@@ -545,7 +641,7 @@ impl<M: TokenModel> ServeEngine<M> {
             evicted: true,
             max_seq: self.cfg.max_seq,
             max_new,
-            pending: PENDING_UNKNOWN,
+            pending: None,
             generated,
             topk,
             stats: GenStats::default(),
@@ -590,10 +686,21 @@ impl<M: TokenModel> ServeEngine<M> {
             s.backend = backend;
             pending
         };
-        if s.pending != PENDING_UNKNOWN {
-            debug_assert_eq!(pending, s.pending, "re-prefill resume must be bit-identical");
+        // a real check, not a debug_assert: in release builds a divergent
+        // resume would otherwise silently serve wrong tokens. `None`
+        // (fault-wiped pending) has nothing to compare against — the
+        // recomputed token is authoritative there.
+        if let Some(prev) = s.pending {
+            if pending != prev {
+                return Err(ServeError::ResumeDiverged {
+                    what: "re-prefill pending token",
+                    expected: prev as i64,
+                    got: pending as i64,
+                }
+                .into());
+            }
         }
-        s.pending = pending;
+        s.pending = Some(pending);
         s.evicted = false;
         s.stats.resumes += 1;
         s.stats.reprefill_secs += t0.elapsed().as_secs_f64();
@@ -605,10 +712,11 @@ impl<M: TokenModel> ServeEngine<M> {
     /// or `None` if the session is already finished.
     pub fn step(&self, s: &mut DecodeSession) -> Option<i32> {
         debug_assert!(!s.evicted, "stepping an evicted session (resume it first)");
+        debug_assert!(s.pending.is_some(), "stepping a session with no pending token");
         if s.finished() {
             return None;
         }
-        let tok = s.pending;
+        let tok = s.pending?;
         s.generated.push(tok);
         if s.finished() {
             return Some(tok); // budget exhausted: no need to compute a successor
@@ -617,7 +725,7 @@ impl<M: TokenModel> ServeEngine<M> {
         let pos = s.prompt_len + s.generated.len() - 1;
         let (q, k, v) = self.model.qkv(tok, pos);
         let out = s.backend.decode(&q, &k, &v);
-        s.pending = argmax(&self.model.logits(&out));
+        s.pending = Some(argmax(&self.model.logits(&out)));
         s.stats.decode_secs += t0.elapsed().as_secs_f64();
         s.stats.decode_steps += 1;
         Some(tok)
@@ -821,6 +929,107 @@ mod tests {
             }
         }
         assert_eq!(got, want, "resumed fork diverged from its never-evicted twin");
+    }
+
+    #[test]
+    fn swapped_session_resumes_bit_identically() {
+        let e = engine(BackendKind::Paged);
+        let prompt: Vec<i32> = (0..30).map(|i| (i * 7) % 48).collect();
+        let (want, _) = e.generate(&prompt, 8).unwrap();
+        let mut s = e.start(&prompt, 8).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            got.push(e.step(&mut s).unwrap());
+        }
+        let used_before = e.pool_status().unwrap().used_blocks;
+        let (freed, image) = e.swap_out_session(&mut s).unwrap();
+        assert!(freed > 0);
+        assert!(s.evicted());
+        assert_eq!(e.pool_status().unwrap().used_blocks, used_before - freed);
+        // the whole context is private (unforked), so the image holds it all
+        assert_eq!(image.tokens(), prompt.len() + 3);
+        assert!(image.payload_bytes() > 0);
+        assert!(e.swap_out_session(&mut s).is_err(), "double swap-out");
+        e.swap_in_session(&mut s, None, &image).unwrap();
+        assert!(!s.evicted());
+        assert_eq!(s.stats.resumes, 1);
+        assert_eq!(s.stats.reprefill_secs, 0.0, "swap-in must not be billed as re-prefill");
+        // restore allocates exactly what eviction freed: occupancy parity
+        // with a re-prefill resume (and with never having been preempted)
+        assert_eq!(e.pool_status().unwrap().used_blocks, used_before);
+        while let Some(tok) = e.step(&mut s) {
+            got.push(tok);
+        }
+        assert_eq!(got, want, "swap round-trip changed the served tokens");
+    }
+
+    #[test]
+    fn swapped_fork_resumes_off_its_resident_prefix() {
+        let e = engine(BackendKind::Paged);
+        let prefix: Vec<i32> = (0..40).map(|i| (i * 3) % 48).collect();
+        let parent = e.start(&prefix, 0).unwrap();
+        let cont: Vec<i32> = (0..9).map(|i| (i * 5 + 1) % 48).collect();
+        let mut twin = e.fork_session(&parent, &cont, 7).unwrap();
+        let mut victim = e.fork_session(&parent, &cont, 7).unwrap();
+        let mut want = Vec::new();
+        let mut got = Vec::new();
+        for _ in 0..2 {
+            want.push(e.step(&mut twin).unwrap());
+            got.push(e.step(&mut victim).unwrap());
+        }
+        let (freed, image) = e.swap_out_session(&mut victim).unwrap();
+        assert!(freed > 0);
+        // suffix-only: the image starts at the fork point's block, the
+        // shared prefix stays resident under the parent
+        assert_eq!(image.first_block(), prefix.len() / 16);
+        assert!(
+            e.pool_status().unwrap().used_blocks >= (prefix.len() + 15) / 16,
+            "shared prefix blocks must survive the forker's swap-out"
+        );
+        // swap-in requires the parent, exactly like a re-prefill resume
+        assert!(e.swap_in_session(&mut victim, None, &image).is_err());
+        assert!(victim.evicted(), "failed swap-in must leave the session evicted");
+        e.swap_in_session(&mut victim, Some(&parent), &image).unwrap();
+        loop {
+            match (e.step(&mut twin), e.step(&mut victim)) {
+                (Some(a), Some(b)) => {
+                    want.push(a);
+                    got.push(b);
+                }
+                (None, None) => break,
+                _ => panic!("twin and swapped fork disagree on length"),
+            }
+        }
+        assert_eq!(got, want, "swapped fork diverged from its never-preempted twin");
+    }
+
+    #[test]
+    fn corrupted_swap_image_falls_back_to_reprefill() {
+        let e = engine(BackendKind::Paged);
+        let prompt: Vec<i32> = (0..30).map(|i| (i * 7) % 48).collect();
+        let (want, _) = e.generate(&prompt, 8).unwrap();
+        let mut s = e.start(&prompt, 8).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            got.push(e.step(&mut s).unwrap());
+        }
+        let (_, mut image) = e.swap_out_session(&mut s).unwrap();
+        let used_evicted = e.pool_status().unwrap().used_blocks;
+        image.corrupt_for_chaos();
+        let err = e.swap_in_session(&mut s, None, &image).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        assert!(s.evicted(), "failed swap-in must leave the session evicted");
+        assert_eq!(
+            e.pool_status().unwrap().used_blocks,
+            used_evicted,
+            "failed swap-in must not leak pool blocks"
+        );
+        // the transparent fallback: plain re-prefill resume still works
+        e.resume_session(&mut s, None).unwrap();
+        while let Some(tok) = e.step(&mut s) {
+            got.push(tok);
+        }
+        assert_eq!(got, want, "fallback resume changed the served tokens");
     }
 
     #[test]

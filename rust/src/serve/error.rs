@@ -29,6 +29,18 @@ pub enum ServeError {
     /// unboundedly: its deadline budget expired while queued, or its
     /// pool reservation can never fit the configured capacity.
     Shed { id: u64, reason: String },
+    /// A resumed session's rebuilt state disagrees with its transcript —
+    /// the re-prefill produced a different pending token, or a swap-in
+    /// restored a different context length, than the session held when
+    /// it was evicted. Serving on would emit wrong tokens; failing the
+    /// tick is the only honest move.
+    ResumeDiverged { what: &'static str, expected: i64, got: i64 },
+    /// A serving-state invariant the scheduler relies on does not hold
+    /// (e.g. a recovery-ledger entry vanished for an in-flight session).
+    /// Previously these were `expect()` aborts; as a typed error the
+    /// caller degrades — fails the tick, sheds, drains — instead of
+    /// killing the process.
+    Inconsistent { what: &'static str },
 }
 
 impl fmt::Display for ServeError {
@@ -47,6 +59,12 @@ impl fmt::Display for ServeError {
             ServeError::AllWorkersDead => write!(f, "all decode workers are dead"),
             ServeError::Shed { id, reason } => {
                 write!(f, "request {id} shed by overload control: {reason}")
+            }
+            ServeError::ResumeDiverged { what, expected, got } => {
+                write!(f, "resume diverged: {what} expected {expected}, got {got}")
+            }
+            ServeError::Inconsistent { what } => {
+                write!(f, "serving-state inconsistency: {what}")
             }
         }
     }
@@ -84,6 +102,11 @@ mod tests {
         assert!(t.contains("worker 1") && t.contains("tick-9"), "{t}");
         let s = ServeError::Shed { id: 42, reason: "deadline 0.1s missed".into() }.to_string();
         assert!(s.contains("request 42") && s.contains("deadline"), "{s}");
+        let d = ServeError::ResumeDiverged { what: "pending token", expected: 7, got: 9 };
+        let s = d.to_string();
+        assert!(s.contains("pending token") && s.contains("7") && s.contains("9"), "{s}");
+        let s = ServeError::Inconsistent { what: "ledger entry missing" }.to_string();
+        assert!(s.contains("inconsistency") && s.contains("ledger"), "{s}");
     }
 
     #[test]

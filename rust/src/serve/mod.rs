@@ -13,7 +13,10 @@
 //!   admit into the in-flight decode batch, step every session one token,
 //!   retire finished requests; on a bounded paged pool it oversubscribes
 //!   via LRU eviction + transparent re-prefill resume (bit-identical
-//!   tokens, [`EvictionStats`] accounting);
+//!   tokens, [`EvictionStats`] accounting), optionally backed by a
+//!   bounded host swap tier ([`SchedulerCfg::swap_blocks`]) that
+//!   snapshots victims byte-exact and restores them at a fraction of
+//!   the re-prefill cost ([`SwapStats`]);
 //! - `runtime`: the thread-per-core decode runtime — persistent named,
 //!   core-pinned workers fed by bounded channels, with work stealing
 //!   between shards ([`RuntimeKind`] selects it vs the legacy per-tick
@@ -55,7 +58,7 @@ pub use model::{TokenModel, ToyModel};
 pub use runtime::{pin_from_env, pin_supported, steal_from_env, RuntimeKind};
 pub use scheduler::{
     ContinuousScheduler, DegradeCfg, EvictionStats, OverloadStats, SchedStats, SchedulerCfg,
-    WorkerStats,
+    SwapStats, WorkerStats,
 };
 
 #[cfg(feature = "xla")]

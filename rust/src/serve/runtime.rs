@@ -63,6 +63,7 @@ use super::chaos::{self, FaultKind, FaultPlan};
 use super::engine::{DecodeSession, ServeEngine};
 use super::error::ServeError;
 use super::model::TokenModel;
+use crate::sparse::SwapImage;
 use crate::util::sync;
 
 /// Which dispatch machinery steps the in-flight decode batch.
@@ -221,6 +222,11 @@ pub(crate) struct Live {
     pub(crate) retry_at: u64,
     /// current resume backoff in ticks (doubles per deferral, capped)
     pub(crate) backoff: u64,
+    /// host-tier snapshot of this session's private tail blocks, present
+    /// while preempted-with-swap: the resume path restores it instead of
+    /// re-prefilling (and falls back transparently if that fails). The
+    /// image travels with the session — there is no separate swap store.
+    pub(crate) swap: Option<SwapImage>,
     pub(crate) session: DecodeSession,
 }
 
@@ -313,8 +319,12 @@ impl StepReport {
 pub(crate) enum ToWorker {
     /// take ownership of a freshly admitted or resumed session
     Admit(Box<Live>),
-    /// release the identified session's pool blocks and hand it back
-    Evict(u64),
+    /// release the identified session's pool blocks and hand it back.
+    /// With `swap`, snapshot the private tail into the host tier first
+    /// (the image ships back attached to the `Live`); the scheduler
+    /// decides swap-vs-drop BEFORE the round-trip, from its mirrored
+    /// block counts, so the decision stays deterministic.
+    Evict { id: u64, swap: bool },
     /// step every owned session one decode token (stealing from other
     /// shards when the local deque runs dry), then report
     Step { tick: u64, report: StepReport },
@@ -529,14 +539,28 @@ fn worker_loop<M: TokenModel>(
         }
         match msg {
             ToWorker::Admit(live) => owned.push(*live),
-            ToWorker::Evict(id) => {
+            ToWorker::Evict { id, swap } => {
                 let idx = owned
                     .iter()
                     .position(|l| l.id == id)
                     .expect("evict command for a session this worker does not own");
                 // evict in place so a panicking eviction still leaves the
                 // session in `owned` for the backstop to ship home
-                let freed = engine.evict_session(&mut owned[idx].session);
+                let freed = if swap {
+                    // swap-out = snapshot + evict; if the snapshot fails
+                    // (non-paged backend, unknown pending) demote to a
+                    // plain drop — the scheduler sees the missing image
+                    // and counts the fallback
+                    match engine.swap_out_session(&mut owned[idx].session) {
+                        Ok((freed, image)) => {
+                            owned[idx].swap = Some(image);
+                            Ok(freed)
+                        }
+                        Err(_) => engine.evict_session(&mut owned[idx].session),
+                    }
+                } else {
+                    engine.evict_session(&mut owned[idx].session)
+                };
                 let live = owned.remove(idx);
                 let _ =
                     tx.send(FromWorker::Evicted { worker: w, live: Box::new(live), freed });
@@ -566,6 +590,11 @@ fn worker_loop<M: TokenModel>(
                         // later access recovers through util::sync, so
                         // this must be a non-event
                         FaultKind::PoisonPool => engine.poison_pool_for_chaos(),
+                        // swap-image corruption is applied scheduler-side
+                        // (the images live on preempted sessions, which a
+                        // worker never holds) — a no-op here, NOT a panic:
+                        // the catchall below would kill the worker
+                        FaultKind::SwapCorrupt => {}
                         kind => panic!("{}", chaos::panic_message(kind, w, tick)),
                     }
                 }
@@ -808,18 +837,20 @@ impl DecodeRuntime {
     }
 
     /// Synchronous eviction round-trip: the identified session comes back
-    /// with its pool blocks released. Only called between step barriers,
+    /// with its pool blocks released (and, with `swap`, its private tail
+    /// snapshotted onto `Live::swap`). Only called between step barriers,
     /// so the only other traffic possible on the reply channel is a
     /// death report or a zombie's stale reply — both handled here.
     pub(crate) fn evict(
         &mut self,
         shard: usize,
         id: u64,
+        swap: bool,
     ) -> std::result::Result<(Live, Result<usize>), Box<ServeError>> {
         let Some(tx) = &self.to[shard] else {
             return Err(Box::new(ServeError::WorkerDisconnected { worker: shard }));
         };
-        let sent = tx.send(ToWorker::Evict(id));
+        let sent = tx.send(ToWorker::Evict { id, swap });
         if sent.is_err() {
             let err = ServeError::WorkerDisconnected { worker: shard };
             self.mark_dead(shard, err.clone(), Vec::new());

@@ -75,6 +75,21 @@
 //! [`EvictionStats`] counts evictions (per class), reclaimed blocks,
 //! resumes and re-prefill time.
 //!
+//! **Tiered KV swap** ([`SchedulerCfg::swap_blocks`] > 0): an eviction
+//! may *swap out* instead of dropping — the victim's private tail blocks
+//! are snapshotted byte-exact into a bounded host tier
+//! (`ServeEngine::swap_out_session`) while any refcounted shared prefix
+//! stays resident, and its resume *restores* the snapshot
+//! (`swap_in_session`) instead of re-prefilling whenever the
+//! deterministic cost model says restore is cheaper
+//! ([`SWAP_IN_COST_PER_BLOCK`] vs [`REPREFILL_COST_PER_BLOCK`] — pure
+//! block-count arithmetic, so the schedule stays bitwise identical
+//! across runtimes × workers × steal plans). Victims that do not fit the
+//! tier, and images whose checksum no longer verifies (chaos
+//! `SwapCorrupt`), demote transparently to the drop/re-prefill path.
+//! [`SwapStats`] counts offloads, restores, bytes and fallbacks; the
+//! default `swap_blocks = 0` keeps bitwise parity with older releases.
+//!
 //! **Overload control**: every request carries a [`Priority`] class and
 //! an optional deadline budget ([`Request::deadline`]). Admission is
 //! urgency-ordered (class first, FIFO within a class); a queued request
@@ -121,7 +136,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use super::batcher::{Batcher, BatcherCfg, Priority, Request, RequestResult};
-use super::chaos::FaultPlan;
+use super::chaos::{FaultKind, FaultPlan};
 use super::engine::{DecodeSession, ServeEngine};
 use super::error::{FaultStats, ServeError};
 use super::model::TokenModel;
@@ -159,6 +174,19 @@ pub struct SchedulerCfg {
     /// crosses a threshold. `None` (default) = off — served tokens stay
     /// bitwise identical to a scheduler without the dial.
     pub degrade: Option<DegradeCfg>,
+    /// host swap-tier capacity in pool blocks (0 = swap disabled —
+    /// bitwise parity with a scheduler without a tier). When > 0, an
+    /// eviction snapshots the victim's private tail into host memory
+    /// (`ServeEngine::swap_out_session`) instead of dropping it whenever
+    /// the tail fits the remaining tier capacity, and its resume
+    /// restores the snapshot instead of re-prefilling when the
+    /// deterministic cost model ([`SWAP_IN_COST_PER_BLOCK`] vs
+    /// [`REPREFILL_COST_PER_BLOCK`]) says restore is cheaper. A victim
+    /// that does not fit demotes to a full drop (counted in
+    /// `SwapStats::fallbacks`). NOT read from the environment here —
+    /// `DemoCfg` and the CLI wire `MOBA_SWAP_BLOCKS` through explicitly,
+    /// so library defaults never flip under an exported variable.
+    pub swap_blocks: usize,
 }
 
 impl Default for SchedulerCfg {
@@ -172,8 +200,50 @@ impl Default for SchedulerCfg {
             chaos: None,
             barrier_deadline_secs: None,
             degrade: None,
+            swap_blocks: 0,
         }
     }
+}
+
+/// Deterministic resume-cost model, in abstract units per pool block:
+/// restoring one swapped block is a memcpy; re-prefilling it recomputes
+/// QKV + attention for `block_size` tokens — an order of magnitude more
+/// work. The exact ratio does not matter for correctness, only that both
+/// costs are *pure block-count arithmetic* at fixed rates: the swap-vs-
+/// recompute choice is then a function of the simulation state alone, so
+/// shed/token sets stay bitwise identical across runtimes × worker
+/// counts × steal schedules (wall-clock `reprefill_secs`/`swapin_secs`
+/// stay reporting-only, exactly like the SLA latency accounting).
+pub const SWAP_IN_COST_PER_BLOCK: u64 = 1;
+/// See [`SWAP_IN_COST_PER_BLOCK`].
+pub const REPREFILL_COST_PER_BLOCK: u64 = 8;
+
+/// Host swap-tier capacity from `MOBA_SWAP_BLOCKS` (unset or unparsable
+/// → 0 = swap disabled). Lenient like `chaos::seed_from_env`; the CLI
+/// boundary validates through [`parse_swap_blocks`] so a typo fails
+/// loudly there instead.
+pub fn swap_blocks_from_env() -> usize {
+    std::env::var("MOBA_SWAP_BLOCKS").ok().and_then(|v| v.trim().parse().ok()).unwrap_or(0)
+}
+
+/// Strict `MOBA_SWAP_BLOCKS` parser (the `MOBA_STEAL` pattern): unset is
+/// fine, but a set-and-unparsable value is a contextful error rather
+/// than silently serving without a swap tier.
+pub fn parse_swap_blocks(raw: Option<String>) -> Result<Option<usize>, String> {
+    match raw {
+        None => Ok(None),
+        Some(v) => match v.trim().parse::<usize>() {
+            Ok(n) => Ok(Some(n)),
+            Err(_) => {
+                Err(format!("MOBA_SWAP_BLOCKS must be a non-negative integer, got {v:?}"))
+            }
+        },
+    }
+}
+
+/// Strict env read for the CLI boundary.
+pub fn swap_blocks_from_env_strict() -> Result<Option<usize>, String> {
+    parse_swap_blocks(std::env::var("MOBA_SWAP_BLOCKS").ok())
 }
 
 /// Pressure-tiered degradation dial (`SchedulerCfg::degrade`). The
@@ -214,6 +284,30 @@ pub struct SchedStats {
     pub fault: FaultStats,
     /// overload-control counters: sheds, SLA violations, degradations
     pub overload: OverloadStats,
+    /// host swap-tier counters: offloads, restores, demote-to-drop
+    /// fallbacks (bounded tier or corrupted image)
+    pub swap: SwapStats,
+}
+
+/// Host swap-tier counters (`SchedStats::swap`). All zero when
+/// `SchedulerCfg::swap_blocks == 0`.
+#[derive(Clone, Debug, Default)]
+pub struct SwapStats {
+    /// evictions that snapshotted the victim's private tail to the host
+    /// tier instead of dropping it
+    pub swap_outs: usize,
+    /// resumes restored from a host-tier image instead of re-prefilled
+    pub swap_ins: usize,
+    /// total K/V payload bytes offloaded to the host tier
+    pub bytes: usize,
+    /// swaps demoted to the drop/re-prefill path: tier capacity
+    /// exhausted at eviction, snapshot/restore failed, or the image's
+    /// checksum no longer verified (e.g. chaos `SwapCorrupt`)
+    pub fallbacks: usize,
+    /// wall-clock seconds spent restoring swapped images — the memcpy
+    /// cost the tier trades against re-prefill recompute
+    /// (reporting-only, like `EvictionStats::reprefill_secs`)
+    pub swapin_secs: f64,
 }
 
 /// Overload-control counters (`SchedStats::overload`).
@@ -403,6 +497,10 @@ pub struct ContinuousScheduler<M: TokenModel> {
     /// overload-control rejections `(id, ServeError::Shed)`, in shed
     /// order — callers account for every request as result OR shed
     sheds: Vec<(u64, ServeError)>,
+    /// pool blocks currently resident in the host swap tier (the sum of
+    /// `n_blocks()` over every preempted session's image); bounded by
+    /// `SchedulerCfg::swap_blocks`
+    swap_used: usize,
     pub stats: SchedStats,
 }
 
@@ -446,6 +544,7 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
             prefix_blocks: 0,
             finished_scratch: Vec::new(),
             sheds: Vec::new(),
+            swap_used: 0,
             stats: SchedStats::default(),
         }
     }
@@ -637,10 +736,37 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                 debug_assert!(!live.session.finished(), "evicting a finished session");
                 self.reserved_total -= live.reserve_blocks;
                 live.reserve_blocks = 0;
-                let freed = self.engine.evict_session(&mut live.session)?;
+                // swap-vs-drop is pure block-count arithmetic on
+                // simulation state (`freeable`, `swap_used`, the cfg
+                // bound) — identical across runtimes and schedules. The
+                // `freeable > 0` gate skips un-diverged forks whose tail
+                // is fully shared: restoring them would allocate a block
+                // re-prefill fork-sharing would not, breaking occupancy
+                // parity with the swap-disabled schedule.
+                let freeable = self.engine.freeable_blocks(&live.session);
+                let want_swap = self.cfg.swap_blocks > 0 && freeable > 0;
+                let do_swap = want_swap && self.swap_used + freeable <= self.cfg.swap_blocks;
+                let freed = if do_swap {
+                    match self.engine.swap_out_session(&mut live.session) {
+                        Ok((freed, image)) => {
+                            live.swap = Some(image);
+                            freed
+                        }
+                        Err(_) => self.engine.evict_session(&mut live.session)?,
+                    }
+                } else {
+                    self.engine.evict_session(&mut live.session)?
+                };
                 self.stats.eviction.evictions += 1;
                 self.stats.eviction.evictions_by_class[live.priority.rank()] += 1;
                 self.stats.eviction.blocks_reclaimed += freed;
+                if let Some(img) = &live.swap {
+                    self.swap_used += img.n_blocks();
+                    self.stats.swap.swap_outs += 1;
+                    self.stats.swap.bytes += img.payload_bytes();
+                } else if want_swap {
+                    self.stats.swap.fallbacks += 1;
+                }
                 self.preempted.push(live);
             }
             Victim::Mirror { idx } => {
@@ -650,7 +776,15 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                     else {
                         unreachable!("mirror victim without persistent dispatch")
                     };
-                    match rt.evict(mirror[idx].shard, mirror[idx].id) {
+                    // decide swap-vs-drop BEFORE the round-trip, from the
+                    // mirrored freeable count (exact between steps); the
+                    // worker snapshots or drops accordingly and ships the
+                    // image back on the Live.
+                    let freeable = mirror[idx].freeable;
+                    let want_swap = self.cfg.swap_blocks > 0 && freeable > 0;
+                    let do_swap =
+                        want_swap && self.swap_used + freeable <= self.cfg.swap_blocks;
+                    match rt.evict(mirror[idx].shard, mirror[idx].id, do_swap) {
                         Ok((mut live, freed)) => {
                             let freed = freed?;
                             let remote = mirror.swap_remove(idx);
@@ -664,6 +798,15 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                             self.stats.eviction.evictions += 1;
                             self.stats.eviction.evictions_by_class[remote.priority.rank()] += 1;
                             self.stats.eviction.blocks_reclaimed += freed;
+                            if let Some(img) = &live.swap {
+                                self.swap_used += img.n_blocks();
+                                self.stats.swap.swap_outs += 1;
+                                self.stats.swap.bytes += img.payload_bytes();
+                            } else if want_swap {
+                                // the worker's snapshot failed and it fell
+                                // back to a plain drop
+                                self.stats.swap.fallbacks += 1;
+                            }
                             self.preempted.push(live);
                             owner_died = false;
                         }
@@ -736,9 +879,11 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                 if orphan_ids.contains(&remote.id) {
                     continue; // recovered via its struct above
                 }
-                let entry = ledger
-                    .remove(&remote.id)
-                    .expect("recovery ledger entry for a session lost with its worker");
+                let Some(entry) = ledger.remove(&remote.id) else {
+                    bail!(ServeError::Inconsistent {
+                        what: "recovery ledger entry missing for a session lost with its worker"
+                    });
+                };
                 let session = self.engine.adopt_session(
                     entry.own_prompt,
                     entry.fork_ctx,
@@ -760,6 +905,7 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                     paused: false,
                     retry_at: 0,
                     backoff: 1,
+                    swap: None,
                     session,
                 });
                 self.stats.fault.rehomed_sessions += 1;
@@ -831,12 +977,16 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
         self.reserved_total += live.reserve_blocks;
         match &mut self.dispatch {
             Dispatch::Tick { shards } => {
-                let si = shards
+                let Some(si) = shards
                     .iter()
                     .enumerate()
                     .min_by_key(|(_, s)| s.running.len())
                     .map(|(i, _)| i)
-                    .expect("at least one shard");
+                else {
+                    bail!(ServeError::Inconsistent {
+                        what: "no decode shards to place a session on"
+                    });
+                };
                 live.home = si;
                 live.session.set_arena(si);
                 if !resumed {
@@ -920,6 +1070,32 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
         self.tick_no += 1;
         let pool_cap = self.engine.pool_status().and_then(|p| p.capacity_blocks);
 
+        // chaos: SwapCorrupt fires scheduler-side (swap images live on
+        // preempted sessions, not workers) and only on the persistent
+        // runtime — the tick loop stays the chaos-blind oracle. The
+        // lowest-id image rots; its swap-in then fails checksum and the
+        // resume falls back to re-prefill, which must serve identical
+        // tokens.
+        if matches!(self.dispatch, Dispatch::Persistent { .. }) {
+            if let Some(plan) = &self.cfg.chaos {
+                let corrupt = plan
+                    .faults()
+                    .iter()
+                    .any(|f| f.tick == self.tick_no && f.kind == FaultKind::SwapCorrupt);
+                if corrupt {
+                    if let Some(img) = self
+                        .preempted
+                        .iter_mut()
+                        .filter(|l| l.swap.is_some())
+                        .min_by_key(|l| l.id)
+                        .and_then(|l| l.swap.as_mut())
+                    {
+                        img.corrupt_for_chaos();
+                    }
+                }
+            }
+        }
+
         // 0. deadline shedding: queued requests whose budget expired are
         // rejected with a typed error instead of being served uselessly
         // late (or clogging the queue forever)
@@ -972,13 +1148,17 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                 // committing
                 let key =
                     (std::cmp::Reverse(self.preempted[idx].priority), self.preempted[idx].id);
-                let best = self
+                let Some(best) = self
                     .preempted
                     .iter()
                     .filter(|l| l.retry_at <= self.tick_no)
                     .map(|l| (std::cmp::Reverse(l.priority), l.id))
                     .min()
-                    .expect("non-empty preempted queue");
+                else {
+                    bail!(ServeError::Inconsistent {
+                        what: "preempted queue emptied during resume fit"
+                    });
+                };
                 if best != key {
                     continue;
                 }
@@ -986,15 +1166,47 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
             let mut live = self.preempted.swap_remove(idx);
             live.retry_at = 0;
             live.backoff = 1;
-            let t0 = Instant::now();
-            self.engine.resume_session(&mut live.session, self.prefix.as_ref())?;
-            let dt = t0.elapsed().as_secs_f64();
-            self.stats.eviction.resumes += 1;
-            self.stats.eviction.reprefill_secs += dt;
-            if live.rehomed {
-                // this re-prefill is recovery work, not pool pressure
+            // swap-in vs recompute: both costs are block counts at fixed
+            // rates (simulation-clock arithmetic), so the choice — and
+            // with it the schedule — is identical across runtimes ×
+            // workers × steal plans. Ties go to swap-in (it is never
+            // slower). A failed restore (e.g. a chaos-corrupted image)
+            // falls through to the re-prefill path transparently.
+            let mut swapped_in = false;
+            if let Some(image) = live.swap.take() {
+                self.swap_used -= image.n_blocks();
+                let swap_cost = image.n_blocks() as u64 * SWAP_IN_COST_PER_BLOCK;
+                let re_cost =
+                    self.engine.resume_reserve(&live.session) as u64 * REPREFILL_COST_PER_BLOCK;
+                if swap_cost <= re_cost {
+                    let t0 = Instant::now();
+                    match self.engine.swap_in_session(
+                        &mut live.session,
+                        self.prefix.as_ref(),
+                        &image,
+                    ) {
+                        Ok(()) => {
+                            swapped_in = true;
+                            self.stats.swap.swap_ins += 1;
+                            self.stats.swap.swapin_secs += t0.elapsed().as_secs_f64();
+                        }
+                        Err(_) => self.stats.swap.fallbacks += 1,
+                    }
+                }
+            }
+            if !swapped_in {
+                let t0 = Instant::now();
+                self.engine.resume_session(&mut live.session, self.prefix.as_ref())?;
+                let dt = t0.elapsed().as_secs_f64();
+                self.stats.eviction.resumes += 1;
+                self.stats.eviction.reprefill_secs += dt;
+                if live.rehomed {
+                    // this re-prefill is recovery work, not pool pressure
+                    live.rehomed = false;
+                    self.stats.fault.recovery_reprefill_secs += dt;
+                }
+            } else {
                 live.rehomed = false;
-                self.stats.fault.recovery_reprefill_secs += dt;
             }
             self.place(live, true, pool_cap.is_some())?;
         }
@@ -1019,7 +1231,11 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                 let ctx = self.shared_prefix_len();
                 let need = self.engine.block_reserve(ctx, next_tokens);
                 if self.prefix_blocks + need > cap {
-                    let req = self.queue.admit(now, 1).pop().expect("peeked request");
+                    let Some(req) = self.queue.admit(now, 1).pop() else {
+                        bail!(ServeError::Inconsistent {
+                            what: "peeked request vanished from the queue"
+                        });
+                    };
                     debug_assert_eq!(req.id, next_id);
                     self.stats.overload.shed_infeasible += 1;
                     let reason = format!(
@@ -1036,7 +1252,9 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                     break;
                 }
             }
-            let req = self.queue.admit(now, 1).pop().expect("peeked request");
+            let Some(req) = self.queue.admit(now, 1).pop() else {
+                bail!(ServeError::Inconsistent { what: "peeked request vanished from the queue" });
+            };
             // pressure-tiered degradation: at/above the occupancy
             // threshold, non-interactive private admissions decode with
             // a downshifted top-k. Forks inherit their prefix parent's
@@ -1074,6 +1292,7 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
                     paused: false,
                     retry_at: 0,
                     backoff: 1,
+                    swap: None,
                     session,
                 },
                 false,
@@ -1305,7 +1524,9 @@ impl<M: TokenModel + Send + Sync + 'static> ContinuousScheduler<M> {
         let mut now = 0.0f64;
         while results.len() + (self.sheds.len() - shed0) < total {
             while pending.peek().is_some_and(|r| r.arrival <= now) {
-                let req = pending.next().expect("peeked");
+                let Some(req) = pending.next() else {
+                    bail!(ServeError::Inconsistent { what: "peeked arrival vanished" });
+                };
                 self.submit(req);
             }
             results.extend(self.tick(now)?);
@@ -1671,6 +1892,138 @@ mod tests {
             assert!(tight.stats.peak_pool_blocks <= 5, "{tag}");
             assert!(tight.idle(), "{tag}: no session left behind");
         }
+    }
+
+    #[test]
+    fn swap_tier_serves_identical_tokens_across_runtimes_and_workers() {
+        // the tentpole contract with the host tier on: an oversubscribed
+        // pool swaps victims out instead of dropping them, restores them
+        // at resume, and the served tokens stay bitwise identical to the
+        // unbounded pool — across both runtimes and worker counts
+        let stream = || -> Vec<Request> { (0..6).map(|i| req(i, 0.0, 20, 8)).collect() };
+        let mut wide =
+            ContinuousScheduler::new(engine_with(BackendKind::Paged, 0), sched_cfg(6, 1));
+        let mut base = wide.run_stream(stream(), 0.01).unwrap();
+        base.sort_by_key(|r| r.id);
+        // swap-disabled bounded reference: the swap tier must not change
+        // WHICH sessions get evicted, only how their state survives
+        let mut dropper = ContinuousScheduler::new(
+            engine_with(BackendKind::Paged, 5),
+            SchedulerCfg { max_in_flight: 6, ..SchedulerCfg::default() },
+        );
+        dropper.run_stream(stream(), 0.01).unwrap();
+        let drop_evictions = dropper.stats.eviction.evictions;
+        for (runtime, workers) in [
+            (RuntimeKind::Persistent, 1usize),
+            (RuntimeKind::Persistent, 3),
+            (RuntimeKind::TickLoop, 1),
+            (RuntimeKind::TickLoop, 3),
+        ] {
+            let cfg = SchedulerCfg {
+                max_in_flight: 6,
+                decode_workers: workers,
+                runtime,
+                swap_blocks: 64,
+                ..SchedulerCfg::default()
+            };
+            let mut tiered = ContinuousScheduler::new(engine_with(BackendKind::Paged, 5), cfg);
+            let mut got = tiered.run_stream(stream(), 0.01).unwrap();
+            got.sort_by_key(|r| r.id);
+            let tag = format!("{} workers={workers} swap", runtime.label());
+            assert_eq!(got.len(), base.len(), "{tag} lost requests");
+            for (g, b) in got.iter().zip(&base) {
+                assert_eq!(g.id, b.id);
+                assert_eq!(g.output, b.output, "req {} changed under swap ({tag})", g.id);
+            }
+            let sw = &tiered.stats.swap;
+            assert!(sw.swap_outs > 0, "{tag}: oversubscription must swap out");
+            assert!(sw.swap_ins > 0, "{tag}: swapped sessions must restore");
+            assert!(sw.bytes > 0, "{tag}");
+            assert_eq!(sw.fallbacks, 0, "{tag}: ample tier never demotes");
+            assert_eq!(
+                tiered.stats.eviction.evictions, drop_evictions,
+                "{tag}: the tier must not change the eviction schedule"
+            );
+            assert_eq!(
+                tiered.stats.eviction.resumes + sw.swap_ins,
+                tiered.stats.eviction.evictions,
+                "{tag}: every preemption resumed exactly once, one way or the other"
+            );
+            assert!(tiered.stats.peak_pool_blocks <= 5, "{tag}");
+            assert!(tiered.idle(), "{tag}: no session left behind");
+        }
+    }
+
+    #[test]
+    fn exhausted_swap_tier_demotes_to_drop_and_still_serves() {
+        // swap_blocks = 1 cannot hold any 2-block victim: every eviction
+        // wants to swap, none fit, all demote to the re-prefill path —
+        // tokens must still match the unbounded pool exactly
+        let stream = || -> Vec<Request> { (0..6).map(|i| req(i, 0.0, 20, 8)).collect() };
+        let mut wide =
+            ContinuousScheduler::new(engine_with(BackendKind::Paged, 0), sched_cfg(6, 1));
+        let mut base = wide.run_stream(stream(), 0.01).unwrap();
+        base.sort_by_key(|r| r.id);
+        let cfg = SchedulerCfg { max_in_flight: 6, swap_blocks: 1, ..SchedulerCfg::default() };
+        let mut tiny = ContinuousScheduler::new(engine_with(BackendKind::Paged, 5), cfg);
+        let mut got = tiny.run_stream(stream(), 0.01).unwrap();
+        got.sort_by_key(|r| r.id);
+        for (g, b) in got.iter().zip(&base) {
+            assert_eq!(g.output, b.output, "req {} changed under tier exhaustion", g.id);
+        }
+        let sw = &tiny.stats.swap;
+        assert_eq!(sw.swap_outs, 0, "no 2-block victim fits a 1-block tier");
+        assert_eq!(sw.swap_ins, 0);
+        assert!(sw.fallbacks > 0, "each wanted-but-demoted swap must be counted");
+        assert_eq!(
+            tiny.stats.eviction.resumes, tiny.stats.eviction.evictions,
+            "every demoted preemption re-prefills"
+        );
+        assert!(tiny.idle());
+    }
+
+    #[test]
+    fn swapped_forks_resume_off_the_resident_prefix() {
+        // suffix-only eviction: a forked victim's private tail swaps out
+        // while the refcounted shared prefix stays resident; the restore
+        // re-attaches to the prefix without re-ingesting anything
+        let prefix: Vec<i32> = (0..40).map(|i| (i * 3) % 48).collect();
+        let conts: Vec<Vec<i32>> =
+            (0..4).map(|i| (0..10).map(|j| (j * 7 + i) % 48).collect()).collect();
+        let stream = |conts: &[Vec<i32>]| -> Vec<Request> {
+            conts
+                .iter()
+                .enumerate()
+                .map(|(i, c)| Request::new(i as u64, c.clone(), 6, 0.0))
+                .collect()
+        };
+        let mut wide =
+            ContinuousScheduler::new(engine_with(BackendKind::Paged, 0), sched_cfg(4, 1));
+        wide.set_shared_prefix(&prefix).unwrap();
+        let mut base = wide.run_stream(stream(&conts), 0.01).unwrap();
+        base.sort_by_key(|r| r.id);
+        let cfg = SchedulerCfg { max_in_flight: 4, swap_blocks: 64, ..SchedulerCfg::default() };
+        let mut tight = ContinuousScheduler::new(engine_with(BackendKind::Paged, 6), cfg);
+        tight.set_shared_prefix(&prefix).unwrap();
+        let mut got = tight.run_stream(stream(&conts), 0.01).unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), base.len());
+        for (g, b) in got.iter().zip(&base) {
+            assert_eq!(g.output, b.output, "req {} changed under fork swap", g.id);
+        }
+        assert!(tight.stats.eviction.evictions > 0, "pool pressure must evict forks");
+        assert!(tight.stats.swap.swap_outs > 0, "fork tails must swap, not drop");
+        assert!(tight.stats.swap.swap_ins > 0, "fork tails must restore off the prefix");
+        assert!(tight.stats.peak_pool_blocks >= 3, "the prefix never leaves the pool");
+        assert!(tight.stats.peak_pool_blocks <= 6);
+    }
+
+    #[test]
+    fn strict_swap_blocks_parsing_rejects_typos_with_context() {
+        assert_eq!(parse_swap_blocks(None), Ok(None));
+        assert_eq!(parse_swap_blocks(Some(" 64 ".into())), Ok(Some(64)));
+        let err = parse_swap_blocks(Some("6a".into())).unwrap_err();
+        assert!(err.contains("MOBA_SWAP_BLOCKS") && err.contains("6a"), "{err}");
     }
 
     #[test]

@@ -39,7 +39,7 @@ use super::attention::{
 };
 use super::gate::{moba_gate, Gate};
 use super::kv_cache::{BlockPoolCache, KvCache};
-use super::paged::PagedMobaAttention;
+use super::paged::{PagedMobaAttention, SwapImage};
 
 /// A swappable attention implementation with an incremental decode state.
 /// `Send` so whole decode sessions can migrate onto scheduler worker
@@ -106,6 +106,52 @@ pub trait AttentionBackend: Send {
     /// hint: it never changes which bytes are stored or any attention
     /// output. Backends without a shared pool ignore it.
     fn set_arena(&mut self, _arena: usize) {}
+
+    /// Like [`fork`], but share only the first `blocks` *full* pool
+    /// blocks — the suffix-only eviction hook: a swapped session's
+    /// shared prefix is re-attached through this while its private tail
+    /// comes back from a [`SwapImage`] via [`swap_in`]. Only pool-backed
+    /// backends support it.
+    ///
+    /// [`fork`]: AttentionBackend::fork
+    /// [`swap_in`]: AttentionBackend::swap_in
+    fn fork_prefix(&self, _blocks: usize) -> Result<Box<dyn AttentionBackend>> {
+        bail!(
+            "backend '{}' has no copy-on-write state; use 'paged' for prefix sharing",
+            self.name()
+        )
+    }
+
+    /// Copy-only, checksummed snapshot of this backend's pool blocks
+    /// from logical block `from_block` on — the host-tier swap-out hook
+    /// behind `serve::ServeEngine::swap_out_session`. The backend state
+    /// is untouched; callers [`evict`] afterwards and later restore the
+    /// bytes with [`swap_in`] instead of re-prefilling. Only backends
+    /// over a shared pool support this.
+    ///
+    /// [`evict`]: AttentionBackend::evict
+    /// [`swap_in`]: AttentionBackend::swap_in
+    fn swap_out(&self, _from_block: usize) -> Result<SwapImage> {
+        bail!(
+            "backend '{}' has no pool-backed state to swap out; use 'paged'",
+            self.name()
+        )
+    }
+
+    /// Restore a [`swap_out`] image onto this backend, which must hold
+    /// exactly the image's prefix blocks (nothing for a whole-session
+    /// image, or a [`fork_prefix`]-ed shared prefix). Verifies the
+    /// image checksum and returns the pool blocks allocated; every
+    /// subsequent decode must match the re-prefill resume bit-for-bit.
+    ///
+    /// [`swap_out`]: AttentionBackend::swap_out
+    /// [`fork_prefix`]: AttentionBackend::fork_prefix
+    fn swap_in(&mut self, _image: &SwapImage) -> Result<usize> {
+        bail!(
+            "backend '{}' has no pool-backed state to swap in; use 'paged'",
+            self.name()
+        )
+    }
 }
 
 fn last_row(out: &Tensor) -> Vec<f32> {

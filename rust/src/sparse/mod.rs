@@ -31,5 +31,5 @@ pub use backend::{
 };
 pub use gate::{affinity_scores, mean_pool_blocks, moba_gate, Gate};
 pub use kv_cache::{BlockPoolCache, KvCache};
-pub use paged::{shared_pool, BlockTable, PagedKvPool, PagedMobaAttention, SharedKvPool};
+pub use paged::{shared_pool, BlockTable, PagedKvPool, PagedMobaAttention, SharedKvPool, SwapImage};
 pub use parallel::{default_workers, workers_from_env};

@@ -114,6 +114,93 @@ impl BlockTable {
     }
 }
 
+/// One block's byte-exact snapshot inside a [`SwapImage`]: the filled
+/// K/V rows plus the block's key running sum, so a restore reproduces
+/// the pool state (and therefore every later representative mean and
+/// attention row) bit-for-bit.
+#[derive(Clone, Debug)]
+struct SwapBlock {
+    fill: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ksum: Vec<f32>,
+}
+
+/// Byte-exact, checksummed snapshot of a table's block suffix — the
+/// host-memory swap tier's unit of storage. Produced by
+/// [`PagedKvPool::extract_blocks`] (copy-only; the pool is untouched),
+/// consumed by [`PagedKvPool::restore_blocks`] after the original
+/// blocks were evicted. `first_block > 0` is the suffix-only case: the
+/// refcounted shared prefix below it never left the pool and is
+/// re-attached via [`PagedKvPool::fork_prefix`].
+#[derive(Clone, Debug)]
+pub struct SwapImage {
+    /// logical block index extraction started at
+    first_block: usize,
+    /// table token count at extraction time
+    len: usize,
+    blocks: Vec<SwapBlock>,
+    /// FNV-1a over geometry, fills and every f32 bit pattern — verified
+    /// on restore so a corrupted host-tier copy fails loudly instead of
+    /// silently serving wrong tokens
+    checksum: u64,
+}
+
+impl SwapImage {
+    /// Logical block index the snapshot starts at (blocks below it stay
+    /// resident in the pool as a shared prefix).
+    pub fn first_block(&self) -> usize {
+        self.first_block
+    }
+
+    /// Table token count at extraction time (== restored table length).
+    pub fn tokens(&self) -> usize {
+        self.len
+    }
+
+    /// Snapshot blocks held — the swap-tier capacity this image charges.
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Host-tier bytes this image holds (K + V + running sums).
+    pub fn payload_bytes(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| (b.k.len() + b.v.len() + b.ksum.len()) * std::mem::size_of::<f32>())
+            .sum()
+    }
+
+    /// Chaos hook: perturb the stored checksum so the next restore fails
+    /// verification — models a corrupted host-tier copy. Deliberately
+    /// not an XOR: corrupting the same parked image twice must not
+    /// cancel back to a valid checksum.
+    pub fn corrupt_for_chaos(&mut self) {
+        self.checksum = self.checksum.wrapping_add(1);
+    }
+}
+
+fn fnv_u64(h: &mut u64, x: u64) {
+    for b in x.to_le_bytes() {
+        *h = (*h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+}
+
+fn swap_checksum(first_block: usize, len: usize, blocks: &[SwapBlock]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv_u64(&mut h, first_block as u64);
+    fnv_u64(&mut h, len as u64);
+    for blk in blocks {
+        fnv_u64(&mut h, blk.fill as u64);
+        for slab in [&blk.k, &blk.v, &blk.ksum] {
+            for &x in slab.iter() {
+                fnv_u64(&mut h, x.to_bits() as u64);
+            }
+        }
+    }
+    h
+}
+
 /// Refcounted fixed-size physical KV block store. All mutation goes
 /// through a session's [`BlockTable`]; blocks referenced by more than
 /// one table are immutable until copy-on-write hands the writer a
@@ -338,6 +425,95 @@ impl PagedKvPool {
         let before = self.used;
         self.release(table);
         before - self.used
+    }
+
+    /// Fork only `table`'s first `blocks` (full) blocks — the
+    /// suffix-only eviction primitive: a swapped victim's refcounted
+    /// shared prefix stays resident and is re-attached through this,
+    /// while its private tail lives in a [`SwapImage`]. Like
+    /// [`PagedKvPool::fork`], O(blocks) refcount bumps, zero copies.
+    pub fn fork_prefix(&mut self, table: &BlockTable, blocks: usize) -> BlockTable {
+        assert!(blocks <= table.n_blocks(), "prefix fork past the mapped range");
+        for &pid in &table.blocks[..blocks] {
+            debug_assert_eq!(self.fill[pid], self.block_size, "prefix fork of a partial block");
+            self.refs[pid] += 1;
+        }
+        BlockTable {
+            blocks: table.blocks[..blocks].to_vec(),
+            len: blocks * self.block_size,
+            arena: table.arena,
+        }
+    }
+
+    /// Copy-only snapshot of `table`'s logical blocks `[from_block..)` —
+    /// the host-tier swap-out primitive. The pool itself is untouched
+    /// (no refcount, fill or free-list changes); callers evict the table
+    /// afterwards and hold the image until [`restore_blocks`] brings the
+    /// bytes back. The checksum covers geometry, fills and every f32 bit
+    /// pattern, so restore-time verification catches a corrupted copy.
+    ///
+    /// [`restore_blocks`]: PagedKvPool::restore_blocks
+    pub fn extract_blocks(&self, table: &BlockTable, from_block: usize) -> SwapImage {
+        assert!(from_block <= table.n_blocks(), "extract past the mapped range");
+        let w = self.heads * self.head_dim;
+        let blocks: Vec<SwapBlock> = table.blocks[from_block..]
+            .iter()
+            .map(|&pid| {
+                let off = pid * self.slot;
+                let n = self.fill[pid] * w;
+                SwapBlock {
+                    fill: self.fill[pid],
+                    k: self.k[off..off + n].to_vec(),
+                    v: self.v[off..off + n].to_vec(),
+                    ksum: self.ksum[pid * w..(pid + 1) * w].to_vec(),
+                }
+            })
+            .collect();
+        let checksum = swap_checksum(from_block, table.len(), &blocks);
+        SwapImage { first_block: from_block, len: table.len(), blocks, checksum }
+    }
+
+    /// Reverse of [`extract_blocks`]: verify the checksum, then allocate
+    /// fresh physical blocks and copy the snapshot onto the end of
+    /// `table`, which must hold exactly the image's `first_block` full
+    /// blocks (empty for a whole-session image, or a freshly
+    /// [`fork_prefix`]-ed shared prefix for a suffix-only one). Returns
+    /// the number of blocks allocated — identical to what re-ingesting
+    /// the same tokens would have allocated, so pool occupancy (and
+    /// every scheduling decision derived from it) cannot tell the two
+    /// resume paths apart. A checksum mismatch fails before any
+    /// allocation; a bounded pool running out mid-restore leaves the
+    /// partial blocks on `table` for the caller to release.
+    ///
+    /// [`extract_blocks`]: PagedKvPool::extract_blocks
+    /// [`fork_prefix`]: PagedKvPool::fork_prefix
+    pub fn restore_blocks(&mut self, table: &mut BlockTable, image: &SwapImage) -> Result<usize> {
+        if swap_checksum(image.first_block, image.len, &image.blocks) != image.checksum {
+            bail!("swap image checksum mismatch: host-tier copy corrupted");
+        }
+        if table.n_blocks() != image.first_block
+            || table.len != image.first_block * self.block_size
+        {
+            bail!(
+                "swap restore onto a mismatched table: {} blocks / {} tokens resident, \
+                 image starts at block {}",
+                table.n_blocks(),
+                table.len,
+                image.first_block
+            );
+        }
+        let w = self.heads * self.head_dim;
+        for blk in &image.blocks {
+            let pid = self.alloc(table.arena)?;
+            let off = pid * self.slot;
+            self.k[off..off + blk.k.len()].copy_from_slice(&blk.k);
+            self.v[off..off + blk.v.len()].copy_from_slice(&blk.v);
+            self.ksum[pid * w..(pid + 1) * w].copy_from_slice(&blk.ksum);
+            self.fill[pid] = blk.fill;
+            table.blocks.push(pid);
+        }
+        table.len = image.len;
+        Ok(image.blocks.len())
     }
 
     /// Tokens of logical block `b` under `table` — equals the physical
@@ -687,6 +863,49 @@ impl AttentionBackend for PagedMobaAttention {
             scratch: FusedScratch::new(head_dim, 0, self.block_size),
         }))
     }
+
+    fn fork_prefix(&self, blocks: usize) -> Result<Box<dyn AttentionBackend>> {
+        if blocks > self.table.n_blocks() {
+            bail!("prefix fork of {blocks} blocks but only {} mapped", self.table.n_blocks());
+        }
+        let (table, head_dim) = {
+            let mut pool = sync::write(&self.pool);
+            let table = pool.fork_prefix(&self.table, blocks);
+            (table, pool.head_dim())
+        };
+        Ok(Box::new(PagedMobaAttention {
+            pool: self.pool.clone(),
+            table,
+            block_size: self.block_size,
+            topk: self.topk,
+            workers: self.workers,
+            reps: Vec::new(),
+            reps_cap: 0,
+            scratch: FusedScratch::new(head_dim, 0, self.block_size),
+        }))
+    }
+
+    fn swap_out(&self, from_block: usize) -> Result<SwapImage> {
+        if from_block > self.table.n_blocks() {
+            bail!("swap-out from block {from_block} but only {} mapped", self.table.n_blocks());
+        }
+        let pool = sync::read(&self.pool);
+        Ok(pool.extract_blocks(&self.table, from_block))
+    }
+
+    fn swap_in(&mut self, image: &SwapImage) -> Result<usize> {
+        let restored = {
+            let mut pool = sync::write(&self.pool);
+            pool.restore_blocks(&mut self.table, image)?
+        };
+        // reps stay empty: the next decode sees n_blocks > reps_cap and
+        // rebuilds the slabs in full from the restored running sums —
+        // the same lazy path a fresh fork takes, so outputs match the
+        // re-prefill resume bit-for-bit
+        self.reps.clear();
+        self.reps_cap = 0;
+        Ok(restored)
+    }
 }
 
 #[cfg(test)]
@@ -883,6 +1102,130 @@ mod tests {
             let a = victim.decode(row(&q, t), row(&k, t), row(&v, t));
             let b = twin.decode(row(&q, t), row(&k, t), row(&v, t));
             assert_eq!(a, b, "post-resume t={t}");
+        }
+    }
+
+    #[test]
+    fn swap_roundtrip_restores_bytes_sums_and_occupancy() {
+        let k = rand_t(&[23, 2, 4], 91);
+        let v = rand_t(&[23, 2, 4], 92);
+        let mut pool = PagedKvPool::new(8, 2, 4, None);
+        let mut table = BlockTable::new();
+        pool.append_tensors(&mut table, &k, &v).unwrap();
+        let image = pool.extract_blocks(&table, 0);
+        assert_eq!(image.n_blocks(), 3);
+        assert_eq!(image.tokens(), 23);
+        assert!(image.payload_bytes() > 0);
+        assert_eq!(pool.used_blocks(), 3, "extraction is copy-only");
+        // the swap-out lifecycle: snapshot, evict, restore
+        assert_eq!(pool.evict(&mut table), 3);
+        assert_eq!(pool.used_blocks(), 0);
+        let restored = pool.restore_blocks(&mut table, &image).unwrap();
+        assert_eq!(restored, 3, "restore allocates what re-ingest would");
+        assert_eq!(pool.used_blocks(), 3);
+        assert_eq!(table.len(), 23);
+        assert_eq!(pool.k_tensor(&table), k, "K bytes must round-trip exactly");
+        assert_eq!(pool.v_tensor(&table), v, "V bytes must round-trip exactly");
+        // running sums round-trip too, so representative means are
+        // bit-identical to the never-swapped pool
+        let mut mean = [0.0f32; 4];
+        let mut want = [0.0f32; 4];
+        let mut twin_pool = PagedKvPool::new(8, 2, 4, None);
+        let mut twin = BlockTable::new();
+        twin_pool.append_tensors(&mut twin, &k, &v).unwrap();
+        for b in 0..3 {
+            for h in 0..2 {
+                pool.mean_into(&table, b, h, &mut mean);
+                twin_pool.mean_into(&twin, b, h, &mut want);
+                assert_eq!(mean, want, "b={b} h={h}");
+            }
+        }
+    }
+
+    #[test]
+    fn suffix_swap_keeps_shared_prefix_resident() {
+        // parent holds a 16-token (2 full blocks) prefix; the fork
+        // diverges by 12 tokens, so its tail blocks are entirely its own
+        let k = rand_t(&[16, 1, 4], 93);
+        let v = rand_t(&[16, 1, 4], 94);
+        let mut pool = PagedKvPool::new(8, 1, 4, None);
+        let mut parent = BlockTable::new();
+        pool.append_tensors(&mut parent, &k, &v).unwrap();
+        let mut fork = pool.fork(&parent);
+        for i in 0..12 {
+            pool.append(&mut fork, &[i as f32; 4], &[0.5; 4]).unwrap();
+        }
+        assert_eq!(pool.used_blocks(), 4, "2 shared + 2 private tail blocks");
+        let before = pool.k_tensor(&fork);
+        // suffix-only swap: snapshot blocks [2..), evict, re-fork prefix
+        let image = pool.extract_blocks(&fork, 2);
+        assert_eq!(image.n_blocks(), 2);
+        assert_eq!(pool.evict(&mut fork), 2, "only the private tail frees");
+        assert_eq!(pool.used_blocks(), 2, "shared prefix never left");
+        let mut resumed = pool.fork_prefix(&parent, 2);
+        assert_eq!(resumed.len(), 16);
+        assert_eq!(pool.restore_blocks(&mut resumed, &image).unwrap(), 2);
+        assert_eq!(resumed.len(), 28);
+        assert_eq!(pool.k_tensor(&resumed), before, "suffix restore must be exact");
+        assert_eq!(resumed.physical(0), parent.physical(0), "prefix blocks shared again");
+        assert_eq!(pool.used_blocks(), 4);
+    }
+
+    #[test]
+    fn corrupted_swap_image_fails_restore_without_allocating() {
+        let k = rand_t(&[10, 1, 4], 95);
+        let v = rand_t(&[10, 1, 4], 96);
+        let mut pool = PagedKvPool::new(8, 1, 4, None);
+        let mut table = BlockTable::new();
+        pool.append_tensors(&mut table, &k, &v).unwrap();
+        let mut image = pool.extract_blocks(&table, 0);
+        pool.evict(&mut table);
+        image.corrupt_for_chaos();
+        let err = pool.restore_blocks(&mut table, &image).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "got: {err}");
+        assert_eq!(pool.used_blocks(), 0, "failed restore must not leak blocks");
+        assert_eq!(table.n_blocks(), 0, "failed restore must not touch the table");
+    }
+
+    #[test]
+    fn restore_rejects_a_mismatched_table() {
+        let k = rand_t(&[10, 1, 4], 97);
+        let v = rand_t(&[10, 1, 4], 98);
+        let mut pool = PagedKvPool::new(8, 1, 4, None);
+        let mut table = BlockTable::new();
+        pool.append_tensors(&mut table, &k, &v).unwrap();
+        let image = pool.extract_blocks(&table, 0);
+        // table still holds its blocks: restoring on top must refuse
+        assert!(pool.restore_blocks(&mut table, &image).is_err());
+        assert_eq!(table.len(), 10, "refused restore must not corrupt the table");
+    }
+
+    #[test]
+    fn backend_swap_roundtrip_decodes_bitwise_identically() {
+        // the backend-level swap contract mirroring the evict/re-ingest
+        // twin test: swap out mid-decode, evict, swap back in, keep
+        // decoding — every row must equal the never-swapped twin's
+        let n = 37;
+        let q = rand_t(&[n, 2, 8], 84);
+        let k = rand_t(&[n, 2, 8], 85);
+        let v = rand_t(&[n, 2, 8], 86);
+        let mut twin = PagedMobaAttention::with_private_pool(2, 8, 16, 2);
+        let mut victim = PagedMobaAttention::with_private_pool(2, 8, 16, 2);
+        let split = 20;
+        for t in 0..split {
+            let a = victim.decode(row(&q, t), row(&k, t), row(&v, t));
+            let b = twin.decode(row(&q, t), row(&k, t), row(&v, t));
+            assert_eq!(a, b, "t={t}");
+        }
+        let image = victim.swap_out(0).unwrap();
+        assert_eq!(victim.evict().unwrap(), 2);
+        assert_eq!(victim.seq_len(), 0);
+        assert_eq!(victim.swap_in(&image).unwrap(), 2);
+        assert_eq!(victim.seq_len(), split);
+        for t in split..n {
+            let a = victim.decode(row(&q, t), row(&k, t), row(&v, t));
+            let b = twin.decode(row(&q, t), row(&k, t), row(&v, t));
+            assert_eq!(a, b, "post-swap-in t={t}");
         }
     }
 

@@ -13,7 +13,10 @@
 
 mod common;
 
-use common::{build, oracle, prefix, rand_t, row, ALL_BACKENDS, EVICTABLE_BACKENDS, SPARSE_BACKENDS};
+use common::{
+    build, oracle, prefix, rand_t, row, ALL_BACKENDS, EVICTABLE_BACKENDS, SPARSE_BACKENDS,
+    SWAPPABLE_BACKENDS,
+};
 use moba::serve::{ServeCfg, ServeEngine, ToyModel};
 use moba::sparse::BackendKind;
 use moba::tensor::Tensor;
@@ -193,6 +196,63 @@ fn evict_then_reingest_matches_never_evicted_twin() {
             let a = victim.decode(row(&q, t), row(&k, t), row(&v, t));
             let b = twin.decode(row(&q, t), row(&k, t), row(&v, t));
             assert_eq!(a, b, "{} post-resume t={t}", twin.name());
+        }
+    }
+}
+
+#[test]
+fn swap_supported_iff_registered() {
+    let q = rand_t(&[24, H, D], 29);
+    let k = rand_t(&[24, H, D], 30);
+    let v = rand_t(&[24, H, D], 31);
+    for &kind in ALL_BACKENDS {
+        let mut b = build(kind, H, D, BS, TOPK, 1);
+        b.prefill(&q, &k, &v);
+        let swappable = SWAPPABLE_BACKENDS.contains(&kind);
+        match b.swap_out(0) {
+            Ok(image) => {
+                assert!(swappable, "{} swapped but is not registered swappable", b.name());
+                assert_eq!(image.tokens(), 24, "{}", b.name());
+                assert!(image.payload_bytes() > 0, "{}", b.name());
+                assert_eq!(b.seq_len(), 24, "{}: swap_out must not mutate", b.name());
+            }
+            Err(_) => {
+                assert!(!swappable, "{} is registered swappable but refused", b.name());
+                assert_eq!(b.seq_len(), 24, "{}: failed swap must not corrupt", b.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn swap_roundtrip_matches_never_swapped_twin() {
+    // the tiered-KV resume contract at the backend level: snapshot
+    // mid-decode, evict, restore the snapshot into a fresh backend, keep
+    // decoding — every subsequent row must equal the never-swapped
+    // twin's, bitwise (no re-ingest of the stream anywhere)
+    let (n, split) = (37, 20);
+    let q = rand_t(&[n, H, D], 32);
+    let k = rand_t(&[n, H, D], 33);
+    let v = rand_t(&[n, H, D], 34);
+    for &kind in SWAPPABLE_BACKENDS {
+        let mut twin = build(kind, H, D, BS, TOPK, 1);
+        let mut victim = build(kind, H, D, BS, TOPK, 1);
+        for t in 0..split {
+            let a = victim.decode(row(&q, t), row(&k, t), row(&v, t));
+            let b = twin.decode(row(&q, t), row(&k, t), row(&v, t));
+            assert_eq!(a, b, "{} t={t}", twin.name());
+        }
+        let image = victim.swap_out(0).unwrap();
+        let freed = victim.evict().unwrap();
+        assert!(freed > 0, "{}", twin.name());
+        let restored = victim.swap_in(&image).unwrap();
+        let blocks = (split + BS - 1) / BS;
+        assert_eq!(restored, blocks, "{}: restore must rebuild every block", twin.name());
+        assert_eq!(victim.seq_len(), split, "{}", twin.name());
+        for t in split..n {
+            let a = victim.decode(row(&q, t), row(&k, t), row(&v, t));
+            let b = twin.decode(row(&q, t), row(&k, t), row(&v, t));
+            assert_eq!(a, b, "{} post-restore t={t}", twin.name());
         }
     }
 }

@@ -6,8 +6,10 @@
 //! never sees chaos. Covers the plain stream, an oversubscribed paged
 //! pool (recovery composes with eviction churn), copy-on-write
 //! shared-prefix forks, survivable-by-design faults (`Slow` lag under
-//! stealing, `PoisonPool` lock poisoning), and an env-seeded arm the CI
-//! chaos matrix drives through `MOBA_CHAOS_SEED` × `MOBA_WORKERS`.
+//! stealing, `PoisonPool` lock poisoning, `SwapCorrupt` host-tier image
+//! rot demoting to re-prefill), and an env-seeded arm the CI chaos
+//! matrix drives through `MOBA_CHAOS_SEED` × `MOBA_WORKERS` ×
+//! `MOBA_SWAP_BLOCKS`.
 
 use moba::serve::{
     ContinuousScheduler, Fault, FaultKind, FaultPlan, Request, RequestResult, RuntimeKind,
@@ -86,6 +88,10 @@ fn chaos_sched(
             // generous: seeded stalls are tens of ms and must stay
             // benign; only a truly wedged worker trips the deadline
             barrier_deadline_secs: Some(5.0),
+            // the CI chaos matrix turns the host swap tier on via
+            // MOBA_SWAP_BLOCKS so every fault above composes with
+            // swap-out/swap-in churn; tokens must not change either way
+            swap_blocks: moba::serve::scheduler::swap_blocks_from_env(),
             ..SchedulerCfg::default()
         },
     )
@@ -211,6 +217,61 @@ fn poisoned_pool_lock_is_survivable() {
     got.sort_by_key(|r| r.id);
     assert_parity(&got, &want, "poisoned-pool");
     assert_eq!(sched.stats.fault.worker_deaths, 0, "poisoning is survivable by design");
+    assert!(sched.idle());
+}
+
+#[test]
+fn corrupted_swap_image_falls_back_to_reprefill_and_matches_oracle() {
+    // the host tier's graceful-degradation contract: SwapCorrupt rots a
+    // preempted session's image mid-run; its swap-in fails the checksum
+    // and the scheduler silently re-prefills instead — tokens must stay
+    // bitwise identical to the fault-free, swap-free tick-loop oracle
+    let reqs = burst(0x5AB0, 8);
+    let solo = engine(BackendKind::Fused, 0);
+    let max_need = reqs
+        .iter()
+        .map(|r| solo.block_reserve(0, r.prompt.len() + r.max_new))
+        .max()
+        .unwrap();
+    let oversub = max_need + 1; // constant eviction churn → images to rot
+    let want = oracle(BackendKind::Paged, oversub, reqs.clone());
+    // several corruption ticks so at least one lands while an image is
+    // parked; worker index is irrelevant (applied scheduler-side)
+    let plan = FaultPlan::new(vec![
+        Fault { worker: 0, tick: 3, kind: FaultKind::SwapCorrupt },
+        Fault { worker: 0, tick: 5, kind: FaultKind::SwapCorrupt },
+        Fault { worker: 0, tick: 7, kind: FaultKind::SwapCorrupt },
+        Fault { worker: 0, tick: 9, kind: FaultKind::SwapCorrupt },
+    ]);
+    let mut sched = ContinuousScheduler::new(
+        engine(BackendKind::Paged, oversub),
+        SchedulerCfg {
+            max_in_flight: 4,
+            decode_workers: 2,
+            runtime: RuntimeKind::Persistent,
+            steal: true,
+            chaos: Some(plan),
+            barrier_deadline_secs: Some(5.0),
+            swap_blocks: 64,
+            ..SchedulerCfg::default()
+        },
+    );
+    let mut got = sched.run_stream(reqs, 0.005).unwrap();
+    got.sort_by_key(|r| r.id);
+    assert_parity(&got, &want, "swap-corrupt");
+    let sw = &sched.stats.swap;
+    assert!(sw.swap_outs > 0, "oversubscription with a tier must swap out");
+    assert!(
+        sw.fallbacks >= 1,
+        "at least one corrupted image must demote to re-prefill (outs={} ins={})",
+        sw.swap_outs,
+        sw.swap_ins
+    );
+    assert!(
+        sched.stats.eviction.resumes >= 1,
+        "the corrupted session must have come back via re-prefill"
+    );
+    assert_eq!(sched.stats.fault.worker_deaths, 0, "corruption is survivable by design");
     assert!(sched.idle());
 }
 

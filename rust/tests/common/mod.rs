@@ -38,6 +38,12 @@ pub const SPARSE_BACKENDS: &[BackendKind] = &[
 /// never-evicted twin bit-for-bit.
 pub const EVICTABLE_BACKENDS: &[BackendKind] = &[BackendKind::Paged];
 
+/// Backends whose incremental state can round-trip through the host swap
+/// tier: `swap_out` snapshots the private tail byte-exact (checksummed),
+/// `swap_in` restores it, and decode after restore matches a never-
+/// swapped twin bit-for-bit — the contract behind tiered-KV preemption.
+pub const SWAPPABLE_BACKENDS: &[BackendKind] = &[BackendKind::Paged];
+
 /// The batch-kernel oracle a backend's outputs must reproduce: dense
 /// backends mirror `full_attention`, everything else the two-pass MoBA
 /// kernel.
