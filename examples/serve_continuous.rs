@@ -25,6 +25,10 @@
 //!     --runtime persistent
 //! cargo run --release --example serve_continuous -- --decode-workers 0 \
 //!     --runtime tick
+//! # multi-layer hybrid stack: one paged backend per layer, full
+//! # attention on layer 2, layer-summed pool accounting:
+//! cargo run --release --example serve_continuous -- --backend paged \
+//!     --layers moba,moba,full,moba --pool-blocks 256
 //! ```
 
 use moba::serve::{run_demo, DemoCfg, RuntimeKind};
@@ -45,6 +49,12 @@ fn main() -> anyhow::Result<()> {
         block_size: args.get_usize("block", 32)?,
         topk: args.get_usize("topk", 3)?,
         backend: BackendKind::parse(args.get_str("backend", "cached-sparse"))?,
+        layers: match args.get("layers") {
+            Some(v) => moba::serve::parse_layers("--layers", Some(v.to_string()))
+                .map_err(|e| anyhow::anyhow!(e))?
+                .unwrap_or_default(),
+            None => d.layers.clone(), // lenient MOBA_LAYERS via DemoCfg::default
+        },
         workers: resolve(args.get_usize("workers", 1)?),
         decode_workers: resolve(args.get_usize("decode-workers", 1)?),
         runtime: RuntimeKind::parse(args.get_str("runtime", d.runtime.label()))?,
@@ -53,6 +63,9 @@ fn main() -> anyhow::Result<()> {
         shared_prefix: args.get_usize("shared-prefix", 0)?,
         pool_blocks: args.get_usize("pool-blocks", 0)?,
         seed: args.get_u64("seed", 7)?,
+        // swap_blocks / chaos_seed / barrier_deadline_secs keep their
+        // env-derived defaults (MOBA_SWAP_BLOCKS / MOBA_CHAOS_SEED)
+        ..d
     };
     run_demo(&cfg)
 }

@@ -168,6 +168,7 @@ fn oversubscribed_arm(quick: bool) -> Json {
                 backend: BackendKind::Paged,
                 workers: 1,
                 pool_blocks,
+                ..Default::default()
             },
         )
     };

@@ -24,6 +24,12 @@
 //! oracle. p50/p99 queue/prefill/decode latency, shed counts and SLA
 //! violations land in `BENCH_serve.json` alongside the throughput rows.
 //!
+//! The **hybrid-l4** arm serves the same burst shapes through a 4-layer
+//! moba,moba,full,moba session stack (one paged backend per model layer,
+//! `ServeCfg::layers`), parity-asserted against its own tick-loop
+//! oracle, and probes `pool_layer_usage` on a live batch — the per-layer
+//! block counts land in `BENCH_serve.json`.
+//!
 //! The **storm-swap** arm replays the same trace with the host swap tier
 //! on (`SchedulerCfg::swap_blocks`): evictions snapshot victims to host
 //! memory and resumes restore the bytes instead of re-prefilling. Shed
@@ -41,8 +47,8 @@
 use std::time::Instant;
 
 use moba::serve::{
-    storm, summarize, ContinuousScheduler, DegradeCfg, Request, RuntimeKind, SchedulerCfg,
-    ServeCfg, ServeEngine, StormCfg, ToyModel,
+    storm, summarize, ContinuousScheduler, DegradeCfg, LayerKind, Request, RuntimeKind,
+    SchedulerCfg, ServeCfg, ServeEngine, StormCfg, ToyModel,
 };
 use moba::sparse::BackendKind;
 use moba::util::json::{arr, num, obj, s, Json};
@@ -87,8 +93,9 @@ struct RunOut {
     stolen_steps: usize,
 }
 
-fn run(arm: &Arm, runtime: RuntimeKind, decode_workers: usize, steal: bool) -> RunOut {
-    let engine = ServeEngine::new(
+/// The single-layer throughput engine (fused backend, private caches).
+fn fused_engine() -> ServeEngine<ToyModel> {
+    ServeEngine::new(
         ToyModel::new(VOCAB, HEADS, DIM, 11),
         ServeCfg {
             block_size: BLOCK,
@@ -96,9 +103,36 @@ fn run(arm: &Arm, runtime: RuntimeKind, decode_workers: usize, steal: bool) -> R
             max_seq: 8192,
             backend: BackendKind::Fused,
             workers: 1,
-            pool_blocks: 0,
+            ..Default::default()
         },
-    );
+    )
+}
+
+/// A 4-layer hybrid moba,moba,full,moba paged engine: one backend per
+/// model layer per session, all four block tables sharing one pool.
+fn hybrid_engine(pool_blocks: usize) -> ServeEngine<ToyModel> {
+    let layers = vec![LayerKind::Moba, LayerKind::Moba, LayerKind::Full, LayerKind::Moba];
+    ServeEngine::new(
+        ToyModel::stacked(VOCAB, HEADS, DIM, 11, layers.len()),
+        ServeCfg {
+            block_size: BLOCK,
+            topk: TOPK,
+            max_seq: 8192,
+            backend: BackendKind::Paged,
+            workers: 1,
+            pool_blocks,
+            layers,
+        },
+    )
+}
+
+fn run(
+    engine: ServeEngine<ToyModel>,
+    arm: &Arm,
+    runtime: RuntimeKind,
+    decode_workers: usize,
+    steal: bool,
+) -> RunOut {
     let mut sched = ContinuousScheduler::new(
         engine,
         SchedulerCfg {
@@ -179,6 +213,7 @@ fn run_storm(
             backend: BackendKind::Paged,
             workers: 1,
             pool_blocks,
+            ..Default::default()
         },
     );
     let mut sched = ContinuousScheduler::new(
@@ -274,7 +309,7 @@ fn main() {
     let mut skewed_speedup = f64::NAN;
     for arm in &arms {
         // ground truth: single-worker tick loop
-        let base = run(arm, RuntimeKind::TickLoop, 1, false);
+        let base = run(fused_engine(), arm, RuntimeKind::TickLoop, 1, false);
         let mut report = |label: &str, workers: usize, steal: bool, out: &RunOut| {
             let tok_per_s = out.tokens as f64 / out.wall_secs.max(1e-9);
             println!(
@@ -304,7 +339,7 @@ fn main() {
             (RuntimeKind::Persistent, multi, false),
             (RuntimeKind::Persistent, multi, true),
         ] {
-            let out = run(arm, runtime, workers, steal);
+            let out = run(fused_engine(), arm, runtime, workers, steal);
             assert_eq!(
                 out.outputs,
                 base.outputs,
@@ -326,6 +361,70 @@ fn main() {
             skewed_speedup = best_persistent / best_tick;
         }
     }
+
+    // == multi-layer hybrid: a 4-layer moba,moba,full,moba paged stack ==
+    // parity against the tick-loop oracle first, then a per-layer pool
+    // accounting probe on a live batch; both land in BENCH_serve.json so
+    // the hybrid stack's serving cost has a trajectory too
+    let hybrid = Arm {
+        name: "hybrid-l4",
+        requests: if quick { 6 } else { 24 },
+        prompt_len: if quick { 48 } else { 128 },
+        max_new: if quick { 4 } else { 16 },
+        skew_every: 4,
+        skew_factor: 4,
+    };
+    let hybrid_base = run(hybrid_engine(0), &hybrid, RuntimeKind::TickLoop, 1, false);
+    let hybrid_multi = run(hybrid_engine(0), &hybrid, RuntimeKind::Persistent, multi, true);
+    assert_eq!(
+        hybrid_multi.outputs, hybrid_base.outputs,
+        "hybrid-l4: persistent workers={multi} changed served tokens"
+    );
+    for (label, workers, steal, out) in [
+        ("tick-loop", 1usize, false, &hybrid_base),
+        ("persistent", multi, true, &hybrid_multi),
+    ] {
+        let tok_per_s = out.tokens as f64 / out.wall_secs.max(1e-9);
+        println!(
+            "{:>8} {:>11} {:>8} {:>6} {:>10.3} {:>12.0} {:>8} {:>8}",
+            hybrid.name, label, workers, steal, out.wall_secs, tok_per_s, out.steals,
+            out.stolen_steps
+        );
+        rows.push(obj(vec![
+            ("arm", s(hybrid.name)),
+            ("layers", s("moba,moba,full,moba")),
+            ("runtime", s(label)),
+            ("workers", num(workers as f64)),
+            ("steal", Json::Bool(steal)),
+            ("wall_secs", num(out.wall_secs)),
+            ("tokens", num(out.tokens as f64)),
+            ("tok_per_s", num(tok_per_s)),
+        ]));
+    }
+    // per-layer pool accounting probe: a live batch of uniform contexts
+    // must hold the same block count in every layer's table set
+    let probe = hybrid_engine(0);
+    let probe_sessions: Vec<_> = (0..4u64)
+        .map(|id| {
+            let prompt: Vec<i32> = (0..hybrid.prompt_len as i32)
+                .map(|i| (i * 7 + 3 * id as i32) % VOCAB as i32)
+                .collect();
+            probe.start(&prompt, 4).expect("probe session")
+        })
+        .collect();
+    let per_layer = probe.pool_layer_usage().expect("hybrid stack is paged");
+    assert_eq!(per_layer.len(), 4, "one usage counter per layer");
+    assert!(
+        per_layer.iter().all(|&u| u == per_layer[0]),
+        "uniform contexts must hold equal blocks in every layer: {per_layer:?}"
+    );
+    rows.push(obj(vec![
+        ("arm", s("hybrid-l4-pool")),
+        ("layers", s("moba,moba,full,moba")),
+        ("sessions", num(probe_sessions.len() as f64)),
+        ("pool_blocks_total", num(per_layer.iter().sum::<usize>() as f64)),
+        ("pool_blocks_by_layer", arr(per_layer.iter().map(|&u| num(u as f64)).collect())),
+    ]));
 
     // == overload storm: bursty multi-tenant trace vs a small paged pool ==
     let (trace, pool_blocks) = storm_trace(quick);

@@ -69,6 +69,11 @@ experiments (exp): efficiency, fits, gate-ablation (pure Rust);
   (need --features xla + artifacts); all
 serve options: --requests N --max-batch M --prompt-len P --max-new K
   --backend full|moba|cached-full|cached-sparse|fused|paged --block B --topk K
+  --layers L0,L1,... (per-layer attention flavors, each `moba` or `full`:
+    the model grows one attention layer per entry and every session one
+    backend per layer, with layer-summed pool accounting; empty = one
+    layer of --backend's flavor; also settable via MOBA_LAYERS, e.g.
+    MOBA_LAYERS=moba,moba,full,moba)
   --workers W (kernel threads, 0 = all cores)
   --decode-workers S (scheduler decode shards, 0 = all cores)
   --runtime persistent|tick (persistent pinned thread-per-core decode
@@ -98,10 +103,12 @@ common options: --steps N  --seed N  --sizes s0,s1  --artifact NAME
 fn serve_cmd(args: &Args) -> Result<()> {
     let d = DemoCfg::default();
     // strict env validation: a typo'd MOBA_WORKERS / MOBA_STEAL /
-    // MOBA_PIN / MOBA_CHAOS_SEED / MOBA_SWAP_BLOCKS fails loudly here
-    // with the name and offending value instead of being silently
-    // coerced to a default (the library-level readers stay lenient)
+    // MOBA_PIN / MOBA_CHAOS_SEED / MOBA_SWAP_BLOCKS / MOBA_LAYERS fails
+    // loudly here with the name and offending value instead of being
+    // silently coerced to a default (the library-level readers stay
+    // lenient)
     let env_workers = moba::sparse::workers_from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let env_layers = moba::serve::layers_from_env_strict().map_err(|e| anyhow::anyhow!(e))?;
     let env_steal = moba::serve::runtime::steal_from_env_strict().map_err(|e| anyhow::anyhow!(e))?;
     let env_pin = moba::serve::runtime::pin_from_env_strict().map_err(|e| anyhow::anyhow!(e))?;
     let env_chaos = moba::serve::chaos::seed_from_env_strict().map_err(|e| anyhow::anyhow!(e))?;
@@ -123,6 +130,12 @@ fn serve_cmd(args: &Args) -> Result<()> {
         block_size: args.get_usize("block", d.block_size)?,
         topk: args.get_usize("topk", d.topk)?,
         backend: BackendKind::parse(args.get_str("backend", d.backend.label()))?,
+        layers: match args.get("layers") {
+            Some(v) => moba::serve::parse_layers("--layers", Some(v.to_string()))
+                .map_err(|e| anyhow::anyhow!(e))?
+                .unwrap_or_default(),
+            None => env_layers.unwrap_or_default(), // strictly parsed MOBA_LAYERS
+        },
         workers: resolve(args.get_usize("workers", d.workers)?),
         decode_workers: resolve(args.get_usize("decode-workers", d.decode_workers)?),
         runtime: moba::serve::RuntimeKind::parse(args.get_str("runtime", d.runtime.label()))?,

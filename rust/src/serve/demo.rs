@@ -12,7 +12,7 @@ use crate::util::rng::Rng;
 
 use super::batcher::Request;
 use super::chaos::{self, FaultPlan};
-use super::engine::{ServeCfg, ServeEngine};
+use super::engine::{layers_from_env, LayerKind, ServeCfg, ServeEngine};
 use super::model::ToyModel;
 use super::runtime::{pin_from_env, steal_from_env, RuntimeKind};
 use super::scheduler::{self, ContinuousScheduler, SchedulerCfg};
@@ -27,6 +27,11 @@ pub struct DemoCfg {
     pub block_size: usize,
     pub topk: usize,
     pub backend: BackendKind,
+    /// per-layer attention flavors for a multi-layer hybrid stack: the
+    /// model gets one attention layer (and each session one backend) per
+    /// entry. Empty = a single layer of `backend`'s flavor. Defaults
+    /// from `MOBA_LAYERS` (e.g. `moba,moba,full,moba`)
+    pub layers: Vec<LayerKind>,
     /// intra-request kernel threads (prefill partitioning)
     pub workers: usize,
     /// scheduler decode shards stepping sessions concurrently
@@ -72,6 +77,7 @@ impl Default for DemoCfg {
             block_size: 32,
             topk: 3,
             backend: BackendKind::CachedSparse,
+            layers: layers_from_env().unwrap_or_default(),
             workers: 1,
             decode_workers: 1,
             runtime: RuntimeKind::Persistent,
@@ -91,7 +97,7 @@ impl Default for DemoCfg {
 /// stream, serve it to completion and print the latency report.
 pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
     let (heads, head_dim) = (2usize, 16usize);
-    let model = ToyModel::new(64, heads, head_dim, cfg.seed);
+    let model = ToyModel::stacked(64, heads, head_dim, cfg.seed, cfg.layers.len().max(1));
     let serve_cfg = ServeCfg {
         block_size: cfg.block_size,
         topk: cfg.topk,
@@ -99,6 +105,7 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
         backend: cfg.backend,
         workers: cfg.workers.max(1),
         pool_blocks: cfg.pool_blocks,
+        layers: cfg.layers.clone(),
     };
     println!(
         "== continuous serving demo: backend={} block={} topk={} max_in_flight={} ==",
@@ -115,6 +122,10 @@ pub fn run_demo(cfg: &DemoCfg) -> Result<()> {
         if cfg.runtime == RuntimeKind::Persistent && cfg.steal { " +steal" } else { "" },
         if cfg.runtime == RuntimeKind::Persistent && cfg.pin { " +pin" } else { "" }
     );
+    if !cfg.layers.is_empty() {
+        let spec: Vec<&str> = cfg.layers.iter().map(|l| l.label()).collect();
+        println!("   layers: {} ({} backends per session)", spec.join(","), cfg.layers.len());
+    }
     // seeded chaos: only the persistent runtime has workers to kill, and
     // a seeded plan always spares at least one shard so the run finishes
     let chaos: Option<FaultPlan> = match cfg.chaos_seed {
@@ -417,6 +428,24 @@ mod tests {
             backend: BackendKind::Paged,
             pool_blocks: 4,
             swap_blocks: 64,
+            ..Default::default()
+        };
+        run_demo(&cfg).unwrap();
+    }
+
+    #[test]
+    fn demo_runs_hybrid_layer_stack_over_bounded_pool() {
+        // four-layer hybrid: every session carries one paged backend per
+        // layer, and an undersized pool still drains via eviction/resume
+        let cfg = DemoCfg {
+            requests: 3,
+            prompt_len: 48,
+            max_new: 4,
+            backend: BackendKind::Paged,
+            layers: vec![LayerKind::Moba, LayerKind::Moba, LayerKind::Full, LayerKind::Moba],
+            pool_blocks: 24,
+            swap_blocks: 0, // independent of MOBA_SWAP_BLOCKS
+            decode_workers: 2,
             ..Default::default()
         };
         run_demo(&cfg).unwrap();

@@ -2,9 +2,9 @@
 //! then incremental decode against the KV/block-pool caches.
 //!
 //! The old caveat ("decode is recompute-based, no KV cache") is gone:
-//! each request owns a [`DecodeSession`] whose backend ingests the prompt
+//! each request owns a [`DecodeSession`] whose backends ingest the prompt
 //! once (`AttentionBackend::prefill`, MoBA block-sparse by default — the
-//! paper's prefill mode) and then appends one token per decode step
+//! paper's prefill mode) and then append one token per decode step
 //! (`AttentionBackend::decode`). With the default
 //! `BackendKind::CachedSparse` a decode step costs O(N/B·D) gating +
 //! O(k·B·D) attention instead of the old O(N²) whole-graph recompute;
@@ -12,6 +12,17 @@
 //! deployment mode at O(N·D) per token. The recompute kinds (`full`,
 //! `moba`) remain selectable as baselines — same API, same outputs,
 //! bit-for-bit (see `sparse/README.md`).
+//!
+//! Sessions are **multi-layer**: a [`TokenModel`] reports its layer count
+//! and each session holds one backend per layer, threading a residual
+//! hidden stream through the stack (layer 0 projects from token ids,
+//! deeper layers from the hidden row, `hidden += attn_out` per layer).
+//! [`ServeCfg::layers`] mixes full-attention layers among MoBA ones —
+//! the hybrid recipe of MiniMax-01 (arXiv:2501.08313) and "A Little Goes
+//! a Long Way" (arXiv:2410.01485) — while an L=1 model stays bitwise
+//! identical to the historical single-attention path. Pool accounting
+//! (`block_reserve` & co.) sums over layers; preemption snapshots become
+//! per-layer [`SwapBundle`]s restored atomically.
 //!
 //! Sessions are independent and stepped one token at a time, which is
 //! what lets `serve::scheduler` interleave many requests in a continuous
@@ -33,6 +44,12 @@ use crate::util::sync;
 use super::error::ServeError;
 use super::model::TokenModel;
 
+/// MoBA top-k that covers every block: the kernels clamp the per-row
+/// top-k to the row's block count, so gating with this IS full attention,
+/// bit-for-bit (the `*_covering_topk_equals_full` kernel tests pin the
+/// equivalence). A paged `full` layer is `PagedMobaAttention` with this.
+const FULL_LAYER_TOPK: usize = usize::MAX;
+
 /// Per-request serving statistics.
 #[derive(Clone, Debug, Default)]
 pub struct GenStats {
@@ -43,6 +60,69 @@ pub struct GenStats {
     pub resumes: usize,
     /// wall-clock seconds spent re-prefilling after evictions
     pub reprefill_secs: f64,
+}
+
+/// Attention flavor of one model layer in a hybrid stack. The robust
+/// recipe in the MoBA paper (and MiniMax-01, arXiv:2501.08313) keeps a
+/// few `Full` layers among mostly-`Moba` ones.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// MoBA block-sparse gating with the session's top-k.
+    Moba,
+    /// Dense causal attention (covering top-k on gated backends).
+    Full,
+}
+
+impl LayerKind {
+    /// The spec token this kind parses from (`moba` / `full`).
+    pub fn label(self) -> &'static str {
+        match self {
+            LayerKind::Moba => "moba",
+            LayerKind::Full => "full",
+        }
+    }
+}
+
+/// Strict layer-spec parser shared by `--layers` and `MOBA_LAYERS`: a
+/// comma-separated list of `moba` / `full` (e.g. `moba,moba,full,moba`),
+/// one entry per model layer. `None` / blank means "unset" (every layer
+/// follows `ServeCfg::backend`). Errors carry the source (`what`) and
+/// the offending token, matching the `MOBA_WORKERS` / `MOBA_SWAP_BLOCKS`
+/// CLI-boundary convention.
+pub fn parse_layers(what: &str, raw: Option<String>) -> Result<Option<Vec<LayerKind>>, String> {
+    let Some(v) = raw else {
+        return Ok(None);
+    };
+    if v.trim().is_empty() {
+        return Ok(None);
+    }
+    let mut kinds = Vec::new();
+    for tok in v.split(',') {
+        match tok.trim() {
+            "moba" => kinds.push(LayerKind::Moba),
+            "full" => kinds.push(LayerKind::Full),
+            other => {
+                return Err(format!(
+                    "{what}: invalid layer kind {other:?} in {v:?} \
+                     (expected a comma-separated list of `moba` / `full`)"
+                ))
+            }
+        }
+    }
+    Ok(Some(kinds))
+}
+
+/// Lenient `MOBA_LAYERS` reader (unset or unparsable -> unset) for
+/// defaults structs; `repro serve` and the example reject garbage at the
+/// CLI boundary through [`layers_from_env_strict`] first.
+pub fn layers_from_env() -> Option<Vec<LayerKind>> {
+    parse_layers("MOBA_LAYERS", std::env::var("MOBA_LAYERS").ok()).unwrap_or(None)
+}
+
+/// Strict `MOBA_LAYERS` reader: unset -> `Ok(None)`, garbage -> a
+/// contextful error naming the variable and the bad token.
+pub fn layers_from_env_strict() -> Result<Option<Vec<LayerKind>>, String> {
+    parse_layers("MOBA_LAYERS", std::env::var("MOBA_LAYERS").ok())
 }
 
 /// Serving configuration: attention geometry + backend selection.
@@ -62,6 +142,11 @@ pub struct ServeCfg {
     /// meaningful with `backend == BackendKind::Paged`; every paged
     /// session of this engine allocates from one pool). 0 = unbounded.
     pub pool_blocks: usize,
+    /// Per-layer attention flavors for hybrid stacks. Empty = every model
+    /// layer uses `backend`'s own flavor (the historical single-flavor
+    /// path, bit-for-bit). Non-empty must have exactly one entry per
+    /// model layer; `Full` entries attend densely regardless of `topk`.
+    pub layers: Vec<LayerKind>,
 }
 
 impl Default for ServeCfg {
@@ -73,6 +158,7 @@ impl Default for ServeCfg {
             backend: BackendKind::CachedSparse,
             workers: 1,
             pool_blocks: 0,
+            layers: Vec::new(),
         }
     }
 }
@@ -88,11 +174,78 @@ pub struct PoolStatus {
     pub payload_bytes: usize,
 }
 
+/// Per-layer [`SwapImage`]s of one preempted session — one image per
+/// model layer, layer 0 first. `swap_in_session` restores a bundle
+/// atomically: either every layer comes back byte-exact or the session
+/// stays evicted and falls back to transparent re-prefill.
+#[derive(Clone, Debug)]
+pub struct SwapBundle {
+    images: Vec<SwapImage>,
+}
+
+impl SwapBundle {
+    /// Number of layer images (== the session's layer count).
+    pub fn layers(&self) -> usize {
+        self.images.len()
+    }
+
+    /// The per-layer images, layer 0 first.
+    pub fn images(&self) -> &[SwapImage] {
+        &self.images
+    }
+
+    /// Total snapshot blocks across all layers — the swap-tier capacity
+    /// this bundle charges, and exactly what swap-in will allocate.
+    pub fn n_blocks(&self) -> usize {
+        self.images.iter().map(|i| i.n_blocks()).sum()
+    }
+
+    /// Total host-tier payload bytes across all layers.
+    pub fn payload_bytes(&self) -> usize {
+        self.images.iter().map(|i| i.payload_bytes()).sum()
+    }
+
+    /// Tokens captured (identical across layers — all tables span the
+    /// same token range).
+    pub fn tokens(&self) -> usize {
+        self.images.first().map_or(0, |i| i.tokens())
+    }
+
+    /// First captured logical block (identical across layers).
+    pub fn first_block(&self) -> usize {
+        self.images.first().map_or(0, |i| i.first_block())
+    }
+
+    /// Chaos hook: corrupt the LAST layer's image, so a failing restore
+    /// hits after earlier layers already allocated blocks — exercising
+    /// the all-or-nothing rollback, not just a first-image early-out.
+    pub fn corrupt_for_chaos(&mut self) {
+        if let Some(img) = self.images.last_mut() {
+            img.corrupt_for_chaos();
+        }
+    }
+}
+
+/// Reusable per-session decode buffers: the q/k/v rows, the residual
+/// hidden row threaded through the layer stack, and the logits row.
+/// Lives on the session so the per-token hot path allocates nothing.
+#[derive(Default)]
+struct StepScratch {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    hidden: Vec<f32>,
+    logits: Vec<f32>,
+}
+
 /// One in-flight request: its backend state (caches), token history and
 /// latency accounting. Created by `ServeEngine::start` (prefill), then
 /// advanced one token per `ServeEngine::step`.
 pub struct DecodeSession {
-    backend: Box<dyn AttentionBackend>,
+    /// one attention backend per model layer, layer 0 first — a hybrid
+    /// stack mixes dense layers among MoBA ones per `ServeCfg::layers`.
+    /// All layers always hold the same context length.
+    backends: Vec<Box<dyn AttentionBackend>>,
     prompt_len: usize,
     /// the tokens THIS session ingested itself (the whole prompt, or just
     /// the continuation for a forked session) — together with `generated`
@@ -115,12 +268,15 @@ pub struct DecodeSession {
     /// so unknown-ness can never be confused with a real token.
     pending: Option<i32>,
     generated: Vec<i32>,
-    /// MoBA top-k this session's backend gates with — normally
+    /// MoBA top-k this session's backends gate with — normally
     /// `ServeCfg::topk`, downshifted by the scheduler's pressure dial
     /// for degraded low-priority sessions. Carried on the session so
-    /// evict/resume/adopt rebuild the backend with the SAME sparsity
+    /// evict/resume/adopt rebuild the backends with the SAME sparsity
     /// (a degraded session must stay self-consistent across re-prefill).
+    /// `Full` layers ignore it — they attend densely at every dial.
     topk: usize,
+    /// per-token decode buffers, reused across steps
+    scratch: StepScratch,
     pub stats: GenStats,
 }
 
@@ -138,9 +294,24 @@ impl DecodeSession {
         self.prompt_len
     }
 
-    /// Tokens currently resident in the backend's incremental state.
+    /// Context length of the layer stack (all layers always agree; the
+    /// engine appends to every layer in the same step).
+    fn ctx(&self) -> usize {
+        self.backends[0].seq_len()
+    }
+
+    /// Tokens currently resident in the backends' incremental state.
     pub fn context_len(&self) -> usize {
-        self.backend.seq_len()
+        debug_assert!(
+            self.backends.iter().all(|b| b.seq_len() == self.backends[0].seq_len()),
+            "layer backends disagree on context length"
+        );
+        self.ctx()
+    }
+
+    /// Number of model layers (== backends) this session holds.
+    pub fn layers(&self) -> usize {
+        self.backends.len()
     }
 
     /// True between `ServeEngine::evict_session` and `resume_session`:
@@ -150,7 +321,7 @@ impl DecodeSession {
     }
 
     pub fn backend_name(&self) -> &'static str {
-        self.backend.name()
+        self.backends[0].name()
     }
 
     /// The tokens this session ingested itself (whole prompt, or the
@@ -183,10 +354,14 @@ impl DecodeSession {
     }
 
     /// Tag this session's future pool allocations with its decode
-    /// shard's arena (paged backend; a locality no-op elsewhere). Never
-    /// changes any served token — block ids are invisible to the math.
+    /// shard's arena (paged backend; a locality no-op elsewhere). Every
+    /// layer backend is tagged — blocks of all layers should stay local
+    /// to the owning worker. Never changes any served token — block ids
+    /// are invisible to the math.
     pub fn set_arena(&mut self, arena: usize) {
-        self.backend.set_arena(arena);
+        for b in &mut self.backends {
+            b.set_arena(arena);
+        }
     }
 }
 
@@ -199,9 +374,10 @@ fn argmax(xs: &[f32]) -> i32 {
 }
 
 /// Backend-based generation engine. Stateless across requests — every
-/// request gets a fresh backend in its session — except for the paged
-/// backend, whose sessions all allocate from one shared copy-on-write
-/// pool (which is what makes prefix sharing across requests possible).
+/// request gets a fresh backend stack in its session — except for the
+/// paged backend, whose sessions all allocate from one shared
+/// copy-on-write pool (which is what makes prefix sharing across
+/// requests possible; tables are layer-tagged for per-layer accounting).
 pub struct ServeEngine<M: TokenModel> {
     model: M,
     cfg: ServeCfg,
@@ -211,6 +387,12 @@ pub struct ServeEngine<M: TokenModel> {
 
 impl<M: TokenModel> ServeEngine<M> {
     pub fn new(model: M, cfg: ServeCfg) -> ServeEngine<M> {
+        assert!(
+            cfg.layers.is_empty() || cfg.layers.len() == model.layers(),
+            "ServeCfg::layers has {} entries but the model has {} layers",
+            cfg.layers.len(),
+            model.layers()
+        );
         let pool = (cfg.backend == BackendKind::Paged).then(|| {
             let cap = (cfg.pool_blocks > 0).then_some(cfg.pool_blocks);
             shared_pool(cfg.block_size, model.heads(), model.head_dim(), cap)
@@ -226,8 +408,15 @@ impl<M: TokenModel> ServeEngine<M> {
         &self.model
     }
 
+    /// Layers in the model — every session holds this many backends and
+    /// all pool arithmetic sums over them.
+    fn n_layers(&self) -> usize {
+        self.model.layers()
+    }
+
     /// Occupancy of the shared paged pool (`None` for private-cache
-    /// backends) — what the continuous scheduler admits against.
+    /// backends) — what the continuous scheduler admits against. Counts
+    /// aggregate over all layers (each layer's table charges the pool).
     pub fn pool_status(&self) -> Option<PoolStatus> {
         self.pool.as_ref().map(|pool| {
             // poison-resistant: a worker panicking mid-allocation must not
@@ -241,12 +430,26 @@ impl<M: TokenModel> ServeEngine<M> {
         })
     }
 
+    /// Per-layer used-block counts of the shared paged pool (`None` for
+    /// private-cache backends); index = model layer. Sums to
+    /// `PoolStatus::used_blocks` — the layered bench arm writes this
+    /// next to the aggregate stats.
+    pub fn pool_layer_usage(&self) -> Option<Vec<usize>> {
+        self.pool.as_ref().map(|pool| sync::read(pool).used_blocks_by_layer().to_vec())
+    }
+
     /// Worst-case physical blocks a session forked at context length
-    /// `ctx` can allocate while appending `tokens` more: the blocks
-    /// spanning `[ctx, ctx + tokens)`. This is exact — when the session
-    /// shares a partial tail, the copy-on-write duplicate *is* the first
-    /// spanned block, not an extra one. Zero tokens allocate nothing.
+    /// `ctx` can allocate while appending `tokens` more, summed over
+    /// every model layer: per layer, the blocks spanning
+    /// `[ctx, ctx + tokens)`. This is exact — when the session shares a
+    /// partial tail, the copy-on-write duplicate *is* the first spanned
+    /// block, not an extra one, and every layer's table spans the same
+    /// token range. Zero tokens allocate nothing.
     pub fn block_reserve(&self, ctx: usize, tokens: usize) -> usize {
+        self.n_layers() * self.block_reserve_per_layer(ctx, tokens)
+    }
+
+    fn block_reserve_per_layer(&self, ctx: usize, tokens: usize) -> usize {
         if tokens == 0 {
             return 0;
         }
@@ -269,18 +472,20 @@ impl<M: TokenModel> ServeEngine<M> {
 
     /// Pool blocks a LIVE session's remaining decode steps can still
     /// allocate beyond what it already holds — the not-yet-materialized
-    /// delta of its admission reservation. Shrinks to 0 as the session
-    /// fills its tail / finishes, which is what lets the scheduler admit
-    /// into the freed headroom instead of holding the admission-time
-    /// worst case for the whole session lifetime.
+    /// delta of its admission reservation, summed over layers (every
+    /// layer appends the same rows, so the per-layer geometry is
+    /// identical). Shrinks to 0 as the session fills its tail /
+    /// finishes, which is what lets the scheduler admit into the freed
+    /// headroom instead of holding the admission-time worst case for the
+    /// whole session lifetime.
     pub fn remaining_reserve(&self, s: &DecodeSession) -> usize {
         let appends = self.appends_left(s);
         if appends == 0 {
             return 0;
         }
-        let ctx = s.backend.seq_len();
+        let ctx = s.ctx();
         let b = self.cfg.block_size;
-        if s.fork_ctx == 0 || ctx > s.fork_ctx {
+        let per_layer = if s.fork_ctx == 0 || ctx > s.fork_ctx {
             // the session owns its tail block: open slots absorb appends
             // without allocating (already counted in pool used_blocks)
             let slots = (b - ctx % b) % b;
@@ -288,55 +493,101 @@ impl<M: TokenModel> ServeEngine<M> {
         } else {
             // still exactly the forked prefix: the first append must CoW
             // a shared partial tail (or open a fresh block)
-            self.block_reserve(ctx, appends)
-        }
+            self.block_reserve_per_layer(ctx, appends)
+        };
+        s.backends.len() * per_layer
     }
 
     /// Worst-case pool blocks an EVICTED session needs to resume and run
     /// to completion: re-materializing its own tokens plus the same
-    /// future appends `remaining_reserve` would cover.
+    /// future appends `remaining_reserve` would cover, over all layers.
     pub fn resume_reserve(&self, s: &DecodeSession) -> usize {
         let own = s.own_prompt.len() + s.generated.len();
         self.block_reserve(s.fork_ctx, own + self.appends_left(s))
     }
 
-    /// Physical blocks evicting `s` would actually reclaim: the blocks
-    /// spanning its own tokens, including its copy-on-write duplicate of
-    /// a shared partial prefix tail. Blocks fully inside the forked
-    /// prefix are shared with the prefix parent and survive; a fork that
-    /// has not yet appended anything of its own frees nothing. Exact for
-    /// serving sessions, which only ever fork off the engine's shared
-    /// prefix (never off each other) — the scheduler's eviction
-    /// feasibility check relies on this.
+    /// Physical blocks evicting `s` would actually reclaim, summed over
+    /// layers: per layer, the blocks spanning its own tokens, including
+    /// its copy-on-write duplicate of a shared partial prefix tail.
+    /// Blocks fully inside the forked prefix are shared with the prefix
+    /// parent and survive; a fork that has not yet appended anything of
+    /// its own frees nothing. Exact for serving sessions, which only
+    /// ever fork off the engine's shared prefix (never off each other) —
+    /// the scheduler's eviction feasibility check relies on this.
     pub fn freeable_blocks(&self, s: &DecodeSession) -> usize {
-        let ctx = s.backend.seq_len();
+        let ctx = s.ctx();
         if ctx <= s.fork_ctx {
             return 0;
         }
         let b = self.cfg.block_size;
-        (ctx + b - 1) / b - s.fork_ctx / b
+        s.backends.len() * ((ctx + b - 1) / b - s.fork_ctx / b)
     }
 
-    /// A fresh backend for one session — paged sessions share THE engine
-    /// pool (that is what makes cross-request prefix sharing work),
-    /// everything else builds private caches. `topk` is normally
-    /// `ServeCfg::topk`; the scheduler's pressure dial passes a smaller
-    /// value for degraded low-priority sessions.
-    fn fresh_backend_with(&self, topk: usize) -> Box<dyn AttentionBackend> {
-        let workers = self.cfg.workers.max(1);
-        match &self.pool {
-            Some(pool) => {
-                Box::new(PagedMobaAttention::new(pool.clone(), topk).with_workers(workers))
+    /// The attention flavor of `layer`: the `ServeCfg::layers` spec when
+    /// present, else every layer follows `cfg.backend`'s own flavor.
+    fn layer_kind(&self, layer: usize) -> LayerKind {
+        if self.cfg.layers.is_empty() {
+            match self.cfg.backend {
+                BackendKind::RecomputeFull | BackendKind::CachedFull => LayerKind::Full,
+                _ => LayerKind::Moba,
             }
-            None => build_backend_par(
-                self.cfg.backend,
-                self.model.heads(),
-                self.model.head_dim(),
-                self.cfg.block_size,
-                topk,
-                workers,
-            ),
+        } else {
+            self.cfg.layers[layer]
         }
+    }
+
+    /// A fresh backend for one layer of one session — paged sessions
+    /// share THE engine pool (that is what makes cross-request prefix
+    /// sharing work), with the table layer-tagged for per-layer
+    /// accounting; everything else builds private caches. A `Full` layer
+    /// on gated kinds uses [`FULL_LAYER_TOPK`], which the kernels clamp
+    /// to every block — bit-identical to dense attention. `topk` is
+    /// normally `ServeCfg::topk`; the scheduler's pressure dial passes a
+    /// smaller value for degraded low-priority sessions (only `Moba`
+    /// layers downshift — `Full` layers stay dense at every dial).
+    fn layer_backend_with(&self, layer: usize, topk: usize) -> Box<dyn AttentionBackend> {
+        let workers = self.cfg.workers.max(1);
+        let kind = self.layer_kind(layer);
+        if let Some(pool) = &self.pool {
+            let k = match kind {
+                LayerKind::Moba => topk,
+                LayerKind::Full => FULL_LAYER_TOPK,
+            };
+            return Box::new(
+                PagedMobaAttention::new(pool.clone(), k).with_workers(workers).with_layer(layer),
+            );
+        }
+        let backend = if self.cfg.layers.is_empty() {
+            // no spec: the historical single-flavor path, bit-for-bit
+            self.cfg.backend
+        } else {
+            match kind {
+                LayerKind::Moba => match self.cfg.backend {
+                    BackendKind::RecomputeFull => BackendKind::RecomputeMoba,
+                    BackendKind::CachedFull => BackendKind::CachedSparse,
+                    other => other,
+                },
+                LayerKind::Full => match self.cfg.backend {
+                    BackendKind::RecomputeFull | BackendKind::RecomputeMoba => {
+                        BackendKind::RecomputeFull
+                    }
+                    _ => BackendKind::CachedFull,
+                },
+            }
+        };
+        build_backend_par(
+            backend,
+            self.model.heads(),
+            self.model.head_dim(),
+            self.cfg.block_size,
+            topk,
+            workers,
+        )
+    }
+
+    /// One fresh backend per model layer — a session's full stack.
+    fn session_backends_with(&self, topk: usize) -> Vec<Box<dyn AttentionBackend>> {
+        (0..self.n_layers()).map(|l| self.layer_backend_with(l, topk)).collect()
     }
 
     /// Chaos hook (`FaultKind::PoisonPool`): poison the shared pool's
@@ -356,59 +607,119 @@ impl<M: TokenModel> ServeEngine<M> {
         }
     }
 
-    /// Prefill `tokens` at positions `0..n` through `backend` and return
-    /// the pending next token. Shared by `start` and non-forked resume so
-    /// a resumed session goes through the exact same path (bit-identical
-    /// outputs) as one that was never evicted.
-    fn prefill_tokens(&self, backend: &mut dyn AttentionBackend, tokens: &[i32]) -> Result<i32> {
+    /// Prefill `tokens` at positions `0..n` through the whole layer
+    /// stack and return the pending next token. Layer 0 projects from
+    /// token ids; each deeper layer projects q/k/v from the residual
+    /// hidden stream and adds its attention output back in. Shared by
+    /// `start` and non-forked resume so a resumed session goes through
+    /// the exact same path (bit-identical outputs) as one that was never
+    /// evicted.
+    fn prefill_tokens(
+        &self,
+        backends: &mut [Box<dyn AttentionBackend>],
+        tokens: &[i32],
+    ) -> Result<i32> {
         let (h, d) = (self.model.heads(), self.model.head_dim());
         let n = tokens.len();
         let w = h * d;
         let (mut qs, mut ks, mut vs) =
             (Vec::with_capacity(n * w), Vec::with_capacity(n * w), Vec::with_capacity(n * w));
+        let (mut qr, mut kr, mut vr) = (Vec::new(), Vec::new(), Vec::new());
         for (pos, &tok) in tokens.iter().enumerate() {
-            let (q, k, v) = self.model.qkv(tok, pos);
-            qs.extend_from_slice(&q);
-            ks.extend_from_slice(&k);
-            vs.extend_from_slice(&v);
+            self.model.qkv_into(tok, pos, &mut qr, &mut kr, &mut vr);
+            qs.extend_from_slice(&qr);
+            ks.extend_from_slice(&kr);
+            vs.extend_from_slice(&vr);
         }
+        let (first, rest) = backends.split_first_mut().expect("session has at least one layer");
         let q = Tensor::from_vec(&[n, h, d], qs)?;
         let k = Tensor::from_vec(&[n, h, d], ks)?;
         let v = Tensor::from_vec(&[n, h, d], vs)?;
-        let out = backend.prefill(&q, &k, &v);
-        Ok(argmax(&self.model.logits(&out.data[(n - 1) * w..n * w])))
+        let mut hidden = first.prefill(&q, &k, &v).data;
+        for (li, backend) in rest.iter_mut().enumerate() {
+            let layer = li + 1;
+            let (mut qs, mut ks, mut vs) =
+                (Vec::with_capacity(n * w), Vec::with_capacity(n * w), Vec::with_capacity(n * w));
+            for pos in 0..n {
+                let row = &hidden[pos * w..(pos + 1) * w];
+                self.model.qkv_layer_into(layer, pos, row, &mut qr, &mut kr, &mut vr);
+                qs.extend_from_slice(&qr);
+                ks.extend_from_slice(&kr);
+                vs.extend_from_slice(&vr);
+            }
+            let q = Tensor::from_vec(&[n, h, d], qs)?;
+            let k = Tensor::from_vec(&[n, h, d], ks)?;
+            let v = Tensor::from_vec(&[n, h, d], vs)?;
+            let out = backend.prefill(&q, &k, &v);
+            for (hx, ox) in hidden.iter_mut().zip(&out.data) {
+                *hx += ox;
+            }
+        }
+        Ok(argmax(&self.model.logits(&hidden[(n - 1) * w..n * w])))
     }
 
-    /// Fork `parent`'s backend and ingest `tokens` one decode row at a
-    /// time (positions continue from the parent's context). Returns the
-    /// forked backend and the pending next token. Shared by
-    /// `fork_session` and forked-session resume.
+    /// Advance every layer by one token row. Layer 0 projects from the
+    /// token id, deeper layers from the residual hidden stream;
+    /// `sc.hidden` ends as the final residual row (what logits read).
+    /// Row-wise identical to `prefill_tokens`: the prefill/decode
+    /// boundary is invisible per layer (the kernel parity contract), so
+    /// it stays invisible through the whole stack by induction on the
+    /// hidden stream.
+    fn decode_row(
+        &self,
+        backends: &mut [Box<dyn AttentionBackend>],
+        tok: i32,
+        pos: usize,
+        sc: &mut StepScratch,
+    ) {
+        let (first, rest) = backends.split_first_mut().expect("session has at least one layer");
+        self.model.qkv_into(tok, pos, &mut sc.q, &mut sc.k, &mut sc.v);
+        let out = first.decode(&sc.q, &sc.k, &sc.v);
+        sc.hidden.clear();
+        sc.hidden.extend_from_slice(&out);
+        for (li, backend) in rest.iter_mut().enumerate() {
+            self.model.qkv_layer_into(li + 1, pos, &sc.hidden, &mut sc.q, &mut sc.k, &mut sc.v);
+            let out = backend.decode(&sc.q, &sc.k, &sc.v);
+            for (hx, ox) in sc.hidden.iter_mut().zip(&out) {
+                *hx += ox;
+            }
+        }
+    }
+
+    /// Fork every layer of `parent`'s stack and ingest `tokens` one
+    /// decode row at a time (positions continue from the parent's
+    /// context). Returns the forked stack and the pending next token.
+    /// Shared by `fork_session` and forked-session resume.
     fn fork_ingest(
         &self,
         parent: &DecodeSession,
         tokens: &[i32],
-    ) -> Result<(Box<dyn AttentionBackend>, i32)> {
-        let ctx = parent.backend.seq_len();
-        let mut backend = parent.backend.fork()?;
-        let mut last_out = None;
+    ) -> Result<(Vec<Box<dyn AttentionBackend>>, i32)> {
+        let ctx = parent.ctx();
+        let mut backends = Vec::with_capacity(parent.backends.len());
+        for b in &parent.backends {
+            backends.push(b.fork()?);
+        }
+        let mut sc = StepScratch::default();
         for (i, &tok) in tokens.iter().enumerate() {
-            let (q, k, v) = self.model.qkv(tok, ctx + i);
-            last_out = Some(backend.decode(&q, &k, &v));
+            self.decode_row(&mut backends, tok, ctx + i, &mut sc);
         }
         // only the final position's logits decide the pending token — an
         // empty continuation is a pure clone of the parent's
-        let pending = match last_out {
-            Some(out) => argmax(&self.model.logits(&out)),
-            None => match parent.pending {
+        let pending = if tokens.is_empty() {
+            match parent.pending {
                 Some(p) => p,
                 None => bail!("empty-continuation fork of a session with no pending token"),
-            },
+            }
+        } else {
+            self.model.logits_into(&sc.hidden, &mut sc.logits);
+            argmax(&sc.logits)
         };
-        Ok((backend, pending))
+        Ok((backends, pending))
     }
 
-    /// Prefill `prompt` through a fresh backend and return the live
-    /// session with its first pending token.
+    /// Prefill `prompt` through a fresh backend stack and return the
+    /// live session with its first pending token.
     pub fn start(&self, prompt: &[i32], max_new: usize) -> Result<DecodeSession> {
         self.start_with_topk(prompt, max_new, self.cfg.topk)
     }
@@ -433,13 +744,13 @@ impl<M: TokenModel> ServeEngine<M> {
                 self.cfg.max_seq
             );
         }
-        let mut backend = self.fresh_backend_with(topk);
+        let mut backends = self.session_backends_with(topk);
         let t0 = Instant::now();
-        let pending = self.prefill_tokens(backend.as_mut(), prompt)?;
+        let pending = self.prefill_tokens(&mut backends, prompt)?;
         let stats = GenStats { prefill_secs: t0.elapsed().as_secs_f64(), ..Default::default() };
 
         Ok(DecodeSession {
-            backend,
+            backends,
             prompt_len: prompt.len(),
             own_prompt: prompt.to_vec(),
             fork_ctx: 0,
@@ -449,14 +760,15 @@ impl<M: TokenModel> ServeEngine<M> {
             pending: Some(pending),
             generated: Vec::with_capacity(max_new),
             topk,
+            scratch: StepScratch::default(),
             stats,
         })
     }
 
     /// Fork `parent`'s state copy-on-write (paged backend only) and
     /// ingest `continuation` on the fork — the shared-system-prompt
-    /// serving scenario: S sessions share one physical prefix, each pays
-    /// only its own divergent tail. Token-identical to
+    /// serving scenario: S sessions share one physical prefix per layer,
+    /// each pays only its own divergent tail. Token-identical to
     /// `start(prefix ++ continuation)` on a private backend: the decode
     /// rows that ingest the continuation are bit-equal to the prefill
     /// rows a private session would compute (the prefill/decode boundary
@@ -467,7 +779,7 @@ impl<M: TokenModel> ServeEngine<M> {
         continuation: &[i32],
         max_new: usize,
     ) -> Result<DecodeSession> {
-        let ctx = parent.backend.seq_len();
+        let ctx = parent.ctx();
         if ctx + continuation.len() + max_new > self.cfg.max_seq {
             bail!(
                 "prefix {} + continuation {} + max_new {} exceeds max_seq {}",
@@ -478,10 +790,10 @@ impl<M: TokenModel> ServeEngine<M> {
             );
         }
         let t0 = Instant::now();
-        let (backend, pending) = self.fork_ingest(parent, continuation)?;
+        let (backends, pending) = self.fork_ingest(parent, continuation)?;
         let stats = GenStats { prefill_secs: t0.elapsed().as_secs_f64(), ..Default::default() };
         Ok(DecodeSession {
-            backend,
+            backends,
             prompt_len: ctx + continuation.len(),
             own_prompt: continuation.to_vec(),
             fork_ctx: ctx,
@@ -490,38 +802,47 @@ impl<M: TokenModel> ServeEngine<M> {
             max_new,
             pending: Some(pending),
             generated: Vec::with_capacity(max_new),
-            // the forked backend IS a fork of the parent's gating state, so
-            // the fork inherits the parent's sparsity, not `cfg.topk`
+            // the forked backends ARE forks of the parent's gating state,
+            // so the fork inherits the parent's sparsity, not `cfg.topk`
             topk: parent.topk,
+            scratch: StepScratch::default(),
             stats,
         })
     }
 
-    /// Preempt `s`: release its pool blocks back to the shared paged pool
-    /// and return how many were actually reclaimed (blocks a live table
-    /// still shares — a system prefix under other sessions — survive).
-    /// The session keeps its prompt, generated tokens and pending token,
-    /// which is exactly enough for `resume_session` to rebuild it
-    /// bit-identically. Paged backend only.
+    /// Preempt `s`: release every layer's pool blocks back to the shared
+    /// paged pool and return how many were actually reclaimed (blocks a
+    /// live table still shares — a system prefix under other sessions —
+    /// survive). The session keeps its prompt, generated tokens and
+    /// pending token, which is exactly enough for `resume_session` to
+    /// rebuild it bit-identically. Paged backend only — a stack is
+    /// homogeneous in pooled-ness, so if layer 0 refuses nothing has
+    /// been released when the error propagates.
     pub fn evict_session(&self, s: &mut DecodeSession) -> Result<usize> {
         if s.evicted {
             bail!("session is already evicted");
         }
-        let freed = s.backend.evict()?;
+        let mut freed = 0;
+        for b in &mut s.backends {
+            freed += b.evict()?;
+        }
         s.evicted = true;
         Ok(freed)
     }
 
-    /// Preempt `s` into the host swap tier: snapshot its private tail —
-    /// every block from the fork point on (for an unforked session, the
-    /// whole context) — into a byte-exact, checksummed [`SwapImage`],
-    /// then release its pool blocks exactly like `evict_session`. The
-    /// refcounted shared prefix is NOT captured: it stays resident under
-    /// the prefix parent, so a swapped fork resumes via `fork_prefix` +
-    /// block restore with no `fork_ingest` recompute. Returns
-    /// `(blocks freed, image)`. Paged backend only; the caller owns the
-    /// image (the engine is stateless across requests).
-    pub fn swap_out_session(&self, s: &mut DecodeSession) -> Result<(usize, SwapImage)> {
+    /// Preempt `s` into the host swap tier: snapshot every layer's
+    /// private tail — each block from the fork point on (for an unforked
+    /// session, the whole context) — into a byte-exact, checksummed
+    /// per-layer [`SwapBundle`], then release its pool blocks exactly
+    /// like `evict_session`. The refcounted shared prefixes are NOT
+    /// captured: they stay resident under the prefix parent, so a
+    /// swapped fork resumes via `fork_prefix` + block restore with no
+    /// `fork_ingest` recompute. Snapshots happen before any release
+    /// (copy-only), so a failure part-way leaves the session live and
+    /// untouched. Returns `(blocks freed, bundle)`. Paged backend only;
+    /// the caller owns the bundle (the engine is stateless across
+    /// requests).
+    pub fn swap_out_session(&self, s: &mut DecodeSession) -> Result<(usize, SwapBundle)> {
         if s.evicted {
             bail!("swap-out of a session that is already evicted");
         }
@@ -529,29 +850,38 @@ impl<M: TokenModel> ServeEngine<M> {
             bail!("swap-out of a session with no pending token");
         }
         let from_block = s.fork_ctx / self.cfg.block_size;
-        let image = s.backend.swap_out(from_block)?;
-        let freed = s.backend.evict()?;
+        let mut images = Vec::with_capacity(s.backends.len());
+        for b in &s.backends {
+            images.push(b.swap_out(from_block)?);
+        }
+        let mut freed = 0;
+        for b in &mut s.backends {
+            freed += b.evict()?;
+        }
         s.evicted = true;
-        Ok((freed, image))
+        Ok((freed, SwapBundle { images }))
     }
 
-    /// Resume a swapped-out session by restoring its [`SwapImage`] bytes
-    /// into freshly allocated pool blocks instead of re-prefilling — the
-    /// restored state is byte-identical to the pre-swap state, so every
-    /// token served afterwards is bit-identical to a session that was
-    /// never preempted. A forked session re-forks `parent`'s resident
-    /// full-block prefix (`fork_prefix`); the restore then allocates
-    /// exactly the blocks a re-prefill resume would, so pool occupancy —
-    /// and every downstream scheduling decision — is identical between
-    /// the two resume paths. On ANY failure (checksum mismatch, prefix
-    /// mismatch, allocation failure) the session is left evicted with
-    /// its transcript intact, so the caller can fall back to
-    /// `resume_session` transparently.
+    /// Resume a swapped-out session by restoring its [`SwapBundle`]
+    /// bytes into freshly allocated pool blocks instead of re-prefilling
+    /// — the restored state is byte-identical to the pre-swap state, so
+    /// every token served afterwards is bit-identical to a session that
+    /// was never preempted. A forked session re-forks each layer of
+    /// `parent`'s resident full-block prefix (`fork_prefix`); the
+    /// restore then allocates exactly the blocks a re-prefill resume
+    /// would, so pool occupancy — and every downstream scheduling
+    /// decision — is identical between the two resume paths. The bundle
+    /// restores atomically: the whole replacement stack is built before
+    /// the session is touched, so on ANY failure (checksum mismatch,
+    /// prefix mismatch, allocation failure — at any layer) the partial
+    /// stack drops, its blocks release, and the session is left evicted
+    /// with its transcript intact for the transparent `resume_session`
+    /// fallback.
     pub fn swap_in_session(
         &self,
         s: &mut DecodeSession,
         parent: Option<&DecodeSession>,
-        image: &SwapImage,
+        bundle: &SwapBundle,
     ) -> Result<()> {
         if !s.evicted {
             bail!("swap-in of a session that was never evicted");
@@ -562,35 +892,57 @@ impl<M: TokenModel> ServeEngine<M> {
             // come back through the re-prefill path
             bail!("swap-in of a session with no pending token");
         }
-        let mut backend = if s.fork_ctx > 0 {
+        if bundle.layers() != s.backends.len() {
+            bail!(
+                "swap bundle has {} layer images but the session has {} layers",
+                bundle.layers(),
+                s.backends.len()
+            );
+        }
+        let parent = if s.fork_ctx > 0 {
             let Some(parent) = parent else {
                 bail!("swap-in of a forked session needs its prefix parent");
             };
-            if parent.backend.seq_len() != s.fork_ctx {
+            if parent.ctx() != s.fork_ctx {
                 bail!(
                     "prefix parent context {} does not match fork point {}",
-                    parent.backend.seq_len(),
+                    parent.ctx(),
                     s.fork_ctx
                 );
             }
-            parent.backend.fork_prefix(s.fork_ctx / self.cfg.block_size)?
-        } else {
-            self.fresh_backend_with(s.topk)
-        };
-        backend.swap_in(image)?;
-        let want = s.prompt_len + s.generated.len();
-        let got = backend.seq_len();
-        if got != want {
-            // dropping the local backend releases whatever it allocated;
-            // `s` stays evicted so the re-prefill fallback still works
-            return Err(ServeError::ResumeDiverged {
-                what: "restored context length",
-                expected: want as i64,
-                got: got as i64,
+            if parent.backends.len() != s.backends.len() {
+                bail!(
+                    "prefix parent has {} layers but the session has {}",
+                    parent.backends.len(),
+                    s.backends.len()
+                );
             }
-            .into());
+            Some(parent)
+        } else {
+            None
+        };
+        let want = s.prompt_len + s.generated.len();
+        let mut backends = Vec::with_capacity(s.backends.len());
+        for (layer, image) in bundle.images().iter().enumerate() {
+            let mut backend = match parent {
+                Some(p) => p.backends[layer].fork_prefix(s.fork_ctx / self.cfg.block_size)?,
+                None => self.layer_backend_with(layer, s.topk),
+            };
+            backend.swap_in(image)?;
+            let got = backend.seq_len();
+            if got != want {
+                // dropping the partial stack releases whatever it
+                // allocated; `s` stays evicted so re-prefill still works
+                return Err(ServeError::ResumeDiverged {
+                    what: "restored context length",
+                    expected: want as i64,
+                    got: got as i64,
+                }
+                .into());
+            }
+            backends.push(backend);
         }
-        s.backend = backend;
+        s.backends = backends;
         s.evicted = false;
         s.stats.resumes += 1;
         // reprefill_secs intentionally untouched: it prices re-prefill
@@ -599,17 +951,20 @@ impl<M: TokenModel> ServeEngine<M> {
     }
 
     /// Force-preempt a session recovered from a faulted worker: release
-    /// whatever pool blocks its backend can still release (best-effort —
-    /// a private-cache backend frees nothing here; its caches are
-    /// replaced wholesale at resume) and mark it evicted so the only way
-    /// forward is `resume_session`'s re-prefill. With
+    /// whatever pool blocks its backends can still release (best-effort,
+    /// every layer — a private-cache backend frees nothing here; its
+    /// caches are replaced wholesale at resume) and mark it evicted so
+    /// the only way forward is `resume_session`'s re-prefill. With
     /// `pending_valid == false` (the session's own step panicked, so its
     /// in-memory pending token may be mid-mutation garbage) the pending
     /// token is cleared to `None` and recomputed at resume from the
     /// transcript, which a panic cannot corrupt: tokens are appended
     /// only after a fully completed step.
     pub fn quarantine_session(&self, s: &mut DecodeSession, pending_valid: bool) -> usize {
-        let freed = s.backend.evict().unwrap_or(0);
+        let mut freed = 0;
+        for b in &mut s.backends {
+            freed += b.evict().unwrap_or(0);
+        }
         s.evicted = true;
         if !pending_valid {
             s.pending = None;
@@ -620,11 +975,11 @@ impl<M: TokenModel> ServeEngine<M> {
     /// Rebuild a session lost with a dead worker from its ledger
     /// transcript: the identity (own prompt, fork point, budget) plus the
     /// tokens generated so far. The result is evicted-with-no-blocks
-    /// (placeholder backend, pending unknown); `resume_session` turns it
-    /// back into a live session bit-identical to one that never died —
-    /// same argument as any other re-prefill resume, the transcript is
-    /// the whole state. Per-session latency stats die with the worker;
-    /// `queue_secs` survives on the scheduler side.
+    /// (placeholder backend stack, pending unknown); `resume_session`
+    /// turns it back into a live session bit-identical to one that never
+    /// died — same argument as any other re-prefill resume, the
+    /// transcript is the whole state. Per-session latency stats die with
+    /// the worker; `queue_secs` survives on the scheduler side.
     pub fn adopt_session(
         &self,
         own_prompt: Vec<i32>,
@@ -634,7 +989,7 @@ impl<M: TokenModel> ServeEngine<M> {
         topk: usize,
     ) -> DecodeSession {
         DecodeSession {
-            backend: self.fresh_backend_with(topk),
+            backends: self.session_backends_with(topk),
             prompt_len: fork_ctx + own_prompt.len(),
             own_prompt,
             fork_ctx,
@@ -644,6 +999,7 @@ impl<M: TokenModel> ServeEngine<M> {
             pending: None,
             generated,
             topk,
+            scratch: StepScratch::default(),
             stats: GenStats::default(),
         }
     }
@@ -651,11 +1007,12 @@ impl<M: TokenModel> ServeEngine<M> {
     /// Rebuild an evicted session's incremental state by re-ingesting
     /// `own_prompt ++ generated` through the same prefill/fork-decode
     /// path it was originally built with. A forked session re-forks
-    /// `parent` (the shared prefix whose blocks survived eviction), so
-    /// the prefix is still never duplicated. The rebuilt state — and
-    /// every token served afterwards — is bit-identical to a session
-    /// that was never evicted: the prefill/decode boundary is invisible
-    /// and both paths share the kernels' fixed accumulation orders.
+    /// `parent` (the shared per-layer prefixes whose blocks survived
+    /// eviction), so the prefix is still never duplicated. The rebuilt
+    /// state — and every token served afterwards — is bit-identical to a
+    /// session that was never evicted: the prefill/decode boundary is
+    /// invisible and both paths share the kernels' fixed accumulation
+    /// orders.
     pub fn resume_session(
         &self,
         s: &mut DecodeSession,
@@ -670,20 +1027,20 @@ impl<M: TokenModel> ServeEngine<M> {
             let Some(parent) = parent else {
                 bail!("resume of a forked session needs its prefix parent");
             };
-            if parent.backend.seq_len() != s.fork_ctx {
+            if parent.ctx() != s.fork_ctx {
                 bail!(
                     "prefix parent context {} does not match fork point {}",
-                    parent.backend.seq_len(),
+                    parent.ctx(),
                     s.fork_ctx
                 );
             }
-            let (backend, pending) = self.fork_ingest(parent, &tokens)?;
-            s.backend = backend;
+            let (backends, pending) = self.fork_ingest(parent, &tokens)?;
+            s.backends = backends;
             pending
         } else {
-            let mut backend = self.fresh_backend_with(s.topk);
-            let pending = self.prefill_tokens(backend.as_mut(), &tokens)?;
-            s.backend = backend;
+            let mut backends = self.session_backends_with(s.topk);
+            let pending = self.prefill_tokens(&mut backends, &tokens)?;
+            s.backends = backends;
             pending
         };
         // a real check, not a debug_assert: in release builds a divergent
@@ -707,9 +1064,9 @@ impl<M: TokenModel> ServeEngine<M> {
         Ok(())
     }
 
-    /// One decode step: emit the session's pending token, append it to the
-    /// incremental state and compute the next. Returns the emitted token,
-    /// or `None` if the session is already finished.
+    /// One decode step: emit the session's pending token, append it to
+    /// every layer's incremental state and compute the next. Returns the
+    /// emitted token, or `None` if the session is already finished.
     pub fn step(&self, s: &mut DecodeSession) -> Option<i32> {
         debug_assert!(!s.evicted, "stepping an evicted session (resume it first)");
         debug_assert!(s.pending.is_some(), "stepping a session with no pending token");
@@ -723,9 +1080,9 @@ impl<M: TokenModel> ServeEngine<M> {
         }
         let t0 = Instant::now();
         let pos = s.prompt_len + s.generated.len() - 1;
-        let (q, k, v) = self.model.qkv(tok, pos);
-        let out = s.backend.decode(&q, &k, &v);
-        s.pending = Some(argmax(&self.model.logits(&out)));
+        self.decode_row(&mut s.backends, tok, pos, &mut s.scratch);
+        self.model.logits_into(&s.scratch.hidden, &mut s.scratch.logits);
+        s.pending = Some(argmax(&s.scratch.logits));
         s.stats.decode_secs += t0.elapsed().as_secs_f64();
         s.stats.decode_steps += 1;
         Some(tok)
@@ -750,6 +1107,23 @@ mod tests {
         ServeEngine::new(
             ToyModel::new(48, 2, 8, 11),
             ServeCfg { block_size: 16, topk: 2, max_seq: 256, backend, ..Default::default() },
+        )
+    }
+
+    /// A paged engine over an `layers.len()`-deep stacked model with an
+    /// explicit per-layer spec (same geometry/seed as [`engine`]).
+    fn stacked_engine(layers: Vec<LayerKind>, pool_blocks: usize) -> ServeEngine<ToyModel> {
+        ServeEngine::new(
+            ToyModel::stacked(48, 2, 8, 11, layers.len().max(1)),
+            ServeCfg {
+                block_size: 16,
+                topk: 2,
+                max_seq: 256,
+                backend: BackendKind::Paged,
+                pool_blocks,
+                layers,
+                ..Default::default()
+            },
         )
     }
 
@@ -949,6 +1323,7 @@ mod tests {
         // the whole context is private (unforked), so the image holds it all
         assert_eq!(image.tokens(), prompt.len() + 3);
         assert!(image.payload_bytes() > 0);
+        assert_eq!(image.layers(), 1, "L=1 session swaps a single-image bundle");
         assert!(e.swap_out_session(&mut s).is_err(), "double swap-out");
         e.swap_in_session(&mut s, None, &image).unwrap();
         assert!(!s.evicted());
@@ -1181,5 +1556,190 @@ mod tests {
         assert!(s.finished());
         assert_eq!(e.step(&mut s), None);
         assert!(s.output().is_empty());
+    }
+
+    // ------------------------------------------------------------------
+    // multi-layer hybrid stacks
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn explicit_single_moba_layer_spec_is_bitwise_identical() {
+        // the --layers compatibility anchor: an explicit L=1 `moba` spec
+        // serves exactly what the unspecced historical path serves
+        let prompt: Vec<i32> = (0..50).map(|i| (i * 7) % 48).collect();
+        let want = engine(BackendKind::Paged).generate(&prompt, 8).unwrap().0;
+        let speced = stacked_engine(vec![LayerKind::Moba], 0);
+        assert_eq!(speced.generate(&prompt, 8).unwrap().0, want);
+    }
+
+    #[test]
+    fn hybrid_stack_accounts_blocks_per_layer() {
+        let layers = vec![LayerKind::Moba, LayerKind::Moba, LayerKind::Full, LayerKind::Moba];
+        let e = stacked_engine(layers, 0);
+        let prompt: Vec<i32> = (0..40).map(|i| i % 48).collect();
+        let mut s = e.start(&prompt, 16).unwrap();
+        assert_eq!(s.layers(), 4);
+        for _ in 0..3 {
+            e.step(&mut s).unwrap();
+        }
+        let per_layer = e.pool_layer_usage().unwrap();
+        let status = e.pool_status().unwrap();
+        assert_eq!(per_layer.len(), 4);
+        assert_eq!(per_layer.iter().sum::<usize>(), status.used_blocks);
+        // every layer appends the same rows: identical per-layer counts
+        assert!(per_layer.iter().all(|&u| u == per_layer[0]), "{per_layer:?}");
+        // 40 prompt + 2 appended decode rows = 42 tokens -> 3 blocks/layer
+        assert_eq!(per_layer[0], (prompt.len() + 2 + 15) / 16);
+        // reserves and freeable counts are layer-summed
+        assert_eq!(e.block_reserve(0, 16), 4);
+        assert_eq!(e.freeable_blocks(&s), 4 * per_layer[0]);
+        drop(s);
+        assert_eq!(e.pool_status().unwrap().used_blocks, 0);
+        assert_eq!(e.pool_layer_usage().unwrap().iter().sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn hybrid_session_evicts_and_resumes_bit_identically() {
+        let e = stacked_engine(vec![LayerKind::Moba, LayerKind::Full], 0);
+        let prompt: Vec<i32> = (0..30).map(|i| (i * 7) % 48).collect();
+        let (want, _) = e.generate(&prompt, 8).unwrap();
+        let mut s = e.start(&prompt, 8).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            got.push(e.step(&mut s).unwrap());
+        }
+        let used_before = e.pool_status().unwrap().used_blocks;
+        let freed = e.evict_session(&mut s).unwrap();
+        assert_eq!(freed, used_before, "an unshared hybrid stack frees every layer's blocks");
+        assert_eq!(e.pool_status().unwrap().used_blocks, 0);
+        e.resume_session(&mut s, None).unwrap();
+        assert_eq!(e.pool_status().unwrap().used_blocks, used_before);
+        while let Some(tok) = e.step(&mut s) {
+            got.push(tok);
+        }
+        assert_eq!(got, want, "hybrid evict/resume changed the served tokens");
+    }
+
+    #[test]
+    fn hybrid_swap_bundle_restores_all_layers_or_none() {
+        let layers = vec![LayerKind::Moba, LayerKind::Moba, LayerKind::Full, LayerKind::Moba];
+        let e = stacked_engine(layers, 0);
+        let prompt: Vec<i32> = (0..30).map(|i| (i * 7) % 48).collect();
+        let (want, _) = e.generate(&prompt, 8).unwrap();
+        let mut s = e.start(&prompt, 8).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            got.push(e.step(&mut s).unwrap());
+        }
+        let used_before = e.pool_status().unwrap().used_blocks;
+        let (freed, bundle) = e.swap_out_session(&mut s).unwrap();
+        assert_eq!(freed, used_before);
+        assert_eq!(bundle.layers(), 4);
+        assert_eq!(bundle.n_blocks(), used_before, "bundle captures every layer's blocks");
+        // corrupt_for_chaos hits the LAST image, so the failing restore
+        // happens after earlier layers already allocated: the partial
+        // stack must roll back to zero used blocks (all-or-nothing)
+        let mut bad = bundle.clone();
+        bad.corrupt_for_chaos();
+        let err = e.swap_in_session(&mut s, None, &bad).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        assert!(s.evicted(), "failed swap-in must leave the session evicted");
+        assert_eq!(e.pool_status().unwrap().used_blocks, 0, "partial restore leaked blocks");
+        // the intact bundle restores every layer byte-exactly
+        e.swap_in_session(&mut s, None, &bundle).unwrap();
+        assert_eq!(e.pool_status().unwrap().used_blocks, used_before);
+        let per_layer = e.pool_layer_usage().unwrap();
+        assert!(per_layer.iter().all(|&u| u == per_layer[0]), "{per_layer:?}");
+        while let Some(tok) = e.step(&mut s) {
+            got.push(tok);
+        }
+        assert_eq!(got, want, "hybrid swap round-trip changed the served tokens");
+    }
+
+    #[test]
+    fn hybrid_stack_works_on_private_cached_backends() {
+        // the serving-level covering-topk equivalence: a private hybrid
+        // stack (CachedSparse + CachedFull per the spec) serves the same
+        // tokens as the paged hybrid stack, whose `full` layer gates
+        // with FULL_LAYER_TOPK
+        let layers = vec![LayerKind::Moba, LayerKind::Full];
+        let paged = stacked_engine(layers.clone(), 0);
+        let private = ServeEngine::new(
+            ToyModel::stacked(48, 2, 8, 11, 2),
+            ServeCfg {
+                block_size: 16,
+                topk: 2,
+                max_seq: 256,
+                backend: BackendKind::CachedSparse,
+                layers,
+                ..Default::default()
+            },
+        );
+        let prompt: Vec<i32> = (0..50).map(|i| (i * 7) % 48).collect();
+        let want = paged.generate(&prompt, 8).unwrap().0;
+        assert_eq!(private.generate(&prompt, 8).unwrap().0, want);
+        // the mix is real: an all-moba stack serves different tokens on
+        // this geometry, otherwise the hybrid parity proves nothing
+        let all_moba = stacked_engine(vec![LayerKind::Moba, LayerKind::Moba], 0);
+        assert_ne!(all_moba.generate(&prompt, 8).unwrap().0, want);
+    }
+
+    #[test]
+    fn hybrid_forks_share_every_layers_prefix() {
+        let layers = vec![LayerKind::Moba, LayerKind::Full];
+        let e = stacked_engine(layers.clone(), 0);
+        let prefix: Vec<i32> = (0..32).map(|i| (i * 3) % 48).collect();
+        let parent = e.start(&prefix, 0).unwrap();
+        // 32 tokens = 2 full blocks per layer
+        assert_eq!(e.pool_status().unwrap().used_blocks, 4);
+        let cont: Vec<i32> = (0..3).map(|i| (i * 5 + 1) % 48).collect();
+        let mut forked = e.fork_session(&parent, &cont, 6).unwrap();
+        // the fork pays only its divergent tail: one new block per layer
+        assert_eq!(e.pool_status().unwrap().used_blocks, 6);
+        let mut got = Vec::new();
+        while let Some(tok) = e.step(&mut forked) {
+            got.push(tok);
+        }
+        let private = ServeEngine::new(
+            ToyModel::stacked(48, 2, 8, 11, 2),
+            ServeCfg {
+                block_size: 16,
+                topk: 2,
+                max_seq: 256,
+                backend: BackendKind::CachedSparse,
+                layers,
+                ..Default::default()
+            },
+        );
+        let full: Vec<i32> = prefix.iter().chain(&cont).copied().collect();
+        let want = private.generate(&full, 6).unwrap().0;
+        assert_eq!(got, want, "hybrid fork diverged from the concatenated private prompt");
+    }
+
+    #[test]
+    #[should_panic(expected = "ServeCfg::layers has 3 entries but the model has 2 layers")]
+    fn layer_spec_must_match_model_depth() {
+        let _ = ServeEngine::new(
+            ToyModel::stacked(48, 2, 8, 11, 2),
+            ServeCfg {
+                layers: vec![LayerKind::Moba, LayerKind::Full, LayerKind::Moba],
+                ..Default::default()
+            },
+        );
+    }
+
+    #[test]
+    fn layer_spec_parser_accepts_lists_and_rejects_garbage() {
+        use LayerKind::{Full, Moba};
+        assert_eq!(
+            parse_layers("MOBA_LAYERS", Some("moba, full,moba".into())).unwrap(),
+            Some(vec![Moba, Full, Moba])
+        );
+        assert_eq!(parse_layers("MOBA_LAYERS", None).unwrap(), None);
+        assert_eq!(parse_layers("MOBA_LAYERS", Some("  ".into())).unwrap(), None);
+        let err = parse_layers("MOBA_LAYERS", Some("moba,dense".into())).unwrap_err();
+        assert!(err.contains("MOBA_LAYERS") && err.contains("dense"), "{err}");
+        assert_eq!(LayerKind::Moba.label(), "moba");
+        assert_eq!(LayerKind::Full.label(), "full");
     }
 }

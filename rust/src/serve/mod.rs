@@ -6,7 +6,10 @@
 //! - `engine`: [`ServeEngine`] + per-request [`DecodeSession`] — prompt
 //!   ingested once through `AttentionBackend::prefill`, then O(k·B)
 //!   cached decode steps (paper §3.3's deployment modes, selectable via
-//!   `BackendKind`);
+//!   `BackendKind`); sessions hold one backend per model layer, so a
+//!   hybrid [`ServeCfg::layers`] spec ([`LayerKind`], `--layers` /
+//!   `MOBA_LAYERS`) mixes full-attention layers among MoBA ones with
+//!   layer-summed pool accounting and per-layer [`SwapBundle`] swaps;
 //! - `batcher`: timestamped admission queue (batch + continuous modes)
 //!   with queue/prefill/decode latency accounting;
 //! - `scheduler`: [`ContinuousScheduler`] — iteration-level scheduling:
@@ -51,7 +54,10 @@ pub mod artifact;
 pub use batcher::{Batcher, BatcherCfg, Priority, Request, RequestResult};
 pub use chaos::{Fault, FaultKind, FaultPlan};
 pub use demo::{run_demo, DemoCfg};
-pub use engine::{DecodeSession, GenStats, PoolStatus, ServeCfg, ServeEngine};
+pub use engine::{
+    layers_from_env, layers_from_env_strict, parse_layers, DecodeSession, GenStats, LayerKind,
+    PoolStatus, ServeCfg, ServeEngine, SwapBundle,
+};
 pub use error::{FaultStats, ServeError};
 pub use load::{storm, summarize, StormCfg, StormSummary};
 pub use model::{TokenModel, ToyModel};

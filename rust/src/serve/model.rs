@@ -5,9 +5,18 @@
 //! logits. [`TokenModel`] captures that contract so the engine, scheduler
 //! and benches are independent of where the projections come from.
 //!
+//! Models may be **stacked**: [`TokenModel::layers`] reports how many
+//! attention layers the model has. Layer 0 projects from token ids
+//! ([`TokenModel::qkv`]); deeper layers project from the residual hidden
+//! stream ([`TokenModel::qkv_layer_into`]). The serving engine threads one
+//! attention backend per layer and accumulates `hidden += attn_out` after
+//! each layer, so an L=1 model is bitwise identical to the historical
+//! single-attention path (logits straight off the layer-0 output).
+//!
 //! [`ToyModel`] is the CPU-testbed implementation: deterministic seeded
 //! embedding tables (one per role) plus an additive sinusoidal position
-//! signal, with logits by value-embedding similarity. It is *not* a
+//! signal, with logits by value-embedding similarity; deeper layers use
+//! seeded dense projection matrices over the hidden stream. It is *not* a
 //! trained transformer — it exists so the cache/backend/scheduler
 //! machinery runs end-to-end, deterministically, with real attention
 //! arithmetic and no AOT artifacts. The artifact-backed path (real
@@ -22,46 +31,150 @@ pub trait TokenModel {
     fn head_dim(&self) -> usize;
     fn vocab(&self) -> usize;
 
+    /// Number of attention layers in the stack. The engine builds one
+    /// backend per layer; layer 0 consumes token ids, layers `1..` consume
+    /// the residual hidden stream.
+    fn layers(&self) -> usize {
+        1
+    }
+
     /// Projections for `token` at absolute position `pos`: (q, k, v) rows,
-    /// each `[heads * head_dim]`.
+    /// each `[heads * head_dim]`. Layer 0 of the stack.
     fn qkv(&self, token: i32, pos: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>);
+
+    /// Scratch-reusing variant of [`TokenModel::qkv`]: clears and fills the
+    /// provided buffers instead of allocating. The decode hot path calls
+    /// this once per token, so implementations should override the default
+    /// (which delegates to `qkv` and copies).
+    fn qkv_into(
+        &self,
+        token: i32,
+        pos: usize,
+        q: &mut Vec<f32>,
+        k: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+    ) {
+        let (qq, kk, vv) = self.qkv(token, pos);
+        q.clear();
+        q.extend_from_slice(&qq);
+        k.clear();
+        k.extend_from_slice(&kk);
+        v.clear();
+        v.extend_from_slice(&vv);
+    }
+
+    /// Projections for layer `layer` (>= 1) at absolute position `pos`,
+    /// computed from the residual hidden row `[heads * head_dim]`. Models
+    /// with `layers() == 1` never receive this call.
+    fn qkv_layer_into(
+        &self,
+        _layer: usize,
+        _pos: usize,
+        _hidden: &[f32],
+        _q: &mut Vec<f32>,
+        _k: &mut Vec<f32>,
+        _v: &mut Vec<f32>,
+    ) {
+        unimplemented!("this model has a single attention layer")
+    }
 
     /// Vocab logits from one attention output row `[heads * head_dim]`.
     fn logits(&self, attn_row: &[f32]) -> Vec<f32>;
+
+    /// Scratch-reusing variant of [`TokenModel::logits`]: clears and fills
+    /// `out` instead of allocating.
+    fn logits_into(&self, attn_row: &[f32], out: &mut Vec<f32>) {
+        let l = self.logits(attn_row);
+        out.clear();
+        out.extend_from_slice(&l);
+    }
 }
 
-/// Deterministic stand-in model: seeded per-role embedding tables.
+/// Deterministic stand-in model: seeded per-role embedding tables, plus
+/// seeded dense projection matrices for each layer past the first.
 pub struct ToyModel {
     heads: usize,
     head_dim: usize,
     vocab: usize,
+    layers: usize,
     /// `[vocab, heads * head_dim]` row-major, one table per role
     eq: Vec<f32>,
     ek: Vec<f32>,
     ev: Vec<f32>,
+    /// per deeper layer (index `l-1` for layer `l >= 1`): a `[w, w]`
+    /// row-major projection matrix per role over the hidden stream
+    wq: Vec<Vec<f32>>,
+    wk: Vec<Vec<f32>>,
+    wv: Vec<Vec<f32>>,
 }
 
 impl ToyModel {
+    /// The historical single-attention model; `stacked(.., 1)`.
     pub fn new(vocab: usize, heads: usize, head_dim: usize, seed: u64) -> ToyModel {
-        assert!(vocab > 0 && heads > 0 && head_dim > 0);
+        Self::stacked(vocab, heads, head_dim, seed, 1)
+    }
+
+    /// An `layers`-deep stack. The layer-0 embedding tables are derived
+    /// from the same rng split tags as [`ToyModel::new`] *before* any
+    /// per-layer matrices, so `stacked(.., 1)` is bitwise identical to
+    /// `new(..)` — the L=1 compatibility anchor the serving parity tests
+    /// rely on.
+    pub fn stacked(
+        vocab: usize,
+        heads: usize,
+        head_dim: usize,
+        seed: u64,
+        layers: usize,
+    ) -> ToyModel {
+        assert!(vocab > 0 && heads > 0 && head_dim > 0 && layers > 0);
         let w = heads * head_dim;
         let mut root = Rng::new(seed);
         let mut table = |tag: u64| -> Vec<f32> {
             let mut rng = root.split(tag);
             (0..vocab * w).map(|_| rng.normal_f32(1.0)).collect()
         };
-        ToyModel {
-            heads,
-            head_dim,
-            vocab,
-            eq: table(1),
-            ek: table(2),
-            ev: table(3),
+        let eq = table(1);
+        let ek = table(2);
+        let ev = table(3);
+        let mut mat = |tag: u64| -> Vec<f32> {
+            let mut rng = root.split(tag);
+            (0..w * w).map(|_| rng.normal_f32(1.0)).collect()
+        };
+        let (mut wq, mut wk, mut wv) = (Vec::new(), Vec::new(), Vec::new());
+        for l in 1..layers {
+            let t = 3 * l as u64;
+            wq.push(mat(t + 1));
+            wk.push(mat(t + 2));
+            wv.push(mat(t + 3));
         }
+        ToyModel { heads, head_dim, vocab, layers, eq, ek, ev, wq, wk, wv }
     }
 
     fn row<'a>(table: &'a [f32], tok: usize, w: usize) -> &'a [f32] {
         &table[tok * w..(tok + 1) * w]
+    }
+
+    /// `out = mat @ hidden / sqrt(w)`, reusing `out`'s allocation.
+    fn project_into(mat: &[f32], hidden: &[f32], out: &mut Vec<f32>, w: usize) {
+        out.clear();
+        let inv = 1.0 / (w as f32).sqrt();
+        for r in 0..w {
+            let mrow = &mat[r * w..(r + 1) * w];
+            let mut s = 0.0f32;
+            for i in 0..w {
+                s += mrow[i] * hidden[i];
+            }
+            out.push(s * inv);
+        }
+    }
+
+    /// Additive sinusoidal position signal (queries and keys only).
+    fn add_phase(q: &mut [f32], k: &mut [f32], pos: usize) {
+        for (i, (qi, ki)) in q.iter_mut().zip(k.iter_mut()).enumerate() {
+            let phase = pos as f32 / (1.0 + i as f32);
+            *qi += 0.25 * phase.sin();
+            *ki += 0.25 * phase.cos();
+        }
     }
 }
 
@@ -78,34 +191,76 @@ impl TokenModel for ToyModel {
         self.vocab
     }
 
+    fn layers(&self) -> usize {
+        self.layers
+    }
+
     fn qkv(&self, token: i32, pos: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let w = self.heads * self.head_dim;
-        let tok = (token.max(0) as usize) % self.vocab;
-        let mut q = Self::row(&self.eq, tok, w).to_vec();
-        let mut k = Self::row(&self.ek, tok, w).to_vec();
-        let v = Self::row(&self.ev, tok, w).to_vec();
-        // additive sinusoidal position signal (queries and keys only)
-        for i in 0..w {
-            let phase = pos as f32 / (1.0 + i as f32);
-            q[i] += 0.25 * phase.sin();
-            k[i] += 0.25 * phase.cos();
-        }
+        let (mut q, mut k, mut v) = (Vec::new(), Vec::new(), Vec::new());
+        self.qkv_into(token, pos, &mut q, &mut k, &mut v);
         (q, k, v)
     }
 
+    fn qkv_into(
+        &self,
+        token: i32,
+        pos: usize,
+        q: &mut Vec<f32>,
+        k: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+    ) {
+        let w = self.heads * self.head_dim;
+        let tok = (token.max(0) as usize) % self.vocab;
+        q.clear();
+        q.extend_from_slice(Self::row(&self.eq, tok, w));
+        k.clear();
+        k.extend_from_slice(Self::row(&self.ek, tok, w));
+        v.clear();
+        v.extend_from_slice(Self::row(&self.ev, tok, w));
+        Self::add_phase(q, k, pos);
+    }
+
+    fn qkv_layer_into(
+        &self,
+        layer: usize,
+        pos: usize,
+        hidden: &[f32],
+        q: &mut Vec<f32>,
+        k: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+    ) {
+        assert!(
+            layer >= 1 && layer < self.layers,
+            "qkv_layer_into: layer {layer} out of range for a {}-layer model",
+            self.layers
+        );
+        let w = self.heads * self.head_dim;
+        debug_assert_eq!(hidden.len(), w);
+        let l = layer - 1;
+        Self::project_into(&self.wq[l], hidden, q, w);
+        Self::project_into(&self.wk[l], hidden, k, w);
+        Self::project_into(&self.wv[l], hidden, v, w);
+        Self::add_phase(q, k, pos);
+    }
+
     fn logits(&self, attn_row: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.logits_into(attn_row, &mut out);
+        out
+    }
+
+    fn logits_into(&self, attn_row: &[f32], out: &mut Vec<f32>) {
         let w = self.heads * self.head_dim;
         debug_assert_eq!(attn_row.len(), w);
-        (0..self.vocab)
-            .map(|tok| {
-                let e = Self::row(&self.ev, tok, w);
-                let mut s = 0.0f32;
-                for i in 0..w {
-                    s += attn_row[i] * e[i];
-                }
-                s
-            })
-            .collect()
+        out.clear();
+        for tok in 0..self.vocab {
+            let e = Self::row(&self.ev, tok, w);
+            let mut s = 0.0f32;
+            for i in 0..w {
+                s += attn_row[i] * e[i];
+            }
+            out.push(s);
+        }
     }
 }
 
@@ -145,5 +300,72 @@ mod tests {
         assert_eq!(m.qkv(2, 0), m.qkv(10, 0));
         // negative ids clamp to 0
         assert_eq!(m.qkv(-3, 0), m.qkv(0, 0));
+    }
+
+    #[test]
+    fn stacked_one_layer_is_bitwise_identical_to_new() {
+        // the compatibility anchor: per-layer matrices are split off the
+        // root rng AFTER the layer-0 tables, so L=1 draws nothing extra
+        let a = ToyModel::new(32, 2, 8, 7);
+        let b = ToyModel::stacked(32, 2, 8, 7, 1);
+        assert_eq!(a.eq, b.eq);
+        assert_eq!(a.ek, b.ek);
+        assert_eq!(a.ev, b.ev);
+        assert_eq!(a.qkv(5, 3), b.qkv(5, 3));
+        assert_eq!(a.logits(&a.qkv(5, 3).0), b.logits(&b.qkv(5, 3).0));
+        assert_eq!(b.layers(), 1);
+    }
+
+    #[test]
+    fn stacked_layer0_tables_do_not_depend_on_depth() {
+        let a = ToyModel::stacked(32, 2, 8, 7, 1);
+        let b = ToyModel::stacked(32, 2, 8, 7, 4);
+        assert_eq!(a.eq, b.eq);
+        assert_eq!(a.ek, b.ek);
+        assert_eq!(a.ev, b.ev);
+        assert_eq!(b.layers(), 4);
+        assert_eq!(b.wq.len(), 3);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_variants() {
+        let m = ToyModel::stacked(24, 2, 4, 9, 3);
+        let (q, k, v) = m.qkv(5, 7);
+        // seed the scratch with garbage to prove it is cleared, not appended
+        let (mut qs, mut ks, mut vs) = (vec![9.0; 3], vec![9.0; 99], Vec::new());
+        m.qkv_into(5, 7, &mut qs, &mut ks, &mut vs);
+        assert_eq!((qs, ks, vs), (q.clone(), k, v));
+        let l = m.logits(&q);
+        let mut ls = vec![1.0; 2];
+        m.logits_into(&q, &mut ls);
+        assert_eq!(ls, l);
+    }
+
+    #[test]
+    fn deeper_layers_project_from_hidden_deterministically() {
+        let m1 = ToyModel::stacked(16, 1, 8, 3, 3);
+        let m2 = ToyModel::stacked(16, 1, 8, 3, 3);
+        let hidden: Vec<f32> = (0..8).map(|i| (i as f32 * 0.37).sin()).collect();
+        let (mut q1, mut k1, mut v1) = (Vec::new(), Vec::new(), Vec::new());
+        let (mut q2, mut k2, mut v2) = (Vec::new(), Vec::new(), Vec::new());
+        m1.qkv_layer_into(1, 4, &hidden, &mut q1, &mut k1, &mut v1);
+        m2.qkv_layer_into(1, 4, &hidden, &mut q2, &mut k2, &mut v2);
+        assert_eq!((&q1, &k1, &v1), (&q2, &k2, &v2));
+        // distinct layers use distinct matrices
+        m2.qkv_layer_into(2, 4, &hidden, &mut q2, &mut k2, &mut v2);
+        assert_ne!(q1, q2);
+        // the projection actually depends on the hidden row
+        let other: Vec<f32> = hidden.iter().map(|x| x + 1.0).collect();
+        m1.qkv_layer_into(1, 4, &other, &mut q2, &mut k2, &mut v2);
+        assert_ne!(q1, q2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn layer_zero_is_not_a_hidden_layer() {
+        let m = ToyModel::stacked(16, 1, 4, 3, 2);
+        let hidden = vec![0.0; 4];
+        let (mut q, mut k, mut v) = (Vec::new(), Vec::new(), Vec::new());
+        m.qkv_layer_into(0, 0, &hidden, &mut q, &mut k, &mut v);
     }
 }

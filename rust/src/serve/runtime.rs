@@ -60,10 +60,9 @@ use anyhow::{bail, Result};
 
 use super::batcher::Priority;
 use super::chaos::{self, FaultKind, FaultPlan};
-use super::engine::{DecodeSession, ServeEngine};
+use super::engine::{DecodeSession, ServeEngine, SwapBundle};
 use super::error::ServeError;
 use super::model::TokenModel;
-use crate::sparse::SwapImage;
 use crate::util::sync;
 
 /// Which dispatch machinery steps the in-flight decode batch.
@@ -222,11 +221,12 @@ pub(crate) struct Live {
     pub(crate) retry_at: u64,
     /// current resume backoff in ticks (doubles per deferral, capped)
     pub(crate) backoff: u64,
-    /// host-tier snapshot of this session's private tail blocks, present
-    /// while preempted-with-swap: the resume path restores it instead of
-    /// re-prefilling (and falls back transparently if that fails). The
-    /// image travels with the session — there is no separate swap store.
-    pub(crate) swap: Option<SwapImage>,
+    /// host-tier snapshot of this session's private tail blocks (one
+    /// image per model layer), present while preempted-with-swap: the
+    /// resume path restores it instead of re-prefilling (and falls back
+    /// transparently if that fails). The bundle travels with the session
+    /// — there is no separate swap store.
+    pub(crate) swap: Option<SwapBundle>,
     pub(crate) session: DecodeSession,
 }
 

@@ -1580,6 +1580,7 @@ mod tests {
                 backend,
                 workers: 1,
                 pool_blocks,
+                ..Default::default()
             },
         )
     }
@@ -2260,6 +2261,7 @@ mod tests {
                     backend: BackendKind::Paged,
                     workers: 1,
                     pool_blocks: 0,
+                    ..Default::default()
                 },
             )
         };

@@ -76,6 +76,9 @@ pub struct BlockTable {
     len: usize,
     /// arena affinity for future allocations (see [`PagedKvPool::alloc`])
     arena: usize,
+    /// model layer this table's blocks are accounted under (multi-layer
+    /// sessions hold one table per layer in the same shared pool)
+    layer: usize,
 }
 
 impl BlockTable {
@@ -92,6 +95,17 @@ impl BlockTable {
 
     pub fn set_arena(&mut self, arena: usize) {
         self.arena = arena;
+    }
+
+    /// Model layer this table's blocks are charged to in the pool's
+    /// per-layer accounting. Purely bookkeeping — like the arena, the
+    /// layer tag never enters any attention arithmetic.
+    pub fn layer(&self) -> usize {
+        self.layer
+    }
+
+    pub fn set_layer(&mut self, layer: usize) {
+        self.layer = layer;
     }
 
     /// Tokens in this session's sequence.
@@ -228,6 +242,11 @@ pub struct PagedKvPool {
     free_lists: Vec<Vec<usize>>,
     /// arena each physical block currently belongs to
     arena_of: Vec<usize>,
+    /// model layer each physical block is currently charged to
+    layer_of: Vec<usize>,
+    /// live blocks charged per layer (`sum == used`); grows on demand as
+    /// deeper layers allocate
+    used_by_layer: Vec<usize>,
     capacity: Option<usize>,
     used: usize,
 }
@@ -252,6 +271,8 @@ impl PagedKvPool {
             refs: Vec::new(),
             free_lists: vec![Vec::new()],
             arena_of: Vec::new(),
+            layer_of: Vec::new(),
+            used_by_layer: Vec::new(),
             capacity: capacity_blocks,
             used: 0,
         }
@@ -272,6 +293,14 @@ impl PagedKvPool {
     /// Physical blocks currently referenced by at least one table.
     pub fn used_blocks(&self) -> usize {
         self.used
+    }
+
+    /// Live blocks charged per model layer (index = layer; the vec only
+    /// extends as far as the deepest layer that ever allocated). Sums to
+    /// [`PagedKvPool::used_blocks`] — the per-layer breakdown behind the
+    /// engine's layer-summed accounting.
+    pub fn used_blocks_by_layer(&self) -> &[usize] {
+        &self.used_by_layer
     }
 
     pub fn capacity_blocks(&self) -> Option<usize> {
@@ -296,8 +325,9 @@ impl PagedKvPool {
     /// index on ties, migrating the block's home), else grow the store.
     /// The arena only decides WHICH free id is handed out; the block is
     /// zeroed identically either way, and block ids never enter any
-    /// attention arithmetic, so affinity cannot change outputs.
-    fn alloc(&mut self, arena: usize) -> Result<usize> {
+    /// attention arithmetic, so affinity cannot change outputs. The
+    /// `layer` tag charges the block to that layer's usage counter.
+    fn alloc(&mut self, arena: usize, layer: usize) -> Result<usize> {
         if let Some(cap) = self.capacity {
             if self.used >= cap {
                 bail!("paged pool exhausted: {} blocks in use, capacity {cap}", self.used);
@@ -306,8 +336,12 @@ impl PagedKvPool {
         if arena >= self.free_lists.len() {
             self.free_lists.resize_with(arena + 1, Vec::new);
         }
+        if layer >= self.used_by_layer.len() {
+            self.used_by_layer.resize(layer + 1, 0);
+        }
         let w = self.heads * self.head_dim;
         self.used += 1;
+        self.used_by_layer[layer] += 1;
         let donor = if !self.free_lists[arena].is_empty() {
             Some(arena)
         } else {
@@ -321,6 +355,7 @@ impl PagedKvPool {
         if let Some(d) = donor {
             let pid = self.free_lists[d].pop().expect("donor free list non-empty");
             self.arena_of[pid] = arena;
+            self.layer_of[pid] = layer;
             self.fill[pid] = 0;
             self.refs[pid] = 1;
             self.ksum[pid * w..(pid + 1) * w].fill(0.0);
@@ -333,6 +368,7 @@ impl PagedKvPool {
         self.fill.push(0);
         self.refs.push(1);
         self.arena_of.push(arena);
+        self.layer_of.push(layer);
         Ok(pid)
     }
 
@@ -346,13 +382,13 @@ impl PagedKvPool {
         assert_eq!(v_row.len(), w, "v row width");
         let in_block = table.len % self.block_size;
         if in_block == 0 {
-            let pid = self.alloc(table.arena)?;
+            let pid = self.alloc(table.arena, table.layer)?;
             table.blocks.push(pid);
         } else {
             let tail = *table.blocks.last().expect("partial tail implies a mapped block");
             if self.refs[tail] > 1 {
                 // copy-on-write: divergence pays for its own private tail
-                let copy = self.alloc(table.arena)?;
+                let copy = self.alloc(table.arena, table.layer)?;
                 let n = self.fill[tail];
                 debug_assert_eq!(n, in_block, "shared tail fill mismatch");
                 let (src, dst) = (tail * self.slot, copy * self.slot);
@@ -399,7 +435,12 @@ impl PagedKvPool {
         for &pid in &table.blocks {
             self.refs[pid] += 1;
         }
-        BlockTable { blocks: table.blocks.clone(), len: table.len, arena: table.arena }
+        BlockTable {
+            blocks: table.blocks.clone(),
+            len: table.len,
+            arena: table.arena,
+            layer: table.layer,
+        }
     }
 
     /// Release a table's references; blocks dropping to zero references
@@ -409,6 +450,7 @@ impl PagedKvPool {
             self.refs[pid] -= 1;
             if self.refs[pid] == 0 {
                 self.free_lists[self.arena_of[pid]].push(pid);
+                self.used_by_layer[self.layer_of[pid]] -= 1;
                 self.used -= 1;
             }
         }
@@ -442,6 +484,7 @@ impl PagedKvPool {
             blocks: table.blocks[..blocks].to_vec(),
             len: blocks * self.block_size,
             arena: table.arena,
+            layer: table.layer,
         }
     }
 
@@ -504,7 +547,7 @@ impl PagedKvPool {
         }
         let w = self.heads * self.head_dim;
         for blk in &image.blocks {
-            let pid = self.alloc(table.arena)?;
+            let pid = self.alloc(table.arena, table.layer)?;
             let off = pid * self.slot;
             self.k[off..off + blk.k.len()].copy_from_slice(&blk.k);
             self.v[off..off + blk.v.len()].copy_from_slice(&blk.v);
@@ -731,6 +774,14 @@ impl PagedMobaAttention {
     /// cached backends).
     pub fn with_workers(mut self, workers: usize) -> PagedMobaAttention {
         self.workers = workers.max(1);
+        self
+    }
+
+    /// Tag this session's block table with a model layer so the shared
+    /// pool charges its blocks to that layer's usage counter. Forks and
+    /// prefix forks inherit the tag through the pool.
+    pub fn with_layer(mut self, layer: usize) -> PagedMobaAttention {
+        self.table.set_layer(layer);
         self
     }
 
@@ -1046,6 +1097,37 @@ mod tests {
         let mut mean = [0.0f32; 2];
         pool.mean_into(&c, 0, 0, &mut mean);
         assert_eq!(mean, [0.5, 2.0], "stale sum survived cross-arena reuse");
+    }
+
+    #[test]
+    fn per_layer_accounting_tracks_alloc_release_and_reuse() {
+        let mut pool = PagedKvPool::new(2, 1, 2, None);
+        let (mut a, mut b) = (BlockTable::new(), BlockTable::new());
+        b.set_layer(2);
+        for i in 0..4 {
+            pool.append(&mut a, &[i as f32, 0.0], &[0.0, 0.0]).unwrap();
+            pool.append(&mut b, &[i as f32, 1.0], &[0.0, 0.0]).unwrap();
+        }
+        assert_eq!(pool.used_blocks(), 4);
+        assert_eq!(pool.used_blocks_by_layer(), &[2, 0, 2]);
+        // forks share blocks: no new charge until a write diverges
+        let mut f = pool.fork(&b);
+        assert_eq!(f.layer(), 2, "forks inherit the layer tag");
+        assert_eq!(pool.used_blocks_by_layer(), &[2, 0, 2]);
+        pool.append(&mut f, &[9.0, 9.0], &[0.0, 0.0]).unwrap();
+        assert_eq!(pool.used_blocks_by_layer(), &[2, 0, 3]);
+        pool.release(&mut f);
+        assert_eq!(pool.used_blocks_by_layer(), &[2, 0, 2]);
+        pool.release(&mut b);
+        assert_eq!(pool.used_blocks_by_layer(), &[2, 0, 0]);
+        // a freed block recycled under a different layer moves its charge
+        let mut c = BlockTable::new();
+        c.set_layer(1);
+        pool.append(&mut c, &[1.0, 1.0], &[0.0, 0.0]).unwrap();
+        assert_eq!(pool.used_blocks_by_layer(), &[2, 1, 0]);
+        assert_eq!(pool.used_blocks(), 3);
+        let total: usize = pool.used_blocks_by_layer().iter().sum();
+        assert_eq!(total, pool.used_blocks(), "per-layer counters must sum to used");
     }
 
     #[test]

@@ -17,7 +17,7 @@ use common::{
     build, oracle, prefix, rand_t, row, ALL_BACKENDS, EVICTABLE_BACKENDS, SPARSE_BACKENDS,
     SWAPPABLE_BACKENDS,
 };
-use moba::serve::{ServeCfg, ServeEngine, ToyModel};
+use moba::serve::{LayerKind, ServeCfg, ServeEngine, ToyModel};
 use moba::sparse::BackendKind;
 use moba::tensor::Tensor;
 
@@ -276,4 +276,80 @@ fn served_tokens_agree_within_each_math_family() {
         assert_eq!(serve(kind), sparse_ref, "{}", kind.label());
     }
     assert_eq!(serve(BackendKind::CachedFull), serve(BackendKind::RecomputeFull));
+}
+
+#[test]
+fn explicit_single_layer_spec_matches_the_implicit_stack() {
+    // `--layers moba` (or `full`) with one entry must serve the same
+    // tokens as the historical no-spec path, bitwise, on every backend
+    let prompt: Vec<i32> = (0..50).map(|i| (i * 7) % 48).collect();
+    let serve = |kind: BackendKind, layers: Vec<LayerKind>| {
+        let cfg = ServeCfg {
+            block_size: BS,
+            topk: TOPK,
+            max_seq: 256,
+            backend: kind,
+            layers,
+            ..Default::default()
+        };
+        let engine = ServeEngine::new(ToyModel::new(48, H, D, 11), cfg);
+        engine.generate(&prompt, 8).unwrap().0
+    };
+    for &kind in SPARSE_BACKENDS {
+        assert_eq!(
+            serve(kind, vec![LayerKind::Moba]),
+            serve(kind, Vec::new()),
+            "{}",
+            kind.label()
+        );
+    }
+    for kind in [BackendKind::CachedFull, BackendKind::RecomputeFull] {
+        assert_eq!(
+            serve(kind, vec![LayerKind::Full]),
+            serve(kind, Vec::new()),
+            "{}",
+            kind.label()
+        );
+    }
+}
+
+#[test]
+fn hybrid_stack_evict_resume_and_swap_match_never_evicted_twin() {
+    // the serving-level resume contracts at L=4: a hybrid moba/full
+    // session that is evicted + re-prefilled, and one that round-trips
+    // through a per-layer swap bundle, must both finish with the
+    // never-evicted twin's tokens, bitwise
+    let layers = vec![LayerKind::Moba, LayerKind::Moba, LayerKind::Full, LayerKind::Moba];
+    let cfg = ServeCfg {
+        block_size: BS,
+        topk: TOPK,
+        max_seq: 256,
+        backend: BackendKind::Paged,
+        layers: layers.clone(),
+        ..Default::default()
+    };
+    let engine = ServeEngine::new(ToyModel::stacked(48, H, D, 11, layers.len()), cfg);
+    let prompt: Vec<i32> = (0..50).map(|i| (i * 3) % 48).collect();
+
+    let mut twin = engine.start(&prompt, 16).unwrap();
+    let mut evicted = engine.start(&prompt, 16).unwrap();
+    let mut swapped = engine.start(&prompt, 16).unwrap();
+    for _ in 0..5 {
+        engine.step(&mut twin);
+        engine.step(&mut evicted);
+        engine.step(&mut swapped);
+    }
+    engine.evict_session(&mut evicted).unwrap();
+    engine.resume_session(&mut evicted, None).unwrap();
+    let (freed, bundle) = engine.swap_out_session(&mut swapped).unwrap();
+    assert_eq!(bundle.layers(), layers.len(), "one swap image per layer");
+    assert!(freed > 0);
+    engine.swap_in_session(&mut swapped, None, &bundle).unwrap();
+    while !twin.finished() {
+        engine.step(&mut twin);
+        engine.step(&mut evicted);
+        engine.step(&mut swapped);
+    }
+    assert_eq!(evicted.output(), twin.output(), "re-prefill resume diverged");
+    assert_eq!(swapped.output(), twin.output(), "swap restore diverged");
 }

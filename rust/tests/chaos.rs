@@ -9,7 +9,8 @@
 //! stealing, `PoisonPool` lock poisoning, `SwapCorrupt` host-tier image
 //! rot demoting to re-prefill), and an env-seeded arm the CI chaos
 //! matrix drives through `MOBA_CHAOS_SEED` × `MOBA_WORKERS` ×
-//! `MOBA_SWAP_BLOCKS`.
+//! `MOBA_SWAP_BLOCKS` × `MOBA_LAYERS` (a layer spec re-runs everything
+//! here over hybrid multi-layer session stacks).
 
 use moba::serve::{
     ContinuousScheduler, Fault, FaultKind, FaultPlan, Request, RequestResult, RuntimeKind,
@@ -24,9 +25,20 @@ const D: usize = 8;
 const BS: usize = 16;
 
 fn engine(backend: BackendKind, pool_blocks: usize) -> ServeEngine<ToyModel> {
+    // honors MOBA_LAYERS (leniently) so the CI chaos matrix can re-run
+    // every chaos test over a hybrid multi-layer session stack
+    let layers = moba::serve::layers_from_env().unwrap_or_default();
     ServeEngine::new(
-        ToyModel::new(VOCAB, H, D, 9),
-        ServeCfg { block_size: BS, topk: 2, max_seq: 512, backend, workers: 1, pool_blocks },
+        ToyModel::stacked(VOCAB, H, D, 9, layers.len().max(1)),
+        ServeCfg {
+            block_size: BS,
+            topk: 2,
+            max_seq: 512,
+            backend,
+            workers: 1,
+            pool_blocks,
+            layers,
+        },
     )
 }
 

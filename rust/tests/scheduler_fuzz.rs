@@ -25,9 +25,39 @@ const D: usize = 8;
 const BS: usize = 16;
 
 fn engine(backend: BackendKind, pool_blocks: usize) -> ServeEngine<ToyModel> {
+    // honors MOBA_LAYERS (leniently) so the CI chaos matrix re-runs the
+    // whole fuzz grid over a hybrid multi-layer session stack
+    let layers = moba::serve::layers_from_env().unwrap_or_default();
     ServeEngine::new(
-        ToyModel::new(VOCAB, H, D, 5),
-        ServeCfg { block_size: BS, topk: 2, max_seq: 512, backend, workers: 1, pool_blocks },
+        ToyModel::stacked(VOCAB, H, D, 5, layers.len().max(1)),
+        ServeCfg {
+            block_size: BS,
+            topk: 2,
+            max_seq: 512,
+            backend,
+            workers: 1,
+            pool_blocks,
+            layers,
+        },
+    )
+}
+
+/// A paged engine over a 4-layer hybrid moba,moba,full,moba stack (same
+/// geometry/seed as [`engine`], one block table per layer).
+fn hybrid_engine(pool_blocks: usize) -> ServeEngine<ToyModel> {
+    use moba::serve::LayerKind::{Full, Moba};
+    let layers = vec![Moba, Moba, Full, Moba];
+    ServeEngine::new(
+        ToyModel::stacked(VOCAB, H, D, 5, layers.len()),
+        ServeCfg {
+            block_size: BS,
+            topk: 2,
+            max_seq: 512,
+            backend: BackendKind::Paged,
+            workers: 1,
+            pool_blocks,
+            layers,
+        },
     )
 }
 
@@ -116,6 +146,63 @@ fn fuzzed_streams_are_schedule_invariant() {
                     "seed={seed} backend={} pool={pool_blocks} shards={decode_workers} \
                      runtime={} steal={steal} req={}",
                     backend.label(),
+                    runtime.label(),
+                    g.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzzed_hybrid_layer_streams_are_schedule_invariant() {
+    // the multi-layer refactor under the fuzz grid: a 4-layer hybrid
+    // moba,moba,full,moba stack served through both runtimes, with the
+    // pool bounded so the layer-summed reservations oversubscribe and
+    // whole session stacks are evicted / resumed together — none of
+    // which may change what anyone decodes
+    for seed in [19u64, 67] {
+        let reqs = stream(seed, 8);
+        let solo = hybrid_engine(0);
+        let want: Vec<Vec<i32>> = reqs
+            .iter()
+            .map(|r| solo.generate(&r.prompt, r.max_new).unwrap().0)
+            .collect();
+        // block_reserve is layer-summed: the worst single request already
+        // accounts for all four per-layer block tables
+        let max_need = reqs
+            .iter()
+            .map(|r| solo.block_reserve(0, r.prompt.len() + r.max_new))
+            .max()
+            .unwrap();
+        let oversub = max_need + 1; // barely one session: constant eviction churn
+        use RuntimeKind::{Persistent, TickLoop};
+        for (pool_blocks, decode_workers, runtime, steal) in [
+            (0usize, 1usize, TickLoop, false),
+            (0, 3, Persistent, true),
+            (oversub, 1, TickLoop, false),
+            (oversub, 1, Persistent, true),
+            (oversub, 3, Persistent, true),
+        ] {
+            let mut sched = ContinuousScheduler::new(
+                hybrid_engine(pool_blocks),
+                SchedulerCfg {
+                    max_in_flight: 4,
+                    decode_workers,
+                    runtime,
+                    steal,
+                    ..SchedulerCfg::default()
+                },
+            );
+            let mut got = sched.run_stream(reqs.clone(), 0.005).unwrap();
+            got.sort_by_key(|r| r.id);
+            assert_eq!(got.len(), reqs.len(), "seed={seed} lost requests");
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(
+                    &g.output,
+                    w,
+                    "seed={seed} pool={pool_blocks} shards={decode_workers} runtime={} \
+                     steal={steal} req={}",
                     runtime.label(),
                     g.id
                 );

@@ -149,7 +149,14 @@ fn fused_backend_matches_cached_sparse_tokens() {
     let engine = |backend: BackendKind, workers: usize| {
         ServeEngine::new(
             ToyModel::new(48, 2, 8, 11),
-            ServeCfg { block_size: 16, topk: 2, max_seq: 256, backend, workers, pool_blocks: 0 },
+            ServeCfg {
+                block_size: 16,
+                topk: 2,
+                max_seq: 256,
+                backend,
+                workers,
+                ..Default::default()
+            },
         )
     };
     let reference = engine(BackendKind::CachedSparse, 1).generate(&prompt, 10).unwrap().0;
@@ -170,7 +177,7 @@ fn sharded_scheduler_tokens_are_shard_count_invariant() {
                 max_seq: 512,
                 backend: BackendKind::Fused,
                 workers: 1,
-                pool_blocks: 0,
+                ..Default::default()
             },
         )
     };
@@ -228,7 +235,15 @@ fn persistent_runtime_tokens_match_tick_loop_bitwise() {
     let engine = |backend: BackendKind, pool_blocks: usize| {
         ServeEngine::new(
             ToyModel::new(48, 2, 8, 7),
-            ServeCfg { block_size: 16, topk: 2, max_seq: 512, backend, workers: 1, pool_blocks },
+            ServeCfg {
+                block_size: 16,
+                topk: 2,
+                max_seq: 512,
+                backend,
+                workers: 1,
+                pool_blocks,
+                ..Default::default()
+            },
         )
     };
     // paged arm: barely one session's worth of blocks, so the pool
